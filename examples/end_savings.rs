@@ -1,0 +1,141 @@
+//! END deep-dive: per-filter early-negative-detection statistics and a
+//! termination-position histogram on real activations, for the first two
+//! conv levels of a fused group (paper §3.2 / Figs. 12–13 extended).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_savings -- --group alexnet
+//! ```
+
+use usefuse::arith::digit::Fixed;
+use usefuse::arith::end_unit::EndState;
+use usefuse::arith::sop::sop_with_end;
+use usefuse::coordinator::{layer_end_stats, EndConfig};
+use usefuse::runtime::{Manifest, Runtime, Tensor};
+use usefuse::sim::EnergyModel;
+use usefuse::util::cli::{Args, OptSpec};
+use usefuse::util::rng::Rng;
+use usefuse::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let specs = [
+        OptSpec { name: "group", help: "fused group (lenet/alexnet/vgg)", takes_value: true, default: Some("alexnet") },
+        OptSpec { name: "samples", help: "pixels per filter", takes_value: true, default: Some("250") },
+    ];
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &specs).map_err(|e| anyhow::anyhow!(e))?;
+    let group = args.get("group").unwrap().to_string();
+    let samples = args.get_usize("samples").map_err(|e| anyhow::anyhow!(e))?.unwrap();
+
+    let manifest = Manifest::load("artifacts")?;
+    let full_prog = format!("{group}_full");
+    let rt = Runtime::load(manifest, Some(&[full_prog.as_str()]))?;
+    let geom = rt.manifest.geometry[&group].clone();
+    let data_key = match group.as_str() {
+        "lenet" => "lenet_test_x",
+        g => &format!("{g}_input").leak(),
+    };
+    let images = rt.load_dataset(data_key)?;
+    let img = &images[0];
+
+    // Golden run gives pre-activations -> exact level inputs.
+    let golden = rt.execute(&full_prog, &[img], &[])?;
+
+    println!("== END statistics for fused group '{group}' ==");
+    let em = EnergyModel::default();
+    let mut level_input = img.clone();
+    for (j, spec) in geom.levels.iter().enumerate().take(2) {
+        let wblob = rt.manifest.weights[&format!("{group}.conv{}_w", j + 1)].clone();
+        let weights = Tensor::new(wblob.shape.clone(), rt.manifest.read_f32(&wblob)?)?;
+        let bias =
+            rt.manifest.read_f32(&rt.manifest.weights[&format!("{group}.conv{}_b", j + 1)].clone())?;
+        let stats = layer_end_stats(
+            &level_input,
+            &weights,
+            &bias,
+            spec,
+            &EndConfig {
+                max_pixels_per_filter: samples,
+                filters: (0..10.min(spec.m_out)).collect(),
+                ..Default::default()
+            },
+        )?;
+        let mut t = Table::new(format!("Level {} ({}) — per-filter END", j, spec.name)).header(&[
+            "Filter", "Neg %", "Pos %", "Undet %", "Mean term digit", "Exec fraction",
+        ]);
+        for f in &stats.per_filter {
+            t.row(vec![
+                format!("{}", f.filter),
+                format!("{:.1}", f.negative_pct),
+                format!("{:.1}", f.positive_pct),
+                format!("{:.1}", f.undetermined_pct),
+                format!("{:.1}", f.mean_term_digit),
+                format!("{:.3}", f.mean_exec_fraction),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "aggregate: {:.1}% negative, {:.1}% undetermined, energy saving {:.1}%\n",
+            100.0 * stats.activity.negative_fraction,
+            100.0 * stats.activity.undetermined_fraction,
+            100.0 * em.end_savings(spec, 8, &stats.activity)
+        );
+        // Next level's input = pool(relu(pre_j)).
+        let act = golden[j].relu();
+        level_input = match spec.pool {
+            Some(p) => act.maxpool(p.k, p.s)?,
+            None => act,
+        };
+    }
+
+    // Termination-position histogram on level-0 windows.
+    println!("== Termination-position histogram (level 0, random windows) ==");
+    let spec = &geom.levels[0];
+    let wblob = rt.manifest.weights[&format!("{group}.conv1_w")].clone();
+    let weights = Tensor::new(wblob.shape.clone(), rt.manifest.read_f32(&wblob)?)?;
+    let w_scale = weights.max_abs();
+    let a_scale = img.max_abs();
+    let mut rng = Rng::new(7);
+    let mut hist = vec![0usize; 16];
+    let win = spec.k * spec.k * spec.n_in;
+    let out_dim = spec.conv_out();
+    for _ in 0..2000 {
+        let f = rng.below(spec.m_out as u64) as usize;
+        let oy = rng.below(out_dim as u64) as i64 * spec.s as i64 - spec.pad as i64;
+        let ox = rng.below(out_dim as u64) as i64 * spec.s as i64 - spec.pad as i64;
+        let mut wq = Vec::with_capacity(win);
+        let mut aq = Vec::with_capacity(win);
+        for i in 0..spec.k {
+            for jj in 0..spec.k {
+                for c in 0..spec.n_in {
+                    let idx = ((i * spec.k + jj) * spec.n_in + c) * spec.m_out + f;
+                    wq.push(Fixed::quantize((weights.data[idx] / w_scale) as f64 * 0.999, 8));
+                    let (yy, xx) = (oy + i as i64, ox + jj as i64);
+                    let v = if yy >= 0
+                        && (yy as usize) < img.shape[0]
+                        && xx >= 0
+                        && (xx as usize) < img.shape[1]
+                    {
+                        img.at3(yy as usize, xx as usize, c)
+                    } else {
+                        0.0
+                    };
+                    aq.push(Fixed::quantize((v / a_scale) as f64 * 0.999, 8));
+                }
+            }
+        }
+        let r = sop_with_end(&wq, &aq, None, 12);
+        if r.state == EndState::Terminate {
+            let d = (r.decided_at as usize).min(hist.len() - 1);
+            hist[d] += 1;
+        }
+    }
+    let total: usize = hist.iter().sum();
+    for (d, &c) in hist.iter().enumerate() {
+        if c > 0 {
+            let bar = "#".repeat(60 * c / total.max(1));
+            println!("  digit {d:2}: {c:5} {bar}");
+        }
+    }
+    println!("\nend_savings OK");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! **End-to-end validation driver** (DESIGN.md §6): the full USEFUSE
+//! stack on a real small workload.
+//!
+//! 1. `make artifacts` trained a LeNet-5 in JAX on the synthetic-digits
+//!    corpus (loss curve in artifacts/lenet_train_log.json).
+//! 2. This driver plans the Q=2 fusion pyramid (Algorithms 3/4), streams
+//!    tiles through the AOT-compiled PJRT tile program, and reassembles
+//!    the fused feature map.
+//! 3. It verifies tile-assembly ≡ golden full-graph execution (the
+//!    fusion-correctness invariant) on every test image.
+//! 4. It runs the classifier head and reports accuracy on the held-out
+//!    test split.
+//! 5. It reports the paper's headline metrics from the calibrated models:
+//!    cycles/latency at 100 MHz, speedup vs Baseline-3, END savings from
+//!    real activation statistics, and memory traffic / OI.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example lenet_e2e
+//! ```
+
+use std::time::Instant;
+
+use usefuse::coordinator::{layer_end_stats, EndConfig, FusionExecutor};
+use usefuse::geometry::{PyramidPlan, StridePolicy};
+use usefuse::runtime::{Manifest, Runtime, Tensor};
+use usefuse::sim::{CycleModel, DesignPoint, EnergyModel, Pattern, TrafficModel};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::load(
+        manifest,
+        Some(&["lenet_tile", "lenet_full", "lenet_infer"]),
+    )?;
+    let exec = FusionExecutor::new(&rt, "lenet")?;
+    println!("== USEFUSE LeNet-5 end-to-end ({} backend) ==", rt.platform());
+    println!(
+        "plan: tiles {:?} strides {:?} α {} ({} rounds)",
+        exec.plan.tiles,
+        exec.plan.strides,
+        exec.plan.alpha(),
+        exec.plan.rounds()
+    );
+
+    let images = rt.load_dataset("lenet_test_x")?;
+    let labels = rt.load_labels("lenet_test_y")?;
+    let n_images = images.len().min(128);
+
+    // --- fusion correctness + classification accuracy ------------------
+    let mut correct = 0usize;
+    let mut worst_rel = 0f32;
+    let mut tiles_total = 0usize;
+    let t0 = Instant::now();
+    for (img, &label) in images.iter().take(n_images).zip(&labels) {
+        let (fused_out, stats) = exec.run(img)?;
+        tiles_total += stats.tiles_executed;
+        // Verify against the golden full-graph artifact.
+        let golden = exec.golden(img)?;
+        let gold_out = golden.last().unwrap();
+        let rel = fused_out.max_abs_diff(gold_out)? / gold_out.max_abs().max(1e-9);
+        worst_rel = worst_rel.max(rel);
+
+        // Classifier head (whole-net artifact).
+        let logits = rt.execute("lenet_infer", &[img], &[])?;
+        let pred = logits[0]
+            .data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred as i32 == label {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let acc = correct as f64 / n_images as f64;
+    println!("\n-- correctness --");
+    println!("  images: {n_images}   tiles executed: {tiles_total}");
+    println!("  fusion max rel err vs golden: {worst_rel:.2e}");
+    println!("  test accuracy: {:.2}% ({}/{})", 100.0 * acc, correct, n_images);
+    println!("  wall time: {wall:?} ({:.2} ms/image)", wall.as_secs_f64() * 1e3 / n_images as f64);
+    assert!(worst_rel < 1e-4, "fusion correctness violated");
+    assert!(acc > 0.9, "accuracy collapsed");
+
+    // --- paper headline metrics (calibrated cycle model) ---------------
+    let m = CycleModel::default();
+    let plan = &exec.plan;
+    let b3_plan = plan.clone();
+    let prop = DesignPoint::proposed(Pattern::Spatial);
+    let b3 = DesignPoint::baseline3(Pattern::Spatial);
+    let naive = PyramidPlan::build(&plan.specs, plan.r_out, StridePolicy::ConvStride).unwrap();
+    let tm = TrafficModel::default();
+    println!("\n-- accelerator metrics (100 MHz, n=8) --");
+    println!(
+        "  proposed DS-1: {} cycles = {:.2} µs ({:.2} GOPS)",
+        m.total_cycles(plan, prop),
+        m.duration_us(plan, prop),
+        m.performance(plan, prop) / 1e9
+    );
+    println!(
+        "  speedup vs Baseline-3 (conventional bit-serial): {:.2}x",
+        m.total_cycles(&b3_plan, b3) as f64 / m.total_cycles(plan, prop) as f64
+    );
+    println!(
+        "  operational intensity: {:.1} ops/B (naive stride: {:.1}) -> {:.1}x",
+        tm.operational_intensity(plan),
+        tm.operational_intensity(&naive),
+        tm.operational_intensity(plan) / tm.operational_intensity(&naive)
+    );
+
+    // --- END savings from real activations ------------------------------
+    let geom = exec.geometry().clone();
+    let wblob = rt.manifest.weights["lenet.conv1_w"].clone();
+    let weights = Tensor::new(wblob.shape.clone(), rt.manifest.read_f32(&wblob)?)?;
+    let bias = rt.manifest.read_f32(&rt.manifest.weights["lenet.conv1_b"].clone())?;
+    let stats = layer_end_stats(
+        &images[0],
+        &weights,
+        &bias,
+        &geom.levels[0],
+        &EndConfig {
+            max_pixels_per_filter: 300,
+            ..Default::default()
+        },
+    )?;
+    let saving = EnergyModel::default().end_savings(&geom.levels[0], 8, &stats.activity);
+    println!("\n-- END (early negative detection), CONV1 --");
+    println!(
+        "  negatives: {:.1}%  undetermined: {:.1}%  mean executed fraction: {:.3}",
+        100.0 * stats.activity.negative_fraction,
+        100.0 * stats.activity.undetermined_fraction,
+        stats.activity.mean_executed_fraction
+    );
+    println!("  compute-energy saving: {:.1}%", 100.0 * saving);
+
+    println!("\nlenet_e2e OK");
+    Ok(())
+}

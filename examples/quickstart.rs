@@ -1,0 +1,73 @@
+//! Quickstart: plan a fusion pyramid, inspect its geometry, run one tile
+//! through the AOT-compiled PJRT program, and print cycle estimates.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use usefuse::geometry::{PyramidPlan, StridePolicy};
+use usefuse::nets;
+use usefuse::runtime::{Manifest, Runtime};
+use usefuse::sim::{CycleModel, DesignPoint, Pattern};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Geometry: the paper's Algorithm 3 + 4 on fused LeNet-5.
+    let net = nets::lenet5();
+    let specs = &net.paper_fusion()[0];
+    let plan = PyramidPlan::build(specs, 1, StridePolicy::Uniform)
+        .expect("uniform stride plan");
+    println!("== Fusion pyramid for {} (Q={}) ==", net.name, plan.depth());
+    for (j, spec) in plan.specs.iter().enumerate() {
+        println!(
+            "  level {j} ({}): tile {}x{}  stride {}  α {}  overlap {}",
+            spec.name,
+            plan.tiles[j],
+            plan.tiles[j],
+            plan.strides[j],
+            plan.alphas[j],
+            plan.overlap(j),
+        );
+    }
+    println!("  rounds: {} (α² pyramid movements)", plan.rounds());
+    assert!(plan.covers_output(), "plan must cover every output pixel");
+
+    // 2. Cycle model (paper Eqs. 3-4) for the four design points.
+    let m = CycleModel::default();
+    println!("\n== Cycle estimates (fused, 100 MHz) ==");
+    for d in DesignPoint::table1_lineup() {
+        if let Some(p) = PyramidPlan::build(specs, 1, d.stride) {
+            println!(
+                "  {:<11} {:>10.2} µs  {:>10.2} GOPS",
+                d.name,
+                m.duration_us(&p, d),
+                m.performance(&p, d) / 1e9
+            );
+        }
+    }
+    for pat in [Pattern::Spatial, Pattern::Temporal] {
+        let d = DesignPoint::proposed(pat);
+        println!(
+            "  Proposed {:?}: {:.2} µs",
+            pat,
+            m.duration_us(&plan, d)
+        );
+    }
+
+    // 3. Real numerics: run the fused stack tile-by-tile through PJRT
+    //    and verify against the golden full-graph artifact.
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::load(manifest, Some(&["lenet_tile", "lenet_full"]))?;
+    println!("\n== PJRT execution ({} backend) ==", rt.platform());
+    let exec = usefuse::coordinator::FusionExecutor::new(&rt, "lenet")?;
+    let images = rt.load_dataset("lenet_test_x")?;
+    let (out, stats) = exec.run(&images[0])?;
+    println!(
+        "  assembled output {:?} from {} tiles in {:?}",
+        out.shape, stats.tiles_executed, stats.wall
+    );
+    let rel_err = exec.verify(&images[0])?;
+    println!("  fusion-correctness max rel err vs golden: {rel_err:.2e}");
+    assert!(rel_err < 1e-4);
+    println!("\nquickstart OK");
+    Ok(())
+}

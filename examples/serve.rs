@@ -1,0 +1,78 @@
+//! Inference-service demo: the coordinator as a deployable runtime — a
+//! request queue + dynamic batcher in front of a PJRT worker thread,
+//! reporting latency percentiles and throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve -- --requests 256
+//! ```
+
+use std::time::Instant;
+
+use usefuse::coordinator::service::{percentile, InferenceService, ServiceConfig};
+use usefuse::runtime::Manifest;
+use usefuse::util::cli::{Args, OptSpec};
+
+fn main() -> anyhow::Result<()> {
+    let specs = [
+        OptSpec { name: "requests", help: "number of requests", takes_value: true, default: Some("256") },
+        OptSpec { name: "batch", help: "max dynamic batch", takes_value: true, default: Some("8") },
+    ];
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &specs).map_err(|e| anyhow::anyhow!(e))?;
+    let n_requests = args.get_usize("requests").map_err(|e| anyhow::anyhow!(e))?.unwrap();
+    let max_batch = args.get_usize("batch").map_err(|e| anyhow::anyhow!(e))?.unwrap();
+
+    // Load the test images on the client side.
+    let manifest = Manifest::load("artifacts")?;
+    let blob = manifest.data["lenet_test_x"].clone();
+    let data = manifest.read_f32(&blob)?;
+    let item: usize = blob.shape[1..].iter().product();
+    let images: Vec<usefuse::runtime::Tensor> = data
+        .chunks_exact(item)
+        .map(|c| usefuse::runtime::Tensor {
+            shape: blob.shape[1..].to_vec(),
+            data: c.to_vec(),
+        })
+        .collect();
+    let labels = manifest.read_i32(&manifest.data["lenet_test_y"].clone())?;
+
+    let svc = InferenceService::start(ServiceConfig {
+        max_batch,
+        ..Default::default()
+    })?;
+    println!("service up (max_batch={max_batch}); sending {n_requests} requests…");
+
+    // Fire requests asynchronously to exercise the batcher, then collect.
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let img = images[i % images.len()].clone();
+        pending.push((i, svc.classify_async(img)?));
+    }
+    let mut lat_us = Vec::with_capacity(n_requests);
+    let mut correct = 0usize;
+    let mut batch_hist = std::collections::BTreeMap::<usize, usize>::new();
+    for (i, rx) in pending {
+        let resp = rx.recv()??;
+        if resp.class as i32 == labels[i % labels.len()] {
+            correct += 1;
+        }
+        lat_us.push((resp.queue_wait + resp.exec).as_secs_f64() * 1e6);
+        *batch_hist.entry(resp.batch_size).or_default() += 1;
+    }
+    let wall = t0.elapsed();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    println!("\n-- results --");
+    println!("  accuracy: {:.1}%", 100.0 * correct as f64 / n_requests as f64);
+    println!("  throughput: {:.0} req/s", n_requests as f64 / wall.as_secs_f64());
+    println!(
+        "  latency p50/p90/p99: {:.0} / {:.0} / {:.0} µs",
+        percentile(&lat_us, 50.0),
+        percentile(&lat_us, 90.0),
+        percentile(&lat_us, 99.0)
+    );
+    println!("  batch-size distribution: {batch_hist:?}");
+    println!("\nserve OK");
+    Ok(())
+}

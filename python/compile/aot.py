@@ -1,0 +1,257 @@
+"""AOT compilation: lower every model program to HLO **text** and emit
+the artifact bundle the Rust runtime consumes.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+- ``<name>.hlo.txt``      — one per program
+- ``<group>.<param>.bin`` — little-endian f32 weight blobs
+- ``<name>.bin``          — input datasets (f32) / labels (i32)
+- ``manifest.json``       — programs (input/output shapes, weight order),
+  weight blobs, datasets and the fusion geometry the Rust side
+  cross-checks against its own Algorithm 3/4 implementation.
+
+Python runs once at build time; it is never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, model, netdefs
+
+DT = {"float32": "f32", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Bundle:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.manifest = {
+            "precision": 8,
+            "programs": {},
+            "weights": {},
+            "data": {},
+            "geometry": {},
+        }
+
+    def add_weight(self, key: str, arr: np.ndarray):
+        fname = f"{key}.bin"
+        arr.astype("<f4").tofile(os.path.join(self.out, fname))
+        self.manifest["weights"][key] = {"file": fname, "shape": list(arr.shape)}
+
+    def add_data(self, key: str, arr: np.ndarray, dtype: str):
+        fname = f"{key}.bin"
+        np_dt = "<f4" if dtype == "f32" else "<i4"
+        arr.astype(np_dt).tofile(os.path.join(self.out, fname))
+        self.manifest["data"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": dtype,
+        }
+
+    def add_program(self, name, fn, example, n_runtime_inputs, weight_keys):
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example)
+        self.manifest["programs"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(e.shape), "dtype": DT[str(e.dtype)]} for e in example
+            ],
+            "n_runtime_inputs": n_runtime_inputs,
+            "weights": weight_keys,
+            "outputs": [
+                {"shape": list(o.shape), "dtype": DT[str(o.dtype)]} for o in outs
+            ],
+        }
+        print(
+            f"  {name}: {len(text)//1024} KiB HLO, "
+            f"{len(example)} inputs ({n_runtime_inputs} runtime)"
+        )
+
+    def add_geometry(self, key, levels, tiles, strides, alpha):
+        q = len(levels)
+        starts = [0] * q
+        for j in range(q - 2, -1, -1):
+            starts[j] = (starts[j + 1] - levels[j + 1].pad) * levels[j].chain_factor
+        self.manifest["geometry"][key] = {
+            "r_out": levels[-1].output_for_tile(tiles[-1]),
+            "tiles": tiles,
+            "strides": strides,
+            "alpha": alpha,
+            "starts": starts,
+            "levels": [
+                {
+                    "name": lv.name,
+                    "k": lv.k,
+                    "s": lv.s,
+                    "pad": lv.pad,
+                    "pool": list(lv.pool) if lv.pool else None,
+                    "n_in": lv.n_in,
+                    "m_out": lv.m_out,
+                    "ifm": lv.ifm,
+                }
+                for lv in levels
+            ],
+        }
+
+    def finish(self):
+        path = os.path.join(self.out, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+
+
+def he_weights(rng, levels, group, bundle):
+    """Seeded He-initialized weights for a fused stack; returns keys."""
+    keys = []
+    for i, lv in enumerate(levels):
+        w = (
+            rng.standard_normal((lv.k, lv.k, lv.n_in, lv.m_out))
+            * np.sqrt(2.0 / (lv.k * lv.k * lv.n_in))
+        ).astype(np.float32)
+        b = (0.01 * rng.standard_normal((lv.m_out,))).astype(np.float32)
+        kw, kb = f"{group}.conv{i+1}_w", f"{group}.conv{i+1}_b"
+        bundle.add_weight(kw, w)
+        bundle.add_weight(kb, b)
+        keys += [kw, kb]
+    return keys
+
+
+def emit_fused_pair(bundle, group, levels, r_out, weight_keys):
+    """Emit tile + full programs and geometry for one fused stack."""
+    tiles = netdefs.tile_sizes(levels, r_out)
+    strides, alpha = netdefs.uniform_stride(levels, tiles)
+    bundle.add_geometry(group, levels, tiles, strides, alpha)
+
+    tile_fn, tile_ex = model.fused_tile_program(levels, tiles)
+    bundle.add_program(
+        f"{group}_tile",
+        tile_fn,
+        tile_ex,
+        n_runtime_inputs=1 + 2 * len(levels),
+        weight_keys=weight_keys,
+    )
+    full_fn, full_ex = model.fused_full_program(levels)
+    bundle.add_program(
+        f"{group}_full", full_fn, full_ex, n_runtime_inputs=1, weight_keys=weight_keys
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=13)
+    ap.add_argument(
+        "--skip-heavy",
+        action="store_true",
+        help="skip VGG/ResNet programs (fast CI builds)",
+    )
+    args = ap.parse_args()
+    bundle = Bundle(args.out)
+    rng = np.random.default_rng(args.seed)
+
+    # ---- LeNet-5 (trained weights from train_lenet.py) ----------------
+    wpath = os.path.join(args.out, "lenet_weights.npz")
+    if not os.path.exists(wpath):
+        raise SystemExit("run train_lenet first (make artifacts does)")
+    lw = np.load(wpath)
+    lenet_conv_keys = []
+    for name in ["conv1_w", "conv1_b", "conv2_w", "conv2_b"]:
+        bundle.add_weight(f"lenet.{name}", lw[name])
+        lenet_conv_keys.append(f"lenet.{name}")
+    lenet_all_keys = list(lenet_conv_keys)
+    for name in ["fc1_w", "fc1_b", "fc2_w", "fc2_b", "fc3_w", "fc3_b"]:
+        bundle.add_weight(f"lenet.{name}", lw[name])
+        lenet_all_keys.append(f"lenet.{name}")
+
+    print("LeNet programs:")
+    emit_fused_pair(bundle, "lenet", netdefs.LENET, 1, lenet_conv_keys)
+    infer_fn, infer_ex = model.lenet_infer_program(netdefs.LENET)
+    bundle.add_program(
+        "lenet_infer", infer_fn, infer_ex, n_runtime_inputs=1, weight_keys=lenet_all_keys
+    )
+
+    test = np.load(os.path.join(args.out, "lenet_test.npz"))
+    bundle.add_data("lenet_test_x", test["x"], "f32")
+    bundle.add_data("lenet_test_y", test["y"], "i32")
+
+    # ---- AlexNet Q=2 (He weights, 1/f-noise inputs) --------------------
+    print("AlexNet programs:")
+    alex_keys = he_weights(rng, netdefs.ALEXNET_F2, "alexnet", bundle)
+    emit_fused_pair(bundle, "alexnet", netdefs.ALEXNET_F2, 1, alex_keys)
+    bundle.add_data("alexnet_input", datagen.natural_batch(rng, 2, 227, 3), "f32")
+
+    if not args.skip_heavy:
+        # ---- VGG first two blocks, Q=4 ---------------------------------
+        print("VGG programs:")
+        vgg_keys = he_weights(rng, netdefs.VGG_F4, "vgg", bundle)
+        emit_fused_pair(bundle, "vgg", netdefs.VGG_F4, 2, vgg_keys)
+        bundle.add_data("vgg_input", datagen.natural_batch(rng, 2, 224, 3), "f32")
+
+        # ---- ResNet-18 blocks (Fig. 14 / Table 5 workloads) -------------
+        print("ResNet programs:")
+        stem = [netdefs.Level("CONV1", 7, 2, 3, (2, 2), 3, 64, 224)]
+        stem_keys = he_weights(rng, stem, "resnet_stem", bundle)
+        stem_fn, stem_ex = model.fused_full_program(stem)
+        bundle.add_program(
+            "resnet_stem", stem_fn, stem_ex, n_runtime_inputs=1, weight_keys=stem_keys
+        )
+
+        shapes = {
+            "s1": (56, 64, 64, 1),
+            "s2a": (56, 64, 128, 2),
+            "s2b": (28, 128, 128, 1),
+            "s3a": (28, 128, 256, 2),
+            "s3b": (14, 256, 256, 1),
+            "s4a": (14, 256, 512, 2),
+            "s4b": (7, 512, 512, 1),
+        }
+        for tag, (dim, n_in, ch, stride) in shapes.items():
+            fn, ex = model.resnet_block_program(dim, n_in, ch, stride)
+            keys = []
+            w_shapes = [
+                ("wa", (3, 3, n_in, ch)),
+                ("ba", (ch,)),
+                ("wb", (3, 3, ch, ch)),
+                ("bb", (ch,)),
+            ]
+            if stride != 1 or n_in != ch:
+                w_shapes += [("wd", (1, 1, n_in, ch)), ("bd", (ch,))]
+            for pname, shape in w_shapes:
+                fan = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+                arr = (rng.standard_normal(shape) * np.sqrt(2.0 / fan)).astype(
+                    np.float32
+                )
+                key = f"resnet_{tag}.{pname}"
+                bundle.add_weight(key, arr)
+                keys.append(key)
+            bundle.add_program(
+                f"resnet_{tag}", fn, ex, n_runtime_inputs=1, weight_keys=keys
+            )
+        bundle.add_data("resnet_input", datagen.natural_batch(rng, 2, 224, 3), "f32")
+
+    bundle.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Synthetic datasets (substitutions for the paper's image corpora —
+see DESIGN.md §2).
+
+- ``digits_batch``: a procedural "synthetic digits" corpus for the LeNet-5
+  end-to-end experiment: 8×8 glyph templates rendered to 32×32 with random
+  shift, scale jitter and noise. Easy enough to train a LeNet to high
+  accuracy in a few hundred steps, hard enough that an untrained net
+  scores ~10%.
+- ``natural_batch``: 1/f ("pink") noise images whose second-order
+  statistics resemble natural images — used to drive AlexNet/VGG/ResNet
+  activations for the END/energy experiments, where only activation sign
+  statistics matter.
+"""
+
+import numpy as np
+
+__all__ = ["digits_batch", "natural_batch", "GLYPHS"]
+
+# 8x8 glyph bitmaps for digits 0-9 (rows of '1'/'0').
+GLYPHS = [
+    # 0
+    ["00111100", "01100110", "01100110", "01100110", "01100110", "01100110", "01100110", "00111100"],
+    # 1
+    ["00011000", "00111000", "01111000", "00011000", "00011000", "00011000", "00011000", "01111110"],
+    # 2
+    ["00111100", "01100110", "00000110", "00001100", "00011000", "00110000", "01100000", "01111110"],
+    # 3
+    ["00111100", "01100110", "00000110", "00011100", "00000110", "00000110", "01100110", "00111100"],
+    # 4
+    ["00001100", "00011100", "00111100", "01101100", "11001100", "11111110", "00001100", "00001100"],
+    # 5
+    ["01111110", "01100000", "01100000", "01111100", "00000110", "00000110", "01100110", "00111100"],
+    # 6
+    ["00111100", "01100110", "01100000", "01111100", "01100110", "01100110", "01100110", "00111100"],
+    # 7
+    ["01111110", "00000110", "00001100", "00011000", "00110000", "00110000", "00110000", "00110000"],
+    # 8
+    ["00111100", "01100110", "01100110", "00111100", "01100110", "01100110", "01100110", "00111100"],
+    # 9
+    ["00111100", "01100110", "01100110", "00111110", "00000110", "00000110", "01100110", "00111100"],
+]
+
+_TEMPLATES = np.array(
+    [[[int(c) for c in row] for row in glyph] for glyph in GLYPHS], dtype=np.float32
+)
+
+
+def digits_batch(rng: np.random.Generator, n: int):
+    """Render ``n`` random digit images.
+
+    Returns (x, y): x float32 (n, 32, 32, 1) in [0, 1], y int32 (n,).
+    """
+    y = rng.integers(0, 10, size=n).astype(np.int32)
+    x = np.zeros((n, 32, 32, 1), dtype=np.float32)
+    for i in range(n):
+        glyph = _TEMPLATES[y[i]]
+        # Upsample 8x8 -> 24x24 (×3), place with a random shift in 32x32.
+        up = np.kron(glyph, np.ones((3, 3), dtype=np.float32))
+        dy = rng.integers(0, 32 - 24 + 1)
+        dx = rng.integers(0, 32 - 24 + 1)
+        img = np.zeros((32, 32), dtype=np.float32)
+        img[dy : dy + 24, dx : dx + 24] = up
+        # Intensity jitter + additive noise.
+        img *= 0.7 + 0.3 * rng.random()
+        img += 0.12 * rng.standard_normal((32, 32)).astype(np.float32)
+        x[i, :, :, 0] = np.clip(img, 0.0, 1.0)
+    return x, y
+
+
+def natural_batch(rng: np.random.Generator, n: int, dim: int, channels: int):
+    """1/f-spectrum noise images, float32 (n, dim, dim, channels) in [0,1].
+
+    Natural images have ~1/f amplitude spectra; conv-layer SOP sign
+    statistics on such inputs match those on photographs closely, which
+    is all the END experiments depend on.
+    """
+    fy = np.fft.fftfreq(dim)[:, None]
+    fx = np.fft.fftfreq(dim)[None, :]
+    f = np.sqrt(fy * fy + fx * fx)
+    f[0, 0] = 1.0
+    amp = 1.0 / f
+    out = np.empty((n, dim, dim, channels), dtype=np.float32)
+    for i in range(n):
+        for c in range(channels):
+            phase = rng.random((dim, dim)) * 2 * np.pi
+            spec = amp * np.exp(1j * phase)
+            img = np.real(np.fft.ifft2(spec))
+            img = (img - img.min()) / (img.max() - img.min() + 1e-9)
+            out[i, :, :, c] = img.astype(np.float32)
+    return out

@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernels: direct convolution as an im2col matmul.
+
+The paper's compute hot-spot is the convolution sum-of-products. On the
+paper's FPGA it is a bank of MSDF bit-serial SOP units; on a TPU-class
+target the same fusion-tile insight maps to a VMEM-resident tile processed
+on the MXU (see DESIGN.md §Hardware-Adaptation). The kernel below computes
+one (tile of a) convolution layer: the full K*K*N x M contraction is
+expressed as a single matmul so it lowers onto the systolic array.
+
+Kernels are lowered with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv2d_pallas", "maxpool2d_pallas"]
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K, S, R, C):
+    """Whole-tile conv kernel body.
+
+    x: (H, W, N) input tile (already padded by the caller if needed)
+    w: (K, K, N, M), b: (M,), o: (R, C, M) with R = (H-K)//S + 1.
+    """
+    x = x_ref[...]
+    n = x.shape[-1]
+    m = w_ref.shape[-1]
+    # im2col: gather the K*K strided slices; (i, j) loop is static so this
+    # unrolls into slices the compiler fuses. Order (i, j, n) matches the
+    # (K, K, N, M) weight layout after reshape.
+    cols = []
+    for i in range(K):
+        for j in range(K):
+            sl = x[i : i + (R - 1) * S + 1 : S, j : j + (C - 1) * S + 1 : S, :]
+            cols.append(sl)  # (R, C, N)
+    patches = jnp.stack(cols, axis=2)  # (R, C, K*K, N)
+    patches = patches.reshape(R * C, K * K * n)
+    w = w_ref[...].reshape(K * K * n, m)
+    acc = jnp.dot(patches, w, preferred_element_type=jnp.float32)
+    out = acc + b_ref[...][None, :].astype(acc.dtype)
+    o_ref[...] = out.reshape(R, C, m).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def conv2d_pallas(x, w, b, *, stride=1):
+    """Valid 2-D convolution of an (H, W, N) tile with (K, K, N, M) weights.
+
+    Returns the pre-activation (R, C, M). Padding is the caller's
+    responsibility (the fusion executor supplies pre-padded tiles).
+    """
+    h, w_dim, n = x.shape
+    k, k2, n2, m = w.shape
+    assert k == k2 and n == n2, f"shape mismatch: x={x.shape} w={w.shape}"
+    assert b.shape == (m,)
+    r = (h - k) // stride + 1
+    c = (w_dim - k) // stride + 1
+    assert r >= 1 and c >= 1, f"tile {x.shape} too small for kernel {k}/{stride}"
+    kernel = functools.partial(_conv_kernel, K=k, S=stride, R=r, C=c)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c, m), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def _maxpool_kernel(x_ref, o_ref, *, K, S, R, C):
+    x = x_ref[...]
+    parts = []
+    for i in range(K):
+        for j in range(K):
+            parts.append(
+                x[i : i + (R - 1) * S + 1 : S, j : j + (C - 1) * S + 1 : S, :]
+            )
+    stacked = jnp.stack(parts, axis=0)  # (K*K, R, C, N)
+    o_ref[...] = jnp.max(stacked, axis=0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride"))
+def maxpool2d_pallas(x, *, k=2, stride=2):
+    """Max pooling of an (H, W, N) tile; valid windows only."""
+    h, w_dim, n = x.shape
+    r = (h - k) // stride + 1
+    c = (w_dim - k) // stride + 1
+    assert r >= 1 and c >= 1
+    kernel = functools.partial(_maxpool_kernel, K=k, S=stride, R=r, C=c)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c, n), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is written with jax.lax reference primitives (no Pallas)
+and is the ground truth the kernel tests compare against.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["conv2d_ref", "maxpool2d_ref", "relu_ref"]
+
+
+def conv2d_ref(x, w, b, *, stride=1):
+    """Valid conv of (H, W, N) with (K, K, N, M) -> (R, C, M) pre-activation."""
+    xn = x.transpose(2, 0, 1)[None]            # (1, N, H, W)
+    wn = w.transpose(3, 2, 0, 1)               # (M, N, K, K)
+    out = lax.conv_general_dilated(
+        xn.astype(jnp.float32),
+        wn.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )                                          # (1, M, R, C)
+    out = out[0].transpose(1, 2, 0) + b[None, None, :].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def maxpool2d_ref(x, *, k=2, stride=2):
+    """Max pooling of (H, W, N) -> (R, C, N), valid windows."""
+    init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+    return lax.reduce_window(
+        x,
+        init,
+        lax.max,
+        window_dimensions=(k, k, 1),
+        window_strides=(stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0)

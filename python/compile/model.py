@@ -1,0 +1,208 @@
+"""Layer-2 JAX model programs, built on the Layer-1 Pallas kernels.
+
+Three program families, all AOT-lowered to HLO text by ``aot.py``:
+
+- ``fused_tile_program``: one fusion-pyramid pass — the request-path unit
+  the Rust coordinator executes per tile movement. Boundary-correct:
+  per-level scalar offsets mask the positions that correspond to
+  convolution padding in the full-map computation, so tile assembly is
+  bit-identical to the golden full-map program.
+- ``fused_full_program``: the same stack over the whole feature map (the
+  golden reference for fusion-correctness checks, and the source of real
+  activations for END statistics).
+- ``lenet_infer_program`` / ``resnet_block_program``: end-to-end LeNet-5
+  classification and ResNet residual blocks.
+"""
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv import conv2d_pallas, maxpool2d_pallas
+from .netdefs import Level
+
+__all__ = [
+    "fused_tile_program",
+    "fused_full_program",
+    "lenet_infer_program",
+    "resnet_block_program",
+]
+
+
+def _mask_padding(x, oy, ox, raw_dim):
+    """Zero positions whose raw coordinates fall outside [0, raw_dim).
+
+    ``x`` is a (G, G, M) conv output whose element (i, j) sits at raw
+    coordinate (oy + i, ox + j) of the layer's unpadded output map.
+    Positions outside the raw map correspond to convolution padding in
+    the full-map computation and must be exactly zero for tile assembly
+    to match the golden program.
+    """
+    g = x.shape[0]
+    iy = jnp.arange(g)[:, None, None] + oy
+    ix = jnp.arange(g)[None, :, None] + ox
+    valid = (iy >= 0) & (iy < raw_dim) & (ix >= 0) & (ix < raw_dim)
+    return jnp.where(valid, x, 0)
+
+
+def _level_params(levels: Sequence[Level]):
+    """Example (weight, bias) ShapeDtypeStructs per level, in order."""
+    out = []
+    for lv in levels:
+        out.append(
+            (
+                jax.ShapeDtypeStruct((lv.k, lv.k, lv.n_in, lv.m_out), jnp.float32),
+                jax.ShapeDtypeStruct((lv.m_out,), jnp.float32),
+            )
+        )
+    return out
+
+
+def fused_tile_program(levels: List[Level], tiles: List[int]):
+    """Build the per-tile fused program.
+
+    Signature: ``f(tile, oy_1, ox_1, ..., oy_Q, ox_Q, w_1, b_1, ..., w_Q,
+    b_Q) -> (out,)`` where ``tile`` is the (H_1, H_1, N_1) level-0 input
+    tile in *padded* coordinates (the executor pre-fills padding/overhang
+    with zeros) and ``(oy_q, ox_q)`` is the raw coordinate of the level-q
+    conv output region's top-left corner (i32 scalars, may be negative).
+    """
+    q = len(levels)
+    # Real conv-output and pooled-output dimensions per level (static).
+    conv_dims = [lv.conv_out for lv in levels]
+    pool_dims = [lv.level_out for lv in levels]
+
+    def f(tile, *rest):
+        offs = rest[: 2 * q]
+        params = rest[2 * q :]
+        x = tile
+        for j, lv in enumerate(levels):
+            w = params[2 * j]
+            b = params[2 * j + 1]
+            oy, ox = offs[2 * j], offs[2 * j + 1]
+            pre = conv2d_pallas(x, w, b, stride=lv.s)
+            # Zero conv outputs outside the real output map (they were
+            # computed from executor overhang fill, not real pixels).
+            pre = _mask_padding(pre, oy, ox, conv_dims[j])
+            act = jnp.maximum(pre, 0)
+            if lv.pool:
+                act = maxpool2d_pallas(act, k=lv.pool[0], stride=lv.pool[1])
+                # Pool windows straddling the map boundary produce values
+                # at invalid pooled coordinates; those positions feed the
+                # next level's *padding* region and must be exactly zero.
+                ps = lv.pool[1]
+                act = _mask_padding(act, oy // ps, ox // ps, pool_dims[j])
+            x = act
+        return (x,)
+
+    example = [jax.ShapeDtypeStruct((tiles[0], tiles[0], levels[0].n_in), jnp.float32)]
+    example += [jax.ShapeDtypeStruct((), jnp.int32)] * (2 * q)
+    for w, b in _level_params(levels):
+        example += [w, b]
+    return f, example
+
+
+def fused_full_program(levels: List[Level]):
+    """The golden full-map program: same stack, real padding, whole input.
+
+    Signature: ``f(x, w_1, b_1, ..., w_Q, b_Q) ->
+    (pre_1, ..., pre_Q, out)`` — pre-activations are returned for END
+    statistics (§3.2 experiments need real SOP values).
+    """
+
+    def f(x, *params):
+        pres = []
+        for j, lv in enumerate(levels):
+            w = params[2 * j]
+            b = params[2 * j + 1]
+            if lv.pad:
+                x = jnp.pad(x, ((lv.pad, lv.pad), (lv.pad, lv.pad), (0, 0)))
+            pre = conv2d_pallas(x, w, b, stride=lv.s)
+            pres.append(pre)
+            act = jnp.maximum(pre, 0)
+            if lv.pool:
+                act = maxpool2d_pallas(act, k=lv.pool[0], stride=lv.pool[1])
+            x = act
+        return tuple(pres) + (x,)
+
+    example = [
+        jax.ShapeDtypeStruct((levels[0].ifm, levels[0].ifm, levels[0].n_in), jnp.float32)
+    ]
+    for w, b in _level_params(levels):
+        example += [w, b]
+    return f, example
+
+
+def lenet_infer_program(levels: List[Level]):
+    """Full LeNet-5 inference: fused conv stack + FC 120-84-10 head.
+
+    Signature: ``f(x, w1, b1, w2, b2, fc1_w, fc1_b, fc2_w, fc2_b,
+    fc3_w, fc3_b) -> (logits,)``.
+    """
+
+    def f(x, *params):
+        conv_params, fc = params[:4], params[4:]
+        for j, lv in enumerate(levels):
+            w, b = conv_params[2 * j], conv_params[2 * j + 1]
+            pre = conv2d_pallas(x, w, b, stride=lv.s)
+            act = jnp.maximum(pre, 0)
+            if lv.pool:
+                act = maxpool2d_pallas(act, k=lv.pool[0], stride=lv.pool[1])
+            x = act
+        h = x.reshape(-1)
+        h = jnp.maximum(h @ fc[0] + fc[1], 0)
+        h = jnp.maximum(h @ fc[2] + fc[3], 0)
+        return (h @ fc[4] + fc[5],)
+
+    feat = levels[-1].level_out
+    flat = feat * feat * levels[-1].m_out
+    example = [jax.ShapeDtypeStruct((32, 32, 1), jnp.float32)]
+    for w, b in _level_params(levels):
+        example += [w, b]
+    for a, b_dim in [(flat, 120), (120, 84), (84, 10)]:
+        example += [
+            jax.ShapeDtypeStruct((a, b_dim), jnp.float32),
+            jax.ShapeDtypeStruct((b_dim,), jnp.float32),
+        ]
+    return f, example
+
+
+def resnet_block_program(dim: int, n_in: int, ch: int, stride: int):
+    """A ResNet-18 basic block as a Q=2 fusion pyramid with skip add.
+
+    Signature: ``f(x, wa, ba, wb, bb[, wd, bd]) -> (pre_a, pre_b, out)``
+    where the optional (wd, bd) is the 1×1 downsample projection used when
+    stride ≠ 1 or channel counts change (paper §5: skip connections within
+    a block integrate directly into the pipeline).
+    """
+    downsample = stride != 1 or n_in != ch
+
+    def f(x, *params):
+        wa, ba, wb, bb = params[:4]
+        xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+        pre_a = conv2d_pallas(xp, wa, ba, stride=stride)
+        act_a = jnp.maximum(pre_a, 0)
+        ap = jnp.pad(act_a, ((1, 1), (1, 1), (0, 0)))
+        pre_b = conv2d_pallas(ap, wb, bb, stride=1)
+        if downsample:
+            wd, bd = params[4], params[5]
+            skip = conv2d_pallas(x, wd, bd, stride=stride)
+        else:
+            skip = x
+        out = jnp.maximum(pre_b + skip, 0)
+        return (pre_a, pre_b, out)
+
+    example = [jax.ShapeDtypeStruct((dim, dim, n_in), jnp.float32)]
+    example += [
+        jax.ShapeDtypeStruct((3, 3, n_in, ch), jnp.float32),
+        jax.ShapeDtypeStruct((ch,), jnp.float32),
+        jax.ShapeDtypeStruct((3, 3, ch, ch), jnp.float32),
+        jax.ShapeDtypeStruct((ch,), jnp.float32),
+    ]
+    if downsample:
+        example += [
+            jax.ShapeDtypeStruct((1, 1, n_in, ch), jnp.float32),
+            jax.ShapeDtypeStruct((ch,), jnp.float32),
+        ]
+    return f, example

@@ -1,0 +1,144 @@
+"""Network configurations and the fusion-geometry mirror.
+
+These definitions mirror ``rust/src/nets/zoo.rs`` and
+``rust/src/geometry/``; the Rust coordinator cross-checks its own geometry
+against the values recorded in the manifest, so any drift between the two
+implementations fails fast at startup.
+"""
+
+from dataclasses import dataclass
+from typing import Optional, List, Tuple
+
+__all__ = [
+    "Level",
+    "LENET",
+    "ALEXNET_F2",
+    "VGG_F4",
+    "tile_sizes",
+    "uniform_stride",
+]
+
+
+@dataclass(frozen=True)
+class Level:
+    """One pyramid level: conv (+ReLU) with optional pooling."""
+
+    name: str
+    k: int
+    s: int
+    pad: int
+    pool: Optional[Tuple[int, int]]  # (k, s)
+    n_in: int
+    m_out: int
+    ifm: int  # raw input spatial dim
+
+    @property
+    def ifm_padded(self) -> int:
+        return self.ifm + 2 * self.pad
+
+    @property
+    def chain_factor(self) -> int:
+        return self.s * (self.pool[1] if self.pool else 1)
+
+    @property
+    def conv_out(self) -> int:
+        return (self.ifm_padded - self.k) // self.s + 1
+
+    @property
+    def level_out(self) -> int:
+        c = self.conv_out
+        if self.pool:
+            pk, ps = self.pool
+            return (c - pk) // ps + 1
+        return c
+
+    def tile_for_output(self, d_out: int) -> int:
+        """Eq. (1) through pool then conv."""
+        region = (d_out - 1) * self.pool[1] + self.pool[0] if self.pool else d_out
+        return (region - 1) * self.s + self.k
+
+    def output_for_tile(self, h: int) -> int:
+        conv = (h - self.k) // self.s + 1
+        if self.pool:
+            pk, ps = self.pool
+            return (conv - pk) // ps + 1
+        return conv
+
+
+# LeNet-5 fused CONV1+CONV2 (the paper's Q=2 configuration).
+LENET: List[Level] = [
+    Level("CONV1", 5, 1, 0, (2, 2), 1, 6, 32),
+    Level("CONV2", 5, 1, 0, (2, 2), 6, 16, 14),
+]
+
+# AlexNet fused CONV1+CONV2 (Q=2).
+ALEXNET_F2: List[Level] = [
+    Level("CONV1", 11, 4, 0, (3, 2), 3, 96, 227),
+    Level("CONV2", 5, 1, 2, (3, 2), 96, 256, 27),
+]
+
+# VGG-16 fused first two blocks (Q=4).
+VGG_F4: List[Level] = [
+    Level("CONV1_1", 3, 1, 1, None, 3, 64, 224),
+    Level("CONV1_2", 3, 1, 1, (2, 2), 64, 64, 224),
+    Level("CONV2_1", 3, 1, 1, None, 64, 128, 112),
+    Level("CONV2_2", 3, 1, 1, (2, 2), 128, 128, 112),
+]
+
+
+def tile_sizes(levels: List[Level], r_out: int) -> List[int]:
+    """Algorithm 3 for one output-region choice (mirrors alg3.rs)."""
+    tiles = [0] * len(levels)
+    region = r_out
+    for j in range(len(levels) - 1, -1, -1):
+        h = levels[j].tile_for_output(region)
+        if h > levels[j].ifm_padded:
+            raise ValueError(f"tile {h} exceeds IFM at level {levels[j].name}")
+        tiles[j] = h
+        region = h
+    return tiles
+
+
+def uniform_stride(levels: List[Level], tiles: List[int]):
+    """Algorithm 4 (mirrors alg4.rs): returns (strides, alpha).
+
+    Tries the exact integer-α solution first, then the overhang-tolerant
+    variant used for padded stacks.
+    """
+    q = len(levels)
+    last = levels[-1]
+    cov_last = tiles[-1] - last.k + last.s
+    cands = [
+        p
+        for p in range(cov_last, 0, -1)
+        if last.chain_factor == 1 or p % last.chain_factor == 0
+    ]
+    for exact in (True, False):
+        for p_last in cands:
+            strides = [0] * q
+            strides[-1] = p_last
+            for j in range(q - 2, -1, -1):
+                strides[j] = strides[j + 1] * levels[j].chain_factor
+            if any(
+                strides[j] > tiles[j] - levels[j].k + levels[j].s for j in range(q)
+            ):
+                continue
+            alpha = None
+            ok = True
+            for j in range(q):
+                span = levels[j].ifm_padded - tiles[j]
+                if exact:
+                    if span % strides[j] != 0:
+                        ok = False
+                        break
+                    a = span // strides[j] + 1
+                    if alpha is not None and a != alpha:
+                        ok = False
+                        break
+                    alpha = a
+                else:
+                    a = -(-span // strides[j]) + 1
+                    alpha = a if alpha is None else max(alpha, a)
+            if ok:
+                return strides, alpha
+    raise ValueError("no uniform stride solution")

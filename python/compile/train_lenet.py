@@ -1,0 +1,132 @@
+"""Train LeNet-5 on the synthetic digits corpus (build-time only).
+
+Part of `make artifacts`: trains for a few hundred SGD steps, logs the
+loss curve to ``artifacts/lenet_train_log.json`` (recorded in
+EXPERIMENTS.md), and saves weights + a held-out test split consumed by
+``aot.py`` and the Rust end-to-end example.
+
+Training uses jax.lax reference convs for speed; the AOT artifacts run
+the same weights through the Pallas kernels (numerically equivalent,
+verified by python/tests/test_model.py).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datagen import digits_batch
+from .netdefs import LENET
+
+
+def init_params(rng: np.random.Generator):
+    """He-initialized LeNet-5 parameters, as a flat list in artifact order:
+    conv1_w, conv1_b, conv2_w, conv2_b, fc1_w, fc1_b, fc2_w, fc2_b,
+    fc3_w, fc3_b."""
+
+    def he(shape, fan_in):
+        return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+    params = []
+    for lv in LENET:
+        params.append(he((lv.k, lv.k, lv.n_in, lv.m_out), lv.k * lv.k * lv.n_in))
+        params.append(np.zeros((lv.m_out,), dtype=np.float32))
+    feat = LENET[-1].level_out
+    flat = feat * feat * LENET[-1].m_out
+    for a, b in [(flat, 120), (120, 84), (84, 10)]:
+        params.append(he((a, b), a))
+        params.append(np.zeros((b,), dtype=np.float32))
+    return [jnp.asarray(p) for p in params]
+
+
+def forward(params, x):
+    """LeNet forward over a batch (B, 32, 32, 1) using lax reference ops."""
+    from jax import lax
+
+    w1, b1, w2, b2, f1w, f1b, f2w, f2b, f3w, f3b = params
+    h = x.transpose(0, 3, 1, 2)  # NCHW
+
+    def conv(h, w, b, stride=1):
+        wn = w.transpose(3, 2, 0, 1)
+        out = lax.conv_general_dilated(h, wn, (stride, stride), "VALID")
+        return out + b[None, :, None, None]
+
+    h = jnp.maximum(conv(h, w1, b1), 0)
+    h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    h = jnp.maximum(conv(h, w2, b2), 0)
+    h = lax.reduce_window(h, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+    # Flatten in HWC order to match the artifact's reshape(-1) of (H,W,C).
+    h = h.transpose(0, 2, 3, 1).reshape(h.shape[0], -1)
+    h = jnp.maximum(h @ f1w + f1b, 0)
+    h = jnp.maximum(h @ f2w + f2b, 0)
+    return h @ f3w + f3b
+
+
+def loss_fn(params, x, y):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(y.shape[0]), y])
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def sgd_step(params, momentum, x, y, lr=0.05, beta=0.9):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    momentum = [beta * m + g for m, g in zip(momentum, grads)]
+    params = [p - lr * m for p, m in zip(params, momentum)]
+    return params, momentum, loss
+
+
+def accuracy(params, x, y):
+    preds = jnp.argmax(forward(params, x), axis=-1)
+    return float(jnp.mean((preds == y).astype(jnp.float32)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    rng = np.random.default_rng(args.seed)
+    params = init_params(rng)
+    momentum = [jnp.zeros_like(p) for p in params]
+
+    log = []
+    for step in range(args.steps):
+        x, y = digits_batch(rng, args.batch)
+        params, momentum, loss = sgd_step(params, momentum, jnp.asarray(x), jnp.asarray(y))
+        if step % 20 == 0 or step == args.steps - 1:
+            log.append({"step": step, "loss": float(loss)})
+            print(f"step {step:4d} loss {float(loss):.4f}")
+
+    # Held-out test split (fixed seed, disjoint stream).
+    test_rng = np.random.default_rng(args.seed + 1000)
+    xt, yt = digits_batch(test_rng, 512)
+    acc = accuracy(params, jnp.asarray(xt), jnp.asarray(yt))
+    print(f"test accuracy: {acc:.4f}")
+    log_path = os.path.join(args.out, "lenet_train_log.json")
+    with open(log_path, "w") as f:
+        json.dump({"loss_curve": log, "test_accuracy": acc, "steps": args.steps}, f, indent=1)
+
+    names = [
+        "conv1_w", "conv1_b", "conv2_w", "conv2_b",
+        "fc1_w", "fc1_b", "fc2_w", "fc2_b", "fc3_w", "fc3_b",
+    ]
+    np.savez(
+        os.path.join(args.out, "lenet_weights.npz"),
+        **{n: np.asarray(p) for n, p in zip(names, params)},
+    )
+    np.savez(os.path.join(args.out, "lenet_test.npz"), x=xt, y=yt)
+    assert acc > 0.9, f"LeNet failed to train (acc={acc})"
+    print(f"wrote weights + test set + {log_path}")
+
+
+if __name__ == "__main__":
+    main()

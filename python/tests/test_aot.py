@@ -1,0 +1,74 @@
+"""AOT path tests: HLO-text lowering and manifest schema."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import netdefs
+from compile.aot import Bundle, to_hlo_text
+
+
+def test_to_hlo_text_produces_parseable_module():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+    # return_tuple=True: root is a tuple.
+    assert "tuple" in text
+
+
+def test_pallas_program_lowers_to_plain_hlo(tmp_path):
+    """interpret=True Pallas must lower to ops a CPU PJRT can run —
+    no custom-call to Mosaic."""
+    from compile.kernels.conv import conv2d_pallas
+
+    def fn(x, w, b):
+        return (conv2d_pallas(x, w, b, stride=1),)
+
+    ex = [
+        jax.ShapeDtypeStruct((6, 6, 1), jnp.float32),
+        jax.ShapeDtypeStruct((3, 3, 1, 2), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+    ]
+    text = to_hlo_text(jax.jit(fn).lower(*ex))
+    assert "mosaic" not in text.lower()
+
+
+def test_bundle_manifest_schema(tmp_path):
+    b = Bundle(str(tmp_path))
+    b.add_weight("g.w", np.ones((2, 3), np.float32))
+    b.add_data("d", np.zeros((4,), np.int32), "i32")
+
+    def fn(x):
+        return (x * 2,)
+
+    b.add_program(
+        "p", fn, [jax.ShapeDtypeStruct((3,), jnp.float32)], 1, ["g.w"]
+    )
+    b.add_geometry("lenet", netdefs.LENET, [16, 6], [4, 2], 5)
+    b.finish()
+
+    m = json.load(open(os.path.join(tmp_path, "manifest.json")))
+    assert m["weights"]["g.w"]["shape"] == [2, 3]
+    assert m["data"]["d"]["dtype"] == "i32"
+    p = m["programs"]["p"]
+    assert p["n_runtime_inputs"] == 1 and p["weights"] == ["g.w"]
+    assert p["inputs"][0]["shape"] == [3]
+    g = m["geometry"]["lenet"]
+    assert g["tiles"] == [16, 6] and g["alpha"] == 5 and g["starts"] == [0, 0]
+    # Weight blob round-trips.
+    w = np.fromfile(os.path.join(tmp_path, "g.w.bin"), dtype="<f4")
+    assert w.shape == (6,) and (w == 1.0).all()
+
+
+def test_geometry_mirror_rejects_infeasible():
+    import pytest
+
+    with pytest.raises(ValueError):
+        netdefs.tile_sizes(netdefs.LENET, 8)

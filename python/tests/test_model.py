@@ -1,0 +1,188 @@
+"""L2 model-program tests: fused stacks vs reference composition, tile
+assembly vs golden, LeNet inference consistency, ResNet block semantics,
+and the geometry mirror."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, netdefs
+from compile.kernels.ref import conv2d_ref, maxpool2d_ref
+
+
+def make_params(levels, rng, scale=None):
+    params = []
+    for lv in levels:
+        s = scale or np.sqrt(2.0 / (lv.k * lv.k * lv.n_in))
+        params.append(
+            jnp.asarray(
+                (rng.standard_normal((lv.k, lv.k, lv.n_in, lv.m_out)) * s).astype(
+                    np.float32
+                )
+            )
+        )
+        params.append(
+            jnp.asarray((rng.standard_normal((lv.m_out,)) * 0.05).astype(np.float32))
+        )
+    return params
+
+
+def ref_stack(levels, x, params):
+    """Reference composition of the fused stack using oracle primitives."""
+    pres = []
+    for j, lv in enumerate(levels):
+        w, b = params[2 * j], params[2 * j + 1]
+        if lv.pad:
+            x = jnp.pad(x, ((lv.pad, lv.pad), (lv.pad, lv.pad), (0, 0)))
+        pre = conv2d_ref(x, w, b, stride=lv.s)
+        pres.append(pre)
+        x = jnp.maximum(pre, 0)
+        if lv.pool:
+            x = maxpool2d_ref(x, k=lv.pool[0], stride=lv.pool[1])
+    return pres, x
+
+
+# --- geometry mirror ----------------------------------------------------
+
+
+def test_lenet_geometry_matches_paper():
+    tiles = netdefs.tile_sizes(netdefs.LENET, 1)
+    assert tiles == [16, 6]
+    strides, alpha = netdefs.uniform_stride(netdefs.LENET, tiles)
+    assert strides == [4, 2]
+    assert alpha == 5
+
+
+def test_alexnet_geometry():
+    tiles = netdefs.tile_sizes(netdefs.ALEXNET_F2, 1)
+    assert tiles == [67, 7]
+    strides, alpha = netdefs.uniform_stride(netdefs.ALEXNET_F2, tiles)
+    assert strides == [16, 2]
+    assert alpha == 13
+
+
+def test_vgg_geometry_chain():
+    tiles = netdefs.tile_sizes(netdefs.VGG_F4, 2)
+    assert tiles == [20, 18, 8, 6]
+    strides, alpha = netdefs.uniform_stride(netdefs.VGG_F4, tiles)
+    # Chain: stride doubles through each pooled level.
+    assert strides[0] == strides[1] and strides[2] == strides[3]
+    assert strides[1] == 2 * strides[2]
+
+
+# --- fused programs -----------------------------------------------------
+
+
+def test_fused_full_matches_reference_lenet():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((32, 32, 1)).astype(np.float32))
+    params = make_params(netdefs.LENET, rng)
+    fn, _ = model.fused_full_program(netdefs.LENET)
+    got = jax.jit(fn)(x, *params)
+    pres, out = ref_stack(netdefs.LENET, x, params)
+    for g, r in zip(got[:-1], pres):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got[-1]), np.asarray(out), atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "levels,r_out,dim",
+    [
+        (netdefs.LENET, 1, 32),
+        # A small padded stack exercises masking + overhang cheaply.
+        (
+            [
+                netdefs.Level("A", 3, 1, 1, None, 2, 4, 14),
+                netdefs.Level("B", 3, 1, 1, (2, 2), 4, 8, 14),
+            ],
+            2,
+            14,
+        ),
+    ],
+)
+def test_tile_assembly_equals_golden(levels, r_out, dim):
+    tiles = netdefs.tile_sizes(levels, r_out)
+    strides, alpha = netdefs.uniform_stride(levels, tiles)
+    q = len(levels)
+    starts = [0] * q
+    for j in range(q - 2, -1, -1):
+        starts[j] = (starts[j + 1] - levels[j + 1].pad) * levels[j].chain_factor
+
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((dim, dim, levels[0].n_in)).astype(np.float32)
+    params = make_params(levels, rng)
+    full_fn, _ = model.fused_full_program(levels)
+    golden = np.asarray(jax.jit(full_fn)(jnp.asarray(x), *params)[-1])
+    tile_fn, _ = model.fused_tile_program(levels, tiles)
+    tile_jit = jax.jit(tile_fn)
+
+    out_dim = levels[-1].level_out
+    assembled = np.zeros_like(golden)
+    h = tiles[0]
+    pad0, ifm0 = levels[0].pad, levels[0].ifm
+    p_out = strides[-1] // levels[-1].chain_factor
+    for iy in range(alpha):
+        for ix in range(alpha):
+            y0 = starts[0] + iy * strides[0]
+            x0 = starts[0] + ix * strides[0]
+            tile = np.zeros((h, h, levels[0].n_in), np.float32)
+            ys, xs = max(y0, pad0), max(x0, pad0)
+            ye, xe = min(y0 + h, pad0 + ifm0), min(x0 + h, pad0 + ifm0)
+            if ye > ys and xe > xs:
+                tile[ys - y0 : ye - y0, xs - x0 : xe - x0] = x[
+                    ys - pad0 : ye - pad0, xs - pad0 : xe - pad0
+                ]
+            offs = []
+            for j, lv in enumerate(levels):
+                yj = starts[j] + iy * strides[j]
+                xj = starts[j] + ix * strides[j]
+                assert yj % lv.s == 0 and xj % lv.s == 0
+                offs += [jnp.int32(yj // lv.s), jnp.int32(xj // lv.s)]
+            out = np.asarray(tile_jit(jnp.asarray(tile), *offs, *params)[0])
+            oy, ox = iy * p_out, ix * p_out
+            ye2, xe2 = min(oy + out.shape[0], out_dim), min(ox + out.shape[1], out_dim)
+            if ye2 > oy and xe2 > ox:
+                assembled[oy:ye2, ox:xe2] = out[: ye2 - oy, : xe2 - ox]
+    scale = np.abs(golden).max() + 1e-9
+    assert np.abs(assembled - golden).max() / scale < 1e-4
+
+
+def test_lenet_infer_matches_training_forward():
+    from compile.train_lenet import forward, init_params
+    from compile.datagen import digits_batch
+
+    rng = np.random.default_rng(9)
+    params = init_params(rng)
+    x, _ = digits_batch(rng, 4)
+    train_logits = np.asarray(forward(params, jnp.asarray(x)))
+
+    fn, _ = model.lenet_infer_program(netdefs.LENET)
+    jit = jax.jit(fn)
+    for i in range(4):
+        logits = np.asarray(jit(jnp.asarray(x[i]), *params)[0])
+        np.testing.assert_allclose(logits, train_logits[i], atol=1e-3)
+
+
+def test_resnet_block_skip_semantics():
+    rng = np.random.default_rng(21)
+    dim, n_in, ch = 8, 4, 4
+    fn, ex = model.resnet_block_program(dim, n_in, ch, stride=1)
+    assert len(ex) == 5  # no downsample params
+    x = jnp.asarray(rng.standard_normal((dim, dim, n_in)).astype(np.float32))
+    wa = jnp.zeros((3, 3, n_in, ch), jnp.float32)
+    ba = jnp.zeros((ch,), jnp.float32)
+    # Zero convs: out = relu(0 + x) = relu(x) — identity skip visible.
+    pre_a, pre_b, out = jax.jit(fn)(x, wa, ba, wa, ba)
+    np.testing.assert_allclose(np.asarray(out), np.maximum(np.asarray(x), 0), atol=1e-6)
+    assert pre_a.shape == (dim, dim, ch) and pre_b.shape == (dim, dim, ch)
+
+
+def test_resnet_downsample_block_shapes():
+    fn, ex = model.resnet_block_program(8, 4, 8, stride=2)
+    assert len(ex) == 7  # + (wd, bd)
+    rng = np.random.default_rng(2)
+    args = [jnp.asarray(rng.standard_normal([int(d) for d in e.shape]).astype(np.float32) * 0.1) for e in ex]
+    pre_a, pre_b, out = jax.jit(fn)(*args)
+    assert out.shape == (4, 4, 8)
+    assert (np.asarray(out) >= 0).all()

@@ -1,0 +1,12 @@
+//! Regenerates paper Fig. 10 (perf vs OI, AlexNet CONV1, DS-1 designs).
+use usefuse::harness::Bench;
+use usefuse::report::figures::fig10;
+use usefuse::sim::CycleModel;
+
+fn main() {
+    let m = CycleModel::default();
+    let (_pts, table) = fig10(&m);
+    println!("{}", table.render());
+    let mut b = Bench::new("fig10");
+    b.bench("roofline_eval", || fig10(&m).0.len());
+}

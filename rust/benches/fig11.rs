@@ -1,0 +1,17 @@
+//! Regenerates paper Fig. 11 (perf vs OI, fused LeNet/AlexNet/VGG).
+use usefuse::harness::Bench;
+use usefuse::report::figures::fig11;
+use usefuse::sim::CycleModel;
+
+fn main() {
+    let m = CycleModel::default();
+    let (panels, table) = fig11(&m);
+    println!("{}", table.render());
+    for (name, pts) in &panels {
+        let prop = pts.iter().filter(|p| p.design == "Proposed").map(|p| p.oi).fold(0.0, f64::max);
+        let naive = pts.iter().filter(|p| p.design == "Baseline-1").map(|p| p.oi).fold(0.0, f64::max);
+        println!("{name}: OI improvement (uniform vs naive stride) = {:.1}x", prop / naive);
+    }
+    let mut b = Bench::new("fig11");
+    b.bench("three_panel_eval", || fig11(&m).0.len());
+}

@@ -1,0 +1,27 @@
+//! Regenerates paper Fig. 12 (END detection rates on 10 random filters of
+//! AlexNet/VGG CONV1, real activations through the digit-level SOP sim).
+//! Requires `make artifacts`.
+use usefuse::harness::Bench;
+use usefuse::report::figures::{fig12, load_runtime_for};
+
+fn main() {
+    let rt = match load_runtime_for(&[]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping fig12 (artifacts missing?): {e}");
+            return;
+        }
+    };
+    let samples = if std::env::var("USEFUSE_BENCH_FAST").as_deref() == Ok("1") { 40 } else { 150 };
+    let (stats, table) = fig12(&rt, samples).expect("fig12");
+    println!("{}", table.render());
+    for (net, s) in &stats {
+        println!(
+            "{net}: mean negative {:.1}% (paper: AlexNet 43.1%, VGG 41.08%), undetermined {:.1}%",
+            100.0 * s.activity.negative_fraction,
+            100.0 * s.activity.undetermined_fraction
+        );
+    }
+    let mut b = Bench::new("fig12");
+    b.bench("end_stats_small", || fig12(&rt, 10).map(|r| r.0.len()).unwrap_or(0));
+}

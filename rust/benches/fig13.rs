@@ -1,0 +1,23 @@
+//! Regenerates paper Fig. 13 (END energy savings, first conv layers of
+//! LeNet/AlexNet/VGG). Requires `make artifacts`.
+use usefuse::harness::Bench;
+use usefuse::report::figures::{fig13, load_runtime_for};
+
+fn main() {
+    let rt = match load_runtime_for(&[]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping fig13 (artifacts missing?): {e}");
+            return;
+        }
+    };
+    let samples = if std::env::var("USEFUSE_BENCH_FAST").as_deref() == Ok("1") { 30 } else { 120 };
+    let (savings, table) = fig13(&rt, samples).expect("fig13");
+    println!("{}", table.render());
+    println!("(paper: LeNet 46.8%, AlexNet 48.5%, VGG 42.6%)");
+    for (net, s) in &savings {
+        println!("  {net}: {:.1}%", 100.0 * s);
+    }
+    let mut b = Bench::new("fig13");
+    b.bench("energy_savings_small", || fig13(&rt, 10).map(|r| r.0.len()).unwrap_or(0));
+}

@@ -1,0 +1,26 @@
+//! Regenerates paper Fig. 14 (ResNet-18 effective cycles per fusion
+//! pyramid, ±END, online vs Baseline-3). Chains real activations through
+//! the PJRT block artifacts. Requires `make artifacts`.
+use usefuse::harness::Bench;
+use usefuse::report::figures::{fig14, load_runtime_for};
+
+fn main() {
+    let programs = [
+        "resnet_stem", "resnet_s1", "resnet_s2a", "resnet_s2b",
+        "resnet_s3a", "resnet_s3b", "resnet_s4a", "resnet_s4b",
+    ];
+    let rt = match load_runtime_for(&programs) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping fig14 (artifacts missing?): {e}");
+            return;
+        }
+    };
+    let samples = if std::env::var("USEFUSE_BENCH_FAST").as_deref() == Ok("1") { 10 } else { 25 };
+    let (rows, table) = fig14(&rt, samples).expect("fig14");
+    println!("{}", table.render());
+    let (on, end): (f64, f64) = rows.iter().fold((0.0, 0.0), |a, r| (a.0 + r.online, a.1 + r.online_end));
+    println!("end-to-end END cycle saving: {:.1}% (paper: up to 50.1%)", 100.0 * (1.0 - end / on));
+    let mut b = Bench::new("fig14");
+    b.bench("one_block_end_stats", || fig14(&rt, 4).map(|r| r.0.len()).unwrap_or(0));
+}

@@ -1,0 +1,72 @@
+//! Microbenchmarks of the hot paths: digit-level SOP simulation, online
+//! units, geometry planning, tile extraction/assembly — the targets of
+//! the §Perf optimization pass (EXPERIMENTS.md).
+use usefuse::arith::digit::{to_sd_digits, Fixed};
+use usefuse::arith::online_mul::OnlineMul;
+use usefuse::arith::sop::{sop_stream, sop_with_end};
+use usefuse::geometry::{PyramidPlan, StridePolicy};
+use usefuse::harness::{black_box, Bench};
+use usefuse::nets;
+use usefuse::runtime::Tensor;
+use usefuse::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("micro");
+    let mut rng = Rng::new(1);
+    let n = 8u32;
+    let max = (1i64 << (n - 1)) - 1;
+    let mk = |rng: &mut Rng| Fixed::new(rng.range(-max, max), n - 1);
+
+    // Online multiplier: one full 12-digit product.
+    let y = mk(&mut rng);
+    let xd = to_sd_digits(mk(&mut rng));
+    b.bench("online_mul_12digit", || {
+        black_box(OnlineMul::multiply_stream(y, &xd, 12))
+    });
+
+    // SOP pipelines of the paper's window sizes.
+    for (label, m_ops) in [("sop_k3n3_27", 27usize), ("sop_k5n6_150", 150), ("sop_k11n3_363", 363)] {
+        let w: Vec<Fixed> = (0..m_ops).map(|_| mk(&mut rng)).collect();
+        let a: Vec<Fixed> = (0..m_ops).map(|_| mk(&mut rng)).collect();
+        b.bench(&format!("{label}_stream"), || {
+            black_box(sop_stream(&w, &a, None, 12))
+        });
+        b.bench(&format!("{label}_with_end"), || {
+            black_box(sop_with_end(&w, &a, None, 12))
+        });
+        let mut pipe = usefuse::arith::sop::SopPipeline::new(&w, None, 12);
+        b.bench(&format!("{label}_pipeline_reuse"), || black_box(pipe.run(&a)));
+        // Negative-dominant workload: END terminates early.
+        let a_neg: Vec<Fixed> = w
+            .iter()
+            .map(|x| Fixed::new(-x.q.signum() * (x.q.abs().max(1)), 7))
+            .collect();
+        let mut pipe_n = usefuse::arith::sop::SopPipeline::new(&w, None, 12);
+        b.bench(&format!("{label}_pipeline_negative"), || {
+            black_box(pipe_n.run(&a_neg))
+        });
+    }
+
+    // Geometry planning (Algorithm 3 + 4) for the three networks.
+    for name in ["lenet5", "alexnet", "vgg16"] {
+        let net = nets::by_name(name).unwrap();
+        let specs = net.paper_fusion()[0].clone();
+        b.bench(&format!("plan_{name}"), || {
+            black_box(PyramidPlan::build(&specs, 1, StridePolicy::Uniform))
+        });
+    }
+
+    // Tile extraction + assembly (the coordinator's memcpy path).
+    let src = Tensor::zeros(vec![224, 224, 64]);
+    let mut dst = Tensor::zeros(vec![20, 20, 64]);
+    b.bench("extract_window_20x20x64", || {
+        src.extract_window(100, 100, 20, 0, &mut dst).unwrap();
+        black_box(dst.data[0])
+    });
+    let mut out = Tensor::zeros(vec![112, 112, 64]);
+    let region = Tensor::zeros(vec![4, 4, 64]);
+    b.bench("place_window_4x4x64", || {
+        out.place_window(&region, 50, 50).unwrap();
+        black_box(out.data[0])
+    });
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Table 1 (DS-1 performance comparison) and times the
+//! cycle-model evaluation hot path.
+use usefuse::harness::Bench;
+use usefuse::report::tables::table1;
+use usefuse::sim::CycleModel;
+
+fn main() {
+    let m = CycleModel::default();
+    let (_rows, table) = table1(&m);
+    println!("{}", table.render());
+    let mut b = Bench::new("table1");
+    b.bench("table1_full_eval", || table1(&m).0.len());
+}

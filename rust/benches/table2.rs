@@ -1,0 +1,12 @@
+//! Regenerates paper Table 2 (DS-2 temporal comparison).
+use usefuse::harness::Bench;
+use usefuse::report::tables::table2;
+use usefuse::sim::CycleModel;
+
+fn main() {
+    let m = CycleModel::default();
+    let (_rows, table) = table2(&m);
+    println!("{}", table.render());
+    let mut b = Bench::new("table2");
+    b.bench("table2_full_eval", || table2(&m).0.len());
+}

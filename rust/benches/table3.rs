@@ -1,0 +1,14 @@
+//! Regenerates paper Table 3 (DS-1 FPGA resources / latency / speedup).
+use usefuse::harness::Bench;
+use usefuse::report::tables::table_resources;
+use usefuse::sim::{CycleModel, Pattern};
+
+fn main() {
+    let m = CycleModel::default();
+    let (_rows, table) = table_resources(Pattern::Spatial, &m);
+    println!("{}", table.render());
+    let mut b = Bench::new("table3");
+    b.bench("resource_model_spatial", || {
+        table_resources(Pattern::Spatial, &m).0.len()
+    });
+}

@@ -1,0 +1,14 @@
+//! Regenerates paper Table 4 (DS-2 FPGA resources / latency / speedup).
+use usefuse::harness::Bench;
+use usefuse::report::tables::table_resources;
+use usefuse::sim::{CycleModel, Pattern};
+
+fn main() {
+    let m = CycleModel::default();
+    let (_rows, table) = table_resources(Pattern::Temporal, &m);
+    println!("{}", table.render());
+    let mut b = Bench::new("table4");
+    b.bench("resource_model_temporal", || {
+        table_resources(Pattern::Temporal, &m).0.len()
+    });
+}

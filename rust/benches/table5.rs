@@ -1,0 +1,17 @@
+//! Regenerates paper Table 5 (end-to-end VGG-16 / ResNet-18 vs prior
+//! accelerators; cited rows are the paper's constants).
+use usefuse::harness::Bench;
+use usefuse::report::tables::{speedup_summary, table5};
+use usefuse::sim::CycleModel;
+
+fn main() {
+    let m = CycleModel::default();
+    let (_rows, table) = table5(&m);
+    println!("{}", table.render());
+    println!("Speedup summary (proposed vs Baseline-3):");
+    for (net, sp, tp) in speedup_summary(&m).unwrap() {
+        println!("  {net:<9} DS-1 {sp:.2}x   DS-2 {tp:.2}x");
+    }
+    let mut b = Bench::new("table5");
+    b.bench("end_to_end_cycle_model", || table5(&m).0.len());
+}

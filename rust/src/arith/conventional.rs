@@ -1,0 +1,177 @@
+//! **Conventional bit-serial arithmetic** — the baseline compute units
+//! (paper §4.1, Figs. 8–9; UNPU-style processing element [14]).
+//!
+//! The multiplicand (weight) is parallel; the multiplier (activation) is
+//! consumed serially LSB-first. Each cycle an AND-gate array forms one
+//! partial product which is accumulated with the proper shift. The result
+//! — and in particular its *sign* — is only known after all `n` cycles
+//! plus the carry-propagate accumulation, which is precisely why
+//! conventional bit-serial designs cannot do early negative detection
+//! (paper §3.2) and cannot stream digits into a fused next layer.
+
+use super::digit::Fixed;
+
+/// Conventional bit-serial serial–parallel multiplier (LSB-first).
+///
+/// Functional model: simulates the per-cycle partial-product accumulation
+/// exactly; `cycles_run` counts the cycles consumed.
+#[derive(Clone, Debug)]
+pub struct BitSerialMul {
+    /// Parallel operand raw value.
+    y_q: i64,
+    /// Accumulated product (exact, in units of 2^-(fx+fy)).
+    acc: i128,
+    /// Bit index fed so far (LSB-first).
+    bit: u32,
+    /// Total multiplier precision (fraction bits + sign).
+    n_bits: u32,
+    cycles_run: u64,
+}
+
+impl BitSerialMul {
+    /// `y` is the parallel operand; `n_bits` the serial operand's total
+    /// precision (1 sign + n_bits-1 fraction).
+    pub fn new(y: Fixed, n_bits: u32) -> BitSerialMul {
+        BitSerialMul {
+            y_q: y.q,
+            acc: 0,
+            bit: 0,
+            n_bits,
+            cycles_run: 0,
+        }
+    }
+
+    /// Feed the next multiplier bit, LSB-first. For two's-complement the
+    /// final (sign) bit carries negative weight.
+    pub fn step(&mut self, bit: bool) {
+        assert!(self.bit < self.n_bits, "multiplier already complete");
+        let weight: i128 = 1i128 << self.bit;
+        let signed_weight = if self.bit == self.n_bits - 1 {
+            -weight // two's-complement sign bit
+        } else {
+            weight
+        };
+        if bit {
+            self.acc += signed_weight * self.y_q as i128;
+        }
+        self.bit += 1;
+        self.cycles_run += 1;
+    }
+
+    /// True once all `n_bits` cycles have elapsed — only then is the
+    /// product (and its sign) available.
+    pub fn complete(&self) -> bool {
+        self.bit == self.n_bits
+    }
+
+    pub fn cycles_run(&self) -> u64 {
+        self.cycles_run
+    }
+
+    /// Final product value; panics if called early (the defining
+    /// limitation of LSB-first arithmetic).
+    pub fn product(&self, fx: u32, fy: u32) -> f64 {
+        assert!(self.complete(), "LSB-first product not ready before cycle n");
+        self.acc as f64 / 2f64.powi((fx + fy) as i32)
+    }
+}
+
+/// Multiply two quantized fractions with the conventional bit-serial unit,
+/// returning `(product, cycles)`.
+pub fn bit_serial_multiply(x: Fixed, y: Fixed) -> (f64, u64) {
+    let n_bits = x.frac_bits + 1;
+    let mut m = BitSerialMul::new(y, n_bits);
+    // Two's-complement encoding of x.q over n_bits.
+    let enc = (x.q as i64) & ((1i64 << n_bits) - 1);
+    for b in 0..n_bits {
+        m.step((enc >> b) & 1 == 1);
+    }
+    (m.product(x.frac_bits, y.frac_bits), m.cycles_run())
+}
+
+/// Conventional SOP: all K²·N products computed bit-serially, then reduced
+/// through a conventional adder tree. Functionally exact; returns the SOP.
+/// No early termination is possible — the full `n` cycles always run.
+pub fn conventional_sop(weights: &[Fixed], acts: &[Fixed], bias: Option<Fixed>) -> f64 {
+    assert_eq!(weights.len(), acts.len());
+    let mut sum = 0.0;
+    for (w, a) in weights.iter().zip(acts) {
+        let (p, _) = bit_serial_multiply(*a, *w);
+        sum += p;
+    }
+    if let Some(b) = bias {
+        sum += b.value();
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::sop::sop_exact;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn exhaustive_small() {
+        let n = 6u32;
+        let max = (1i64 << (n - 1)) - 1;
+        for xq in -max..=max {
+            for yq in -max..=max {
+                let x = Fixed::new(xq, n - 1);
+                let y = Fixed::new(yq, n - 1);
+                let (p, cycles) = bit_serial_multiply(x, y);
+                assert!((p - x.value() * y.value()).abs() < 1e-12);
+                assert_eq!(cycles, n as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn product_unavailable_early() {
+        let y = Fixed::quantize(0.5, 8);
+        let m = BitSerialMul::new(y, 8);
+        assert!(!m.complete());
+        let r = std::panic::catch_unwind(|| m.product(7, 7));
+        assert!(r.is_err(), "LSB-first sign must not be readable early");
+    }
+
+    #[test]
+    fn sop_agrees_with_exact() {
+        prop_check("conventional SOP == exact", 300, |g| {
+            let n = 8u32;
+            let m = g.sized(1, 32);
+            let max = (1i64 << (n - 1)) - 1;
+            let w: Vec<Fixed> = (0..m).map(|_| Fixed::new(g.i64(-max, max), n - 1)).collect();
+            let a: Vec<Fixed> = (0..m).map(|_| Fixed::new(g.i64(-max, max), n - 1)).collect();
+            let got = conventional_sop(&w, &a, None);
+            let expect = sop_exact(&w, &a, None);
+            prop_assert!((got - expect).abs() < 1e-9, "got {got} expect {expect}");
+            Ok(())
+        });
+    }
+
+    /// Cross-paradigm agreement: online SOP and conventional SOP compute
+    /// the same mathematical value (within online convergence bound).
+    #[test]
+    fn online_and_conventional_agree() {
+        prop_check("online == conventional SOP", 100, |g| {
+            let n = 8u32;
+            let m = g.sized(2, 25);
+            let max = (1i64 << (n - 1)) - 1;
+            let w: Vec<Fixed> = (0..m).map(|_| Fixed::new(g.i64(-max, max), n - 1)).collect();
+            let a: Vec<Fixed> = (0..m).map(|_| Fixed::new(g.i64(-max, max), n - 1)).collect();
+            let conv = conventional_sop(&w, &a, None);
+            // reference path: runs to completion, so `value` is the full SOP.
+            let r = crate::arith::sop::sop_with_end_reference(&w, &a, None, (n + 6) as usize);
+            // Per-leaf truncation bound (see sop::tests::sop_matches_exact_value).
+            let bound = m as f64 * 0.75 * 2f64.powi(-((n + 6) as i32)) + 1e-12;
+            prop_assert!(
+                (conv - r.value).abs() <= bound,
+                "conv {conv} vs online {} (bound {bound})",
+                r.value
+            );
+            Ok(())
+        });
+    }
+}

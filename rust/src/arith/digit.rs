@@ -1,0 +1,185 @@
+//! Radix-2 signed-digit (SD) number representation.
+//!
+//! Online arithmetic (Ercegovac & Lang, *Digital Arithmetic*, 2004) works
+//! most-significant-digit-first over a redundant digit set. This module
+//! implements the symmetric radix-2 digit set {-1, 0, 1} used by USEFUSE
+//! (paper §3.1): values are fractions `x = Σ_{i≥1} d_i 2^-i`, |x| < 1.
+//!
+//! Operands entering the accelerator are `n`-bit quantized fractions
+//! ([`Fixed`]); activations are serialized into SD digit streams
+//! ([`to_sd_digits`]) consumed MSDF by the online units.
+
+/// One radix-2 signed digit: -1, 0 or +1.
+pub type Digit = i8;
+
+/// Check a digit is in the valid set.
+#[inline]
+pub fn is_valid_digit(d: Digit) -> bool {
+    (-1..=1).contains(&d)
+}
+
+/// A quantized fixed-point fraction: `value = q / 2^frac_bits`, |value| < 1.
+///
+/// This is the "parallel" operand format (weights are available in full
+/// precision at the multiplier, paper §3.1.1) and also the exact-value
+/// domain against which the digit-serial units are verified.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fixed {
+    /// Raw integer; `|q| < 2^frac_bits`.
+    pub q: i64,
+    /// Number of fractional bits (`n-1` for n-bit two's-complement operands).
+    pub frac_bits: u32,
+}
+
+impl Fixed {
+    /// Construct, checking the fraction range.
+    pub fn new(q: i64, frac_bits: u32) -> Fixed {
+        assert!(frac_bits < 62, "frac_bits too large");
+        assert!(
+            q.unsigned_abs() < (1u64 << frac_bits),
+            "|q|={} out of range for {} frac bits",
+            q,
+            frac_bits
+        );
+        Fixed { q, frac_bits }
+    }
+
+    /// Quantize a real in (-1, 1) to `n`-bit precision (1 sign + n-1 frac
+    /// bits), saturating at ±(1 - 2^-(n-1)).
+    pub fn quantize(x: f64, n: u32) -> Fixed {
+        assert!(n >= 2 && n <= 32);
+        let frac_bits = n - 1;
+        let scale = (1i64 << frac_bits) as f64;
+        let max = (1i64 << frac_bits) - 1;
+        let q = (x * scale).round() as i64;
+        Fixed {
+            q: q.clamp(-max, max),
+            frac_bits,
+        }
+    }
+
+    /// Real value.
+    pub fn value(&self) -> f64 {
+        self.q as f64 / (1i64 << self.frac_bits) as f64
+    }
+
+    /// Zero with the given precision.
+    pub fn zero(frac_bits: u32) -> Fixed {
+        Fixed { q: 0, frac_bits }
+    }
+}
+
+/// Serialize a [`Fixed`] into its MSDF SD digit stream of length
+/// `frac_bits`: the binary expansion of |x| with every digit negated when
+/// x < 0 (digit-wise negation is valid in a signed-digit system).
+pub fn to_sd_digits(x: Fixed) -> Vec<Digit> {
+    let n = x.frac_bits as usize;
+    let mag = x.q.unsigned_abs();
+    let sign: i8 = if x.q < 0 { -1 } else { 1 };
+    // |x| = 0.b1 b2 ... bn with b1 the MSB of mag.
+    (0..n)
+        .map(|i| {
+            let bit = (mag >> (n - 1 - i)) & 1;
+            bit as i8 * sign
+        })
+        .collect()
+}
+
+/// Exact value of an SD digit prefix `d_1..d_k` (as `Σ d_i 2^-i`), computed
+/// in integer arithmetic scaled by `2^k` to avoid rounding: returns
+/// `(numerator, k)` with value = numerator / 2^k.
+pub fn sd_prefix_scaled(digits: &[Digit]) -> (i64, u32) {
+    assert!(digits.len() <= 62);
+    let mut acc: i64 = 0;
+    for &d in digits {
+        debug_assert!(is_valid_digit(d));
+        acc = acc * 2 + d as i64;
+    }
+    (acc, digits.len() as u32)
+}
+
+/// Exact value of an SD digit string as f64 (safe for ≤ 52 digits).
+pub fn sd_value(digits: &[Digit]) -> f64 {
+    let (num, k) = sd_prefix_scaled(digits);
+    num as f64 / (1u64 << k) as f64
+}
+
+/// Convert an SD digit string to the minimal `Fixed` with `digits.len()`
+/// fractional bits (non-redundant two's-complement form).
+pub fn sd_to_fixed(digits: &[Digit]) -> Fixed {
+    let (num, k) = sd_prefix_scaled(digits);
+    Fixed {
+        q: num,
+        frac_bits: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn quantize_roundtrips_small_values() {
+        for n in [4u32, 8, 12] {
+            let step = 1.0 / (1i64 << (n - 1)) as f64;
+            for k in -5i64..=5 {
+                let x = k as f64 * step;
+                let f = Fixed::quantize(x, n);
+                assert!((f.value() - x).abs() < 1e-12, "n={n} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let f = Fixed::quantize(0.9999999, 8);
+        assert_eq!(f.q, 127);
+        let f = Fixed::quantize(-5.0, 8);
+        assert_eq!(f.q, -127);
+    }
+
+    #[test]
+    fn sd_digits_value_matches_fixed() {
+        prop_check("sd digits encode the fixed value", 500, |g| {
+            let n = g.usize(2, 16) as u32;
+            let max = (1i64 << (n - 1)) - 1;
+            let q = g.i64(-max, max);
+            let f = Fixed::new(q, n - 1);
+            let ds = to_sd_digits(f);
+            prop_assert!(ds.len() == (n - 1) as usize, "len mismatch");
+            prop_assert!(ds.iter().all(|&d| is_valid_digit(d)), "invalid digit");
+            let v = sd_value(&ds);
+            prop_assert!(
+                (v - f.value()).abs() < 1e-12,
+                "value mismatch: {} vs {}",
+                v,
+                f.value()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sd_to_fixed_is_exact() {
+        prop_check("sd_to_fixed inverts digit streams", 300, |g| {
+            let len = g.usize(1, 20);
+            let ds: Vec<Digit> = (0..len).map(|_| g.i64(-1, 1) as i8).collect();
+            let f = sd_to_fixed(&ds);
+            prop_assert!(
+                (f.value() - sd_value(&ds)).abs() < 1e-12,
+                "mismatch"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefix_scaled_msdf_order() {
+        // 0.101 (SD) = 1/2 + 1/8 = 5/8
+        assert_eq!(sd_prefix_scaled(&[1, 0, 1]), (5, 3));
+        // 0.1(-1)1 = 1/2 - 1/4 + 1/8 = 3/8
+        assert_eq!(sd_prefix_scaled(&[1, -1, 1]), (3, 3));
+    }
+}

@@ -1,0 +1,196 @@
+//! **Early Negative Detection unit (END-U)** — paper §3.2, Algorithm 2.
+//!
+//! The END-U watches the MSDF output digit stream of a sum-of-products.
+//! In redundant form each digit is `z_j = z_j⁺ − z_j⁻`; the unit keeps the
+//! running comparison of the ⁺ and ⁻ bit registers. As soon as the value
+//! of the ⁺ register falls below the ⁻ register — equivalently, the prefix
+//! value `Σ_{i≤j} z_i 2^-i ≤ −2^-j` — the final SOP is *surely negative*:
+//! the remaining digits can add at most `Σ_{i>j} 2^-i < 2^-j`. ReLU will
+//! zero the result, so computation can stop (`Terminate`).
+//!
+//! Symmetrically, a prefix `≥ +2^-j` proves the result positive
+//! (`SurelyPositive` — useful for statistics; the hardware keeps
+//! computing). Streams that never leave the `Undetermined` band are the
+//! near-zero activations the paper reports as "undetermined" (~2%, Fig. 12).
+
+use super::digit::{is_valid_digit, Digit};
+
+/// Decision state of the END unit after some prefix of the output stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EndState {
+    /// Sign not yet provable from the emitted prefix.
+    Undetermined,
+    /// Result is provably negative: terminate (ReLU output is 0).
+    Terminate,
+    /// Result is provably positive (computation continues; tracked for
+    /// statistics only).
+    SurelyPositive,
+}
+
+/// Early negative detection unit.
+///
+/// `acc` holds the prefix value scaled by `2^j` (an integer because the
+/// digits are integers): `acc = Σ_{i≤j} z_i 2^{j-i}`. The paper's
+/// "value of z⁺ register < value of z⁻ register" is exactly `acc ≤ -1`.
+#[derive(Clone, Debug)]
+pub struct EndUnit {
+    acc: i64,
+    pos: u32,
+    state: EndState,
+    /// Position (1-based digit index) at which the decision was made.
+    decided_at: Option<u32>,
+}
+
+impl Default for EndUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EndUnit {
+    pub fn new() -> EndUnit {
+        EndUnit {
+            acc: 0,
+            pos: 0,
+            state: EndState::Undetermined,
+            decided_at: None,
+        }
+    }
+
+    /// Observe the next output digit; returns the (possibly updated)
+    /// decision. Saturates: once decided, later digits don't change it.
+    #[inline]
+    pub fn observe(&mut self, z: Digit) -> EndState {
+        debug_assert!(is_valid_digit(z));
+        if self.state != EndState::Undetermined {
+            return self.state;
+        }
+        self.pos += 1;
+        debug_assert!(self.pos < 62, "END accumulator would overflow");
+        self.acc = self.acc * 2 + z as i64;
+        if self.acc <= -1 {
+            self.state = EndState::Terminate;
+            self.decided_at = Some(self.pos);
+        } else if self.acc >= 1 {
+            self.state = EndState::SurelyPositive;
+            self.decided_at = Some(self.pos);
+        }
+        self.state
+    }
+
+    pub fn state(&self) -> EndState {
+        self.state
+    }
+
+    /// Digit position at which the sign was decided (None if undetermined).
+    pub fn decided_at(&self) -> Option<u32> {
+        self.decided_at
+    }
+
+    /// Digits observed so far.
+    pub fn observed(&self) -> u32 {
+        self.pos
+    }
+}
+
+/// Run END over a complete digit stream; returns `(state, decided_at)`.
+pub fn classify_stream(digits: &[Digit]) -> (EndState, Option<u32>) {
+    let mut u = EndUnit::new();
+    for &d in digits {
+        if u.observe(d) != EndState::Undetermined {
+            break;
+        }
+    }
+    (u.state(), u.decided_at())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::digit::sd_value;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn detects_negative_at_first_digit() {
+        let (s, at) = classify_stream(&[-1, 0, 0, 0]);
+        assert_eq!(s, EndState::Terminate);
+        assert_eq!(at, Some(1));
+    }
+
+    #[test]
+    fn redundant_cancellation_delays_decision() {
+        // 0.1(-1)(-1)(-1) = 1/2 - 1/4 - 1/8 - 1/16 = 1/16 > 0:
+        // +1 then -1 leaves acc = 1*2-1 = 1 ≥ 1 at pos 2? acc after d1=1 is
+        // 1 → SurelyPositive immediately (prefix 1/2 ≥ 2^-1).
+        let (s, at) = classify_stream(&[1, -1, -1, -1]);
+        assert_eq!(s, EndState::SurelyPositive);
+        assert_eq!(at, Some(1));
+        // 0, 1, -1, -1, ... keeps acc: 0, 1(dec at 2).
+        let (s, at) = classify_stream(&[0, 1, -1, -1]);
+        assert_eq!(s, EndState::SurelyPositive);
+        assert_eq!(at, Some(2));
+    }
+
+    #[test]
+    fn all_zero_stream_stays_undetermined() {
+        let (s, at) = classify_stream(&[0; 16]);
+        assert_eq!(s, EndState::Undetermined);
+        assert_eq!(at, None);
+    }
+
+    /// Soundness: a `Terminate` decision implies the true stream value is
+    /// strictly negative; `SurelyPositive` implies it is strictly positive
+    /// — for *any* digit tail, which we check on random streams.
+    #[test]
+    fn decisions_are_sound() {
+        prop_check("END never mis-signs", 2000, |g| {
+            let len = g.usize(1, 24);
+            let ds: Vec<Digit> = (0..len).map(|_| g.i64(-1, 1) as i8).collect();
+            let v = sd_value(&ds);
+            let (s, at) = classify_stream(&ds);
+            match s {
+                EndState::Terminate => {
+                    prop_assert!(v < 0.0, "Terminate but value {v} >= 0 ({ds:?})");
+                    // Must also be the earliest provable position: the
+                    // prefix before `at` must not already prove negativity.
+                    let at = at.unwrap() as usize;
+                    if at > 1 {
+                        let (num, k) = crate::arith::digit::sd_prefix_scaled(&ds[..at - 1]);
+                        let _ = k;
+                        prop_assert!(num > -1, "decision not earliest");
+                    }
+                }
+                EndState::SurelyPositive => {
+                    prop_assert!(v > 0.0, "SurelyPositive but value {v} <= 0");
+                }
+                EndState::Undetermined => {
+                    // Undetermined prefixes must straddle zero: |value| of
+                    // the whole stream is < 2^-len... not necessarily, the
+                    // run stops scanning at the decision. Here no decision
+                    // was made, so every prefix acc ∈ {0} ∪ (-1,1) ⇒
+                    // |prefix| ≤ 0 ⇒ acc = 0 at every step ⇒ value is
+                    // exactly 0 contribution from decided prefix; final
+                    // value within ±2^-len of 0.
+                    prop_assert!(
+                        v.abs() < 1.0 / (1u64 << (len - 1)) as f64 + 1e-12,
+                        "undetermined but |v|={v} large"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn termination_position_tracks_magnitude() {
+        // A value around -2^-k is detected near position k.
+        for k in 1..10u32 {
+            let mut ds = vec![0i8; 16];
+            ds[(k - 1) as usize] = -1;
+            let (s, at) = classify_stream(&ds);
+            assert_eq!(s, EndState::Terminate);
+            assert_eq!(at, Some(k));
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Digit-level arithmetic substrate (paper §3.1–3.2).
+//!
+//! Bit-exact models of the compute units the paper builds in RTL:
+//!
+//! - [`digit`] — radix-2 signed-digit representation and quantization.
+//! - [`online_mul`] — serial–parallel online multiplier (Algorithm 1).
+//! - [`online_add`] — radix-2 online adder.
+//! - [`sop`] — digit-pipelined sum-of-products unit (the WPU core).
+//! - [`end_unit`] — early negative detection (Algorithm 2).
+//! - [`conventional`] — LSB-first bit-serial baseline units (UNPU-style).
+
+pub mod conventional;
+pub mod digit;
+pub mod end_unit;
+pub mod online_add;
+pub mod online_mul;
+pub mod sop;
+
+pub use digit::{Digit, Fixed};
+pub use end_unit::{EndState, EndUnit};
+pub use online_add::{OnlineAdd, DELTA_OLA};
+pub use online_mul::{OnlineMul, DELTA_OLM};
+pub use sop::{sop_exact, sop_stream, sop_with_end, SopEndResult};

@@ -1,0 +1,206 @@
+//! Radix-2 **online adder** for signed-digit streams (paper §3.1.1).
+//!
+//! Adds two MSDF SD streams and emits the SD stream of `(x + y) / 2`
+//! (the ½ scaling is the one-bit precision growth of a two-operand sum —
+//! exactly the "+⌈log(K×K)⌉ + ⌈log N⌉" output-growth cycles of the
+//! paper's Eq. (3)). Carry propagation never exceeds two digit positions,
+//! which is why online/SD addition keeps the cycle time independent of
+//! precision (paper §2.1's criticism of conventional accumulation).
+//!
+//! ## Construction
+//!
+//! Writing the shifted addend `g_m = x_{m-1} + y_{m-1} ∈ [-2, 2]`, each
+//! position is decomposed through two bounded transfer stages
+//!
+//! ```text
+//! g_m = 2·t1_m + u_m    t1 ∈ {-1,0,1}, u ∈ {-1,0}
+//! v_m = u_m + t1_{m+1}  ∈ [-2, 1]
+//! v_m = 2·t2_m + s_m    t2 ∈ {-1,0}, s ∈ {0,1}
+//! z_m = s_m + t2_{m+1}  ∈ {-1,0,1}
+//! ```
+//!
+//! so `Σ z_m 2^-m = Σ g_m 2^-m = (x+y)/2` and the output digit for
+//! position `m` is available once inputs through position `m+1` have been
+//! consumed. A transfer into position 0 (`t2_1 ≠ 0` on the first call) can
+//! only occur when the first input digits are already non-zero; the SOP
+//! tree (see [`crate::arith::sop`]) prepends alignment zeros so this never
+//! fires — it is checked by `debug_assert!`.
+
+use super::digit::{is_valid_digit, Digit};
+
+/// Online delay of the SD online adder (paper: δ_OLA = 2).
+pub const DELTA_OLA: u32 = 2;
+
+/// Decompose g ∈ [-2,2] into (t1, u) with g = 2·t1 + u, u ∈ {-1,0}.
+/// Branchless: t1 = ⌊(g+1)/2⌋ maps {2,1,0,-1,-2} → {1,1,0,0,-1} and
+/// u = g − 2·t1 ∈ {-1,0} (§Perf: these run once per digit per adder).
+#[inline]
+fn split_t1(g: i8) -> (i8, i8) {
+    debug_assert!((-2..=2).contains(&g), "g out of range: {g}");
+    let t1 = (g + 1) >> 1; // arithmetic shift = floor division by 2
+    (t1, g - 2 * t1)
+}
+
+/// Decompose v ∈ [-2,1] into (t2, s) with v = 2·t2 + s, s ∈ {0,1}.
+/// Branchless: t2 = ⌊v/2⌋ maps {1,0,-1,-2} → {0,0,-1,-1}.
+#[inline]
+fn split_t2(v: i8) -> (i8, i8) {
+    debug_assert!((-2..=1).contains(&v), "v out of range: {v}");
+    let t2 = v >> 1;
+    (t2, v - 2 * t2)
+}
+
+/// Online adder state. Emits one output digit per input pair; the first
+/// returned digit is the (always-zero in SOP usage) position-0 digit.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineAdd {
+    calls: u64,
+    /// u for position `calls + 1` (set by the most recent call).
+    u_prev: i8,
+    /// s for position `calls - 1`.
+    s_prev: i8,
+}
+
+impl OnlineAdd {
+    pub fn new() -> OnlineAdd {
+        OnlineAdd::default()
+    }
+
+    /// Online delay in stream positions (relative to the *sum*; matches
+    /// the paper's δ_OLA).
+    pub fn delay(&self) -> u32 {
+        DELTA_OLA
+    }
+
+    /// Feed one digit pair (position `calls+1` of the input streams) and
+    /// return one output digit. Call j returns the digit for output
+    /// position j-1; feed two trailing `(0,0)` pairs to flush the last
+    /// two positions of the sum.
+    #[inline]
+    pub fn push(&mut self, x: Digit, y: Digit) -> Digit {
+        debug_assert!(is_valid_digit(x) && is_valid_digit(y));
+        self.calls += 1;
+        let g = x + y; // g for position calls+1
+        let (t1, u) = split_t1(g);
+        // v for position `calls` = u[calls] + t1[calls+1].
+        // u[calls] is the u computed on the *previous* call (stored), for
+        // the first call u[1] = 0 (no inputs feed position 1's u).
+        let v = self.u_prev + t1;
+        let (t2, s) = split_t2(v);
+        // z for position calls-1 = s[calls-1] + t2[calls].
+        let z = self.s_prev + t2;
+        debug_assert!(
+            is_valid_digit(z),
+            "adder output digit out of range: {z} (s_prev={}, t2={t2})",
+            self.s_prev
+        );
+        self.u_prev = u;
+        self.s_prev = s;
+        z
+    }
+
+    /// Add two equal-length digit streams, returning the stream of
+    /// `(x+y)/2` with `n+1` fraction digits (position-0 digit is asserted
+    /// zero and dropped; callers guaranteeing leading zeros — as the SOP
+    /// tree does — always satisfy this).
+    pub fn add_streams(x: &[Digit], y: &[Digit]) -> Vec<Digit> {
+        assert_eq!(x.len(), y.len());
+        let mut a = OnlineAdd::new();
+        let mut out = Vec::with_capacity(x.len() + 2);
+        for i in 0..x.len() {
+            out.push(a.push(x[i], y[i]));
+        }
+        out.push(a.push(0, 0));
+        out.push(a.push(0, 0));
+        // out[0] is the position-0 digit.
+        assert_eq!(out[0], 0, "position-0 transfer fired; inputs lacked leading zeros");
+        out.remove(0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::digit::{sd_value, to_sd_digits, Fixed};
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn with_leading_zero(mut v: Vec<Digit>) -> Vec<Digit> {
+        v.insert(0, 0);
+        v
+    }
+
+    #[test]
+    fn adds_fixed_fractions_exactly() {
+        prop_check("online add computes (x+y)/2", 500, |g| {
+            let n = g.usize(2, 14) as u32;
+            let max = (1i64 << (n - 1)) - 1;
+            let x = Fixed::new(g.i64(-max, max), n - 1);
+            let y = Fixed::new(g.i64(-max, max), n - 1);
+            // Leading zero guarantees no position-0 transfer.
+            let xd = with_leading_zero(to_sd_digits(x));
+            let yd = with_leading_zero(to_sd_digits(y));
+            let z = OnlineAdd::add_streams(&xd, &yd);
+            prop_assert!(z.iter().all(|&d| is_valid_digit(d)), "bad digit");
+            // The prepended zero halves each input, so the adder's
+            // (a+b)/2 yields (x+y)/4 in original units.
+            let expect = (x.value() + y.value()) / 4.0;
+            let got = sd_value(&z);
+            prop_assert!(
+                (got - expect).abs() < 1e-12,
+                "(x+y)/4: got {got} expect {expect} (n={n})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_sd_streams_not_just_binary() {
+        prop_check("online add on redundant SD inputs", 500, |g| {
+            let len = g.usize(2, 24);
+            let mut xd: Vec<Digit> = (0..len).map(|_| g.i64(-1, 1) as i8).collect();
+            let mut yd: Vec<Digit> = (0..len).map(|_| g.i64(-1, 1) as i8).collect();
+            xd[0] = 0;
+            yd[0] = 0; // leading zero (SOP alignment convention)
+            let z = OnlineAdd::add_streams(&xd, &yd);
+            let expect = (sd_value(&xd) + sd_value(&yd)) / 2.0;
+            prop_assert!(
+                (sd_value(&z) - expect).abs() < 1e-12,
+                "got {} expect {}",
+                sd_value(&z),
+                expect
+            );
+            Ok(())
+        });
+    }
+
+    /// MSDF property: every output prefix is within 2^-j of the final sum.
+    #[test]
+    fn prefix_convergence() {
+        prop_check("adder prefixes converge", 200, |g| {
+            let len = 16;
+            let mut xd: Vec<Digit> = (0..len).map(|_| g.i64(-1, 1) as i8).collect();
+            let mut yd: Vec<Digit> = (0..len).map(|_| g.i64(-1, 1) as i8).collect();
+            xd[0] = 0;
+            yd[0] = 0;
+            let z = OnlineAdd::add_streams(&xd, &yd);
+            let total = (sd_value(&xd) + sd_value(&yd)) / 2.0;
+            for j in 1..=z.len() {
+                let p = sd_value(&z[..j]);
+                prop_assert!(
+                    (p - total).abs() <= 1.0 / (1u64 << j) as f64 + 1e-12,
+                    "prefix at {} diverges",
+                    j
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_plus_zero() {
+        let z = OnlineAdd::add_streams(&[0; 8], &[0; 8]);
+        assert!(z.iter().all(|&d| d == 0));
+    }
+}

@@ -1,0 +1,205 @@
+//! Radix-2 **serial–parallel online multiplier** (paper Algorithm 1).
+//!
+//! One operand (the activation `x`) arrives serially, MSDF, as signed
+//! digits in {-1,0,1}; the other (the weight `Y`) is available in parallel
+//! as an n-bit two's-complement fraction. The unit emits the product's SD
+//! digits MSDF with online delay δ = 2.
+//!
+//! ## Recurrence (paper Alg. 1, our indexing)
+//!
+//! With `X_k = Σ_{i≤k} x_i 2^-i`, the residual invariant after emitting
+//! `z_1..z_j` is `w[j] = 2^j (X_{j+2}·Y − Z_j)`. Each step computes
+//!
+//! ```text
+//! v = 2·w + x_in·Y·2^-2
+//! z = SELM(v̂)          (v̂ = v truncated to 2 fractional bits)
+//! w ← v − z
+//! ```
+//!
+//! ## Selection function and residual bound
+//!
+//! `SELM`: z = 1 if v̂ ≥ 1/2, z = −1 if v̂ ≤ −1/2, else 0 (truncation
+//! toward −∞). A short induction shows |w| ≤ 3/4 for all steps:
+//! |v| ≤ 2·(3/4) + 1/4 = 7/4, and each branch returns w' = v − z with
+//! |w'| ≤ 3/4. Hence |X_n·Y − Z_m| ≤ (3/4)·2^-m after m output digits —
+//! the stream converges one digit per cycle. The `debug_assert!` enforces
+//! the bound; the unit tests verify it exhaustively for small n.
+//!
+//! All state is exact integer arithmetic in units of 2^-(f+2) where `f` is
+//! the weight's fractional precision, so the simulation is bit-exact with
+//! respect to the hardware recurrence.
+
+use super::digit::{is_valid_digit, Digit, Fixed};
+
+/// Online delay of the serial–parallel multiplier (paper: δ_OLM = 2).
+pub const DELTA_OLM: u32 = 2;
+
+/// Serial–parallel online multiplier state.
+#[derive(Clone, Debug)]
+pub struct OnlineMul {
+    /// Parallel operand, raw integer (value = y_q · 2^-f).
+    y_q: i64,
+    /// Fractional bits of the parallel operand.
+    f: u32,
+    /// Residual in units of 2^-(f+2). |w| ≤ 3/4 ⇒ |w_units| ≤ 3·2^f.
+    w_units: i64,
+    /// Steps taken (consumed input digits).
+    step: u32,
+}
+
+impl OnlineMul {
+    /// Create a multiplier for parallel operand `y` (|y| < 1).
+    pub fn new(y: Fixed) -> OnlineMul {
+        OnlineMul {
+            y_q: y.q,
+            f: y.frac_bits,
+            w_units: 0,
+            step: 0,
+        }
+    }
+
+    /// Online delay in cycles before the first output digit.
+    pub fn delay(&self) -> u32 {
+        DELTA_OLM
+    }
+
+    /// Feed the next serial input digit (MSDF); returns the next output
+    /// digit once the unit is past its online delay. Feed `0` once the
+    /// input stream is exhausted to keep draining output digits.
+    #[inline]
+    pub fn step(&mut self, x: Digit) -> Option<Digit> {
+        debug_assert!(is_valid_digit(x));
+        self.step += 1;
+        // v = 2w + x·Y·2^-2 ; in units of 2^-(f+2): x·Y·2^-2 = x·y_q units.
+        let v = 2 * self.w_units + (x as i64) * self.y_q;
+        if self.step <= DELTA_OLM {
+            // Initialization: accumulate without emitting (paper Alg. 1
+            // lines 2-5).
+            self.w_units = v;
+            return None;
+        }
+        // v̂ = truncate v to 2 fractional bits = floor(v / 2^f) quarters.
+        let quarters = v >> self.f; // arithmetic shift = floor division
+        let z: Digit = if quarters >= 2 {
+            1
+        } else if quarters <= -2 {
+            -1
+        } else {
+            0
+        };
+        self.w_units = v - ((z as i64) << (self.f + 2));
+        debug_assert!(
+            self.w_units.unsigned_abs() <= 3 << self.f,
+            "residual bound |w| <= 3/4 violated: w_units={} f={}",
+            self.w_units,
+            self.f
+        );
+        Some(z)
+    }
+
+    /// Convenience: multiply an SD digit stream by the parallel operand,
+    /// producing `n_out` output digits (zero-padding the input as needed).
+    pub fn multiply_stream(y: Fixed, x_digits: &[Digit], n_out: usize) -> Vec<Digit> {
+        let mut m = OnlineMul::new(y);
+        let mut out = Vec::with_capacity(n_out);
+        let mut i = 0usize;
+        while out.len() < n_out {
+            let x = x_digits.get(i).copied().unwrap_or(0);
+            i += 1;
+            if let Some(z) = m.step(x) {
+                out.push(z);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::digit::{sd_value, to_sd_digits};
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    /// Exhaustive bit-exactness for small precision: every (x, y) pair of
+    /// 6-bit fractions. |x·y − Z| ≤ (3/4)·2^-n_out must hold.
+    #[test]
+    fn exhaustive_small_precision() {
+        let n = 6u32;
+        let max = (1i64 << (n - 1)) - 1;
+        let n_out = (n - 1 + 4) as usize;
+        for xq in -max..=max {
+            for yq in -max..=max {
+                let x = Fixed::new(xq, n - 1);
+                let y = Fixed::new(yq, n - 1);
+                let xd = to_sd_digits(x);
+                let z = OnlineMul::multiply_stream(y, &xd, n_out);
+                assert!(z.iter().all(|&d| is_valid_digit(d)));
+                let err = (sd_value(&z) - x.value() * y.value()).abs();
+                let bound = 0.75 / (1u64 << n_out) as f64 + 1e-12;
+                assert!(
+                    err <= bound,
+                    "xq={xq} yq={yq}: err {err} > bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_higher_precision() {
+        prop_check("online mul converges at 8..16 bits", 400, |g| {
+            let n = g.usize(4, 16) as u32;
+            let max = (1i64 << (n - 1)) - 1;
+            let x = Fixed::new(g.i64(-max, max), n - 1);
+            let y = Fixed::new(g.i64(-max, max), n - 1);
+            let n_out = (n + 3) as usize;
+            let z = OnlineMul::multiply_stream(y, &to_sd_digits(x), n_out);
+            let err = (sd_value(&z) - x.value() * y.value()).abs();
+            let bound = 0.75 / (1u64 << n_out) as f64 + 1e-12;
+            prop_assert!(err <= bound, "n={n} err={err} bound={bound}");
+            Ok(())
+        });
+    }
+
+    /// The defining online property: after j output digits, the emitted
+    /// prefix is within 2^-j of the final product — i.e. digits really are
+    /// most-significant-first and never revised.
+    #[test]
+    fn prefix_convergence_msdf() {
+        prop_check("prefix within 2^-j of product", 200, |g| {
+            let n = 10u32;
+            let max = (1i64 << (n - 1)) - 1;
+            let x = Fixed::new(g.i64(-max, max), n - 1);
+            let y = Fixed::new(g.i64(-max, max), n - 1);
+            let z = OnlineMul::multiply_stream(y, &to_sd_digits(x), 16);
+            let p = x.value() * y.value();
+            for j in 1..=z.len() {
+                let prefix = sd_value(&z[..j]);
+                prop_assert!(
+                    (prefix - p).abs() <= 1.0 / (1u64 << j) as f64 + 1e-12,
+                    "prefix {} at j={} vs product {}",
+                    prefix,
+                    j,
+                    p
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delay_is_two_cycles() {
+        let y = Fixed::quantize(0.5, 8);
+        let mut m = OnlineMul::new(y);
+        assert_eq!(m.step(1), None);
+        assert_eq!(m.step(0), None);
+        assert!(m.step(0).is_some());
+    }
+
+    #[test]
+    fn zero_times_anything_is_zero_stream() {
+        let y = Fixed::quantize(0.73, 8);
+        let z = OnlineMul::multiply_stream(y, &[0; 8], 12);
+        assert!(z.iter().all(|&d| d == 0));
+    }
+}

@@ -1,0 +1,509 @@
+//! Digit-pipelined **Sum-of-Products (SOP) unit** — the core of the
+//! paper's WPU (window processing unit, §3.1.1/§3.4): a bank of online
+//! serial–parallel multipliers feeding a binary tree of online adders,
+//! all operating MSDF so the SOP's output digits stream out while inputs
+//! are still being consumed.
+//!
+//! ## Scaling convention
+//!
+//! Each adder level emits `(a+b)/2` — the paper's output-precision
+//! growth, which costs the `+⌈log(K×K)⌉ + ⌈log N⌉` cycles in Eq. (3).
+//! Leaves are prepended with `L = ⌈log2 m⌉` alignment zeros so no adder
+//! ever produces a transfer into position 0 (see
+//! [`crate::arith::online_add`]); the zeros model the adder pipeline fill.
+//! The prefix shifts values by another 2^-L, so the final stream's value
+//! is `SOP / 2^(2L)`: stream position `L + j` carries the weight of
+//! value-digit `j` of `SOP / 2^L`. Cycle accounting therefore maps a
+//! stream position `p` to pipeline cycle `δ_OLM + δ_OLA·L + (p − L)`.
+//!
+//! ## END integration
+//!
+//! [`sop_with_end`] classifies the final stream with the END unit and
+//! reports the digit position at which computation can stop — the basis
+//! for the paper's Fig. 12 (detection rates), Fig. 13 (energy savings)
+//! and Fig. 14 (effective cycles).
+
+use super::digit::{sd_value, to_sd_digits, Digit, Fixed};
+use super::end_unit::{classify_stream, EndState};
+use super::online_add::OnlineAdd;
+use super::online_mul::OnlineMul;
+
+/// Tree depth for `m` operands.
+pub fn tree_levels(m: usize) -> u32 {
+    assert!(m > 0);
+    (m as f64).log2().ceil() as u32
+}
+
+/// Compute the full output digit stream of the SOP
+/// `Σ_i weights[i]·acts[i] (+ bias)`, where activations enter digit-
+/// serially and weights are parallel operands.
+///
+/// Returns `(digits, levels)`: the stream's value times `2^(2·levels)`
+/// equals the SOP (up to the last-digit convergence bound
+/// `0.75·2^(2·levels - len)`).
+pub fn sop_stream(
+    weights: &[Fixed],
+    acts: &[Fixed],
+    bias: Option<Fixed>,
+    n_out: usize,
+) -> (Vec<Digit>, u32) {
+    assert_eq!(weights.len(), acts.len());
+    assert!(!weights.is_empty());
+    let m = weights.len() + bias.is_some() as usize;
+    let levels = tree_levels(m.max(2));
+    let width = 1usize << levels;
+
+    // Leaf streams: multiplier outputs (or the bias constant), each
+    // prepended with `levels` alignment zeros.
+    let mut streams: Vec<Vec<Digit>> = Vec::with_capacity(width);
+    for (w, a) in weights.iter().zip(acts) {
+        let mut s = vec![0i8; levels as usize];
+        s.extend(OnlineMul::multiply_stream(*w, &to_sd_digits(*a), n_out));
+        streams.push(s);
+    }
+    if let Some(b) = bias {
+        let mut s = vec![0i8; levels as usize];
+        let mut d = to_sd_digits(b);
+        d.resize(n_out, 0);
+        s.extend(d);
+        streams.push(s);
+    }
+    while streams.len() < width {
+        streams.push(vec![0i8; levels as usize + n_out]);
+    }
+
+    // Adder tree: pairwise online addition, each level halving the count
+    // and scaling by 1/2 (stream grows by one digit per level).
+    while streams.len() > 1 {
+        let mut next = Vec::with_capacity(streams.len() / 2);
+        for pair in streams.chunks(2) {
+            next.push(OnlineAdd::add_streams(&pair[0], &pair[1]));
+        }
+        streams = next;
+    }
+    (streams.pop().unwrap(), levels)
+}
+
+/// Exact fixed-point SOP value (the verification oracle): integer
+/// accumulation of `Σ w_q·a_q (+ b_q·2^f)` evaluated in f64 at the end.
+pub fn sop_exact(weights: &[Fixed], acts: &[Fixed], bias: Option<Fixed>) -> f64 {
+    let mut acc: i128 = 0;
+    let mut denom_bits = 0u32;
+    for (w, a) in weights.iter().zip(acts) {
+        debug_assert_eq!(w.frac_bits + a.frac_bits, weights[0].frac_bits + acts[0].frac_bits);
+        acc += (w.q as i128) * (a.q as i128);
+        denom_bits = w.frac_bits + a.frac_bits;
+    }
+    let mut v = acc as f64 / 2f64.powi(denom_bits as i32);
+    if let Some(b) = bias {
+        v += b.value();
+    }
+    v
+}
+
+/// Result of running a SOP through the END-equipped pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct SopEndResult {
+    /// END classification of the output stream.
+    pub state: EndState,
+    /// Digit position at which the decision fired (stream length if
+    /// undetermined — the pipeline ran to completion).
+    pub decided_at: u32,
+    /// Total digits of the full stream (= executed digits without END).
+    pub total_digits: u32,
+    /// Adder-tree depth (for cycle accounting).
+    pub levels: u32,
+    /// The SOP value reconstructed from the full stream (post-scaling).
+    pub value: f64,
+}
+
+impl SopEndResult {
+    /// Digits actually produced when END is enabled.
+    pub fn executed_digits(&self) -> u32 {
+        match self.state {
+            EndState::Terminate => self.decided_at,
+            _ => self.total_digits,
+        }
+    }
+
+    /// Pipeline cycles for a given stream position: `δ_OLM + δ_OLA·L +
+    /// (p − L)` (the first `L` stream positions are pipeline fill).
+    fn cycles_at(&self, p: u32) -> u64 {
+        let useful = p.saturating_sub(self.levels).max(1) as u64;
+        (super::online_mul::DELTA_OLM + super::online_add::DELTA_OLA * self.levels) as u64 + useful
+    }
+
+    /// Cycles executed by the SOP unit with END enabled.
+    pub fn executed_cycles(&self) -> u64 {
+        self.cycles_at(self.executed_digits())
+    }
+
+    /// Cycles of the full (END-disabled) SOP evaluation.
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles_at(self.total_digits)
+    }
+
+    /// Fraction of SOP cycles skipped thanks to END.
+    pub fn saved_fraction(&self) -> f64 {
+        1.0 - self.executed_cycles() as f64 / self.total_cycles() as f64
+    }
+
+    /// Executed fraction of the **digit-production window** only (the
+    /// `n + L` cycles during which multipliers and adders actively
+    /// produce digits; pipeline fill excluded). This is the per-unit
+    /// *activity* fraction — the quantity the paper's energy/effective-
+    /// cycle experiments measure (a terminated unit gates its datapath
+    /// even though the array's pipeline registers still tick).
+    pub fn digit_exec_fraction(&self) -> f64 {
+        let total = self.total_digits.saturating_sub(self.levels).max(1) as f64;
+        let exec = self
+            .executed_digits()
+            .saturating_sub(self.levels)
+            .max(1) as f64;
+        (exec / total).min(1.0)
+    }
+}
+
+/// Reference END path: produce the full stream, then classify.
+/// Kept for cross-validation of the optimized pipeline below.
+pub fn sop_with_end_reference(
+    weights: &[Fixed],
+    acts: &[Fixed],
+    bias: Option<Fixed>,
+    n_out: usize,
+) -> SopEndResult {
+    let (digits, levels) = sop_stream(weights, acts, bias, n_out);
+    let (state, at) = classify_stream(&digits);
+    let total = digits.len() as u32;
+    SopEndResult {
+        state,
+        decided_at: at.unwrap_or(total),
+        total_digits: total,
+        levels,
+        value: sd_value(&digits) * 2f64.powi(2 * levels as i32),
+    }
+}
+
+/// A reusable columnar SOP pipeline: all units step one cycle per
+/// iteration (the hardware's lockstep dataflow) and the whole pipeline
+/// stops the moment the END unit decides — the hardware's termination
+/// gating. Constructed once per filter (weights are the parallel
+/// operands) and reused across windows, so the hot path of the END
+/// experiments performs **zero allocation per SOP** (§Perf).
+pub struct SopPipeline {
+    weights: Vec<Fixed>,
+    bias: Option<Fixed>,
+    n_out: usize,
+    levels: u32,
+    width: usize,
+    // Reused unit state.
+    muls: Vec<OnlineMul>,
+    adders: Vec<OnlineAdd>,
+    adder_row_off: Vec<usize>,
+    bias_digits: Vec<Digit>,
+    cur: Vec<Digit>,
+    next: Vec<Digit>,
+}
+
+impl SopPipeline {
+    pub fn new(weights: &[Fixed], bias: Option<Fixed>, n_out: usize) -> SopPipeline {
+        assert!(!weights.is_empty());
+        let m = weights.len() + bias.is_some() as usize;
+        let levels = tree_levels(m.max(2));
+        let l = levels as usize;
+        let width = 1usize << levels;
+        let mut adder_row_off = Vec::with_capacity(l + 1);
+        let mut off = 0usize;
+        for lv in 0..l {
+            adder_row_off.push(off);
+            off += width >> (lv + 1);
+        }
+        adder_row_off.push(off);
+        let bias_digits = match bias {
+            Some(b) => {
+                let mut d = to_sd_digits(b);
+                d.resize(n_out, 0);
+                d
+            }
+            None => Vec::new(),
+        };
+        SopPipeline {
+            weights: weights.to_vec(),
+            bias,
+            n_out,
+            levels,
+            width,
+            muls: weights.iter().map(|w| OnlineMul::new(*w)).collect(),
+            adders: vec![OnlineAdd::new(); off],
+            adder_row_off,
+            bias_digits,
+            cur: vec![0; width],
+            next: vec![0; width / 2],
+        }
+    }
+
+    /// Adder-tree depth.
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+
+    /// Evaluate one window of activations through the pipeline with END
+    /// attached. Resets all unit state in place; no allocation.
+    pub fn run(&mut self, acts: &[Fixed]) -> SopEndResult {
+        assert_eq!(acts.len(), self.weights.len());
+        let l = self.levels as usize;
+        let n_out = self.n_out;
+        let leaf_len = l + n_out;
+        let total_positions = leaf_len + l;
+        let total_iters = total_positions + l;
+
+        // Reset unit state.
+        for (mul, w) in self.muls.iter_mut().zip(&self.weights) {
+            *mul = OnlineMul::new(*w);
+        }
+        for a in self.adders.iter_mut() {
+            *a = OnlineAdd::new();
+        }
+
+        let mut end = crate::arith::end_unit::EndUnit::new();
+        let mut prefix_acc: i64 = 0;
+        let mut prefix_len: u32 = 0;
+        let mut state = EndState::Undetermined;
+        let mut decided_at: Option<u32> = None;
+        let n_leaves = self.weights.len();
+        let width = self.width;
+
+        for t in 1..=total_iters {
+            // Leaf digits for stream position t.
+            if t <= l {
+                self.cur[..width].fill(0); // alignment-zero prefix
+            } else {
+                let u = t - l; // multiplier output index (1-based)
+                for i in 0..n_leaves {
+                    if u > n_out {
+                        self.cur[i] = 0;
+                        continue;
+                    }
+                    let mul = &mut self.muls[i];
+                    if u == 1 {
+                        // Online delay: two init steps before digit 1.
+                        mul.step(input_digit(acts, i, 0));
+                        mul.step(input_digit(acts, i, 1));
+                    }
+                    let x = input_digit(acts, i, u + 1);
+                    self.cur[i] = mul.step(x).expect("warmed multiplier emits");
+                }
+                let mut k = n_leaves;
+                if self.bias.is_some() {
+                    self.cur[k] = self.bias_digits.get(u - 1).copied().unwrap_or(0);
+                    k += 1;
+                }
+                self.cur[k..width].fill(0);
+            }
+            // Cascade through the adder tree; level lv's first output
+            // (its position-0 digit) is dropped at iteration t == lv+1.
+            let mut cur_w = width;
+            let mut dropped = false;
+            for lv in 0..l {
+                let row = &mut self.adders[self.adder_row_off[lv]..self.adder_row_off[lv + 1]];
+                for (a, adder) in row.iter_mut().enumerate() {
+                    self.next[a] = adder.push(self.cur[2 * a], self.cur[2 * a + 1]);
+                }
+                cur_w >>= 1;
+                self.cur[..cur_w].copy_from_slice(&self.next[..cur_w]);
+                if t == lv + 1 {
+                    debug_assert_eq!(self.cur[0], 0, "position-0 transfer fired");
+                    dropped = true;
+                    break; // deeper levels have no input yet
+                }
+            }
+            if dropped || t <= l {
+                continue;
+            }
+            // Final-stream digit for position t - levels.
+            let z = self.cur[0];
+            prefix_acc = prefix_acc * 2 + z as i64;
+            prefix_len += 1;
+            let st = end.observe(z);
+            if st != EndState::Undetermined {
+                state = st;
+                decided_at = end.decided_at();
+                if st == EndState::Terminate {
+                    break; // hardware termination: stop all units
+                }
+            }
+        }
+
+        let value = prefix_acc as f64 / 2f64.powi(prefix_len as i32)
+            * 2f64.powi(2 * self.levels as i32);
+        SopEndResult {
+            state,
+            decided_at: decided_at.unwrap_or(total_positions as u32),
+            total_digits: total_positions as u32,
+            levels: self.levels,
+            value,
+        }
+    }
+}
+
+/// One-shot convenience wrapper over [`SopPipeline`]. Digit-exact
+/// equivalent of [`sop_with_end_reference`] up to the decision point
+/// (checked by `pipelined_matches_reference`); `value` is the prefix
+/// value when terminated early.
+pub fn sop_with_end(
+    weights: &[Fixed],
+    acts: &[Fixed],
+    bias: Option<Fixed>,
+    n_out: usize,
+) -> SopEndResult {
+    SopPipeline::new(weights, bias, n_out).run(acts)
+}
+
+/// Serial input digit `j` (0-based) of activation `i`, zero-padded.
+#[inline]
+fn input_digit(acts: &[Fixed], i: usize, j: usize) -> Digit {
+    let a = acts[i];
+    let n = a.frac_bits as usize;
+    if j >= n {
+        return 0;
+    }
+    let mag = a.q.unsigned_abs();
+    let bit = (mag >> (n - 1 - j)) & 1;
+    if a.q < 0 {
+        -(bit as i8)
+    } else {
+        bit as i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn rand_fixed(g: &mut crate::util::prop::Gen, n: u32) -> Fixed {
+        let max = (1i64 << (n - 1)) - 1;
+        Fixed::new(g.i64(-max, max), n - 1)
+    }
+
+    #[test]
+    fn sop_matches_exact_value() {
+        prop_check("SOP stream equals exact dot product", 200, |g| {
+            let n = 8u32;
+            let m = g.sized(1, 30);
+            let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let acts: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let bias = if g.bool() { Some(rand_fixed(g, n)) } else { None };
+            let n_out = (n + 4) as usize;
+            let (digits, levels) = sop_stream(&weights, &acts, bias, n_out);
+            let got = sd_value(&digits) * 2f64.powi(2 * levels as i32);
+            let expect = sop_exact(&weights, &acts, bias);
+            // Each multiplier leaf is truncated at n_out digits with error
+            // ≤ 0.75·2^-n_out; the adders are exact, so the SOP error is
+            // bounded by m·0.75·2^-n_out.
+            let bound = m as f64 * 0.75 * 2f64.powi(-(n_out as i32)) + 1e-12;
+            prop_assert!(
+                (got - expect).abs() <= bound,
+                "m={m} got {got} expect {expect} bound {bound}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stream_length_is_nout_plus_two_levels() {
+        let n = 8u32;
+        let w: Vec<Fixed> = (0..9).map(|i| Fixed::quantize(0.05 * i as f64, n)).collect();
+        let a = w.clone();
+        let (digits, levels) = sop_stream(&w, &a, None, 12);
+        assert_eq!(levels, 4); // ceil(log2 9)
+        // leaf: levels + n_out; each of `levels` adder stages adds 1 digit.
+        assert_eq!(digits.len(), 12 + 2 * 4);
+    }
+
+    #[test]
+    fn end_terminates_negative_sops_early() {
+        let n = 8u32;
+        // Strongly negative SOP: all products negative.
+        let w: Vec<Fixed> = (0..16).map(|_| Fixed::quantize(0.9, n)).collect();
+        let a: Vec<Fixed> = (0..16).map(|_| Fixed::quantize(-0.9, n)).collect();
+        let r = sop_with_end(&w, &a, None, 12);
+        assert_eq!(r.state, EndState::Terminate);
+        assert!(
+            r.decided_at <= 6,
+            "large-magnitude negative should terminate within a few digits, got {}",
+            r.decided_at
+        );
+        assert!(r.saved_fraction() > 0.5);
+    }
+
+    #[test]
+    fn end_never_fires_on_positive_sops() {
+        prop_check("END soundness through the SOP pipeline", 100, |g| {
+            let n = 8u32;
+            let m = g.sized(1, 20);
+            let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let acts: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let r = sop_with_end(&weights, &acts, None, (n + 4) as usize);
+            let exact = sop_exact(&weights, &acts, None);
+            match r.state {
+                EndState::Terminate => {
+                    prop_assert!(exact < 1e-9, "terminated but SOP={exact} > 0")
+                }
+                EndState::SurelyPositive => {
+                    prop_assert!(exact > -1e-9, "positive but SOP={exact} < 0")
+                }
+                EndState::Undetermined => {
+                    // near-zero values only
+                    prop_assert!(exact.abs() < 1e-2, "undetermined but |SOP|={exact}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The optimized columnar pipeline is digit-exact with the
+    /// reference produce-then-classify path: same classification, same
+    /// decision position, same totals; same value when run to completion.
+    #[test]
+    fn pipelined_matches_reference() {
+        prop_check("pipelined SOP == reference", 300, |g| {
+            let n = 8u32;
+            let m = g.sized(1, 40);
+            let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let acts: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let bias = if g.bool() { Some(rand_fixed(g, n)) } else { None };
+            let n_out = (n + 4) as usize;
+            let fast = sop_with_end(&weights, &acts, bias, n_out);
+            let slow = sop_with_end_reference(&weights, &acts, bias, n_out);
+            prop_assert!(fast.state == slow.state, "state {:?} vs {:?}", fast.state, slow.state);
+            prop_assert!(
+                fast.decided_at == slow.decided_at,
+                "decided_at {} vs {}",
+                fast.decided_at,
+                slow.decided_at
+            );
+            prop_assert!(fast.total_digits == slow.total_digits, "totals differ");
+            prop_assert!(fast.levels == slow.levels, "levels differ");
+            if fast.state != crate::arith::end_unit::EndState::Terminate {
+                prop_assert!(
+                    (fast.value - slow.value).abs() < 1e-9,
+                    "value {} vs {}",
+                    fast.value,
+                    slow.value
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_operand_sop_degenerates_to_multiplication() {
+        let w = [Fixed::quantize(0.5, 8)];
+        let a = [Fixed::quantize(-0.25, 8)];
+        let (digits, levels) = sop_stream(&w, &a, None, 12);
+        let got = sd_value(&digits) * 2f64.powi(2 * levels as i32);
+        assert!((got - (-0.125)).abs() < 1e-3, "got {got}");
+    }
+}

@@ -1,0 +1,307 @@
+//! **END statistics from real activations** (paper §4.3, Figs. 12–14).
+//!
+//! For each sampled output pixel of a conv layer, the collector extracts
+//! the real input window, quantizes window + filter to n-bit fractions,
+//! and runs the bit-exact digit-pipelined SOP unit with the END unit
+//! attached ([`crate::arith::sop::sop_with_end`]). The resulting
+//! per-filter detection rates and termination cycles drive the energy
+//! model (Fig. 13) and the effective-cycle comparison (Fig. 14).
+//!
+//! Quantization scales each operand set by its max-|value| (a positive
+//! factor), which preserves every SOP's sign and the relative digit
+//! dynamics — the quantities the experiments measure.
+
+use anyhow::{bail, Result};
+
+use crate::arith::digit::Fixed;
+use crate::arith::end_unit::EndState;
+use crate::geometry::FusedConvSpec;
+use crate::runtime::Tensor;
+use crate::sim::EndActivity;
+use crate::util::rng::Rng;
+
+/// Sampling configuration.
+#[derive(Clone, Debug)]
+pub struct EndConfig {
+    /// Operand precision in bits.
+    pub n: u32,
+    /// Max output pixels sampled per filter (the paper samples too).
+    pub max_pixels_per_filter: usize,
+    /// Which output filters to analyse (paper: 10 random filters).
+    pub filters: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for EndConfig {
+    fn default() -> Self {
+        EndConfig {
+            n: crate::DEFAULT_PRECISION,
+            max_pixels_per_filter: 400,
+            filters: Vec::new(), // empty = all filters
+            seed: 0xE4D5EED,
+        }
+    }
+}
+
+/// Per-filter END statistics (one bar of Fig. 12).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FilterEndStats {
+    pub filter: usize,
+    pub sampled: usize,
+    /// % of SOPs surely-negative (terminated early).
+    pub negative_pct: f64,
+    /// % surely-positive.
+    pub positive_pct: f64,
+    /// % undetermined (near-zero results; no accuracy impact, §4.3).
+    pub undetermined_pct: f64,
+    /// Mean termination position among terminated SOPs (digits).
+    pub mean_term_digit: f64,
+    /// Mean executed-cycle fraction across all sampled SOPs.
+    pub mean_exec_fraction: f64,
+}
+
+/// Layer-level aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct LayerEndStats {
+    pub per_filter: Vec<FilterEndStats>,
+    pub activity: EndActivity,
+}
+
+/// Quantize a slice into n-bit fractions with a shared scale.
+fn quantize_all(vals: &[f32], scale: f32, n: u32) -> Vec<Fixed> {
+    let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+    vals.iter()
+        .map(|&v| Fixed::quantize((v * inv) as f64 * 0.999, n))
+        .collect()
+}
+
+/// Collect END statistics for one conv layer.
+///
+/// * `input_fm` — the layer's input feature map, raw (unpadded), HWC.
+/// * `weights`  — (K, K, N, M) filter tensor.
+/// * `bias`     — (M,) bias vector.
+pub fn layer_end_stats(
+    input_fm: &Tensor,
+    weights: &Tensor,
+    bias: &[f32],
+    spec: &FusedConvSpec,
+    cfg: &EndConfig,
+) -> Result<LayerEndStats> {
+    if input_fm.shape.len() != 3 || weights.shape.len() != 4 {
+        bail!("layer_end_stats wants HWC input and KKNM weights");
+    }
+    let (k, n_in, m_out) = (spec.k, spec.n_in, spec.m_out);
+    if weights.shape != [k, k, n_in, m_out] {
+        bail!("weights {:?} != spec ({k},{k},{n_in},{m_out})", weights.shape);
+    }
+    let out_dim = spec.conv_out();
+    let act_scale = input_fm.max_abs().max(1e-12);
+    // Scales chosen so weights fit in (-1, 1) and the bias, which enters
+    // the SOP as b/(act_scale·w_scale), does too.
+    let max_b = bias.iter().fold(0.0f32, |m, b| m.max(b.abs()));
+    let w_scale = weights.max_abs().max(max_b / act_scale).max(1e-12);
+    let filters: Vec<usize> = if cfg.filters.is_empty() {
+        (0..m_out).collect()
+    } else {
+        cfg.filters.clone()
+    };
+
+    let mut rng = Rng::new(cfg.seed);
+    let n_out_digits = (cfg.n + 4) as usize;
+    let win = k * k * n_in;
+    let mut per_filter = Vec::with_capacity(filters.len());
+    let mut agg_exec = 0.0f64;
+    let mut agg_neg = 0u64;
+    let mut agg_und = 0u64;
+    let mut agg_total = 0u64;
+
+    // Pre-quantized padded input (pad with exact zeros).
+    let pad = spec.pad as i64;
+    let mut window = vec![0f32; win];
+
+    for &f in &filters {
+        // Quantize this filter once.
+        let mut wq = Vec::with_capacity(win);
+        for i in 0..k {
+            for j in 0..k {
+                for c in 0..n_in {
+                    let idx = ((i * k + j) * n_in + c) * m_out + f;
+                    wq.push(weights.data[idx]);
+                }
+            }
+        }
+        let wq = quantize_all(&wq, w_scale, cfg.n);
+        let bq = Fixed::quantize((bias[f] / (act_scale * w_scale)) as f64 * 0.999, cfg.n);
+        // One pipeline per filter, reused across windows (zero-alloc hot
+        // path — see arith::sop::SopPipeline and EXPERIMENTS.md §Perf).
+        let mut pipeline = crate::arith::sop::SopPipeline::new(&wq, Some(bq), n_out_digits);
+        let mut aq: Vec<Fixed> = vec![Fixed::zero(cfg.n - 1); win];
+
+        let total_pixels = out_dim * out_dim;
+        let samples = cfg.max_pixels_per_filter.min(total_pixels);
+        let mut st = FilterEndStats {
+            filter: f,
+            ..Default::default()
+        };
+        let mut term_digit_sum = 0.0f64;
+        let mut exec_sum = 0.0f64;
+        let (mut neg, mut pos, mut und) = (0usize, 0usize, 0usize);
+        for _ in 0..samples {
+            let oy = rng.below(out_dim as u64) as i64;
+            let ox = rng.below(out_dim as u64) as i64;
+            // Extract the window (padded coords: window start may be <0).
+            let y0 = oy * spec.s as i64 - pad;
+            let x0 = ox * spec.s as i64 - pad;
+            let (h, w_dim) = (input_fm.shape[0] as i64, input_fm.shape[1] as i64);
+            for (wi, slot) in window.iter_mut().enumerate() {
+                let di = (wi / n_in) / k;
+                let dj = (wi / n_in) % k;
+                let c = wi % n_in;
+                let (yy, xx) = (y0 + di as i64, x0 + dj as i64);
+                *slot = if yy >= 0 && yy < h && xx >= 0 && xx < w_dim {
+                    input_fm.at3(yy as usize, xx as usize, c)
+                } else {
+                    0.0
+                };
+            }
+            let inv = 1.0 / act_scale;
+            for (dst, &v) in aq.iter_mut().zip(window.iter()) {
+                *dst = Fixed::quantize((v * inv) as f64 * 0.999, cfg.n);
+            }
+            let r = pipeline.run(&aq);
+            match r.state {
+                EndState::Terminate => {
+                    neg += 1;
+                    term_digit_sum += r.decided_at as f64;
+                }
+                EndState::SurelyPositive => pos += 1,
+                EndState::Undetermined => und += 1,
+            }
+            exec_sum += r.digit_exec_fraction();
+        }
+        let s = samples as f64;
+        st.sampled = samples;
+        st.negative_pct = 100.0 * neg as f64 / s;
+        st.positive_pct = 100.0 * pos as f64 / s;
+        st.undetermined_pct = 100.0 * und as f64 / s;
+        st.mean_term_digit = if neg > 0 { term_digit_sum / neg as f64 } else { 0.0 };
+        st.mean_exec_fraction = exec_sum / s;
+        agg_exec += exec_sum;
+        agg_neg += neg as u64;
+        agg_und += und as u64;
+        agg_total += samples as u64;
+        per_filter.push(st);
+    }
+
+    let activity = EndActivity {
+        sops: agg_total,
+        mean_executed_fraction: agg_exec / agg_total.max(1) as f64,
+        negative_fraction: agg_neg as f64 / agg_total.max(1) as f64,
+        undetermined_fraction: agg_und as f64 / agg_total.max(1) as f64,
+    };
+    Ok(LayerEndStats {
+        per_filter,
+        activity,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::FusedConvSpec;
+    use crate::util::rng::Rng;
+
+    fn spec(k: usize, n_in: usize, m_out: usize, ifm: usize) -> FusedConvSpec {
+        FusedConvSpec {
+            name: "T".into(),
+            k,
+            s: 1,
+            pad: 0,
+            pool: None,
+            n_in,
+            m_out,
+            ifm,
+        }
+    }
+
+    fn random_tensor(shape: Vec<usize>, rng: &mut Rng, scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| (rng.normal() as f32) * scale).collect()).unwrap()
+    }
+
+    #[test]
+    fn zero_mean_weights_give_roughly_half_negative() {
+        let mut rng = Rng::new(3);
+        let sp = spec(3, 2, 4, 12);
+        let input = random_tensor(vec![12, 12, 2], &mut rng, 1.0).relu();
+        let weights = random_tensor(vec![3, 3, 2, 4], &mut rng, 0.4);
+        let bias = vec![0.0; 4];
+        let cfg = EndConfig {
+            max_pixels_per_filter: 100,
+            ..Default::default()
+        };
+        let stats = layer_end_stats(&input, &weights, &bias, &sp, &cfg).unwrap();
+        let neg = stats.activity.negative_fraction;
+        // ReLU'd inputs + zero-mean weights: negatives in the paper's
+        // regime (it reports ~41–48%).
+        assert!(
+            (0.2..0.8).contains(&neg),
+            "negative fraction {neg} implausible"
+        );
+        // END must save cycles.
+        assert!(stats.activity.mean_executed_fraction < 1.0);
+        assert_eq!(stats.per_filter.len(), 4);
+    }
+
+    #[test]
+    fn all_positive_weights_on_positive_inputs_never_terminate() {
+        let mut rng = Rng::new(4);
+        let sp = spec(3, 1, 2, 10);
+        let input = Tensor::new(
+            vec![10, 10, 1],
+            (0..100).map(|_| rng.f32() + 0.1).collect(),
+        )
+        .unwrap();
+        let weights = Tensor::new(
+            vec![3, 3, 1, 2],
+            (0..18).map(|_| rng.f32() * 0.4 + 0.05).collect(),
+        )
+        .unwrap();
+        let stats = layer_end_stats(
+            &input,
+            &weights,
+            &[0.0, 0.0],
+            &sp,
+            &EndConfig {
+                max_pixels_per_filter: 50,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.activity.negative_fraction, 0.0);
+    }
+
+    #[test]
+    fn termination_consistent_with_true_sign() {
+        // Cross-check: negative_pct + positive_pct + undetermined = 100.
+        let mut rng = Rng::new(5);
+        let sp = spec(5, 1, 3, 16);
+        let input = random_tensor(vec![16, 16, 1], &mut rng, 1.0);
+        let weights = random_tensor(vec![5, 5, 1, 3], &mut rng, 0.3);
+        let stats = layer_end_stats(
+            &input,
+            &weights,
+            &[0.01, -0.01, 0.0],
+            &sp,
+            &EndConfig {
+                max_pixels_per_filter: 80,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for f in &stats.per_filter {
+            let total = f.negative_pct + f.positive_pct + f.undetermined_pct;
+            assert!((total - 100.0).abs() < 1e-6, "{f:?}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! The **fusion executor**: drives the pyramid plan over a real input,
+//! executing the AOT-compiled tile program per movement and reassembling
+//! the fused stack's output feature map — the paper's §3.4 dataflow with
+//! real numerics through PJRT.
+//!
+//! At construction the executor rebuilds the geometry with the Rust
+//! Algorithm 3/4 and cross-checks it against the manifest recorded by
+//! `aot.py` (the Python mirror); any drift fails fast.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::geometry::{PyramidPlan, StridePolicy};
+use crate::runtime::{GeometryMeta, Runtime, Tensor};
+
+/// Execution statistics of one fused evaluation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// Tile-program invocations (= pyramid movements = α²).
+    pub tiles_executed: usize,
+    /// Bytes moved host→device for level-0 tiles.
+    pub input_bytes: usize,
+    /// Bytes of assembled output.
+    pub output_bytes: usize,
+    /// Wall-clock time of the tile loop.
+    pub wall: std::time::Duration,
+}
+
+/// Executor for one fused group (e.g. "lenet", "alexnet", "vgg").
+pub struct FusionExecutor<'rt> {
+    rt: &'rt Runtime,
+    pub group: String,
+    pub plan: PyramidPlan,
+    geom: GeometryMeta,
+}
+
+impl<'rt> FusionExecutor<'rt> {
+    /// Build the executor, cross-checking Rust geometry vs the manifest.
+    pub fn new(rt: &'rt Runtime, group: &str) -> Result<FusionExecutor<'rt>> {
+        let geom = rt
+            .manifest
+            .geometry
+            .get(group)
+            .ok_or_else(|| anyhow!("no geometry for group '{group}' in manifest"))?
+            .clone();
+        let plan = PyramidPlan::build(&geom.levels, geom.r_out, StridePolicy::Uniform)
+            .ok_or_else(|| anyhow!("{group}: Rust Algorithm 3/4 found no plan"))?;
+        if plan.tiles != geom.tiles
+            || plan.strides != geom.strides
+            || plan.alpha() != geom.alpha
+            || plan.starts != geom.starts
+        {
+            bail!(
+                "{group}: geometry drift between Rust and aot.py:\n  rust: tiles {:?} strides {:?} α {} starts {:?}\n  aot : tiles {:?} strides {:?} α {} starts {:?}",
+                plan.tiles, plan.strides, plan.alpha(), plan.starts,
+                geom.tiles, geom.strides, geom.alpha, geom.starts
+            );
+        }
+        Ok(FusionExecutor {
+            rt,
+            group: group.to_string(),
+            plan,
+            geom,
+        })
+    }
+
+    /// Output feature-map shape of the fused stack.
+    pub fn output_shape(&self) -> Vec<usize> {
+        let last = self.plan.specs.last().unwrap();
+        vec![last.level_out(), last.level_out(), last.m_out]
+    }
+
+    /// Run the fused stack tile-by-tile, assembling the output.
+    pub fn run(&self, input: &Tensor) -> Result<(Tensor, ExecStats)> {
+        let spec0 = &self.plan.specs[0];
+        if input.shape != [spec0.ifm, spec0.ifm, spec0.n_in] {
+            bail!(
+                "{}: input shape {:?}, expected {:?}",
+                self.group,
+                input.shape,
+                [spec0.ifm, spec0.ifm, spec0.n_in]
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let a = self.plan.alpha();
+        let h0 = self.plan.tiles[0];
+        let q = self.plan.depth();
+        let program = format!("{}_tile", self.group);
+        let last = self.plan.specs.last().unwrap();
+        let p_out = self.plan.strides[q - 1] / last.chain_factor();
+
+        let mut out = Tensor::zeros(self.output_shape());
+        let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
+        let mut stats = ExecStats::default();
+        let mut scalars = vec![0i32; 2 * q];
+        for iy in 0..a {
+            for ix in 0..a {
+                let rect = self.plan.tile_rect(0, iy, ix);
+                // Real data occupies [pad, pad + ifm) in padded coords.
+                input.extract_window(rect.y0, rect.x0, h0, spec0.pad as i64, &mut tile)?;
+                for (j, spec) in self.plan.specs.iter().enumerate() {
+                    let r = self.plan.tile_rect(j, iy, ix);
+                    debug_assert_eq!(r.y0.rem_euclid(spec.s as i64), 0);
+                    scalars[2 * j] = (r.y0 / spec.s as i64) as i32;
+                    scalars[2 * j + 1] = (r.x0 / spec.s as i64) as i32;
+                }
+                let outs = self.rt.execute(&program, &[&tile], &scalars)?;
+                let region = &outs[0];
+                out.place_window(
+                    region,
+                    (iy * p_out) as i64,
+                    (ix * p_out) as i64,
+                )?;
+                stats.tiles_executed += 1;
+                stats.input_bytes += tile.len() * 4;
+            }
+        }
+        stats.output_bytes = out.len() * 4;
+        stats.wall = t0.elapsed();
+        Ok((out, stats))
+    }
+
+    /// Run the golden full-map program; returns per-level pre-activations
+    /// followed by the final output.
+    pub fn golden(&self, input: &Tensor) -> Result<Vec<Tensor>> {
+        self.rt
+            .execute(&format!("{}_full", self.group), &[input], &[])
+    }
+
+    /// The fusion-correctness invariant: tile-assembled output ≡ golden
+    /// full-graph output. Returns the max relative error.
+    pub fn verify(&self, input: &Tensor) -> Result<f32> {
+        let (assembled, _) = self.run(input)?;
+        let golden = self.golden(input)?;
+        let gold_out = golden.last().unwrap();
+        let scale = gold_out.max_abs().max(1e-9);
+        Ok(assembled.max_abs_diff(gold_out)? / scale)
+    }
+
+    /// Manifest geometry (levels as recorded by aot.py).
+    pub fn geometry(&self) -> &GeometryMeta {
+        &self.geom
+    }
+}

@@ -1,0 +1,10 @@
+//! The L3 coordinator: fusion-pyramid execution over PJRT, END-statistics
+//! collection from real activations, and the threaded inference service.
+
+pub mod end_stats;
+pub mod executor;
+pub mod service;
+
+pub use end_stats::{layer_end_stats, EndConfig, FilterEndStats, LayerEndStats};
+pub use executor::{ExecStats, FusionExecutor};
+pub use service::{InferenceService, Response, ServiceConfig};

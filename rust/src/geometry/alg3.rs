@@ -1,0 +1,130 @@
+//! **Algorithm 3** — calculation of the fusion-pyramid tile sizes.
+//!
+//! For every candidate square output region `R_Q` of the final pyramid
+//! level, back-propagate Eq. (1) `D_l = (D_o − 1)·S_l + K_l` through each
+//! level (pooling stage first, then convolution) to obtain the per-level
+//! input tile sizes `H_Q .. H_1`, keeping only configurations whose tiles
+//! fit inside the respective (padded) input feature maps.
+
+use super::spec::FusedConvSpec;
+
+/// Tile sizes for one output-region choice: `tiles[j]` is the input tile
+/// side of pyramid level `j` (level 0 = first fused layer).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Final-level square output region size (R_Q).
+    pub r_out: usize,
+    /// Per-level input tile sizes H_1..H_Q (index 0 = first layer).
+    pub tiles: Vec<usize>,
+}
+
+/// Apply Eq. (1) backwards through the fused stack for a given final
+/// output region. Returns `None` if any tile exceeds its level's padded
+/// IFM (the `H ≤ IFM` bound of Algorithm 3).
+pub fn tile_sizes(specs: &[FusedConvSpec], r_out: usize) -> Option<TileConfig> {
+    assert!(!specs.is_empty());
+    assert!(r_out > 0);
+    let q = specs.len();
+    let mut tiles = vec![0usize; q];
+    let mut region = r_out; // output region of the level being processed
+    for j in (0..q).rev() {
+        let h = specs[j].tile_for_output(region);
+        if h > specs[j].ifm_padded() {
+            return None;
+        }
+        tiles[j] = h;
+        region = h; // this level's input region = previous level's output
+    }
+    Some(TileConfig { r_out, tiles })
+}
+
+/// Algorithm 3 as written: the full `(R_Q × Q)` matrix of tile sizes for
+/// every feasible square output region of the final level.
+pub fn tile_size_matrix(specs: &[FusedConvSpec]) -> Vec<TileConfig> {
+    let max_r = specs.last().unwrap().level_out();
+    (1..=max_r)
+        .filter_map(|r| tile_sizes(specs, r))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::spec::PoolSpec;
+
+    pub(crate) fn lenet_fused() -> Vec<FusedConvSpec> {
+        vec![
+            FusedConvSpec {
+                name: "CL1".into(),
+                k: 5,
+                s: 1,
+                pad: 0,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 1,
+                m_out: 6,
+                ifm: 32,
+            },
+            FusedConvSpec {
+                name: "CL2".into(),
+                k: 5,
+                s: 1,
+                pad: 0,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 6,
+                m_out: 16,
+                ifm: 14,
+            },
+        ]
+    }
+
+    /// Paper §3.3.1: R_Q = 1 gives H = (16, 6) for fused LeNet CL1+CL2.
+    #[test]
+    fn paper_lenet_r1() {
+        let cfg = tile_sizes(&lenet_fused(), 1).unwrap();
+        assert_eq!(cfg.tiles, vec![16, 6]);
+    }
+
+    #[test]
+    fn matrix_is_monotone_and_bounded() {
+        let m = tile_size_matrix(&lenet_fused());
+        assert!(!m.is_empty());
+        // Tile sizes grow monotonically with the output region.
+        for w in m.windows(2) {
+            for j in 0..w[0].tiles.len() {
+                assert!(w[0].tiles[j] < w[1].tiles[j]);
+            }
+        }
+        // Largest feasible config covers the whole IFM at level 0 or stops
+        // before exceeding it.
+        let specs = lenet_fused();
+        for cfg in &m {
+            for (j, &h) in cfg.tiles.iter().enumerate() {
+                assert!(h <= specs[j].ifm_padded());
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_region_rejected() {
+        // Output region so large the level-0 tile would exceed the IFM.
+        assert!(tile_sizes(&lenet_fused(), 8).is_none());
+        // R=7 -> CL2 out region 7 -> needs MPL2-in 14 -> wait: for LeNet
+        // max feasible final region is level_out of CL2 = 5.
+        let max = lenet_fused().last().unwrap().level_out();
+        assert_eq!(max, 5);
+        assert!(tile_sizes(&lenet_fused(), max).is_some());
+    }
+
+    /// Eq.(1) round trip: output_for_tile(tile_for_output(r)) == r.
+    #[test]
+    fn eq1_roundtrip_via_matrix() {
+        let specs = lenet_fused();
+        for cfg in tile_size_matrix(&specs) {
+            let mut region = cfg.r_out;
+            for j in (0..specs.len()).rev() {
+                assert_eq!(specs[j].output_for_tile(cfg.tiles[j]), region);
+                region = cfg.tiles[j];
+            }
+        }
+    }
+}

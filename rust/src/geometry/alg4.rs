@@ -1,0 +1,237 @@
+//! **Algorithm 4** — calculation of the uniform tile stride.
+//!
+//! The tile stride S^T determines how the fusion pyramid moves after each
+//! execution round. The paper's key observation: the minimum-overlap
+//! stride `H − K + S` generally yields *different* movement counts α at
+//! different pyramid levels (the LeNet example: α₂ = 5 but α₁ = 7/3),
+//! which forces synchronization stalls, repeated computation and
+//! intermediate-data spills. Algorithm 4 instead enumerates, per level,
+//! all strides with integer `α = (IFM − H)/S^T + 1`, then selects the
+//! *largest* per-level strides that (a) share a single α across all
+//! levels, (b) never skip an output pixel (`S^T ≤ H − K + S`), and
+//! (c) respect the inter-level movement chain
+//! (`S^T_j = S^T_{j+1} · s_j · pool_s_j`).
+
+use super::alg3::TileConfig;
+use super::spec::FusedConvSpec;
+
+/// Per-level stride candidates with integer movement counts — Algorithm 4
+/// as written in the paper (lines 3–8): every `p ∈ [1, H_j]` with
+/// `α = (IFM_j − H_j)/p + 1 ∈ ℤ`.
+pub fn stride_candidates(spec: &FusedConvSpec, h: usize) -> Vec<(usize, usize)> {
+    let ifm = spec.ifm_padded();
+    assert!(h <= ifm);
+    let span = ifm - h;
+    (1..=h)
+        .filter(|p| span % p == 0)
+        .map(|p| (p, span / p + 1))
+        .collect()
+}
+
+/// Largest stride that does not skip any convolution window:
+/// `S^T ≤ H − K + S` (paper §3.3.2), additionally a multiple of the
+/// level's chain factor so tile-local windows stay on the global grid.
+pub fn max_coverage_stride(spec: &FusedConvSpec, h: usize) -> usize {
+    let cov = h - spec.k + spec.s;
+    let cf = spec.chain_factor();
+    if cov >= cf {
+        (cov / cf) * cf // floor to a multiple of the chain factor
+    } else {
+        cov.max(1)
+    }
+}
+
+/// The uniform-stride solution for one tile configuration.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UniformStride {
+    /// Per-level tile strides S^T_1..S^T_Q.
+    pub strides: Vec<usize>,
+    /// Shared movement count per dimension.
+    pub alpha: usize,
+}
+
+/// Solve Algorithm 4 for a tile configuration: pick the largest feasible
+/// final-level stride, derive lower-level strides through the movement
+/// chain, and check the shared-α + coverage conditions. `exact` demands
+/// the paper's integer-α divisibility at every level (true for the
+/// unpadded networks the paper analyses); with `exact = false` the last
+/// movement may overhang the feature map (zero-filled by the executor),
+/// which keeps movement uniform for padded networks too.
+pub fn uniform_stride(
+    specs: &[FusedConvSpec],
+    cfg: &TileConfig,
+    exact: bool,
+) -> Option<UniformStride> {
+    let q = specs.len();
+    assert_eq!(cfg.tiles.len(), q);
+    let last = &specs[q - 1];
+    let h_last = cfg.tiles[q - 1];
+
+    // Candidate final-level strides, largest first.
+    let cov_last = h_last - last.k + last.s;
+    let mut cands: Vec<usize> = (1..=cov_last)
+        .filter(|p| p % last.chain_factor() == 0 || last.chain_factor() == 1)
+        .collect();
+    cands.reverse();
+
+    'outer: for p_last in cands {
+        // Derive the stride chain: S^T_j = S^T_{j+1} · chain_j.
+        let mut strides = vec![0usize; q];
+        strides[q - 1] = p_last;
+        for j in (0..q - 1).rev() {
+            strides[j] = strides[j + 1] * specs[j].chain_factor();
+        }
+        // Coverage at every level.
+        for j in 0..q {
+            if strides[j] > cfg.tiles[j] - specs[j].k + specs[j].s {
+                continue 'outer;
+            }
+        }
+        // Shared integer α.
+        let mut alpha: Option<usize> = None;
+        for j in 0..q {
+            let span = specs[j].ifm_padded() - cfg.tiles[j];
+            let a = if exact {
+                if span % strides[j] != 0 {
+                    continue 'outer;
+                }
+                span / strides[j] + 1
+            } else {
+                span.div_ceil(strides[j]) + 1
+            };
+            match alpha {
+                None => alpha = Some(a),
+                Some(prev) if exact && prev != a => continue 'outer,
+                // Inexact mode: uniform α is the max over levels (the
+                // executor zero-fills overhang).
+                Some(prev) => alpha = Some(prev.max(a)),
+            }
+        }
+        return Some(UniformStride {
+            strides,
+            alpha: alpha.unwrap(),
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::alg3::{tile_sizes, tile_size_matrix};
+    use crate::geometry::spec::{FusedConvSpec, PoolSpec};
+
+    fn lenet_fused() -> Vec<FusedConvSpec> {
+        vec![
+            FusedConvSpec {
+                name: "CL1".into(),
+                k: 5,
+                s: 1,
+                pad: 0,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 1,
+                m_out: 6,
+                ifm: 32,
+            },
+            FusedConvSpec {
+                name: "CL2".into(),
+                k: 5,
+                s: 1,
+                pad: 0,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 6,
+                m_out: 16,
+                ifm: 14,
+            },
+        ]
+    }
+
+    /// The paper's running example (§3.3.2): for H = (16, 6) the
+    /// minimum-overlap strides (12, 2) give α₁ = 7/3 ∉ ℤ; the uniform
+    /// solution is S^T = (4, 2) with α = 5 at both levels.
+    #[test]
+    fn paper_lenet_uniform_stride() {
+        let specs = lenet_fused();
+        let cfg = tile_sizes(&specs, 1).unwrap();
+        assert_eq!(cfg.tiles, vec![16, 6]);
+
+        // Minimum-overlap stride at CL1 is 16-5+1 = 12 -> α = 16/12+1 ∉ ℤ.
+        assert_eq!((specs[0].ifm_padded() - 16) % 12, 4);
+
+        let u = uniform_stride(&specs, &cfg, true).unwrap();
+        assert_eq!(u.strides, vec![4, 2]);
+        assert_eq!(u.alpha, 5);
+    }
+
+    /// α = 5 from Alg-4 candidates: CL2 stride-2 has α=(14-6)/2+1=5 and
+    /// CL1 stride-4 has α=(32-16)/4+1=5 — the shared-α solution.
+    #[test]
+    fn candidates_contain_the_solution() {
+        let specs = lenet_fused();
+        let c1 = stride_candidates(&specs[0], 16);
+        let c2 = stride_candidates(&specs[1], 6);
+        assert!(c1.contains(&(4, 5)));
+        assert!(c2.contains(&(2, 5)));
+        // Candidate lists only contain integer-α entries.
+        for (p, a) in c1 {
+            assert_eq!((32 - 16) % p, 0);
+            assert_eq!(a, (32 - 16) / p + 1);
+        }
+    }
+
+    /// Every exact solution must tile the output exactly: the last tile
+    /// ends at the feature-map border at every level.
+    #[test]
+    fn exact_solutions_cover_without_overhang() {
+        let specs = lenet_fused();
+        for cfg in tile_size_matrix(&specs) {
+            if let Some(u) = uniform_stride(&specs, &cfg, true) {
+                for j in 0..specs.len() {
+                    let end = (u.alpha - 1) * u.strides[j] + cfg.tiles[j];
+                    assert_eq!(
+                        end,
+                        specs[j].ifm_padded(),
+                        "level {j} r_out {}",
+                        cfg.r_out
+                    );
+                }
+            }
+        }
+    }
+
+    /// Inexact mode always produces a plan for padded (VGG-style) stacks.
+    #[test]
+    fn vgg_block_padded_plan() {
+        let specs = vec![
+            FusedConvSpec {
+                name: "C1_1".into(),
+                k: 3,
+                s: 1,
+                pad: 1,
+                pool: None,
+                n_in: 3,
+                m_out: 64,
+                ifm: 224,
+            },
+            FusedConvSpec {
+                name: "C1_2".into(),
+                k: 3,
+                s: 1,
+                pad: 1,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 64,
+                m_out: 64,
+                ifm: 224,
+            },
+        ];
+        let cfg = tile_sizes(&specs, 4).unwrap();
+        let u = uniform_stride(&specs, &cfg, false).expect("plan");
+        // Chain: stride at level 0 = stride at level 1 × chain(level 0)=1.
+        assert_eq!(u.strides[0], u.strides[1]);
+        assert!(u.alpha >= 2);
+        // Coverage condition at both levels.
+        for j in 0..2 {
+            assert!(u.strides[j] <= cfg.tiles[j] - 3 + 1);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Fusion-pyramid geometry (paper §3.3): Eq. (1) receptive-field
+//! back-propagation, Algorithm 3 (tile sizes), Algorithm 4 (uniform tile
+//! stride) and the executable [`plan::PyramidPlan`].
+
+pub mod alg3;
+pub mod alg4;
+pub mod plan;
+pub mod spec;
+
+pub use alg3::{tile_size_matrix, tile_sizes, TileConfig};
+pub use alg4::{max_coverage_stride, stride_candidates, uniform_stride, UniformStride};
+pub use plan::{PyramidPlan, StridePolicy, TileRect};
+pub use spec::{FusedConvSpec, PoolSpec};

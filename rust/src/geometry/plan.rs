@@ -1,0 +1,338 @@
+//! The **pyramid plan**: the complete, executable description of a fusion
+//! pyramid — tile sizes (Alg. 3), uniform strides (Alg. 4), per-level
+//! start offsets, and the movement schedule the coordinator executes.
+//!
+//! All rectangles are expressed in each level's *padded* input coordinate
+//! system; regions extending past the raw feature map are zero-filled by
+//! the executor (they correspond to convolution padding or boundary
+//! overhang).
+
+use super::alg3::{tile_sizes, TileConfig};
+use super::alg4::{uniform_stride, UniformStride};
+use super::spec::FusedConvSpec;
+
+/// How tile strides are chosen — the axis the paper's baselines vary on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StridePolicy {
+    /// The paper's uniform tile stride (Algorithm 4).
+    Uniform,
+    /// Tile stride = convolution stride at every level (Baselines 1–2):
+    /// levels move at different rates and recompute heavily.
+    ConvStride,
+}
+
+/// A fully-resolved fusion pyramid.
+#[derive(Clone, Debug)]
+pub struct PyramidPlan {
+    pub specs: Vec<FusedConvSpec>,
+    /// Final-level output region side (R_Q).
+    pub r_out: usize,
+    /// Per-level input tile sides H_1..H_Q.
+    pub tiles: Vec<usize>,
+    /// Per-level tile strides S^T_1..S^T_Q.
+    pub strides: Vec<usize>,
+    /// Per-level movement counts per dimension (all equal for Uniform).
+    pub alphas: Vec<usize>,
+    /// Per-level start offsets in padded input coordinates (≤ 0; negative
+    /// values are zero-filled halo from deeper levels' padding).
+    pub starts: Vec<i64>,
+    pub policy: StridePolicy,
+}
+
+/// A tile position at one pyramid level for one movement step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileRect {
+    /// Top-left corner in padded input coordinates (may be negative).
+    pub y0: i64,
+    pub x0: i64,
+    /// Side length.
+    pub side: usize,
+}
+
+impl PyramidPlan {
+    /// Build a plan for `specs` with final output region `r_out`.
+    ///
+    /// For [`StridePolicy::Uniform`], runs Algorithm 4 (trying the exact
+    /// integer-α solution first, then the overhang-tolerant variant).
+    pub fn build(
+        specs: &[FusedConvSpec],
+        r_out: usize,
+        policy: StridePolicy,
+    ) -> Option<PyramidPlan> {
+        let cfg = tile_sizes(specs, r_out)?;
+        match policy {
+            StridePolicy::Uniform => {
+                let u = uniform_stride(specs, &cfg, true)
+                    .or_else(|| uniform_stride(specs, &cfg, false))?;
+                Some(Self::assemble(specs, cfg, u, policy))
+            }
+            StridePolicy::ConvStride => {
+                // Each level moves by its own conv stride; movement counts
+                // per level follow from its own span — the asymmetric
+                // movement the paper's §3.3.2 warns about.
+                let strides: Vec<usize> = specs.iter().map(|s| s.s).collect();
+                let alphas: Vec<usize> = specs
+                    .iter()
+                    .zip(&cfg.tiles)
+                    .zip(&strides)
+                    .map(|((sp, &h), &p)| (sp.ifm_padded() - h).div_ceil(p) + 1)
+                    .collect();
+                let starts = Self::compute_starts(specs);
+                Some(PyramidPlan {
+                    specs: specs.to_vec(),
+                    r_out,
+                    tiles: cfg.tiles,
+                    strides,
+                    alphas,
+                    starts,
+                    policy,
+                })
+            }
+        }
+    }
+
+    fn assemble(
+        specs: &[FusedConvSpec],
+        cfg: TileConfig,
+        u: UniformStride,
+        policy: StridePolicy,
+    ) -> PyramidPlan {
+        let starts = Self::compute_starts(specs);
+        PyramidPlan {
+            specs: specs.to_vec(),
+            r_out: cfg.r_out,
+            tiles: cfg.tiles,
+            strides: u.strides,
+            alphas: vec![u.alpha; specs.len()],
+            starts,
+            policy,
+        }
+    }
+
+    /// Start offsets: level Q starts at 0; each lower level must start
+    /// early enough to produce the deeper level's padded halo:
+    /// `start_j = (start_{j+1} − pad_{j+1}) · chain_j`.
+    fn compute_starts(specs: &[FusedConvSpec]) -> Vec<i64> {
+        let q = specs.len();
+        let mut starts = vec![0i64; q];
+        for j in (0..q - 1).rev() {
+            starts[j] =
+                (starts[j + 1] - specs[j + 1].pad as i64) * specs[j].chain_factor() as i64;
+        }
+        starts
+    }
+
+    /// Fusion depth Q.
+    pub fn depth(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Movement count per dimension at the final level (the pyramid's α).
+    pub fn alpha(&self) -> usize {
+        *self.alphas.last().unwrap()
+    }
+
+    /// Total pyramid execution rounds (α²) for uniform plans.
+    pub fn rounds(&self) -> usize {
+        self.alpha() * self.alpha()
+    }
+
+    /// Tile rectangle at `level` for movement step `(iy, ix)`.
+    pub fn tile_rect(&self, level: usize, iy: usize, ix: usize) -> TileRect {
+        let p = self.strides[level] as i64;
+        TileRect {
+            y0: self.starts[level] + iy as i64 * p,
+            x0: self.starts[level] + ix as i64 * p,
+            side: self.tiles[level],
+        }
+    }
+
+    /// The final-level output rectangle (in the fused stack's output
+    /// feature map) produced by movement step `(iy, ix)`.
+    pub fn out_rect(&self, iy: usize, ix: usize) -> TileRect {
+        let q = self.depth() - 1;
+        let chain = self.specs[q].chain_factor() as i64;
+        let p_out = self.strides[q] as i64 / chain;
+        debug_assert_eq!(self.strides[q] as i64 % chain, 0);
+        TileRect {
+            y0: iy as i64 * p_out,
+            x0: ix as i64 * p_out,
+            side: self.r_out,
+        }
+    }
+
+    /// Verify that the plan covers every output pixel of the fused stack
+    /// (the correctness property Alg. 4's conditions exist to guarantee).
+    pub fn covers_output(&self) -> bool {
+        let out_dim = self.specs.last().unwrap().level_out();
+        let a = self.alpha();
+        let mut covered = vec![false; out_dim * out_dim];
+        for iy in 0..a {
+            for ix in 0..a {
+                let r = self.out_rect(iy, ix);
+                for y in r.y0.max(0)..(r.y0 + r.side as i64).min(out_dim as i64) {
+                    for x in r.x0.max(0)..(r.x0 + r.side as i64).min(out_dim as i64) {
+                        covered[y as usize * out_dim + x as usize] = true;
+                    }
+                }
+            }
+        }
+        covered.iter().all(|&c| c)
+    }
+
+    /// Per-level overlap between adjoining tiles, in pixels per edge:
+    /// `H − S^T` (the reuse-buffer sizing quantity, §3.4).
+    pub fn overlap(&self, level: usize) -> usize {
+        self.tiles[level].saturating_sub(self.strides[level])
+    }
+
+    /// Total operations of the fused stack (paper Eq. (2) convention).
+    pub fn total_operations(&self) -> u64 {
+        self.specs.iter().map(|s| s.num_operations()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::spec::PoolSpec;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn lenet() -> Vec<FusedConvSpec> {
+        vec![
+            FusedConvSpec {
+                name: "CL1".into(),
+                k: 5,
+                s: 1,
+                pad: 0,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 1,
+                m_out: 6,
+                ifm: 32,
+            },
+            FusedConvSpec {
+                name: "CL2".into(),
+                k: 5,
+                s: 1,
+                pad: 0,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 6,
+                m_out: 16,
+                ifm: 14,
+            },
+        ]
+    }
+
+    #[test]
+    fn lenet_uniform_plan() {
+        let p = PyramidPlan::build(&lenet(), 1, StridePolicy::Uniform).unwrap();
+        assert_eq!(p.tiles, vec![16, 6]);
+        assert_eq!(p.strides, vec![4, 2]);
+        assert_eq!(p.alphas, vec![5, 5]);
+        assert_eq!(p.rounds(), 25);
+        assert!(p.covers_output());
+        // No padding anywhere: starts are zero.
+        assert_eq!(p.starts, vec![0, 0]);
+    }
+
+    #[test]
+    fn lenet_conv_stride_plan_is_asymmetric() {
+        let p = PyramidPlan::build(&lenet(), 1, StridePolicy::ConvStride).unwrap();
+        // α per level: (32-16)/1+1 = 17, (14-6)/1+1 = 9 — the mismatch the
+        // paper's uniform stride eliminates.
+        assert_eq!(p.alphas, vec![17, 9]);
+    }
+
+    #[test]
+    fn out_rect_tiles_the_output() {
+        let p = PyramidPlan::build(&lenet(), 1, StridePolicy::Uniform).unwrap();
+        // Final level output stride = S^T_Q / chain = 2/2 = 1; 5 movements
+        // of a 1-wide region cover the 5-wide output.
+        let last = p.out_rect(4, 4);
+        assert_eq!((last.y0, last.x0), (4, 4));
+        assert_eq!(p.specs.last().unwrap().level_out(), 5);
+    }
+
+    #[test]
+    fn padded_starts_are_negative() {
+        let specs = vec![
+            FusedConvSpec {
+                name: "C1".into(),
+                k: 3,
+                s: 1,
+                pad: 1,
+                pool: None,
+                n_in: 3,
+                m_out: 16,
+                ifm: 32,
+            },
+            FusedConvSpec {
+                name: "C2".into(),
+                k: 3,
+                s: 1,
+                pad: 1,
+                pool: Some(PoolSpec { k: 2, s: 2 }),
+                n_in: 16,
+                m_out: 16,
+                ifm: 32,
+            },
+        ];
+        let p = PyramidPlan::build(&specs, 2, StridePolicy::Uniform).unwrap();
+        // Level 0 must start pad_1 = 1 pixel early (× chain factor 1).
+        assert_eq!(p.starts, vec![-1, 0]);
+        assert!(p.covers_output());
+    }
+
+    /// Property: for random feasible fused stacks, the uniform plan covers
+    /// every output pixel and respects the coverage stride bound.
+    #[test]
+    fn random_stacks_cover_output() {
+        prop_check("uniform plans cover the output", 120, |g| {
+            let q = g.usize(1, 3);
+            let mut specs = Vec::new();
+            let mut ifm = g.usize(12, 40);
+            for j in 0..q {
+                let k = *g.pick(&[1usize, 3, 5]);
+                let s = if g.bool() { 1 } else { 2 };
+                let pad = if g.bool() { 0 } else { k / 2 };
+                let pool = if g.bool() {
+                    Some(PoolSpec { k: 2, s: 2 })
+                } else {
+                    None
+                };
+                if ifm + 2 * pad < k + 2 {
+                    return Ok(()); // degenerate, skip
+                }
+                let spec = FusedConvSpec {
+                    name: format!("L{j}"),
+                    k,
+                    s,
+                    pad,
+                    pool,
+                    n_in: 1,
+                    m_out: 1,
+                    ifm,
+                };
+                let out = spec.level_out();
+                if out < 2 {
+                    return Ok(());
+                }
+                ifm = out;
+                specs.push(spec);
+            }
+            let r_out = g.usize(1, 3.min(specs.last().unwrap().level_out()));
+            let Some(p) = PyramidPlan::build(&specs, r_out, StridePolicy::Uniform) else {
+                return Ok(()); // infeasible configs are allowed to fail
+            };
+            prop_assert!(p.covers_output(), "plan fails to cover: {p:?}");
+            for j in 0..p.depth() {
+                prop_assert!(
+                    p.strides[j] <= p.tiles[j] - p.specs[j].k + p.specs[j].s,
+                    "coverage stride bound violated at level {j}: {p:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

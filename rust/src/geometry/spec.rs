@@ -1,0 +1,190 @@
+//! Layer specifications consumed by the fusion-geometry engine.
+//!
+//! A *fused layer* is one pyramid level: a convolution (+ReLU) optionally
+//! followed by a sub-sampling (pooling) stage — exactly the granularity at
+//! which the paper applies Eq. (1) ("Eq. (1) applies to both convolution
+//! and sub-sampling layers", §3.3.1).
+
+/// Pooling stage following a convolution within a pyramid level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolSpec {
+    /// Pooling window (square).
+    pub k: usize,
+    /// Pooling stride.
+    pub s: usize,
+}
+
+/// One pyramid level: convolution (+ReLU) with optional pooling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FusedConvSpec {
+    /// Display name, e.g. "CONV1".
+    pub name: String,
+    /// Convolution kernel size (square).
+    pub k: usize,
+    /// Convolution stride.
+    pub s: usize,
+    /// Symmetric zero padding applied to this layer's input.
+    pub pad: usize,
+    /// Optional pooling stage after the ReLU.
+    pub pool: Option<PoolSpec>,
+    /// Input channels (N in the paper).
+    pub n_in: usize,
+    /// Output feature maps (M in the paper).
+    pub m_out: usize,
+    /// Raw (unpadded) input spatial dimension of this layer (square IFM).
+    pub ifm: usize,
+}
+
+impl FusedConvSpec {
+    /// Padded input extent the tiles move over.
+    pub fn ifm_padded(&self) -> usize {
+        self.ifm + 2 * self.pad
+    }
+
+    /// Convolution output spatial dimension.
+    pub fn conv_out(&self) -> usize {
+        assert!(
+            self.ifm_padded() >= self.k,
+            "{}: IFM {} (+pad) smaller than kernel {}",
+            self.name,
+            self.ifm_padded(),
+            self.k
+        );
+        (self.ifm_padded() - self.k) / self.s + 1
+    }
+
+    /// Output spatial dimension after the optional pooling stage.
+    pub fn level_out(&self) -> usize {
+        match self.pool {
+            Some(p) => {
+                let c = self.conv_out();
+                assert!(c >= p.k, "{}: conv out {} < pool window {}", self.name, c, p.k);
+                (c - p.k) / p.s + 1
+            }
+            None => self.conv_out(),
+        }
+    }
+
+    /// The "movement chain factor": moving this level's *output* by one
+    /// pixel requires moving its *input* by `s · pool_s` pixels. This is
+    /// what couples the tile strides of adjacent pyramid levels.
+    pub fn chain_factor(&self) -> usize {
+        self.s * self.pool.map_or(1, |p| p.s)
+    }
+
+    /// Input tile size needed to produce a `d_out × d_out` output region
+    /// of this level — Eq. (1) applied through the pooling stage and then
+    /// the convolution: `D_l = (D_o − 1)·S_l + K_l`.
+    pub fn tile_for_output(&self, d_out: usize) -> usize {
+        assert!(d_out > 0);
+        let conv_region = match self.pool {
+            Some(p) => (d_out - 1) * p.s + p.k,
+            None => d_out,
+        };
+        (conv_region - 1) * self.s + self.k
+    }
+
+    /// Output region produced by an input tile of size `h` (inverse of
+    /// [`Self::tile_for_output`]; requires `h` large enough).
+    pub fn output_for_tile(&self, h: usize) -> usize {
+        assert!(h >= self.k, "{}: tile {} < kernel {}", self.name, h, self.k);
+        let conv = (h - self.k) / self.s + 1;
+        match self.pool {
+            Some(p) => {
+                assert!(conv >= p.k);
+                (conv - p.k) / p.s + 1
+            }
+            None => conv,
+        }
+    }
+
+    /// MAC-based operation count of this convolution layer
+    /// (paper Eq. (2) convention: 2·M·N·R·C·K²).
+    pub fn num_operations(&self) -> u64 {
+        let r = self.conv_out() as u64;
+        2 * self.m_out as u64 * self.n_in as u64 * r * r * (self.k * self.k) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lenet_cl1() -> FusedConvSpec {
+        FusedConvSpec {
+            name: "CL1".into(),
+            k: 5,
+            s: 1,
+            pad: 0,
+            pool: Some(PoolSpec { k: 2, s: 2 }),
+            n_in: 1,
+            m_out: 6,
+            ifm: 32,
+        }
+    }
+
+    #[test]
+    fn lenet_dims() {
+        let l = lenet_cl1();
+        assert_eq!(l.conv_out(), 28);
+        assert_eq!(l.level_out(), 14);
+        assert_eq!(l.chain_factor(), 2);
+    }
+
+    /// The paper's §3.3.1 worked example: a 1×1 output pixel of MPL2 needs
+    /// a 6×6 CL2 tile and a 16×16 CL1 tile.
+    #[test]
+    fn paper_worked_example_eq1() {
+        let cl1 = lenet_cl1();
+        let cl2 = FusedConvSpec {
+            name: "CL2".into(),
+            k: 5,
+            s: 1,
+            pad: 0,
+            pool: Some(PoolSpec { k: 2, s: 2 }),
+            n_in: 6,
+            m_out: 16,
+            ifm: 14,
+        };
+        // 1 output pixel after MPL2 -> 2x2 conv region -> 6x6 CL2 input.
+        assert_eq!(cl2.tile_for_output(1), 6);
+        // CL2 input 6x6 is MPL1 output -> 12x12 conv region -> 16x16 CL1 in.
+        assert_eq!(cl1.tile_for_output(6), 16);
+        // Inverses.
+        assert_eq!(cl2.output_for_tile(6), 1);
+        assert_eq!(cl1.output_for_tile(16), 6);
+    }
+
+    #[test]
+    fn op_counts_match_paper_table1() {
+        // LeNet CONV1: 235,200 ops (paper Table 1).
+        assert_eq!(lenet_cl1().num_operations(), 235_200);
+        // VGG CONV1_1: 173,408,256 ops.
+        let vgg1 = FusedConvSpec {
+            name: "CONV1_1".into(),
+            k: 3,
+            s: 1,
+            pad: 1,
+            pool: None,
+            n_in: 3,
+            m_out: 64,
+            ifm: 224,
+        };
+        assert_eq!(vgg1.num_operations(), 173_408_256);
+    }
+
+    #[test]
+    fn padded_conv_preserves_dims() {
+        let v = FusedConvSpec {
+            name: "same".into(),
+            k: 3,
+            s: 1,
+            pad: 1,
+            pool: None,
+            n_in: 8,
+            m_out: 8,
+            ifm: 56,
+        };
+        assert_eq!(v.conv_out(), 56);
+    }
+}

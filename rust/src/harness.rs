@@ -1,0 +1,161 @@
+//! Benchmark harness (offline replacement for criterion).
+//!
+//! Each file in `rust/benches/` is a `harness = false` binary that uses
+//! [`Bench`] to time hot paths with warmup + median-of-samples reporting,
+//! and then prints the reproduced paper table/figure. Run via `cargo bench`.
+//!
+//! Output format per measurement:
+//! `bench <name> ... median 12.34 µs/iter (n=50, min 11.9, max 14.2)`
+
+use std::time::{Duration, Instant};
+
+/// Timing result for one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner. Honors `USEFUSE_BENCH_FAST=1` to cut sample counts
+/// (useful in CI) and `USEFUSE_BENCH_FILTER=substr` to select benchmarks.
+pub struct Bench {
+    group: String,
+    samples: usize,
+    max_time: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(group: impl Into<String>) -> Self {
+        let fast = std::env::var("USEFUSE_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            group: group.into(),
+            samples: if fast { 10 } else { 30 },
+            max_time: if fast {
+                Duration::from_millis(500)
+            } else {
+                Duration::from_secs(3)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    /// Override sample count.
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    fn selected(&self, name: &str) -> bool {
+        match std::env::var("USEFUSE_BENCH_FILTER") {
+            Ok(f) if !f.is_empty() => name.contains(&f) || self.group.contains(&f),
+            _ => true,
+        }
+    }
+
+    /// Time `f`, which should perform one logical iteration and return a
+    /// value (returned value is black-boxed to prevent dead-code elision).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Option<&Measurement> {
+        if !self.selected(name) {
+            return None;
+        }
+        // Warmup + calibration: find iters such that one sample >= ~1ms.
+        let t0 = Instant::now();
+        black_box(f());
+        let one = t0.elapsed().max(Duration::from_nanos(20));
+        let iters = (Duration::from_millis(1).as_nanos() / one.as_nanos().max(1)).max(1) as u64;
+
+        let mut durs = Vec::with_capacity(self.samples);
+        let start = Instant::now();
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            durs.push(t.elapsed() / iters as u32);
+            if start.elapsed() > self.max_time {
+                break;
+            }
+        }
+        durs.sort();
+        let m = Measurement {
+            name: format!("{}/{}", self.group, name),
+            median: durs[durs.len() / 2],
+            min: durs[0],
+            max: *durs.last().unwrap(),
+            samples: durs.len(),
+            iters_per_sample: iters,
+        };
+        println!(
+            "bench {:<56} median {:>10}/iter (n={}, min {}, max {})",
+            m.name,
+            fmt_dur(m.median),
+            m.samples,
+            fmt_dur(m.min),
+            fmt_dur(m.max)
+        );
+        self.results.push(m);
+        self.results.last()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("USEFUSE_BENCH_FAST", "1");
+        let mut b = Bench::new("test").samples(5);
+        // black_box the bound so release builds can't const-fold the loop.
+        let bound = black_box(1000u64);
+        let m = b
+            .bench("sum", || (0..black_box(bound)).sum::<u64>())
+            .expect("selected")
+            .clone();
+        assert!(m.samples > 0 && m.iters_per_sample > 0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn filter_skips() {
+        std::env::set_var("USEFUSE_BENCH_FILTER", "zzz-no-match");
+        let mut b = Bench::new("test2");
+        assert!(b.bench("skipped", || 1).is_none());
+        std::env::remove_var("USEFUSE_BENCH_FILTER");
+    }
+}

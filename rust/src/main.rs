@@ -1,0 +1,304 @@
+//! `usefuse` — the leader binary: geometry planning, paper-report
+//! regeneration, fusion-correctness verification and END analysis.
+//!
+//! ```text
+//! usefuse plan   --net lenet5 --q 2 --r-out 1
+//! usefuse report --what table1        (table1..5, fig10..14, all)
+//! usefuse verify --group lenet        (tile assembly vs golden, PJRT)
+//! usefuse end    --group alexnet --samples 200
+//! usefuse info                        (artifact manifest summary)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use usefuse::coordinator::{layer_end_stats, EndConfig, FusionExecutor};
+use usefuse::geometry::{PyramidPlan, StridePolicy};
+use usefuse::nets;
+use usefuse::report;
+use usefuse::runtime::{Manifest, Runtime, Tensor};
+use usefuse::sim::{CycleModel, DesignPoint, Pattern, TrafficModel};
+use usefuse::util::cli::{usage, Args, OptSpec};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "plan" => cmd_plan(rest),
+        "report" => cmd_report(rest),
+        "verify" => cmd_verify(rest),
+        "end" => cmd_end(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `usefuse help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "usefuse — USEFUSE fused-layer CNN accelerator reproduction\n\n\
+         commands:\n\
+         \x20 plan    plan a fusion pyramid (Algorithms 3 + 4)\n\
+         \x20 report  regenerate a paper table/figure (table1..5, fig10..14, all)\n\
+         \x20 verify  run tile-by-tile fusion via PJRT and check vs golden\n\
+         \x20 end     END statistics for a fused group's first conv layer\n\
+         \x20 info    summarize the artifact bundle\n"
+    );
+}
+
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "net", help: "lenet5/alexnet/vgg16/resnet18", takes_value: true, default: Some("lenet5") },
+        OptSpec { name: "q", help: "fusion depth (default: paper grouping)", takes_value: true, default: None },
+        OptSpec { name: "r-out", help: "output region R_Q", takes_value: true, default: Some("1") },
+        OptSpec { name: "naive", help: "use conv-stride (baseline) movement", takes_value: false, default: None },
+    ];
+    let args = Args::parse(argv, &specs)
+        .map_err(|e| anyhow!("{e}\n{}", usage("plan", "plan a fusion pyramid", &specs)))?;
+    let net = nets::by_name(args.get("net").unwrap()).ok_or_else(|| anyhow!("unknown network"))?;
+    let stack = match args.get_usize("q").map_err(|e| anyhow!(e))? {
+        Some(q) => net.convs[..q.min(net.convs.len())].to_vec(),
+        None => net.paper_fusion()[0].clone(),
+    };
+    let r_out = args.get_usize("r-out").map_err(|e| anyhow!(e))?.unwrap();
+    let policy = if args.flag("naive") {
+        StridePolicy::ConvStride
+    } else {
+        StridePolicy::Uniform
+    };
+    let plan = PyramidPlan::build(&stack, r_out, policy)
+        .ok_or_else(|| anyhow!("no feasible plan for this configuration"))?;
+    println!(
+        "network {}  Q={}  R_Q={}  policy {:?}",
+        net.name,
+        plan.depth(),
+        plan.r_out,
+        plan.policy
+    );
+    for (j, s) in plan.specs.iter().enumerate() {
+        println!(
+            "  level {j} {:<8} K{} S{} pad{} pool{:?}: tile {:>3}  stride {:>3}  α {:>3}  start {}",
+            s.name,
+            s.k,
+            s.s,
+            s.pad,
+            s.pool.map(|p| (p.k, p.s)),
+            plan.tiles[j],
+            plan.strides[j],
+            plan.alphas[j],
+            plan.starts[j]
+        );
+    }
+    let m = CycleModel::default();
+    let tm = TrafficModel::default();
+    println!("covers output: {}", plan.covers_output());
+    for d in [
+        DesignPoint::proposed(Pattern::Spatial),
+        DesignPoint::proposed(Pattern::Temporal),
+    ] {
+        if plan.policy == d.stride {
+            println!(
+                "  {:?}: {} cycles = {:.2} µs, {:.2} GOPS, OI {:.1} ops/B",
+                d.pattern,
+                m.total_cycles(&plan, d),
+                m.duration_us(&plan, d),
+                m.performance(&plan, d) / 1e9,
+                tm.operational_intensity(&plan)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "what", help: "table1..table5, fig10..fig14, all", takes_value: true, default: Some("all") },
+        OptSpec { name: "samples", help: "END samples per filter (figs 12-14)", takes_value: true, default: Some("150") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let what = args.get("what").unwrap().to_string();
+    let samples = args.get_usize("samples").map_err(|e| anyhow!(e))?.unwrap();
+    let m = CycleModel::default();
+    let all = what == "all";
+    let want = |k: &str| all || what == k;
+
+    if want("table1") {
+        println!("{}", report::tables::table1(&m).1.render());
+    }
+    if want("table2") {
+        println!("{}", report::tables::table2(&m).1.render());
+    }
+    if want("table3") {
+        println!("{}", report::tables::table_resources(Pattern::Spatial, &m).1.render());
+    }
+    if want("table4") {
+        println!("{}", report::tables::table_resources(Pattern::Temporal, &m).1.render());
+    }
+    if want("table5") {
+        println!("{}", report::tables::table5(&m).1.render());
+    }
+    if want("fig10") {
+        println!("{}", report::figures::fig10(&m).1.render());
+    }
+    if want("fig11") {
+        println!("{}", report::figures::fig11(&m).1.render());
+    }
+    if want("fig12") || want("fig13") || want("fig14") {
+        let rt = report::figures::load_runtime_for(&[
+            "resnet_stem",
+            "resnet_s1",
+            "resnet_s2a",
+            "resnet_s2b",
+            "resnet_s3a",
+            "resnet_s3b",
+            "resnet_s4a",
+            "resnet_s4b",
+        ])?;
+        if want("fig12") {
+            println!("{}", report::figures::fig12(&rt, samples)?.1.render());
+        }
+        if want("fig13") {
+            println!("{}", report::figures::fig13(&rt, samples)?.1.render());
+        }
+        if want("fig14") {
+            println!("{}", report::figures::fig14(&rt, samples)?.1.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "group", help: "fused group (lenet/alexnet/vgg)", takes_value: true, default: Some("lenet") },
+        OptSpec { name: "images", help: "how many inputs to verify", takes_value: true, default: Some("4") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let group = args.get("group").unwrap().to_string();
+    let n = args.get_usize("images").map_err(|e| anyhow!(e))?.unwrap();
+    let manifest = Manifest::load("artifacts")?;
+    let tile_p = format!("{group}_tile");
+    let full_p = format!("{group}_full");
+    let rt = Runtime::load(manifest, Some(&[tile_p.as_str(), full_p.as_str()]))?;
+    let exec = FusionExecutor::new(&rt, &group)?;
+    let data_key = if group == "lenet" {
+        "lenet_test_x".to_string()
+    } else {
+        format!("{group}_input")
+    };
+    let images = rt.load_dataset(&data_key)?;
+    println!(
+        "verifying {group}: tiles {:?} strides {:?} α {} over {} input(s)",
+        exec.plan.tiles,
+        exec.plan.strides,
+        exec.plan.alpha(),
+        n.min(images.len())
+    );
+    let mut worst = 0f32;
+    for img in images.iter().take(n) {
+        let rel = exec.verify(img)?;
+        worst = worst.max(rel);
+        println!("  max rel err: {rel:.3e}");
+    }
+    if worst < 1e-4 {
+        println!("fusion correctness OK (worst {worst:.3e})");
+        Ok(())
+    } else {
+        bail!("fusion correctness FAILED (worst {worst:.3e})")
+    }
+}
+
+fn cmd_end(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "group", help: "fused group (lenet/alexnet/vgg)", takes_value: true, default: Some("alexnet") },
+        OptSpec { name: "samples", help: "pixels per filter", takes_value: true, default: Some("200") },
+    ];
+    let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let group = args.get("group").unwrap().to_string();
+    let samples = args.get_usize("samples").map_err(|e| anyhow!(e))?.unwrap();
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::load(manifest, Some(&[]))?;
+    let geom = rt
+        .manifest
+        .geometry
+        .get(&group)
+        .ok_or_else(|| anyhow!("no geometry for {group}"))?
+        .clone();
+    let data_key = if group == "lenet" {
+        "lenet_test_x".to_string()
+    } else {
+        format!("{group}_input")
+    };
+    let images = rt.load_dataset(&data_key)?;
+    let wblob = rt.manifest.weights[&format!("{group}.conv1_w")].clone();
+    let weights = Tensor::new(wblob.shape.clone(), rt.manifest.read_f32(&wblob)?)?;
+    let bias = rt
+        .manifest
+        .read_f32(&rt.manifest.weights[&format!("{group}.conv1_b")].clone())?;
+    let stats = layer_end_stats(
+        &images[0],
+        &weights,
+        &bias,
+        &geom.levels[0],
+        &EndConfig {
+            max_pixels_per_filter: samples,
+            ..Default::default()
+        },
+    )?;
+    println!(
+        "{group} CONV1 END: {:.1}% negative, {:.1}% undetermined, digit-window exec fraction {:.3}",
+        100.0 * stats.activity.negative_fraction,
+        100.0 * stats.activity.undetermined_fraction,
+        stats.activity.mean_executed_fraction
+    );
+    Ok(())
+}
+
+fn cmd_info(_argv: &[String]) -> Result<()> {
+    let m = Manifest::load("artifacts")?;
+    println!(
+        "artifact bundle: {} (precision n={})",
+        m.dir.display(),
+        m.precision
+    );
+    println!("programs ({}):", m.programs.len());
+    for (name, p) in &m.programs {
+        println!(
+            "  {name:<14} {} inputs ({} runtime), {} outputs",
+            p.inputs.len(),
+            p.n_runtime_inputs,
+            p.outputs.len()
+        );
+    }
+    println!(
+        "weights: {} blobs, datasets: {}",
+        m.weights.len(),
+        m.data.len()
+    );
+    for (g, geom) in &m.geometry {
+        println!(
+            "geometry {g}: Q={} tiles {:?} strides {:?} α {}",
+            geom.levels.len(),
+            geom.tiles,
+            geom.strides,
+            geom.alpha
+        );
+    }
+    Ok(())
+}

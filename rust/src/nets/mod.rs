@@ -1,0 +1,5 @@
+//! Network zoo: layer configurations for the paper's evaluation CNNs.
+
+pub mod zoo;
+
+pub use zoo::{alexnet, by_name, lenet5, resnet18, vgg16, Network};

@@ -1,0 +1,319 @@
+//! Paper **Figures 10–14** regenerated from the models and, where the
+//! figure depends on real activations (12–14), from the PJRT runtime.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{layer_end_stats, EndConfig, LayerEndStats};
+use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
+use crate::nets::by_name;
+use crate::runtime::{Runtime, Tensor};
+use crate::sim::{
+    roofline, CycleModel, DesignPoint, EnergyModel, Pattern, RooflinePoint, TrafficModel,
+};
+use crate::util::table::Table;
+
+/// **Figure 10**: performance vs operational intensity for AlexNet CONV1
+/// under the four DS-1 design points.
+pub fn fig10(m: &CycleModel) -> (Vec<RooflinePoint>, Table) {
+    let net = by_name("alexnet").unwrap();
+    let conv1 = std::slice::from_ref(&net.convs[0]);
+    let pts = roofline::evaluate(
+        conv1,
+        1,
+        &DesignPoint::table1_lineup(),
+        m,
+        &TrafficModel::default(),
+    );
+    let mut t = Table::new("Figure 10 — perf vs OI, AlexNet CONV1 (DS-1)")
+        .header(&["Design", "OI (ops/byte)", "Performance (GOPS)", "Duration (µs)"]);
+    for p in &pts {
+        t.row(vec![
+            p.design.to_string(),
+            format!("{:.1}", p.oi),
+            format!("{:.2}", p.perf / 1e9),
+            format!("{:.2}", p.duration_us),
+        ]);
+    }
+    (pts, t)
+}
+
+/// **Figure 11 (a–c)**: perf vs OI for the fused LeNet-5 / AlexNet / VGG
+/// stacks, spatial and temporal design points.
+pub fn fig11(m: &CycleModel) -> (Vec<(String, Vec<RooflinePoint>)>, Table) {
+    let mut panels = Vec::new();
+    let mut t = Table::new("Figure 11 — perf vs OI, fused designs").header(&[
+        "Network", "Design", "Pattern", "OI (ops/byte)", "Perf (GOPS)",
+    ]);
+    for name in ["lenet5", "alexnet", "vgg16"] {
+        let mut net = by_name(name).unwrap();
+        if name == "vgg16" {
+            net.convs.truncate(4);
+        }
+        let specs = net.paper_fusion()[0].clone();
+        let mut pts = Vec::new();
+        for pattern in [Pattern::Spatial, Pattern::Temporal] {
+            let designs = [
+                DesignPoint::baseline1(pattern),
+                DesignPoint::baseline2(pattern),
+                DesignPoint::baseline3(pattern),
+                DesignPoint::proposed(pattern),
+            ];
+            for p in roofline::evaluate(&specs, 1, &designs, m, &TrafficModel::default()) {
+                t.row(vec![
+                    name.to_string(),
+                    p.design.to_string(),
+                    format!("{pattern:?}"),
+                    format!("{:.1}", p.oi),
+                    format!("{:.2}", p.perf / 1e9),
+                ]);
+                pts.push(p);
+            }
+        }
+        panels.push((name.to_string(), pts));
+    }
+    (panels, t)
+}
+
+/// Reconstruct the post-activation input of level `idx` from the golden
+/// outputs of a fused group (level 0's input is the image itself).
+pub fn level_input(
+    group_levels: &[FusedConvSpec],
+    image: &Tensor,
+    golden: &[Tensor],
+    idx: usize,
+) -> Result<Tensor> {
+    if idx == 0 {
+        return Ok(image.clone());
+    }
+    let prev = &group_levels[idx - 1];
+    let pre = &golden[idx - 1]; // pre-activation of the previous level
+    let act = pre.relu();
+    match prev.pool {
+        Some(p) => act.maxpool(p.k, p.s),
+        None => Ok(act),
+    }
+}
+
+/// **Figure 12**: % of detected negative / undetermined activations for
+/// 10 random filters of the first conv layer of AlexNet and VGG, driven
+/// by real (1/f-noise) images through the real weights.
+pub fn fig12(rt: &Runtime, samples_per_filter: usize) -> Result<(Vec<(String, LayerEndStats)>, Table)> {
+    let mut out = Vec::new();
+    let mut t = Table::new("Figure 12 — END detection rates, first conv layers").header(&[
+        "Network", "Filter", "Negative %", "Positive %", "Undetermined %", "Mean term digit",
+    ]);
+    for (group, data_key) in [("alexnet", "alexnet_input"), ("vgg", "vgg_input")] {
+        let geom = rt
+            .manifest
+            .geometry
+            .get(group)
+            .ok_or_else(|| anyhow!("no geometry for {group}"))?
+            .clone();
+        let spec = geom.levels[0].clone();
+        let images = rt.load_dataset(data_key)?;
+        let wkey = format!("{group}.conv1_w");
+        let bkey = format!("{group}.conv1_b");
+        let wblob = rt.manifest.weights[&wkey].clone();
+        let weights = Tensor::new(wblob.shape.clone(), rt.manifest.read_f32(&wblob)?)?;
+        let bias = rt.manifest.read_f32(&rt.manifest.weights[&bkey].clone())?;
+        // 10 "random" filters — deterministic pick.
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut filters: Vec<usize> = (0..spec.m_out).collect();
+        rng.shuffle(&mut filters);
+        filters.truncate(10);
+        filters.sort_unstable();
+        let cfg = EndConfig {
+            filters,
+            max_pixels_per_filter: samples_per_filter,
+            ..Default::default()
+        };
+        let stats = layer_end_stats(&images[0], &weights, &bias, &spec, &cfg)?;
+        for f in &stats.per_filter {
+            t.row(vec![
+                group.to_string(),
+                format!("{}", f.filter),
+                format!("{:.1}", f.negative_pct),
+                format!("{:.1}", f.positive_pct),
+                format!("{:.1}", f.undetermined_pct),
+                format!("{:.1}", f.mean_term_digit),
+            ]);
+        }
+        out.push((group.to_string(), stats));
+    }
+    Ok((out, t))
+}
+
+/// **Figure 13**: energy savings from END for the first conv layers of
+/// LeNet-5, AlexNet and VGG.
+pub fn fig13(rt: &Runtime, samples_per_filter: usize) -> Result<(Vec<(String, f64)>, Table)> {
+    let em = EnergyModel::default();
+    let mut out = Vec::new();
+    let mut t = Table::new("Figure 13 — END energy savings, first conv layers").header(&[
+        "Network", "Negative %", "Undetermined %", "Mean exec fraction", "Energy saving %",
+    ]);
+    for (group, data_key) in [
+        ("lenet", "lenet_test_x"),
+        ("alexnet", "alexnet_input"),
+        ("vgg", "vgg_input"),
+    ] {
+        let geom = rt
+            .manifest
+            .geometry
+            .get(group)
+            .ok_or_else(|| anyhow!("no geometry for {group}"))?
+            .clone();
+        let spec = geom.levels[0].clone();
+        let images = rt.load_dataset(data_key)?;
+        let wblob = rt.manifest.weights[&format!("{group}.conv1_w")].clone();
+        let weights = Tensor::new(wblob.shape.clone(), rt.manifest.read_f32(&wblob)?)?;
+        let bias = rt.manifest.read_f32(&rt.manifest.weights[&format!("{group}.conv1_b")].clone())?;
+        // 10 random output feature maps, like the paper's Fig. 13 run.
+        let mut rng = crate::util::rng::Rng::new(43);
+        let mut filters: Vec<usize> = (0..spec.m_out).collect();
+        rng.shuffle(&mut filters);
+        filters.truncate(10);
+        filters.sort_unstable();
+        let cfg = EndConfig {
+            filters,
+            max_pixels_per_filter: samples_per_filter,
+            ..Default::default()
+        };
+        let stats = layer_end_stats(&images[0], &weights, &bias, &spec, &cfg)?;
+        let saving = em.end_savings(&spec, crate::DEFAULT_PRECISION, &stats.activity);
+        t.row(vec![
+            group.to_string(),
+            format!("{:.1}", 100.0 * stats.activity.negative_fraction),
+            format!("{:.1}", 100.0 * stats.activity.undetermined_fraction),
+            format!("{:.3}", stats.activity.mean_executed_fraction),
+            format!("{:.1}", 100.0 * saving),
+        ]);
+        out.push((group.to_string(), saving));
+    }
+    Ok((out, t))
+}
+
+/// Per-pyramid result for Fig. 14.
+#[derive(Clone, Debug)]
+pub struct Fig14Row {
+    pub pyramid: String,
+    /// Effective cycles: (B3, online no-END, online + END).
+    pub b3: f64,
+    pub online: f64,
+    pub online_end: f64,
+}
+
+/// **Figure 14**: average effective computation cycles per ResNet-18
+/// fusion pyramid (two convs per residual block), Baseline-3 vs online,
+/// with and without END — END activity measured on real activations
+/// chained block-by-block through PJRT.
+pub fn fig14(rt: &Runtime, samples_per_filter: usize) -> Result<(Vec<Fig14Row>, Table)> {
+    let m = CycleModel::default();
+    let net = by_name("resnet18").unwrap();
+    let images = rt.load_dataset("resnet_input")?;
+    // Chain: stem -> s1 -> s1 -> s2a -> s2b -> s3a -> s3b -> s4a -> s4b.
+    let stem_out = rt.execute("resnet_stem", &[&images[0]], &[])?;
+    let mut x = stem_out.last().unwrap().clone();
+    let block_programs = ["s1", "s1", "s2a", "s2b", "s3a", "s3b", "s4a", "s4b"];
+    let mut rows = Vec::new();
+    for (bi, tag) in block_programs.iter().enumerate() {
+        let prog = format!("resnet_{tag}");
+        let outs = rt.execute(&prog, &[&x], &[])?;
+        let (pre_a, _pre_b, out) = (&outs[0], &outs[1], &outs[2]);
+        // Block's two conv specs from the zoo.
+        let (ci, _) = net.res_blocks[bi];
+        let specs = [net.convs[ci].clone(), net.convs[ci + 1].clone()];
+        // END activity on conv_a (input = x) and conv_b (input = relu(pre_a)).
+        let wa = {
+            let b = rt.manifest.weights[&format!("resnet_{tag}.wa")].clone();
+            Tensor::new(b.shape.clone(), rt.manifest.read_f32(&b)?)?
+        };
+        let ba = rt.manifest.read_f32(&rt.manifest.weights[&format!("resnet_{tag}.ba")].clone())?;
+        let wb = {
+            let b = rt.manifest.weights[&format!("resnet_{tag}.wb")].clone();
+            Tensor::new(b.shape.clone(), rt.manifest.read_f32(&b)?)?
+        };
+        let bb = rt.manifest.read_f32(&rt.manifest.weights[&format!("resnet_{tag}.bb")].clone())?;
+        let cfg = EndConfig {
+            max_pixels_per_filter: samples_per_filter,
+            filters: (0..8.min(specs[0].m_out)).collect(),
+            ..Default::default()
+        };
+        let st_a = layer_end_stats(&x, &wa, &ba, &specs[0], &cfg)?;
+        let act_a = pre_a.relu();
+        let st_b = layer_end_stats(&act_a, &wb, &bb, &specs[1], &cfg)?;
+        let exec_frac =
+            (st_a.activity.mean_executed_fraction + st_b.activity.mean_executed_fraction) / 2.0;
+
+        // Effective cycles per pyramid: Q=2 fusion of the block's convs.
+        let plan = PyramidPlan::build(&specs, 1, StridePolicy::Uniform)
+            .ok_or_else(|| anyhow!("block {bi}: no plan"))?;
+        let online = m.total_cycles(&plan, DesignPoint::proposed(Pattern::Spatial)) as f64;
+        let b3 = m.total_cycles(&plan, DesignPoint::baseline3(Pattern::Spatial)) as f64;
+        // END scales the digit-production portion of each pass; the
+        // pipeline-fill and pooling portions remain.
+        let online_end = online * exec_frac;
+        rows.push(Fig14Row {
+            pyramid: format!("block{} ({})", bi + 1, tag),
+            b3,
+            online,
+            online_end,
+        });
+        x = out.clone();
+    }
+    let mut t = Table::new("Figure 14 — ResNet-18 effective cycles per fusion pyramid").header(&[
+        "Pyramid", "Baseline-3", "Online (no END)", "Online + END", "END saving %",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.pyramid.clone(),
+            format!("{:.0}", r.b3),
+            format!("{:.0}", r.online),
+            format!("{:.0}", r.online_end),
+            format!("{:.1}", 100.0 * (1.0 - r.online_end / r.online)),
+        ]);
+    }
+    // End-to-end summary row.
+    let (sb3, son, send): (f64, f64, f64) = rows.iter().fold((0.0, 0.0, 0.0), |a, r| {
+        (a.0 + r.b3, a.1 + r.online, a.2 + r.online_end)
+    });
+    t.row(vec![
+        "TOTAL".into(),
+        format!("{sb3:.0}"),
+        format!("{son:.0}"),
+        format!("{send:.0}"),
+        format!("{:.1}", 100.0 * (1.0 - send / son)),
+    ]);
+    Ok((rows, t))
+}
+
+/// Convenience loader used by benches/CLI for figure 12–14 runtimes.
+pub fn load_runtime_for(programs: &[&str]) -> Result<Runtime> {
+    let manifest = crate::runtime::Manifest::load("artifacts")?;
+    Runtime::load(manifest, Some(programs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_proposed_wins_both_axes() {
+        let (pts, t) = fig10(&CycleModel::default());
+        assert_eq!(pts.len(), 4);
+        let prop = pts.iter().find(|p| p.design == "Proposed").unwrap();
+        for p in &pts {
+            assert!(prop.perf >= p.perf);
+            assert!(prop.oi >= p.oi - 1e-9);
+        }
+        assert!(t.render().contains("AlexNet"));
+    }
+
+    #[test]
+    fn fig11_has_three_panels_of_eight() {
+        let (panels, _) = fig11(&CycleModel::default());
+        assert_eq!(panels.len(), 3);
+        for (name, pts) in &panels {
+            assert_eq!(pts.len(), 8, "{name}: {pts:?}");
+        }
+    }
+}

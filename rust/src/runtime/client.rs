@@ -1,0 +1,206 @@
+//! PJRT runtime: load AOT-compiled HLO-text programs, bind their weight
+//! parameters once, and execute them from the coordinator's hot path.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (`HloModuleProto::from_text_file` reassigns instruction ids, so
+//! jax ≥ 0.5 modules load on xla_extension 0.5.1).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{DType, Manifest, ProgramMeta};
+use super::tensor::Tensor;
+
+/// A loaded, weight-bound executable.
+pub struct Program {
+    pub meta: ProgramMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight literals in parameter order (bound at load time; the
+    /// request path only supplies the runtime inputs).
+    weights: Vec<xla::Literal>,
+}
+
+/// The runtime: one PJRT CPU client + the program registry.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    programs: BTreeMap<String, Program>,
+}
+
+fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+impl Runtime {
+    /// Create the client and load + compile the named programs (or all
+    /// programs if `names` is `None`).
+    pub fn load(manifest: Manifest, names: Option<&[&str]>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut rt = Runtime {
+            manifest,
+            client,
+            programs: BTreeMap::new(),
+        };
+        let all: Vec<String> = match names {
+            Some(ns) => ns.iter().map(|s| s.to_string()).collect(),
+            None => rt.manifest.programs.keys().cloned().collect(),
+        };
+        for name in all {
+            rt.load_program(&name)?;
+        }
+        Ok(rt)
+    }
+
+    /// Load one program lazily.
+    pub fn load_program(&mut self, name: &str) -> Result<()> {
+        if self.programs.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .programs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown program '{name}'"))?
+            .clone();
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+
+        // Bind weights.
+        let mut weights = Vec::with_capacity(meta.weights.len());
+        for (i, key) in meta.weights.iter().enumerate() {
+            let blob = self
+                .manifest
+                .weights
+                .get(key)
+                .ok_or_else(|| anyhow!("{name}: missing weight blob '{key}'"))?
+                .clone();
+            let data = self.manifest.read_f32(&blob)?;
+            let want = &meta.inputs[meta.n_runtime_inputs + i];
+            if blob.shape != want.shape {
+                bail!(
+                    "{name}: weight '{key}' shape {:?} != program input {:?}",
+                    blob.shape,
+                    want.shape
+                );
+            }
+            weights.push(literal_f32(&blob.shape, &data)?);
+        }
+        self.programs.insert(name.to_string(), Program { meta, exe, weights });
+        Ok(())
+    }
+
+    pub fn program(&self, name: &str) -> Result<&Program> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("program '{name}' not loaded"))
+    }
+
+    /// Execute a program: `tensors` fills the leading f32 runtime inputs,
+    /// `scalars` the i32 scalar inputs, matched against the manifest in
+    /// order. Returns all outputs as host tensors.
+    pub fn execute(&self, name: &str, tensors: &[&Tensor], scalars: &[i32]) -> Result<Vec<Tensor>> {
+        let prog = self.program(name)?;
+        let meta = &prog.meta;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(meta.inputs.len());
+        let (mut ti, mut si) = (0usize, 0usize);
+        for input in meta.inputs.iter().take(meta.n_runtime_inputs) {
+            match input.dtype {
+                DType::F32 => {
+                    let t = tensors
+                        .get(ti)
+                        .ok_or_else(|| anyhow!("{name}: not enough tensor args"))?;
+                    if t.shape != input.shape {
+                        bail!("{name}: arg {ti} shape {:?} != {:?}", t.shape, input.shape);
+                    }
+                    args.push(literal_f32(&t.shape, &t.data)?);
+                    ti += 1;
+                }
+                DType::I32 => {
+                    let v = *scalars
+                        .get(si)
+                        .ok_or_else(|| anyhow!("{name}: not enough scalar args"))?;
+                    args.push(xla::Literal::scalar(v));
+                    si += 1;
+                }
+            }
+        }
+        if ti != tensors.len() || si != scalars.len() {
+            bail!("{name}: extra args (used {ti} tensors, {si} scalars)");
+        }
+        // Weight literals are cloned cheaply? No — Literal is not Clone;
+        // rebuild arg list by borrowing: execute takes Borrow<Literal>.
+        let mut all: Vec<&xla::Literal> = args.iter().collect();
+        all.extend(prog.weights.iter());
+
+        let result = prog
+            .exe
+            .execute::<&xla::Literal>(&all)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        // Programs are lowered with return_tuple=True.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untupling: {e}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (part, om) in parts.into_iter().zip(&meta.outputs) {
+            let data = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("{name}: output to_vec: {e}"))?;
+            outs.push(Tensor::new(om.shape.clone(), data).context("output shape")?);
+        }
+        Ok(outs)
+    }
+
+    /// Load a dataset blob as host tensors (first axis = batch).
+    pub fn load_dataset(&self, key: &str) -> Result<Vec<Tensor>> {
+        let blob = self
+            .manifest
+            .data
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown dataset '{key}'"))?
+            .clone();
+        let data = self.manifest.read_f32(&blob)?;
+        let item_shape: Vec<usize> = blob.shape[1..].to_vec();
+        let item_len: usize = item_shape.iter().product();
+        Ok(data
+            .chunks_exact(item_len)
+            .map(|c| Tensor {
+                shape: item_shape.clone(),
+                data: c.to_vec(),
+            })
+            .collect())
+    }
+
+    /// Load an i32 label blob.
+    pub fn load_labels(&self, key: &str) -> Result<Vec<i32>> {
+        let blob = self
+            .manifest
+            .data
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown dataset '{key}'"))?
+            .clone();
+        self.manifest.read_i32(&blob)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

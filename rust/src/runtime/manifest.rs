@@ -1,0 +1,321 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::geometry::{FusedConvSpec, PoolSpec};
+use crate::util::json::{parse, Json};
+
+/// Tensor dtype in the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one program input/output.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-compiled program.
+#[derive(Clone, Debug)]
+pub struct ProgramMeta {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    /// How many leading inputs are provided at call time (the rest are
+    /// weights bound at load time, in `weights` order).
+    pub n_runtime_inputs: usize,
+    /// Weight-blob keys, in parameter order.
+    pub weights: Vec<String>,
+}
+
+/// A weight or dataset blob on disk.
+#[derive(Clone, Debug)]
+pub struct BlobMeta {
+    pub file: PathBuf,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Fusion geometry recorded by aot.py (cross-checked against the Rust
+/// Algorithm 3/4 implementation at load time).
+#[derive(Clone, Debug)]
+pub struct GeometryMeta {
+    pub r_out: usize,
+    pub tiles: Vec<usize>,
+    pub strides: Vec<usize>,
+    pub alpha: usize,
+    pub starts: Vec<i64>,
+    pub levels: Vec<FusedConvSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub precision: u32,
+    pub programs: BTreeMap<String, ProgramMeta>,
+    pub weights: BTreeMap<String, BlobMeta>,
+    pub data: BTreeMap<String, BlobMeta>,
+    pub geometry: BTreeMap<String, GeometryMeta>,
+}
+
+fn tensor_meta(v: &Json) -> Result<TensorMeta> {
+    Ok(TensorMeta {
+        shape: v
+            .get("shape")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| anyhow!("bad shape"))?,
+        dtype: DType::from_str(v.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"))?,
+    })
+}
+
+fn blob_meta(dir: &Path, v: &Json, default_dtype: DType) -> Result<BlobMeta> {
+    Ok(BlobMeta {
+        file: dir.join(
+            v.get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("blob missing file"))?,
+        ),
+        shape: v
+            .get("shape")
+            .and_then(|s| s.as_usize_vec())
+            .ok_or_else(|| anyhow!("blob missing shape"))?,
+        dtype: match v.get("dtype").and_then(|d| d.as_str()) {
+            Some(s) => DType::from_str(s)?,
+            None => default_dtype,
+        },
+    })
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = parse(&text).context("parsing manifest.json")?;
+
+        let mut programs = BTreeMap::new();
+        for (name, v) in root
+            .get("programs")
+            .and_then(|p| p.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing programs"))?
+        {
+            let inputs = v
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = v
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            let weights = v
+                .get("weights")
+                .and_then(|w| w.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(String::from))
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
+            let n_runtime_inputs = v
+                .get("n_runtime_inputs")
+                .and_then(|n| n.as_usize())
+                .ok_or_else(|| anyhow!("{name}: missing n_runtime_inputs"))?;
+            if n_runtime_inputs + weights.len() != inputs.len() {
+                bail!(
+                    "{name}: {} runtime + {} weights != {} inputs",
+                    n_runtime_inputs,
+                    weights.len(),
+                    inputs.len()
+                );
+            }
+            programs.insert(
+                name.clone(),
+                ProgramMeta {
+                    file: dir.join(
+                        v.get("file")
+                            .and_then(|f| f.as_str())
+                            .ok_or_else(|| anyhow!("{name}: missing file"))?,
+                    ),
+                    inputs,
+                    outputs,
+                    n_runtime_inputs,
+                    weights,
+                },
+            );
+        }
+
+        let mut weights = BTreeMap::new();
+        if let Some(obj) = root.get("weights").and_then(|w| w.as_obj()) {
+            for (k, v) in obj {
+                weights.insert(k.clone(), blob_meta(&dir, v, DType::F32)?);
+            }
+        }
+        let mut data = BTreeMap::new();
+        if let Some(obj) = root.get("data").and_then(|w| w.as_obj()) {
+            for (k, v) in obj {
+                data.insert(k.clone(), blob_meta(&dir, v, DType::F32)?);
+            }
+        }
+
+        let mut geometry = BTreeMap::new();
+        if let Some(obj) = root.get("geometry").and_then(|g| g.as_obj()) {
+            for (k, v) in obj {
+                let levels = v
+                    .get("levels")
+                    .and_then(|l| l.as_arr())
+                    .ok_or_else(|| anyhow!("geometry {k}: missing levels"))?
+                    .iter()
+                    .map(|lv| {
+                        Ok(FusedConvSpec {
+                            name: lv
+                                .get("name")
+                                .and_then(|n| n.as_str())
+                                .unwrap_or("?")
+                                .to_string(),
+                            k: lv.get("k").and_then(|x| x.as_usize()).unwrap_or(0),
+                            s: lv.get("s").and_then(|x| x.as_usize()).unwrap_or(1),
+                            pad: lv.get("pad").and_then(|x| x.as_usize()).unwrap_or(0),
+                            pool: match lv.get("pool") {
+                                Some(Json::Arr(a)) if a.len() == 2 => Some(PoolSpec {
+                                    k: a[0].as_usize().ok_or_else(|| anyhow!("bad pool"))?,
+                                    s: a[1].as_usize().ok_or_else(|| anyhow!("bad pool"))?,
+                                }),
+                                _ => None,
+                            },
+                            n_in: lv.get("n_in").and_then(|x| x.as_usize()).unwrap_or(1),
+                            m_out: lv.get("m_out").and_then(|x| x.as_usize()).unwrap_or(1),
+                            ifm: lv.get("ifm").and_then(|x| x.as_usize()).unwrap_or(1),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                geometry.insert(
+                    k.clone(),
+                    GeometryMeta {
+                        r_out: v.get("r_out").and_then(|x| x.as_usize()).unwrap_or(1),
+                        tiles: v
+                            .get("tiles")
+                            .and_then(|t| t.as_usize_vec())
+                            .ok_or_else(|| anyhow!("geometry {k}: missing tiles"))?,
+                        strides: v
+                            .get("strides")
+                            .and_then(|t| t.as_usize_vec())
+                            .ok_or_else(|| anyhow!("geometry {k}: missing strides"))?,
+                        alpha: v.get("alpha").and_then(|x| x.as_usize()).unwrap_or(0),
+                        starts: v
+                            .get("starts")
+                            .and_then(|t| t.as_arr())
+                            .map(|a| a.iter().filter_map(|x| x.as_i64()).collect())
+                            .unwrap_or_default(),
+                        levels,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            precision: root
+                .get("precision")
+                .and_then(|p| p.as_usize())
+                .unwrap_or(8) as u32,
+            programs,
+            weights,
+            data,
+            geometry,
+        })
+    }
+
+    /// Read an f32 blob from disk.
+    pub fn read_f32(&self, blob: &BlobMeta) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&blob.file)
+            .with_context(|| format!("reading {}", blob.file.display()))?;
+        let n: usize = blob.shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!(
+                "{}: expected {} bytes for shape {:?}, got {}",
+                blob.file.display(),
+                n * 4,
+                blob.shape,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read an i32 blob from disk.
+    pub fn read_i32(&self, blob: &BlobMeta) -> Result<Vec<i32>> {
+        let bytes = std::fs::read(&blob.file)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.precision, 8);
+        let tile = &m.programs["lenet_tile"];
+        assert_eq!(tile.n_runtime_inputs, 5); // tile + 2 offsets × 2 levels
+        assert_eq!(tile.weights.len(), 4);
+        assert_eq!(tile.inputs[0].shape, vec![16, 16, 1]);
+        // Geometry agrees with the Rust Algorithm 3/4 on LeNet.
+        let g = &m.geometry["lenet"];
+        assert_eq!(g.tiles, vec![16, 6]);
+        assert_eq!(g.strides, vec![4, 2]);
+        assert_eq!(g.alpha, 5);
+        // Weight blob loads with the right element count.
+        let w = &m.weights["lenet.conv1_w"];
+        assert_eq!(m.read_f32(w).unwrap().len(), 5 * 5 * 1 * 6);
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let err = Manifest::load("/nonexistent-path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

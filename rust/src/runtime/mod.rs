@@ -1,0 +1,10 @@
+//! PJRT runtime: artifact manifest, host tensors, and the executable
+//! registry that runs the AOT-compiled JAX/Pallas programs.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Program, Runtime};
+pub use manifest::{BlobMeta, DType, GeometryMeta, Manifest, ProgramMeta, TensorMeta};
+pub use tensor::Tensor;

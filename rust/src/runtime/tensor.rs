@@ -1,0 +1,243 @@
+//! Host tensors: the coordinator's working representation of feature
+//! maps, with the slicing/assembly operations the fusion executor needs.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Strides (row-major, in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Element accessor for 3-D (H, W, C) tensors.
+    pub fn at3(&self, y: usize, x: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (w, ch) = (self.shape[1], self.shape[2]);
+        self.data[(y * w + x) * ch + c]
+    }
+
+    /// Extract a square spatial window from an (H, W, C) tensor into a
+    /// pre-allocated `side × side × C` buffer, zero-filling the parts of
+    /// the window that fall outside `[off, off + valid)` in each spatial
+    /// dimension (the fusion executor's padding/overhang fill).
+    ///
+    /// `y0`/`x0` are in the caller's (padded) coordinate system; the real
+    /// data occupies `[off, off + valid)` there.
+    pub fn extract_window(
+        &self,
+        y0: i64,
+        x0: i64,
+        side: usize,
+        off: i64,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        if self.shape.len() != 3 {
+            bail!("extract_window wants (H, W, C), got {:?}", self.shape);
+        }
+        let (h, w, c) = (self.shape[0] as i64, self.shape[1] as i64, self.shape[2]);
+        if out.shape != [side, side, c as usize] {
+            bail!("bad out shape {:?}", out.shape);
+        }
+        out.data.fill(0.0);
+        let ys = y0.max(off);
+        let xs = x0.max(off);
+        let ye = (y0 + side as i64).min(off + h);
+        let xe = (x0 + side as i64).min(off + w);
+        if ye <= ys || xe <= xs {
+            return Ok(()); // fully outside: zero tile
+        }
+        let row_elems = (xe - xs) as usize * c;
+        for y in ys..ye {
+            let src_base = (((y - off) * w + (xs - off)) as usize) * c;
+            let dst_base = (((y - y0) as usize) * side + (xs - x0) as usize) * c;
+            out.data[dst_base..dst_base + row_elems]
+                .copy_from_slice(&self.data[src_base..src_base + row_elems]);
+        }
+        Ok(())
+    }
+
+    /// Place a (side, side, C) region into `self` at spatial offset
+    /// `(y0, x0)`, clipping to bounds (tile assembly).
+    pub fn place_window(&mut self, src: &Tensor, y0: i64, x0: i64) -> Result<()> {
+        if self.shape.len() != 3 || src.shape.len() != 3 || self.shape[2] != src.shape[2] {
+            bail!("place_window shape mismatch {:?} <- {:?}", self.shape, src.shape);
+        }
+        let (h, w, c) = (self.shape[0] as i64, self.shape[1] as i64, self.shape[2]);
+        let (sh, sw) = (src.shape[0] as i64, src.shape[1] as i64);
+        let ys = y0.max(0);
+        let xs = x0.max(0);
+        let ye = (y0 + sh).min(h);
+        let xe = (x0 + sw).min(w);
+        if ye <= ys || xe <= xs {
+            return Ok(());
+        }
+        let row_elems = (xe - xs) as usize * c;
+        for y in ys..ye {
+            let dst_base = ((y * w + xs) as usize) * c;
+            let src_base = (((y - y0) * sw + (xs - x0)) as usize) * c;
+            self.data[dst_base..dst_base + row_elems]
+                .copy_from_slice(&src.data[src_base..src_base + row_elems]);
+        }
+        Ok(())
+    }
+
+    /// Elementwise ReLU.
+    pub fn relu(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|v| v.max(0.0)).collect(),
+        }
+    }
+
+    /// Valid max pooling of an (H, W, C) tensor.
+    pub fn maxpool(&self, k: usize, stride: usize) -> Result<Tensor> {
+        if self.shape.len() != 3 {
+            bail!("maxpool wants (H, W, C)");
+        }
+        let (h, w, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        let r = (h - k) / stride + 1;
+        let cc = (w - k) / stride + 1;
+        let mut out = Tensor::zeros(vec![r, cc, c]);
+        for y in 0..r {
+            for x in 0..cc {
+                for ch in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m.max(self.at3(y * stride + dy, x * stride + dx, ch));
+                        }
+                    }
+                    out.data[(y * cc + x) * c + ch] = m;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Max |value| (for quantization scaling).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Max |difference| against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn extract_interior_window() {
+        let t = seq(vec![4, 4, 1]);
+        let mut out = Tensor::zeros(vec![2, 2, 1]);
+        t.extract_window(1, 1, 2, 0, &mut out).unwrap();
+        assert_eq!(out.data, vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn extract_with_negative_offset_zero_fills() {
+        let t = seq(vec![3, 3, 1]);
+        let mut out = Tensor::zeros(vec![2, 2, 1]);
+        t.extract_window(-1, -1, 2, 0, &mut out).unwrap();
+        assert_eq!(out.data, vec![0.0, 0.0, 0.0, 0.0]);
+        t.extract_window(-1, 0, 2, 0, &mut out).unwrap();
+        assert_eq!(out.data, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn extract_respects_padding_offset() {
+        // Real data at padded coords [1, 4) (pad = 1).
+        let t = seq(vec![3, 3, 1]);
+        let mut out = Tensor::zeros(vec![3, 3, 1]);
+        t.extract_window(0, 0, 3, 1, &mut out).unwrap();
+        // Top-left of the padded map is a zero border.
+        assert_eq!(out.data[0..3], [0.0, 0.0, 0.0]);
+        assert_eq!(out.data[3], 0.0);
+        assert_eq!(out.data[4], 0.0); // padded(1,1) = raw(0,0) = 0.0
+        assert_eq!(out.data[8], 4.0); // padded(2,2) = raw(1,1)
+    }
+
+    #[test]
+    fn place_clips_out_of_range() {
+        let mut dst = Tensor::zeros(vec![3, 3, 1]);
+        let src = seq(vec![2, 2, 1]);
+        dst.place_window(&src, 2, 2).unwrap();
+        assert_eq!(dst.at3(2, 2, 0), 0.0); // src[0,0]
+        dst.place_window(&src, -1, -1).unwrap();
+        assert_eq!(dst.at3(0, 0, 0), 3.0); // src[1,1]
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let t = seq(vec![4, 4, 1]);
+        let p = t.maxpool(2, 2).unwrap();
+        assert_eq!(p.shape, vec![2, 2, 1]);
+        assert_eq!(p.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn roundtrip_extract_place() {
+        let t = seq(vec![5, 5, 2]);
+        let mut win = Tensor::zeros(vec![3, 3, 2]);
+        t.extract_window(1, 2, 3, 0, &mut win).unwrap();
+        let mut dst = Tensor::zeros(vec![5, 5, 2]);
+        dst.place_window(&win, 1, 2).unwrap();
+        for y in 1..4 {
+            for x in 2..5 {
+                for c in 0..2 {
+                    assert_eq!(dst.at3(y, x, c), t.at3(y, x, c));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! The accelerator **design points** of the paper's evaluation (§4.1):
+//! two arithmetic paradigms × two compute patterns × two stride policies.
+//!
+//! | Name        | Arithmetic    | Tile stride        |
+//! |-------------|---------------|--------------------|
+//! | Proposed    | online (MSDF) | uniform (Alg. 4)   |
+//! | Baseline-1  | conventional  | conv stride        |
+//! | Baseline-2  | online (MSDF) | conv stride        |
+//! | Baseline-3  | conventional  | uniform (Alg. 4)   |
+//!
+//! Each exists in a spatial (DS-1) and a temporal (DS-2) variant.
+
+use crate::geometry::StridePolicy;
+
+/// Arithmetic paradigm of the compute units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arith {
+    /// Left-to-right MSDF online arithmetic (the paper's SOP units).
+    Online,
+    /// Conventional LSB-first bit-serial (UNPU-style baseline).
+    Conventional,
+}
+
+/// Compute pattern of the window processing units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// DS-1: one multiplier per window element (K²·N per PPU).
+    Spatial,
+    /// DS-2: one multiplier per window, K² reuse over time.
+    Temporal,
+}
+
+/// A fully-specified design point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DesignPoint {
+    pub name: &'static str,
+    pub arith: Arith,
+    pub pattern: Pattern,
+    pub stride: StridePolicy,
+}
+
+impl DesignPoint {
+    pub const fn proposed(pattern: Pattern) -> DesignPoint {
+        DesignPoint {
+            name: "Proposed",
+            arith: Arith::Online,
+            pattern,
+            stride: StridePolicy::Uniform,
+        }
+    }
+    pub const fn baseline1(pattern: Pattern) -> DesignPoint {
+        DesignPoint {
+            name: "Baseline-1",
+            arith: Arith::Conventional,
+            pattern,
+            stride: StridePolicy::ConvStride,
+        }
+    }
+    pub const fn baseline2(pattern: Pattern) -> DesignPoint {
+        DesignPoint {
+            name: "Baseline-2",
+            arith: Arith::Online,
+            pattern,
+            stride: StridePolicy::ConvStride,
+        }
+    }
+    pub const fn baseline3(pattern: Pattern) -> DesignPoint {
+        DesignPoint {
+            name: "Baseline-3",
+            arith: Arith::Conventional,
+            pattern,
+            stride: StridePolicy::Uniform,
+        }
+    }
+    /// The four design points of the paper's Table 1 (spatial) order.
+    pub fn table1_lineup() -> [DesignPoint; 4] {
+        [
+            Self::baseline1(Pattern::Spatial),
+            Self::baseline2(Pattern::Spatial),
+            Self::baseline3(Pattern::Spatial),
+            Self::proposed(Pattern::Spatial),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lineup_matches_paper_axes() {
+        let l = DesignPoint::table1_lineup();
+        assert_eq!(l[0].arith, Arith::Conventional);
+        assert_eq!(l[0].stride, StridePolicy::ConvStride);
+        assert_eq!(l[1].arith, Arith::Online);
+        assert_eq!(l[2].stride, StridePolicy::Uniform);
+        assert_eq!(l[3].name, "Proposed");
+        assert_eq!(l[3].arith, Arith::Online);
+        assert_eq!(l[3].stride, StridePolicy::Uniform);
+    }
+}

@@ -1,0 +1,166 @@
+//! **Energy model** (paper Fig. 13): per-cycle unit energies composed
+//! over the array activity, with END savings driven by measured
+//! termination statistics.
+//!
+//! Absolute energies are in arbitrary units (the paper reports relative
+//! savings, not Joules); the per-unit constants encode the relative costs
+//! of the datapath elements (a redundant-digit online multiplier slice is
+//! somewhat larger/hungrier per cycle than a conventional AND-array
+//! slice, but runs far fewer cycles and can stop early).
+
+use super::design::{Arith, Pattern};
+use crate::geometry::FusedConvSpec;
+
+/// Relative per-cycle energy of each unit type (arbitrary units).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    /// Online serial–parallel multiplier, per active cycle.
+    pub online_mul: f64,
+    /// Online adder node, per active cycle.
+    pub online_add: f64,
+    /// Conventional bit-serial multiplier (AND array + accumulate).
+    pub conv_mul: f64,
+    /// Conventional full-width adder stage.
+    pub conv_add: f64,
+    /// On-chip buffer access, per byte.
+    pub buffer_byte: f64,
+    /// Off-chip (DRAM) access, per byte.
+    pub dram_byte: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            online_mul: 1.0,
+            online_add: 0.18,
+            conv_mul: 0.75,
+            conv_add: 0.45,
+            buffer_byte: 0.10,
+            dram_byte: 20.0,
+        }
+    }
+}
+
+/// Aggregated END statistics for a set of SOPs (one conv layer or one
+/// fusion pyramid), produced by the coordinator's END collector.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EndActivity {
+    /// Number of SOPs (output pixels × output channels) observed.
+    pub sops: u64,
+    /// Mean executed-cycles fraction with END enabled (1.0 = no savings).
+    pub mean_executed_fraction: f64,
+    /// Fraction of SOPs classified surely-negative (terminated).
+    pub negative_fraction: f64,
+    /// Fraction never decided (near-zero results).
+    pub undetermined_fraction: f64,
+}
+
+/// Per-layer compute energy of one full evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerEnergy {
+    /// Multiplier array energy.
+    pub mul: f64,
+    /// Adder tree energy.
+    pub add: f64,
+    /// Total (mul + add).
+    pub total: f64,
+}
+
+/// Energy model for the compute datapath of one conv layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyModel {
+    pub params: EnergyParams,
+    // Precision (cycles per full SOP digit stream).
+}
+
+impl EnergyModel {
+    /// Datapath energy of evaluating `spec` once with `arith`/`pattern`,
+    /// scaled by the executed-cycle fraction `exec_frac` (1.0 without
+    /// END; the measured mean with END).
+    pub fn layer_energy(
+        &self,
+        spec: &FusedConvSpec,
+        arith: Arith,
+        pattern: Pattern,
+        n: u32,
+        exec_frac: f64,
+    ) -> LayerEnergy {
+        let r = spec.conv_out() as f64;
+        let sops = r * r * spec.m_out as f64;
+        let products = (spec.k * spec.k * spec.n_in) as f64;
+        let adders = products - 1.0; // tree nodes
+        let p = &self.params;
+        // Cycles each unit is active per SOP (≈ digit-stream length).
+        let stream = n as f64 + (products.log2().ceil());
+        let (e_mul_cycle, e_add_cycle, util) = match (arith, pattern) {
+            (Arith::Online, _) => (p.online_mul, p.online_add, exec_frac),
+            // Conventional units cannot terminate early: full fraction.
+            (Arith::Conventional, _) => (p.conv_mul, p.conv_add, 1.0),
+        };
+        let mul = sops * products * stream * e_mul_cycle * util;
+        let add = sops * adders * stream * e_add_cycle * util;
+        LayerEnergy {
+            mul,
+            add,
+            total: mul + add,
+        }
+    }
+
+    /// Relative energy savings of enabling END on `spec` given measured
+    /// termination activity — the quantity of the paper's Fig. 13.
+    pub fn end_savings(
+        &self,
+        spec: &FusedConvSpec,
+        n: u32,
+        activity: &EndActivity,
+    ) -> f64 {
+        let without = self.layer_energy(spec, Arith::Online, Pattern::Spatial, n, 1.0);
+        let with = self.layer_energy(
+            spec,
+            Arith::Online,
+            Pattern::Spatial,
+            n,
+            activity.mean_executed_fraction,
+        );
+        1.0 - with.total / without.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::lenet5;
+
+    #[test]
+    fn savings_track_executed_fraction() {
+        let m = EnergyModel::default();
+        let spec = &lenet5().convs[0];
+        let act = EndActivity {
+            sops: 1000,
+            mean_executed_fraction: 0.55,
+            negative_fraction: 0.45,
+            undetermined_fraction: 0.02,
+        };
+        let s = m.end_savings(spec, 8, &act);
+        assert!((s - 0.45).abs() < 1e-9, "savings {s}");
+    }
+
+    #[test]
+    fn conventional_cannot_save() {
+        let m = EnergyModel::default();
+        let spec = &lenet5().convs[0];
+        let full = m.layer_energy(spec, Arith::Conventional, Pattern::Spatial, 8, 1.0);
+        let clipped = m.layer_energy(spec, Arith::Conventional, Pattern::Spatial, 8, 0.5);
+        assert_eq!(full.total, clipped.total);
+    }
+
+    #[test]
+    fn energy_scales_with_layer_size() {
+        let m = EnergyModel::default();
+        let net = lenet5();
+        let e1 = m.layer_energy(&net.convs[0], Arith::Online, Pattern::Spatial, 8, 1.0);
+        let e2 = m.layer_energy(&net.convs[1], Arith::Online, Pattern::Spatial, 8, 1.0);
+        // CONV2 has 4× the MACs of CONV1 — more energy.
+        assert!(e2.total > e1.total);
+    }
+}

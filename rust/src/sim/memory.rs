@@ -1,0 +1,160 @@
+//! **Off-chip memory traffic model** and operational intensity
+//! (paper §4.3, Figs. 10–11; roofline methodology of [59]).
+//!
+//! Fused-layer execution with the uniform stride keeps every intermediate
+//! feature map on chip: off-chip traffic is only (a) level-0 input tiles
+//! (refetched per movement, minus nothing — the paper reloads input tiles
+//! but loads filters exactly once thanks to input/output channel tiling,
+//! §3.3.1), (b) the filter set, and (c) the final output feature map.
+//!
+//! Conv-stride plans (Baselines 1–2) break level synchronization: the
+//! paper's §3.3.2 failure mode (3) — intermediate data must be "shuttled
+//! back to the memory". We model that as per-level spills: every level
+//! beyond the first writes its output feature map off-chip and re-reads
+//! its own input tiles per movement.
+
+use crate::geometry::{PyramidPlan, StridePolicy};
+
+/// Traffic breakdown in bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Traffic {
+    pub input_bytes: f64,
+    pub weight_bytes: f64,
+    pub output_bytes: f64,
+    /// Intermediate feature-map spills (zero for uniform-stride fusion).
+    pub intermediate_bytes: f64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> f64 {
+        self.input_bytes + self.weight_bytes + self.output_bytes + self.intermediate_bytes
+    }
+}
+
+/// Memory-traffic model at a given operand precision.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficModel {
+    /// Bytes per feature-map element (n/8).
+    pub bytes_per_elem: f64,
+}
+
+impl Default for TrafficModel {
+    fn default() -> Self {
+        TrafficModel {
+            bytes_per_elem: crate::DEFAULT_PRECISION as f64 / 8.0,
+        }
+    }
+}
+
+impl TrafficModel {
+    /// Off-chip traffic for evaluating `plan` once.
+    pub fn traffic(&self, plan: &PyramidPlan) -> Traffic {
+        let b = self.bytes_per_elem;
+        let weight_bytes: f64 = plan
+            .specs
+            .iter()
+            .map(|s| (s.k * s.k * s.n_in * s.m_out) as f64 * b)
+            .sum();
+        let last = plan.specs.last().unwrap();
+        let out_dim = last.level_out() as f64;
+        let output_bytes = out_dim * out_dim * last.m_out as f64 * b;
+
+        match plan.policy {
+            StridePolicy::Uniform => {
+                let a = plan.alpha() as f64;
+                let h0 = plan.tiles[0] as f64;
+                let input_bytes = a * a * h0 * h0 * plan.specs[0].n_in as f64 * b;
+                Traffic {
+                    input_bytes,
+                    weight_bytes,
+                    output_bytes,
+                    intermediate_bytes: 0.0,
+                }
+            }
+            StridePolicy::ConvStride => {
+                // Level 0 input tiles, refetched per level-0 movement.
+                let a0 = plan.alphas[0] as f64;
+                let h0 = plan.tiles[0] as f64;
+                let input_bytes = a0 * a0 * h0 * h0 * plan.specs[0].n_in as f64 * b;
+                // Spills: each non-final level writes its full output map;
+                // each non-first level re-reads its input tiles per its
+                // own movement count.
+                let mut inter = 0.0;
+                for (q, spec) in plan.specs.iter().enumerate() {
+                    if q + 1 < plan.specs.len() {
+                        let d = spec.level_out() as f64;
+                        inter += d * d * spec.m_out as f64 * b; // write-out
+                    }
+                    if q > 0 {
+                        let aq = plan.alphas[q] as f64;
+                        let hq = plan.tiles[q] as f64;
+                        inter += aq * aq * hq * hq * spec.n_in as f64 * b; // re-read
+                    }
+                }
+                Traffic {
+                    input_bytes,
+                    weight_bytes,
+                    output_bytes,
+                    intermediate_bytes: inter,
+                }
+            }
+        }
+    }
+
+    /// Operational intensity (ops per off-chip byte) — the x-axis of the
+    /// paper's Figs. 10–11.
+    pub fn operational_intensity(&self, plan: &PyramidPlan) -> f64 {
+        plan.total_operations() as f64 / self.traffic(plan).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{PyramidPlan, StridePolicy};
+    use crate::nets::{alexnet, lenet5, vgg16};
+
+    #[test]
+    fn uniform_has_no_intermediate_traffic() {
+        let p = PyramidPlan::build(&lenet5().convs, 1, StridePolicy::Uniform).unwrap();
+        let t = TrafficModel::default().traffic(&p);
+        assert_eq!(t.intermediate_bytes, 0.0);
+        assert!(t.input_bytes > 0.0 && t.weight_bytes > 0.0 && t.output_bytes > 0.0);
+    }
+
+    /// Paper's conclusion: the uniform stride improves operational
+    /// intensity by large factors (8.2× LeNet, 17.8× AlexNet, 279× VGG).
+    /// Check the ordering and the rough magnitudes.
+    #[test]
+    fn oi_improvement_factors_match_paper_shape() {
+        let m = TrafficModel::default();
+        let mut factors = Vec::new();
+        for net in [lenet5(), alexnet(), vgg16()] {
+            let specs = &net.paper_fusion()[0];
+            let uni = PyramidPlan::build(specs, 1, StridePolicy::Uniform).unwrap();
+            let naive = PyramidPlan::build(specs, 1, StridePolicy::ConvStride).unwrap();
+            let f = m.operational_intensity(&uni) / m.operational_intensity(&naive);
+            factors.push((net.name, f));
+        }
+        // All improvements are substantial (>2×); VGG's is by far the
+        // largest (paper: 279×; ours: ~216× at r_out = 1). The paper's
+        // LeNet-vs-AlexNet ordering depends on the output-region choice
+        // (AlexNet's stride-4 CONV1 makes its naive baseline less bad at
+        // r_out = 1) — see EXPERIMENTS.md Fig.-11 notes.
+        assert!(factors[0].1 > 2.0, "{factors:?}");
+        assert!(factors[1].1 > 2.0, "{factors:?}");
+        assert!(factors[2].1 > factors[0].1 && factors[2].1 > factors[1].1, "{factors:?}");
+        assert!(factors[2].1 > 50.0, "VGG factor should be huge: {factors:?}");
+    }
+
+    #[test]
+    fn same_stride_same_oi_across_arithmetic() {
+        // OI depends only on the stride policy (Fig. 10: proposed and
+        // Baseline-3 share x-position) — the model takes no Arith input,
+        // so this is structural; assert plans differ only in traffic.
+        let uni = PyramidPlan::build(&lenet5().convs, 1, StridePolicy::Uniform).unwrap();
+        let t1 = TrafficModel::default().traffic(&uni);
+        let t2 = TrafficModel::default().traffic(&uni);
+        assert_eq!(t1, t2);
+    }
+}

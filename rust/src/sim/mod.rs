@@ -1,0 +1,17 @@
+//! Accelerator models (paper §3.4, §4): design points, cycle models
+//! (Eqs. 3–4), memory traffic / operational intensity, energy, and FPGA
+//! resources.
+
+pub mod cycles;
+pub mod design;
+pub mod energy;
+pub mod memory;
+pub mod resources;
+pub mod roofline;
+
+pub use cycles::CycleModel;
+pub use design::{Arith, DesignPoint, Pattern};
+pub use energy::{EndActivity, EnergyModel};
+pub use memory::{Traffic, TrafficModel};
+pub use resources::{ResourceModel, Resources};
+pub use roofline::RooflinePoint;

@@ -1,0 +1,236 @@
+//! **FPGA resource model** (paper Tables 3–4): analytic LUT/BRAM counts
+//! for the DS-1/DS-2 arrays in both arithmetic paradigms.
+//!
+//! The paper's structural findings this model reproduces:
+//!
+//! 1. online designs use **more logic** than conventional bit-serial ones
+//!    (redundant-digit datapaths, selection logic);
+//! 2. online designs use **far fewer BRAMs on large networks**: MSDF
+//!    digits stream directly into the next pyramid level, so only small
+//!    digit FIFOs are needed, while conventional designs must buffer
+//!    full-precision intermediate tiles per level;
+//! 3. on tiny networks (LeNet) the BRAM difference vanishes (buffers are
+//!    dominated by inputs/filters either way).
+//!
+//! Per-unit constants are calibrated to land in the regime of the paper's
+//! VU19P reports (documented in DESIGN.md §Resource-Calibration).
+
+use super::design::{Arith, Pattern};
+use crate::geometry::PyramidPlan;
+
+/// Per-unit LUT costs and buffer parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceParams {
+    /// LUTs per online serial–parallel multiplier at precision n.
+    pub online_mul_lut_per_bit: f64,
+    /// LUTs per online adder node.
+    pub online_add_lut: f64,
+    /// LUTs per conventional bit-serial multiplier at precision n.
+    pub conv_mul_lut_per_bit: f64,
+    /// LUTs per conventional adder-tree node (full width ≈ 2n bits).
+    pub conv_add_lut_per_bit: f64,
+    /// LUTs per END unit.
+    pub end_lut: f64,
+    /// Control/steering overhead fraction.
+    pub control_overhead: f64,
+    /// Bytes per BRAM36 block.
+    pub bram_bytes: f64,
+    /// Parallelism cap: max multiplier instances the device fits; larger
+    /// arrays are channel-tiled (time-multiplexed) beyond it.
+    pub max_mults: f64,
+}
+
+impl Default for ResourceParams {
+    fn default() -> Self {
+        ResourceParams {
+            online_mul_lut_per_bit: 9.0,
+            online_add_lut: 11.0,
+            conv_mul_lut_per_bit: 4.5,
+            conv_add_lut_per_bit: 1.0,
+            end_lut: 9.0,
+            control_overhead: 0.06,
+            bram_bytes: 4608.0, // 36 Kb
+            max_mults: 1.6e6,
+        }
+    }
+}
+
+/// Resource report for one design on one fused stack.
+#[derive(Clone, Copy, Debug)]
+pub struct Resources {
+    pub luts: f64,
+    pub bram36: f64,
+    /// Channel-tiling factor applied to fit `max_mults` (1 = fully
+    /// spatial; >1 multiplies the cycle counts of the array).
+    pub tiling_factor: f64,
+}
+
+/// Analytic resource model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResourceModel {
+    pub params: ResourceParams,
+}
+
+impl ResourceModel {
+    /// Multiplier instances required by the fully-parallel array.
+    fn mult_count(&self, plan: &PyramidPlan, pattern: Pattern) -> f64 {
+        plan.specs
+            .iter()
+            .zip(&plan.tiles)
+            .map(|(spec, &h)| {
+                // P rows = output pixels of the tile's conv region;
+                // M columns; each PPU holds N WPUs.
+                let conv_region = (h - spec.k) / spec.s + 1;
+                let p_rows = (conv_region * conv_region) as f64;
+                let per_wpu = match pattern {
+                    Pattern::Spatial => (spec.k * spec.k) as f64,
+                    Pattern::Temporal => 1.0,
+                };
+                p_rows * spec.m_out as f64 * spec.n_in as f64 * per_wpu
+            })
+            .sum()
+    }
+
+    /// LUT + BRAM estimate for `plan` under `arith`/`pattern` at
+    /// precision `n`.
+    pub fn resources(
+        &self,
+        plan: &PyramidPlan,
+        arith: Arith,
+        pattern: Pattern,
+        n: u32,
+    ) -> Resources {
+        let p = &self.params;
+        let want = self.mult_count(plan, pattern);
+        let tiling_factor = (want / p.max_mults).max(1.0);
+        let mults = want / tiling_factor;
+        let adders = mults; // tree nodes ≈ leaves
+        let nf = n as f64;
+
+        let (lut_mul, lut_add) = match arith {
+            Arith::Online => (
+                p.online_mul_lut_per_bit * nf,
+                p.online_add_lut,
+            ),
+            Arith::Conventional => (
+                p.conv_mul_lut_per_bit * nf,
+                p.conv_add_lut_per_bit * 2.0 * nf,
+            ),
+        };
+        // END units: one per PPU (output pixel × output map), online only.
+        let ppus: f64 = plan
+            .specs
+            .iter()
+            .zip(&plan.tiles)
+            .map(|(spec, &h)| {
+                let c = ((h - spec.k) / spec.s + 1) as f64;
+                c * c * spec.m_out as f64
+            })
+            .sum::<f64>()
+            / tiling_factor;
+        let end_luts = match arith {
+            Arith::Online => ppus * p.end_lut,
+            Arith::Conventional => 0.0,
+        };
+        let luts = (mults * lut_mul + adders * lut_add + end_luts) * (1.0 + p.control_overhead);
+
+        // Buffers.
+        let bytes_per = nf / 8.0;
+        let mut bram_bytes = 0.0;
+        for (q, (spec, &h)) in plan.specs.iter().zip(&plan.tiles).enumerate() {
+            // Input tile buffer (double-buffered) + filters, both designs.
+            let input = 2.0 * (h * h * spec.n_in) as f64 * bytes_per;
+            let filters = (spec.k * spec.k * spec.n_in * spec.m_out) as f64 * bytes_per;
+            bram_bytes += input + filters;
+            let conv_region = ((h - spec.k) / spec.s + 1) as f64;
+            match arith {
+                // Conventional: full-precision intermediate tile buffer
+                // per level (the next level cannot consume digits early).
+                Arith::Conventional => {
+                    bram_bytes +=
+                        conv_region * conv_region * spec.m_out as f64 * (2.0 * nf / 8.0);
+                }
+                // Online: only the overlap-reuse pixels are buffered
+                // (output pixel reuse instead of recompute, §3.4).
+                Arith::Online => {
+                    let overlap = plan.overlap(q) as f64;
+                    bram_bytes += overlap * conv_region * spec.m_out as f64 * bytes_per;
+                }
+            }
+        }
+        Resources {
+            luts,
+            bram36: (bram_bytes / p.bram_bytes).ceil(),
+            tiling_factor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{PyramidPlan, StridePolicy};
+    use crate::nets::{lenet5, vgg16};
+
+    fn plan(net: &crate::nets::Network) -> PyramidPlan {
+        PyramidPlan::build(&net.paper_fusion()[0], 1, StridePolicy::Uniform).unwrap()
+    }
+
+    #[test]
+    fn online_uses_more_logic() {
+        let m = ResourceModel::default();
+        for net in [lenet5(), vgg16()] {
+            let p = plan(&net);
+            let on = m.resources(&p, Arith::Online, Pattern::Spatial, 8);
+            let cv = m.resources(&p, Arith::Conventional, Pattern::Spatial, 8);
+            assert!(
+                on.luts > cv.luts,
+                "{}: online {} vs conventional {}",
+                net.name,
+                on.luts,
+                cv.luts
+            );
+        }
+    }
+
+    #[test]
+    fn online_saves_bram_on_large_networks() {
+        let m = ResourceModel::default();
+        let p = plan(&vgg16());
+        let on = m.resources(&p, Arith::Online, Pattern::Spatial, 8);
+        let cv = m.resources(&p, Arith::Conventional, Pattern::Spatial, 8);
+        assert!(
+            on.bram36 < cv.bram36,
+            "VGG: online BRAM {} !< conventional {}",
+            on.bram36,
+            cv.bram36
+        );
+    }
+
+    #[test]
+    fn lenet_bram_is_comparable() {
+        let m = ResourceModel::default();
+        let p = plan(&lenet5());
+        let on = m.resources(&p, Arith::Online, Pattern::Spatial, 8);
+        let cv = m.resources(&p, Arith::Conventional, Pattern::Spatial, 8);
+        // Small net: within a few blocks of each other (paper: 3 vs 2).
+        assert!((on.bram36 - cv.bram36).abs() <= 4.0, "{on:?} vs {cv:?}");
+    }
+
+    #[test]
+    fn temporal_uses_fewer_multipliers() {
+        let m = ResourceModel::default();
+        let p = plan(&lenet5());
+        let sp = m.resources(&p, Arith::Online, Pattern::Spatial, 8);
+        let tm = m.resources(&p, Arith::Online, Pattern::Temporal, 8);
+        assert!(tm.luts < sp.luts);
+    }
+
+    #[test]
+    fn huge_arrays_get_tiled() {
+        let m = ResourceModel::default();
+        let p = plan(&vgg16());
+        let r = m.resources(&p, Arith::Online, Pattern::Spatial, 8);
+        assert!(r.tiling_factor >= 1.0);
+    }
+}

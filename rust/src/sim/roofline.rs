@@ -1,0 +1,103 @@
+//! **Roofline / performance-vs-operational-intensity analysis**
+//! (paper Figs. 10–11, methodology of Ofenbeck et al. [59]).
+//!
+//! Produces, per design point, an `(OI, performance)` pair: OI from the
+//! traffic model (it depends only on the stride policy) and performance
+//! from the cycle model — the series the paper plots.
+
+use super::cycles::CycleModel;
+use super::design::DesignPoint;
+use super::memory::TrafficModel;
+use crate::geometry::{FusedConvSpec, PyramidPlan};
+
+/// One point of a performance-vs-OI figure.
+#[derive(Clone, Debug)]
+pub struct RooflinePoint {
+    pub design: &'static str,
+    /// Operational intensity, ops/byte.
+    pub oi: f64,
+    /// Achieved performance, ops/s.
+    pub perf: f64,
+    /// Duration, µs.
+    pub duration_us: f64,
+}
+
+/// Evaluate a set of design points over a fused stack, producing the
+/// series of one figure panel.
+pub fn evaluate(
+    specs: &[FusedConvSpec],
+    r_out: usize,
+    designs: &[DesignPoint],
+    cycles: &CycleModel,
+    traffic: &TrafficModel,
+) -> Vec<RooflinePoint> {
+    designs
+        .iter()
+        .filter_map(|d| {
+            let plan = PyramidPlan::build(specs, r_out, d.stride)?;
+            Some(RooflinePoint {
+                design: d.name,
+                oi: traffic.operational_intensity(&plan),
+                perf: cycles.performance(&plan, *d),
+                duration_us: cycles.duration_us(&plan, *d),
+            })
+        })
+        .collect()
+}
+
+/// Memory-bandwidth roofline: attainable perf = min(peak, OI · BW).
+/// Used to annotate figures; BW in bytes/s, peak in ops/s.
+pub fn attainable(oi: f64, peak_ops: f64, bandwidth: f64) -> f64 {
+    (oi * bandwidth).min(peak_ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::lenet5;
+    use crate::sim::design::Pattern;
+
+    #[test]
+    fn proposed_dominates_fig10_style() {
+        let net = lenet5();
+        let pts = evaluate(
+            &net.paper_fusion()[0],
+            1,
+            &DesignPoint::table1_lineup(),
+            &CycleModel::default(),
+            &TrafficModel::default(),
+        );
+        assert_eq!(pts.len(), 4);
+        let get = |name: &str| pts.iter().find(|p| p.design == name).unwrap();
+        let prop = get("Proposed");
+        let b1 = get("Baseline-1");
+        let b2 = get("Baseline-2");
+        let b3 = get("Baseline-3");
+        // Same OI for same stride policy (Fig. 10's vertical pairs).
+        assert!((prop.oi - b3.oi).abs() < 1e-9);
+        assert!((b1.oi - b2.oi).abs() < 1e-9);
+        // Proposed has both the highest OI and the highest performance.
+        assert!(prop.oi > b1.oi);
+        assert!(prop.perf > b1.perf && prop.perf > b2.perf && prop.perf > b3.perf);
+    }
+
+    #[test]
+    fn attainable_is_min_of_ridges() {
+        assert_eq!(attainable(1.0, 1e12, 1e9), 1e9);
+        assert_eq!(attainable(1e6, 1e12, 1e9), 1e12);
+    }
+
+    #[test]
+    fn evaluate_skips_infeasible() {
+        let net = lenet5();
+        // r_out = 50 is infeasible for LeNet — all plans rejected.
+        let pts = evaluate(
+            &net.paper_fusion()[0],
+            50,
+            &[DesignPoint::proposed(Pattern::Spatial)],
+            &CycleModel::default(),
+            &TrafficModel::default(),
+        );
+        assert!(pts.is_empty());
+    }
+}

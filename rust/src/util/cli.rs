@@ -1,0 +1,168 @@
+//! Tiny command-line parser (offline replacement for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for usage text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse argv (without the program name). `specs` describes known
+    /// options; unknown `--options` are rejected.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    };
+                    out.opts.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        // Apply defaults.
+        for s in specs {
+            if let Some(d) = s.default {
+                out.opts.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| format!("--{name} expects an integer, got '{v}'"))
+            })
+            .transpose()
+    }
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| format!("--{name} expects a number, got '{v}'"))
+            })
+            .transpose()
+    }
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage string for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for spec in specs {
+        let v = if spec.takes_value { " <value>" } else { "" };
+        let d = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{v}\n      {}{d}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "net",
+                help: "network",
+                takes_value: true,
+                default: Some("lenet"),
+            },
+            OptSpec {
+                name: "q",
+                help: "fusion depth",
+                takes_value: true,
+                default: None,
+            },
+            OptSpec {
+                name: "verbose",
+                help: "chatty",
+                takes_value: false,
+                default: None,
+            },
+        ]
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&sv(&["--net", "vgg", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("net"), Some("vgg"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = Args::parse(&sv(&["--q=4"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("q").unwrap(), Some(4));
+        assert_eq!(a.get("net"), Some("lenet")); // default applied
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--q"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(&sv(&["--q", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("q").is_err());
+    }
+}

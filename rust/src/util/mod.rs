@@ -1,0 +1,8 @@
+//! Infrastructure substrates for the offline build environment:
+//! PRNG, JSON, CLI parsing, property testing, table formatting.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,201 @@
+//! Mini property-based testing framework (offline replacement for proptest).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("mul commutes", 500, |g| {
+//!     let a = g.i64(-100, 100);
+//!     let b = g.i64(-100, 100);
+//!     prop_assert!(a * b == b * a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+//! Each case gets a fresh deterministic [`Gen`] derived from the base seed
+//! and the case index, so a failure report (`seed`, `case`) is replayable.
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based), useful for size-scaling like proptest.
+    pub case: usize,
+    /// Total number of cases, for size scaling.
+    pub total: usize,
+}
+
+impl Gen {
+    /// Uniform i64 in `[lo, hi]`.
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi)
+    }
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as i64, hi as i64) as usize
+    }
+    /// Size-scaled usize: grows from `lo` toward `hi` as cases progress,
+    /// so early cases are small (easier to debug on failure).
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_now = lo
+            + ((hi - lo) as f64 * ((self.case + 1) as f64 / self.total as f64).min(1.0)).ceil()
+                as usize;
+        self.usize(lo, hi_now.min(hi))
+    }
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+    pub fn vec_i64(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        (0..len).map(|_| self.i64(lo, hi)).collect()
+    }
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+    /// Access to the raw RNG for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Property failure: message plus replay info.
+#[derive(Debug)]
+pub struct PropError {
+    pub msg: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+impl std::error::Error for PropError {}
+
+/// Result type used by property closures.
+pub type PropResult = Result<(), PropError>;
+
+/// Fail the property with a formatted message.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::prop::PropError { msg: format!($($fmt)*) });
+        }
+    };
+}
+
+/// Assert approximate equality of floats inside a property.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol) = ($a as f64, $b as f64, $tol as f64);
+        if (a - b).abs() > tol {
+            return Err($crate::util::prop::PropError {
+                msg: format!(
+                    "not close: {} vs {} (tol {}), at {}:{}",
+                    a, b, tol, file!(), line!()
+                ),
+            });
+        }
+    }};
+}
+
+/// Run `cases` random cases of the property `f`. Panics (with replay info)
+/// on the first failure. The base seed is derived from the property name so
+/// different properties explore different streams but remain deterministic
+/// across runs.
+pub fn prop_check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let seed = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    prop_check_seeded(name, seed, cases, &mut f);
+}
+
+/// Like [`prop_check`] with an explicit seed (for replaying failures).
+pub fn prop_check_seeded<F>(name: &str, seed: u64, cases: usize, f: &mut F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            case,
+            total: cases,
+        };
+        if let Err(e) = f(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}):\n  {}",
+                e.msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop_check("trivial", 50, |g| {
+            n += 1;
+            let x = g.i64(-5, 5);
+            prop_assert!(x + 0 == x, "identity failed for {x}");
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_info() {
+        prop_check("always-fails", 10, |g| {
+            let x = g.i64(0, 10);
+            prop_assert!(x > 100, "x={x} not > 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sized_grows() {
+        let mut max_early = 0;
+        let mut max_late = 0;
+        prop_check("sized", 100, |g| {
+            let v = g.sized(0, 1000);
+            if g.case < 10 {
+                max_early = max_early.max(v);
+            }
+            if g.case >= 90 {
+                max_late = max_late.max(v);
+            }
+            Ok(())
+        });
+        assert!(max_early <= 110, "early sizes too big: {max_early}");
+        assert!(max_late > 110, "late sizes never grew: {max_late}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = || {
+            let mut v = Vec::new();
+            prop_check("det", 20, |g| {
+                v.push(g.i64(0, 1_000_000));
+                Ok(())
+            });
+            v
+        };
+        assert_eq!(collect(), collect());
+    }
+}

@@ -1,0 +1,175 @@
+//! ASCII table formatter used by the benchmark harness and report
+//! generators to print paper-style tables.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table {
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self.aligns = vec![Align::Right; self.header.len()];
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render the table to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].len();
+                match self.aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(&cells[i]);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(&cells[i]);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format a duration in cycles at a clock frequency into a human unit,
+/// matching the paper's µs/ms convention.
+pub fn fmt_duration_us(us: f64) -> String {
+    if us >= 1000.0 {
+        format!("{:.2} ms", us / 1000.0)
+    } else {
+        format!("{us:.2} µs")
+    }
+}
+
+/// Format ops/second into GOPS or TOPS like the paper's tables.
+pub fn fmt_ops_per_s(ops: f64) -> String {
+    if ops >= 1e12 {
+        format!("{:.2} TOPS", ops / 1e12)
+    } else if ops >= 1e9 {
+        format!("{:.2} GOPS", ops / 1e9)
+    } else {
+        format!("{:.2} MOPS", ops / 1e6)
+    }
+}
+
+/// Format a count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo").header(&["name", "val"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "123".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| name      | val |"));
+        assert!(s.contains("| a         |   1 |"));
+        assert!(s.contains("| long-name | 123 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x").header(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert_eq!(fmt_duration_us(12.5), "12.50 µs");
+        assert_eq!(fmt_duration_us(2500.0), "2.50 ms");
+        assert_eq!(fmt_ops_per_s(4.704e10), "47.04 GOPS");
+        assert_eq!(fmt_ops_per_s(1.1307e12), "1.13 TOPS");
+        assert_eq!(fmt_count(1_183_880), "1,183,880");
+    }
+}

@@ -1,0 +1,78 @@
+//! Cross-validation: the closed-form cycle model (paper Eq. 3) agrees
+//! with the digit-level SOP pipeline simulation on per-SOP latency, and
+//! the geometry property tests hold on the zoo networks.
+
+use usefuse::arith::digit::Fixed;
+use usefuse::arith::sop::sop_with_end;
+use usefuse::geometry::{PyramidPlan, StridePolicy};
+use usefuse::nets;
+use usefuse::sim::{CycleModel, DesignPoint, Pattern};
+use usefuse::util::prop::prop_check;
+use usefuse::prop_assert;
+
+/// Closed-form per-SOP latency (Eq. 3's per-level core without MP) vs
+/// the digit-level pipeline's own cycle accounting. The closed form uses
+/// ⌈lg K²⌉+⌈lg N⌉ tree stages; the simulator's single tree has
+/// ⌈lg(K²·N)⌉ — they differ by at most one stage, so latencies agree
+/// within one adder delay + one growth digit.
+#[test]
+fn eq3_matches_digit_pipeline_within_tolerance() {
+    prop_check("Eq3 vs digit sim", 40, |g| {
+        let k = *g.pick(&[1usize, 3, 5]);
+        let n_ch = *g.pick(&[1usize, 2, 4, 8]);
+        let m = k * k * n_ch;
+        let n_bits = 8u32;
+        let max = (1i64 << (n_bits - 1)) - 1;
+        let w: Vec<Fixed> = (0..m).map(|_| Fixed::new(g.i64(-max, max), n_bits - 1)).collect();
+        let a: Vec<Fixed> = (0..m).map(|_| Fixed::new(g.i64(-max, max), n_bits - 1)).collect();
+        // n_out = n: the stream then carries n + L digits of value
+        // (precision growth), matching Eq. 3's n + ⌈lgK²⌉ + ⌈lgN⌉ term.
+        let r = sop_with_end(&w, &a, None, n_bits as usize);
+        let sim_cycles = r.total_cycles() as i64;
+
+        let lg = |x: usize| (usize::BITS - (x.max(1) - 1).leading_zeros()) as i64;
+        let eq3 = 2 + 2 * (lg(k * k) + lg(n_ch)) + lg(k * k) + lg(n_ch) + n_bits as i64;
+        // ±3: the simulator pads degenerate trees to width 2 and emits
+        // one extra drain digit; the split ⌈lgK²⌉+⌈lgN⌉ vs ⌈lg(K²N)⌉
+        // differs by at most one stage.
+        prop_assert!(
+            (sim_cycles - eq3).abs() <= 3 + (lg(k * k) + lg(n_ch) - lg(m)).abs(),
+            "k={k} n={n_ch}: sim {sim_cycles} vs Eq3 {eq3}"
+        );
+        Ok(())
+    });
+}
+
+/// The uniform plan never loses to itself across output regions: cycles
+/// scale with rounds, and larger R_Q never increases per-op cycle cost.
+#[test]
+fn larger_output_regions_amortize() {
+    let m = CycleModel::default();
+    let net = nets::lenet5();
+    let specs = net.paper_fusion()[0].clone();
+    let d = DesignPoint::proposed(Pattern::Spatial);
+    let mut last_per_op = f64::INFINITY;
+    for r_out in 1..=4 {
+        if let Some(plan) = PyramidPlan::build(&specs, r_out, StridePolicy::Uniform) {
+            let per_op = m.total_cycles(&plan, d) as f64 / plan.total_operations() as f64;
+            assert!(
+                per_op <= last_per_op + 1e-12,
+                "r_out={r_out}: {per_op} > {last_per_op}"
+            );
+            last_per_op = per_op;
+        }
+    }
+}
+
+/// Every zoo network's paper fusion grouping yields a coverable plan.
+#[test]
+fn all_zoo_fusions_plan_and_cover() {
+    for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
+        let net = nets::by_name(name).unwrap();
+        for (gi, group) in net.paper_fusion().iter().enumerate() {
+            let plan = PyramidPlan::build(group, 1, StridePolicy::Uniform)
+                .unwrap_or_else(|| panic!("{name} group {gi}: no plan"));
+            assert!(plan.covers_output(), "{name} group {gi}");
+        }
+    }
+}

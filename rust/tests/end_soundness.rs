@@ -1,0 +1,47 @@
+//! Integration: END decisions from the digit-level pipeline are sound
+//! against the *exact* quantized SOP value, on real LeNet activations.
+
+use usefuse::arith::digit::Fixed;
+use usefuse::arith::end_unit::EndState;
+use usefuse::arith::sop::{sop_exact, sop_with_end};
+use usefuse::runtime::{Manifest, Tensor};
+use usefuse::util::rng::Rng;
+
+#[test]
+fn end_decisions_match_exact_sop_sign_on_real_weights() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let wblob = manifest.weights["lenet.conv1_w"].clone();
+    let weights = Tensor::new(wblob.shape.clone(), manifest.read_f32(&wblob).unwrap()).unwrap();
+    let xblob = manifest.data["lenet_test_x"].clone();
+    let xs = manifest.read_f32(&xblob).unwrap();
+    let img = Tensor::new(vec![32, 32, 1], xs[..32 * 32].to_vec()).unwrap();
+
+    let w_scale = weights.max_abs();
+    let a_scale = img.max_abs().max(1e-9);
+    let mut rng = Rng::new(99);
+    let (k, m_out) = (5usize, 6usize);
+    for _ in 0..300 {
+        let f = rng.below(m_out as u64) as usize;
+        let oy = rng.below(28) as usize;
+        let ox = rng.below(28) as usize;
+        let mut wq = Vec::new();
+        let mut aq = Vec::new();
+        for i in 0..k {
+            for j in 0..k {
+                let widx = ((i * k + j) * 1) * m_out + f;
+                wq.push(Fixed::quantize((weights.data[widx] / w_scale) as f64 * 0.999, 8));
+                aq.push(Fixed::quantize((img.at3(oy + i, ox + j, 0) / a_scale) as f64 * 0.999, 8));
+            }
+        }
+        let r = sop_with_end(&wq, &aq, None, 12);
+        let exact = sop_exact(&wq, &aq, None);
+        match r.state {
+            EndState::Terminate => assert!(exact < 1e-9, "terminated but exact SOP = {exact}"),
+            EndState::SurelyPositive => assert!(exact > -1e-9, "positive but exact SOP = {exact}"),
+            EndState::Undetermined => assert!(exact.abs() < 1e-2, "undetermined but |SOP| = {exact}"),
+        }
+    }
+}

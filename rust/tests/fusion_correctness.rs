@@ -1,0 +1,54 @@
+//! Integration: the fusion-correctness invariant on real artifacts —
+//! tile-by-tile PJRT execution reassembles to exactly the golden
+//! full-graph output, for every fused group (LeNet, AlexNet, VGG Q=4).
+//!
+//! Skipped (with a message) when `make artifacts` has not run.
+
+use usefuse::coordinator::FusionExecutor;
+use usefuse::runtime::{Manifest, Runtime};
+
+fn runtime_for(group: &str) -> Option<Runtime> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let tile = format!("{group}_tile");
+    let full = format!("{group}_full");
+    Runtime::load(manifest, Some(&[tile.as_str(), full.as_str()])).ok()
+}
+
+fn verify_group(group: &str, data_key: &str, tol: f32) {
+    let Some(rt) = runtime_for(group) else {
+        eprintln!("skipping {group}: artifacts not built");
+        return;
+    };
+    let exec = FusionExecutor::new(&rt, group).expect("geometry cross-check");
+    let images = rt.load_dataset(data_key).expect("dataset");
+    let rel = exec.verify(&images[0]).expect("verify");
+    assert!(
+        rel < tol,
+        "{group}: fusion output diverges from golden (rel err {rel})"
+    );
+}
+
+#[test]
+fn lenet_tile_assembly_is_exact() {
+    verify_group("lenet", "lenet_test_x", 1e-5);
+}
+
+#[test]
+fn alexnet_tile_assembly_is_exact() {
+    verify_group("alexnet", "alexnet_input", 1e-4);
+}
+
+#[test]
+fn vgg_q4_tile_assembly_is_exact() {
+    verify_group("vgg", "vgg_input", 1e-4);
+}
+
+#[test]
+fn executor_rejects_wrong_input_shape() {
+    let Some(rt) = runtime_for("lenet") else {
+        return;
+    };
+    let exec = FusionExecutor::new(&rt, "lenet").unwrap();
+    let bad = usefuse::runtime::Tensor::zeros(vec![16, 16, 1]);
+    assert!(exec.run(&bad).is_err());
+}

@@ -1,0 +1,60 @@
+//! Integration: the threaded inference service serves the trained LeNet
+//! with high accuracy and well-formed timing metadata.
+
+use usefuse::coordinator::service::{InferenceService, ServiceConfig};
+use usefuse::runtime::{Manifest, Tensor};
+
+#[test]
+fn service_classifies_test_set() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let blob = manifest.data["lenet_test_x"].clone();
+    let data = manifest.read_f32(&blob).unwrap();
+    let labels = manifest.read_i32(&manifest.data["lenet_test_y"].clone()).unwrap();
+    let item: usize = blob.shape[1..].iter().product();
+
+    let svc = InferenceService::start(ServiceConfig::default()).expect("service");
+    let n = 32usize;
+    let mut correct = 0;
+    for i in 0..n {
+        let img = Tensor::new(
+            blob.shape[1..].to_vec(),
+            data[i * item..(i + 1) * item].to_vec(),
+        )
+        .unwrap();
+        let resp = svc.classify(img).expect("classify");
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.batch_size >= 1);
+        if resp.class as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    assert!(correct as f64 / n as f64 > 0.9, "accuracy {correct}/{n}");
+}
+
+#[test]
+fn service_survives_concurrent_clients() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        return;
+    };
+    let blob = manifest.data["lenet_test_x"].clone();
+    let data = manifest.read_f32(&blob).unwrap();
+    let item: usize = blob.shape[1..].iter().product();
+    let svc = std::sync::Arc::new(
+        InferenceService::start(ServiceConfig::default()).expect("service"),
+    );
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let svc = svc.clone();
+            let img = Tensor::new(blob.shape[1..].to_vec(), data[..item].to_vec()).unwrap();
+            s.spawn(move || {
+                for _ in 0..8 {
+                    let r = svc.classify(img.clone()).expect("classify");
+                    assert!(r.class < 10, "thread {t}");
+                }
+            });
+        }
+    });
+}
