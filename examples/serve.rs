@@ -1,14 +1,17 @@
 //! Inference-service demo: the coordinator as a deployable runtime — a
-//! request queue + dynamic batcher in front of a PJRT worker thread,
-//! reporting latency percentiles and throughput.
+//! shared request queue + dynamic batcher in front of a pool of N worker
+//! threads (each owning its own PJRT runtime), executing drained batches
+//! as one stacked program call and reporting latency percentiles,
+//! throughput, batch-size distribution and per-worker utilization.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve -- --requests 256
+//! make artifacts && cargo run --release --example serve -- \
+//!     --requests 256 --workers 4 --batch 8
 //! ```
 
 use std::time::Instant;
 
-use usefuse::coordinator::service::{percentile, InferenceService, ServiceConfig};
+use usefuse::coordinator::service::{InferenceService, ServiceConfig};
 use usefuse::runtime::Manifest;
 use usefuse::util::cli::{Args, OptSpec};
 
@@ -16,11 +19,13 @@ fn main() -> anyhow::Result<()> {
     let specs = [
         OptSpec { name: "requests", help: "number of requests", takes_value: true, default: Some("256") },
         OptSpec { name: "batch", help: "max dynamic batch", takes_value: true, default: Some("8") },
+        OptSpec { name: "workers", help: "worker threads (one runtime each)", takes_value: true, default: Some("2") },
     ];
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv, &specs).map_err(|e| anyhow::anyhow!(e))?;
     let n_requests = args.get_usize("requests").map_err(|e| anyhow::anyhow!(e))?.unwrap();
     let max_batch = args.get_usize("batch").map_err(|e| anyhow::anyhow!(e))?.unwrap();
+    let workers = args.get_usize("workers").map_err(|e| anyhow::anyhow!(e))?.unwrap();
 
     // Load the test images on the client side.
     let manifest = Manifest::load("artifacts")?;
@@ -36,11 +41,34 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let labels = manifest.read_i32(&manifest.data["lenet_test_y"].clone())?;
 
+    // Stacked single-call batching engages only up to the largest
+    // compiled `lenet_infer_b{N}` variant; warn when --batch exceeds it.
+    let largest_variant = manifest
+        .programs
+        .keys()
+        .filter_map(|k| usefuse::runtime::batched_suffix(k, "lenet_infer"))
+        .max();
+    match largest_variant {
+        Some(n) if max_batch > n => println!(
+            "note: --batch {max_batch} exceeds the largest compiled batched \
+             variant (b{n}); drained batches larger than {n} are split into \
+             stacked chunks of at most {n}"
+        ),
+        None => println!(
+            "note: no lenet_infer_b{{N}} variants in this artifact bundle — \
+             batches run per-request (re-run aot.py to enable stacked calls)"
+        ),
+        _ => {}
+    }
+
     let svc = InferenceService::start(ServiceConfig {
         max_batch,
+        workers,
         ..Default::default()
     })?;
-    println!("service up (max_batch={max_batch}); sending {n_requests} requests…");
+    println!(
+        "service up ({workers} workers, max_batch {max_batch}); sending {n_requests} requests…"
+    );
 
     // Fire requests asynchronously to exercise the batcher, then collect.
     let t0 = Instant::now();
@@ -49,30 +77,29 @@ fn main() -> anyhow::Result<()> {
         let img = images[i % images.len()].clone();
         pending.push((i, svc.classify_async(img)?));
     }
-    let mut lat_us = Vec::with_capacity(n_requests);
     let mut correct = 0usize;
-    let mut batch_hist = std::collections::BTreeMap::<usize, usize>::new();
+    let mut stacked = 0usize;
     for (i, rx) in pending {
         let resp = rx.recv()??;
         if resp.class as i32 == labels[i % labels.len()] {
             correct += 1;
         }
-        lat_us.push((resp.queue_wait + resp.exec).as_secs_f64() * 1e6);
-        *batch_hist.entry(resp.batch_size).or_default() += 1;
+        if resp.stacked {
+            stacked += 1;
+        }
     }
     let wall = t0.elapsed();
-    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
     println!("\n-- results --");
     println!("  accuracy: {:.1}%", 100.0 * correct as f64 / n_requests as f64);
-    println!("  throughput: {:.0} req/s", n_requests as f64 / wall.as_secs_f64());
     println!(
-        "  latency p50/p90/p99: {:.0} / {:.0} / {:.0} µs",
-        percentile(&lat_us, 50.0),
-        percentile(&lat_us, 90.0),
-        percentile(&lat_us, 99.0)
+        "  throughput: {:.0} req/s  ({} of {} responses via stacked batch calls)",
+        n_requests as f64 / wall.as_secs_f64(),
+        stacked,
+        n_requests
     );
-    println!("  batch-size distribution: {batch_hist:?}");
+    println!("\n-- pool metrics --");
+    print!("{}", svc.metrics());
     println!("\nserve OK");
     Ok(())
 }

@@ -190,6 +190,18 @@ def main():
     bundle.add_program(
         "lenet_infer", infer_fn, infer_ex, n_runtime_inputs=1, weight_keys=lenet_all_keys
     )
+    # Batched variants for the Rust serving layer's stacked batch calls
+    # (the dynamic batcher picks the smallest variant that fits a drained
+    # batch and zero-pads the tail slots).
+    for bs in (4, 8):
+        bfn, bex = model.lenet_infer_batched_program(netdefs.LENET, bs)
+        bundle.add_program(
+            f"lenet_infer_b{bs}",
+            bfn,
+            bex,
+            n_runtime_inputs=1,
+            weight_keys=lenet_all_keys,
+        )
 
     test = np.load(os.path.join(args.out, "lenet_test.npz"))
     bundle.add_data("lenet_test_x", test["x"], "f32")

@@ -26,6 +26,7 @@ __all__ = [
     "fused_tile_program",
     "fused_full_program",
     "lenet_infer_program",
+    "lenet_infer_batched_program",
     "resnet_block_program",
 ]
 
@@ -165,6 +166,30 @@ def lenet_infer_program(levels: List[Level]):
             jax.ShapeDtypeStruct((a, b_dim), jnp.float32),
             jax.ShapeDtypeStruct((b_dim,), jnp.float32),
         ]
+    return f, example
+
+
+def lenet_infer_batched_program(levels: List[Level], batch: int):
+    """Batched LeNet-5 inference: ``lenet_infer_program`` vmapped over a
+    leading batch axis of the image input (weights broadcast).
+
+    Signature: ``f(xb, *params) -> (logits,)`` with ``xb`` of shape
+    ``(batch, 32, 32, 1)`` and ``logits`` of shape ``(batch, 10)``.
+
+    The Rust serving layer's dynamic batcher looks for programs named
+    ``lenet_infer_b{batch}`` and drains a whole request batch through one
+    stacked PJRT call instead of a per-request loop (zero-padding the
+    tail slots when the drained batch is smaller than ``batch``).
+    """
+    single_fn, single_ex = lenet_infer_program(levels)
+
+    def f(xb, *params):
+        logits = jax.vmap(lambda x: single_fn(x, *params)[0])(xb)
+        return (logits,)
+
+    example = [
+        jax.ShapeDtypeStruct((batch,) + tuple(single_ex[0].shape), jnp.float32)
+    ] + single_ex[1:]
     return f, example
 
 

@@ -64,6 +64,7 @@ impl BitSerialMul {
         self.bit == self.n_bits
     }
 
+    /// Cycles consumed so far.
     pub fn cycles_run(&self) -> u64 {
         self.cycles_run
     }

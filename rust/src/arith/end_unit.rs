@@ -48,6 +48,7 @@ impl Default for EndUnit {
 }
 
 impl EndUnit {
+    /// Fresh unit in the undetermined state.
     pub fn new() -> EndUnit {
         EndUnit {
             acc: 0,
@@ -78,6 +79,7 @@ impl EndUnit {
         self.state
     }
 
+    /// Current detection state.
     pub fn state(&self) -> EndState {
         self.state
     }

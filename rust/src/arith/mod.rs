@@ -9,11 +9,17 @@
 //! - [`end_unit`] — early negative detection (Algorithm 2).
 //! - [`conventional`] — LSB-first bit-serial baseline units (UNPU-style).
 
+/// Conventional LSB-first bit-serial baseline units.
 pub mod conventional;
+/// Signed-digit representation and fixed-point scalars.
 pub mod digit;
+/// The early-negative-detection (END) unit.
 pub mod end_unit;
+/// MSDF online adder.
 pub mod online_add;
+/// MSDF online multiplier.
 pub mod online_mul;
+/// Digit-pipelined sum-of-products units.
 pub mod sop;
 
 pub use digit::{Digit, Fixed};

@@ -62,6 +62,7 @@ pub struct OnlineAdd {
 }
 
 impl OnlineAdd {
+    /// Fresh adder with cleared residual state.
     pub fn new() -> OnlineAdd {
         OnlineAdd::default()
     }

@@ -206,6 +206,8 @@ pub struct SopPipeline {
 }
 
 impl SopPipeline {
+    /// Build a pipeline for `weights` (+ optional `bias`) producing
+    /// `n_out` result digits.
     pub fn new(weights: &[Fixed], bias: Option<Fixed>, n_out: usize) -> SopPipeline {
         assert!(!weights.is_empty());
         let m = weights.len() + bias.is_some() as usize;

@@ -29,6 +29,7 @@ pub struct EndConfig {
     pub max_pixels_per_filter: usize,
     /// Which output filters to analyse (paper: 10 random filters).
     pub filters: Vec<usize>,
+    /// PRNG seed for pixel sampling.
     pub seed: u64,
 }
 
@@ -46,7 +47,9 @@ impl Default for EndConfig {
 /// Per-filter END statistics (one bar of Fig. 12).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FilterEndStats {
+    /// Output-filter index.
     pub filter: usize,
+    /// Number of output pixels sampled for this filter.
     pub sampled: usize,
     /// % of SOPs surely-negative (terminated early).
     pub negative_pct: f64,
@@ -63,7 +66,9 @@ pub struct FilterEndStats {
 /// Layer-level aggregate.
 #[derive(Clone, Debug, Default)]
 pub struct LayerEndStats {
+    /// Per-filter statistics (one entry per analysed filter).
     pub per_filter: Vec<FilterEndStats>,
+    /// Aggregate activity factors feeding the energy model.
     pub activity: EndActivity,
 }
 

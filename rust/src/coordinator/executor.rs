@@ -28,7 +28,9 @@ pub struct ExecStats {
 /// Executor for one fused group (e.g. "lenet", "alexnet", "vgg").
 pub struct FusionExecutor<'rt> {
     rt: &'rt Runtime,
+    /// Fused-group name (manifest key, program prefix).
     pub group: String,
+    /// The resolved fusion pyramid (Algorithms 3 + 4).
     pub plan: PyramidPlan,
     geom: GeometryMeta,
 }
@@ -69,8 +71,8 @@ impl<'rt> FusionExecutor<'rt> {
         vec![last.level_out(), last.level_out(), last.m_out]
     }
 
-    /// Run the fused stack tile-by-tile, assembling the output.
-    pub fn run(&self, input: &Tensor) -> Result<(Tensor, ExecStats)> {
+    /// Check the input shape against level 0 of the plan.
+    fn check_input(&self, input: &Tensor) -> Result<()> {
         let spec0 = &self.plan.specs[0];
         if input.shape != [spec0.ifm, spec0.ifm, spec0.n_in] {
             bail!(
@@ -80,13 +82,55 @@ impl<'rt> FusionExecutor<'rt> {
                 [spec0.ifm, spec0.ifm, spec0.n_in]
             );
         }
+        Ok(())
+    }
+
+    /// Execute one pyramid movement `(iy, ix)`: extract the level-0 tile
+    /// into `tile` (the caller's reusable buffer), run the tile program,
+    /// and return the produced output region. `scalars` is the caller's
+    /// reusable per-level offset buffer of length `2 * depth`.
+    fn movement(
+        &self,
+        program: &str,
+        iy: usize,
+        ix: usize,
+        input: &Tensor,
+        tile: &mut Tensor,
+        scalars: &mut [i32],
+    ) -> Result<Tensor> {
+        let spec0 = &self.plan.specs[0];
+        let h0 = self.plan.tiles[0];
+        let rect = self.plan.tile_rect(0, iy, ix);
+        // Real data occupies [pad, pad + ifm) in padded coords.
+        input.extract_window(rect.y0, rect.x0, h0, spec0.pad as i64, tile)?;
+        for (j, spec) in self.plan.specs.iter().enumerate() {
+            let r = self.plan.tile_rect(j, iy, ix);
+            debug_assert_eq!(r.y0.rem_euclid(spec.s as i64), 0);
+            scalars[2 * j] = (r.y0 / spec.s as i64) as i32;
+            scalars[2 * j + 1] = (r.x0 / spec.s as i64) as i32;
+        }
+        let mut outs = self.rt.execute(program, &[&*tile], scalars)?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// Output-map stride between adjacent movements at the final level.
+    fn out_stride(&self) -> usize {
+        let q = self.plan.depth();
+        let last = self.plan.specs.last().unwrap();
+        self.plan.strides[q - 1] / last.chain_factor()
+    }
+
+    /// Run the fused stack tile-by-tile, assembling the output
+    /// (serial reference path; see [`FusionExecutor::run_parallel`]).
+    pub fn run(&self, input: &Tensor) -> Result<(Tensor, ExecStats)> {
+        self.check_input(input)?;
         let t0 = std::time::Instant::now();
         let a = self.plan.alpha();
         let h0 = self.plan.tiles[0];
         let q = self.plan.depth();
+        let spec0 = &self.plan.specs[0];
         let program = format!("{}_tile", self.group);
-        let last = self.plan.specs.last().unwrap();
-        let p_out = self.plan.strides[q - 1] / last.chain_factor();
+        let p_out = self.out_stride();
 
         let mut out = Tensor::zeros(self.output_shape());
         let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
@@ -94,22 +138,8 @@ impl<'rt> FusionExecutor<'rt> {
         let mut scalars = vec![0i32; 2 * q];
         for iy in 0..a {
             for ix in 0..a {
-                let rect = self.plan.tile_rect(0, iy, ix);
-                // Real data occupies [pad, pad + ifm) in padded coords.
-                input.extract_window(rect.y0, rect.x0, h0, spec0.pad as i64, &mut tile)?;
-                for (j, spec) in self.plan.specs.iter().enumerate() {
-                    let r = self.plan.tile_rect(j, iy, ix);
-                    debug_assert_eq!(r.y0.rem_euclid(spec.s as i64), 0);
-                    scalars[2 * j] = (r.y0 / spec.s as i64) as i32;
-                    scalars[2 * j + 1] = (r.x0 / spec.s as i64) as i32;
-                }
-                let outs = self.rt.execute(&program, &[&tile], &scalars)?;
-                let region = &outs[0];
-                out.place_window(
-                    region,
-                    (iy * p_out) as i64,
-                    (ix * p_out) as i64,
-                )?;
+                let region = self.movement(&program, iy, ix, input, &mut tile, &mut scalars)?;
+                out.place_window(&region, (iy * p_out) as i64, (ix * p_out) as i64)?;
                 stats.tiles_executed += 1;
                 stats.input_bytes += tile.len() * 4;
             }
@@ -117,6 +147,78 @@ impl<'rt> FusionExecutor<'rt> {
         stats.output_bytes = out.len() * 4;
         stats.wall = t0.elapsed();
         Ok((out, stats))
+    }
+
+    /// Like [`FusionExecutor::run`], but executes the α² independent
+    /// `(iy, ix)` tile movements across a scoped thread pool of up to
+    /// `threads` workers, each with its own tile buffer. Output is
+    /// assembled after the join and is **bit-identical** to the serial
+    /// path (the movements are data-independent; overlapping output
+    /// pixels receive identical values from either producer).
+    ///
+    /// Under the `pjrt` feature the PJRT handles are not `Sync`, so this
+    /// falls back to the serial path; the host backend parallelizes.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_parallel(&self, input: &Tensor, threads: usize) -> Result<(Tensor, ExecStats)> {
+        self.check_input(input)?;
+        let t0 = std::time::Instant::now();
+        let a = self.plan.alpha();
+        let h0 = self.plan.tiles[0];
+        let q = self.plan.depth();
+        let spec0 = &self.plan.specs[0];
+        let program = format!("{}_tile", self.group);
+        let p_out = self.out_stride();
+
+        // Movement schedule, chunked contiguously per thread.
+        let moves: Vec<(usize, usize)> =
+            (0..a).flat_map(|iy| (0..a).map(move |ix| (iy, ix))).collect();
+        let n_threads = threads.clamp(1, moves.len().max(1));
+        let chunk = moves.len().div_ceil(n_threads);
+
+        let regions: Result<Vec<Vec<(usize, usize, Tensor)>>> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_threads);
+            for piece in moves.chunks(chunk) {
+                let program = &program;
+                handles.push(s.spawn(move || {
+                    // Per-thread reusable tile + offset buffers.
+                    let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
+                    let mut scalars = vec![0i32; 2 * q];
+                    let mut done = Vec::with_capacity(piece.len());
+                    for &(iy, ix) in piece {
+                        let region =
+                            self.movement(program, iy, ix, input, &mut tile, &mut scalars)?;
+                        done.push((iy, ix, region));
+                    }
+                    Ok(done)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tile worker panicked"))
+                .collect()
+        });
+
+        let mut out = Tensor::zeros(self.output_shape());
+        let mut stats = ExecStats::default();
+        for chunk_regions in regions? {
+            for (iy, ix, region) in chunk_regions {
+                out.place_window(&region, (iy * p_out) as i64, (ix * p_out) as i64)?;
+                stats.tiles_executed += 1;
+                stats.input_bytes += h0 * h0 * spec0.n_in * 4;
+            }
+        }
+        stats.output_bytes = out.len() * 4;
+        stats.wall = t0.elapsed();
+        Ok((out, stats))
+    }
+
+    /// Serial fallback: PJRT handles are not `Sync`, so the `pjrt` build
+    /// cannot share the runtime across a thread scope. See the
+    /// non-`pjrt` implementation for the parallel path.
+    #[cfg(feature = "pjrt")]
+    pub fn run_parallel(&self, input: &Tensor, threads: usize) -> Result<(Tensor, ExecStats)> {
+        let _ = threads;
+        self.run(input)
     }
 
     /// Run the golden full-map program; returns per-level pre-activations

@@ -1,0 +1,296 @@
+//! Serving metrics for the worker pool: rolling latency percentiles
+//! (p50/p95/p99), live queue depth, a batch-size histogram, and
+//! per-worker utilization — the numbers `examples/serve.rs` prints and
+//! the capacity-planning inputs a production deployment would scrape.
+//!
+//! Everything is lock-cheap on the hot path: counters are atomics, and
+//! the only mutex guards the bounded latency ring buffer and the
+//! histogram map. A [`MetricsSnapshot`] is a plain value safe to format
+//! or serialize off the hot path.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Latency percentile over an already-sorted sample (nearest-rank with
+/// linear index rounding; `p` in percent).
+pub fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * p / 100.0).round() as usize;
+    sorted_us[idx]
+}
+
+/// Per-worker counters (owned by [`Metrics`], one slot per worker).
+#[derive(Debug, Default)]
+struct WorkerStats {
+    busy_ns: AtomicU64,
+    requests: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// Live metric registry shared between the pool, its workers, and any
+/// number of snapshot readers.
+#[derive(Debug)]
+pub struct Metrics {
+    window: Mutex<VecDeque<f64>>,
+    window_cap: usize,
+    batch_hist: Mutex<BTreeMap<usize, u64>>,
+    total_requests: AtomicU64,
+    total_batches: AtomicU64,
+    stacked_batches: AtomicU64,
+    error_requests: AtomicU64,
+    queue_depth: AtomicUsize,
+    queue_peak: AtomicUsize,
+    workers: Vec<WorkerStats>,
+    started: Instant,
+}
+
+impl Metrics {
+    /// Registry for `workers` workers keeping the most recent
+    /// `window_cap` request latencies for percentile queries.
+    pub fn new(workers: usize, window_cap: usize) -> Metrics {
+        Metrics {
+            window: Mutex::new(VecDeque::with_capacity(window_cap.min(4096))),
+            window_cap: window_cap.max(1),
+            batch_hist: Mutex::new(BTreeMap::new()),
+            total_requests: AtomicU64::new(0),
+            total_batches: AtomicU64::new(0),
+            stacked_batches: AtomicU64::new(0),
+            error_requests: AtomicU64::new(0),
+            queue_depth: AtomicUsize::new(0),
+            queue_peak: AtomicUsize::new(0),
+            workers: (0..workers).map(|_| WorkerStats::default()).collect(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record a request enqueue; maintains depth gauge and peak.
+    pub fn on_enqueue(&self) {
+        let d = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_peak.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// Record `n` requests leaving the queue for a worker.
+    pub fn on_dequeue(&self, n: usize) {
+        self.queue_depth.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Record one drained batch executed by `worker`.
+    pub fn on_batch(&self, worker: usize, batch_size: usize, stacked: bool, busy: Duration) {
+        self.total_batches.fetch_add(1, Ordering::Relaxed);
+        self.total_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+        if stacked {
+            self.stacked_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        *self
+            .batch_hist
+            .lock()
+            .unwrap()
+            .entry(batch_size)
+            .or_default() += 1;
+        if let Some(w) = self.workers.get(worker) {
+            w.busy_ns
+                .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+            w.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+            w.batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one drained batch that **failed**: the requests are not
+    /// counted as served (they keep `total_requests`, `mean_batch` and
+    /// the batch histogram honest), but the worker's busy time still
+    /// accrues and the errors are surfaced in their own counter.
+    pub fn on_batch_error(&self, worker: usize, batch_size: usize, busy: Duration) {
+        self.error_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+        if let Some(w) = self.workers.get(worker) {
+            w.busy_ns
+                .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one request's end-to-end latency (queue wait + execution).
+    pub fn on_latency(&self, latency: Duration) {
+        let mut w = self.window.lock().unwrap();
+        if w.len() == self.window_cap {
+            w.pop_front();
+        }
+        w.push_back(latency.as_secs_f64() * 1e6);
+    }
+
+    /// Consistent point-in-time snapshot of every metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat: Vec<f64> = self.window.lock().unwrap().iter().copied().collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let hist = self.batch_hist.lock().unwrap().clone();
+        let uptime = self.started.elapsed();
+        let requests = self.total_requests.load(Ordering::Relaxed);
+        let batches = self.total_batches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            total_requests: requests,
+            total_batches: batches,
+            stacked_batches: self.stacked_batches.load(Ordering::Relaxed),
+            error_requests: self.error_requests.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_peak: self.queue_peak.load(Ordering::Relaxed),
+            p50_us: percentile(&lat, 50.0),
+            p95_us: percentile(&lat, 95.0),
+            p99_us: percentile(&lat, 99.0),
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                requests as f64 / batches as f64
+            },
+            batch_hist: hist,
+            workers: self
+                .workers
+                .iter()
+                .map(|w| WorkerSnapshot {
+                    requests: w.requests.load(Ordering::Relaxed),
+                    batches: w.batches.load(Ordering::Relaxed),
+                    utilization: (w.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+                        / uptime.as_secs_f64().max(1e-9))
+                    .min(1.0),
+                })
+                .collect(),
+            uptime,
+        }
+    }
+}
+
+/// One worker's counters at snapshot time.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerSnapshot {
+    /// Requests this worker served.
+    pub requests: u64,
+    /// Batches this worker drained.
+    pub batches: u64,
+    /// Fraction of wall time spent executing (0..=1).
+    pub utilization: f64,
+}
+
+/// Point-in-time copy of every pool metric (see [`Metrics::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Requests successfully served since startup (errors excluded —
+    /// see [`MetricsSnapshot::error_requests`]).
+    pub total_requests: u64,
+    /// Batches executed since startup.
+    pub total_batches: u64,
+    /// Batches that went through one stacked program call.
+    pub stacked_batches: u64,
+    /// Requests that received an error instead of a response.
+    pub error_requests: u64,
+    /// Requests currently waiting in the shared queue.
+    pub queue_depth: usize,
+    /// Highest queue depth observed.
+    pub queue_peak: usize,
+    /// Median end-to-end latency over the rolling window, µs.
+    pub p50_us: f64,
+    /// 95th-percentile latency over the rolling window, µs.
+    pub p95_us: f64,
+    /// 99th-percentile latency over the rolling window, µs.
+    pub p99_us: f64,
+    /// Mean requests per executed batch.
+    pub mean_batch: f64,
+    /// batch size → count of batches drained at that size.
+    pub batch_hist: BTreeMap<usize, u64>,
+    /// Per-worker counters, indexed by worker id.
+    pub workers: Vec<WorkerSnapshot>,
+    /// Time since the registry was created.
+    pub uptime: Duration,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests {} in {} batches (mean batch {:.2}, {} stacked, {} errored)",
+            self.total_requests,
+            self.total_batches,
+            self.mean_batch,
+            self.stacked_batches,
+            self.error_requests
+        )?;
+        writeln!(
+            f,
+            "latency p50/p95/p99: {:.0} / {:.0} / {:.0} µs  queue depth {} (peak {})",
+            self.p50_us, self.p95_us, self.p99_us, self.queue_depth, self.queue_peak
+        )?;
+        write!(f, "batch sizes:")?;
+        for (size, count) in &self.batch_hist {
+            write!(f, " {size}×{count}")?;
+        }
+        writeln!(f)?;
+        for (i, w) in self.workers.iter().enumerate() {
+            writeln!(
+                f,
+                "worker {i}: {} reqs in {} batches, {:.0}% busy",
+                w.requests,
+                w.batches,
+                100.0 * w.utilization
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate_into_snapshot() {
+        let m = Metrics::new(2, 64);
+        m.on_enqueue();
+        m.on_enqueue();
+        m.on_enqueue();
+        m.on_dequeue(2);
+        m.on_batch(0, 2, true, Duration::from_millis(1));
+        m.on_dequeue(1);
+        m.on_batch(1, 1, false, Duration::from_millis(2));
+        for us in [100, 200, 300] {
+            m.on_latency(Duration::from_micros(us));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.total_requests, 3);
+        assert_eq!(s.total_batches, 2);
+        assert_eq!(s.stacked_batches, 1);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.queue_peak, 3);
+        assert_eq!(s.batch_hist[&2], 1);
+        assert_eq!(s.batch_hist[&1], 1);
+        assert_eq!(s.workers.len(), 2);
+        assert_eq!(s.workers[0].requests, 2);
+        assert_eq!(s.workers[1].batches, 1);
+        assert!((s.mean_batch - 1.5).abs() < 1e-9);
+        assert!(s.p50_us >= 100.0 && s.p99_us <= 300.0 + 1e-9);
+        // Display renders without panicking and mentions the histogram.
+        let text = format!("{s}");
+        assert!(text.contains("batch sizes:"));
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let m = Metrics::new(1, 4);
+        for i in 0..100 {
+            m.on_latency(Duration::from_micros(i));
+        }
+        let s = m.snapshot();
+        // Only the 4 most recent latencies (96..99 µs) remain.
+        assert!(s.p50_us >= 96.0);
+    }
+}

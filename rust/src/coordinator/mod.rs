@@ -1,10 +1,20 @@
 //! The L3 coordinator: fusion-pyramid execution over PJRT, END-statistics
-//! collection from real activations, and the threaded inference service.
+//! collection from real activations, and the multi-worker batched
+//! inference serving layer (pool + router + metrics).
 
+/// END statistics from real activations (paper §4.3).
 pub mod end_stats;
+/// Tile-by-tile fusion-pyramid execution (serial + parallel).
 pub mod executor;
+/// Serving metrics: percentiles, queue depth, batch histogram.
+pub mod metrics;
+/// The multi-worker batched serving core with model-group routing.
+pub mod pool;
+/// Single-program facade over the worker pool.
 pub mod service;
 
 pub use end_stats::{layer_end_stats, EndConfig, FilterEndStats, LayerEndStats};
 pub use executor::{ExecStats, FusionExecutor};
+pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
+pub use pool::{ModelGroup, PoolConfig, RuntimeFactory, WorkerPool};
 pub use service::{InferenceService, Response, ServiceConfig};

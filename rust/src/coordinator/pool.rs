@@ -1,0 +1,512 @@
+//! **Worker pool**: the coordinator's throughput-oriented serving core.
+//!
+//! N worker threads each own a private [`Runtime`] (PJRT handles are not
+//! `Send`, so every runtime lives entirely inside its worker thread) and
+//! compete over one shared, bounded request queue. A worker drains up to
+//! `max_batch` queued requests *of the same model group* per wake-up and
+//! executes the whole batch as **one stacked program call** through
+//! [`Runtime::execute_stacked`] — the off-chip-communication
+//! amortization the paper's fusion methodology targets, applied at the
+//! serving layer.
+//!
+//! The **router** lets one pool serve several model groups
+//! (lenet/alexnet/vgg) concurrently: every request names its group, every
+//! worker loads every group's program, and batches never mix groups.
+//!
+//! Latency percentiles, queue depth, batch-size histogram and per-worker
+//! utilization are collected in [`metrics`](super::metrics) and exposed
+//! via [`WorkerPool::metrics`].
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use crate::runtime::{Manifest, Runtime, Tensor};
+
+/// Builds one private [`Runtime`] per worker thread. The closure runs
+/// *inside* the worker (PJRT clients must not cross threads).
+pub type RuntimeFactory = Arc<dyn Fn() -> Result<Runtime> + Send + Sync>;
+
+/// One servable model group: the router key clients address, and the
+/// program every worker executes for it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelGroup {
+    /// Router key (e.g. `"lenet"`).
+    pub name: String,
+    /// Program executed for this group (e.g. `"lenet_infer"`). Batched
+    /// variants named `{program}_b{N}` are used automatically when
+    /// loaded.
+    pub program: String,
+}
+
+/// Pool configuration (see [`PoolConfig::new`] for defaults).
+#[derive(Clone)]
+pub struct PoolConfig {
+    /// Worker threads; each owns a private runtime.
+    pub workers: usize,
+    /// Max requests drained into one batch.
+    pub max_batch: usize,
+    /// Queue capacity; submitters block once it is full (backpressure).
+    pub queue_cap: usize,
+    /// Rolling latency window for percentile queries.
+    pub latency_window: usize,
+    /// Model groups served by this pool (router table).
+    pub groups: Vec<ModelGroup>,
+    /// Per-worker runtime builder.
+    pub factory: RuntimeFactory,
+}
+
+impl PoolConfig {
+    /// Config with production-ish defaults: 2 workers, batches of 8, a
+    /// 256-deep queue and a 4096-sample latency window.
+    pub fn new(groups: Vec<ModelGroup>, factory: RuntimeFactory) -> PoolConfig {
+        PoolConfig {
+            workers: 2,
+            max_batch: 8,
+            queue_cap: 256,
+            latency_window: 4096,
+            groups,
+            factory,
+        }
+    }
+}
+
+/// [`RuntimeFactory`] that loads the artifact bundle at `dir` with the
+/// given programs **plus any of their batched `_b{N}` variants** present
+/// in the manifest, so the stacked batch path engages automatically.
+pub fn artifacts_factory(dir: &str, programs: &[String]) -> RuntimeFactory {
+    let dir = dir.to_string();
+    let programs: Vec<String> = programs.to_vec();
+    Arc::new(move || {
+        let manifest = Manifest::load(&dir)?;
+        let mut names: Vec<String> = Vec::new();
+        for p in &programs {
+            names.push(p.clone());
+            for key in manifest.programs.keys() {
+                if crate::runtime::batched_suffix(key, p).is_some() {
+                    names.push(key.clone());
+                }
+            }
+        }
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        Runtime::load(manifest, Some(&refs))
+    })
+}
+
+/// Classification response with serving metadata.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Argmax class.
+    pub class: usize,
+    /// Raw logits (the program's first output, flattened).
+    pub logits: Vec<f32>,
+    /// Queue wait before a worker drained the request.
+    pub queue_wait: Duration,
+    /// Execution time of the batch this request rode in.
+    pub exec: Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Id of the worker that executed the batch.
+    pub worker: usize,
+    /// Whether the batch went through one stacked program call.
+    pub stacked: bool,
+    /// Model group that served the request.
+    pub group: String,
+}
+
+/// One queued classification request.
+struct Request {
+    group: usize,
+    image: Tensor,
+    enqueued: Instant,
+    resp: Sender<Result<Response>>,
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    metrics: Metrics,
+    groups: Vec<ModelGroup>,
+    max_batch: usize,
+    queue_cap: usize,
+}
+
+impl Shared {
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Handle to a running worker pool. Dropping it drains the queue, stops
+/// the workers and joins them.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn the workers (each builds its runtime via `cfg.factory`
+    /// inside its own thread) and return once **all** of them are ready
+    /// to serve. If any worker fails to initialize, every worker is shut
+    /// down and the first error is returned.
+    pub fn start(cfg: PoolConfig) -> Result<WorkerPool> {
+        if cfg.workers == 0 {
+            bail!("pool needs at least one worker");
+        }
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be at least 1");
+        }
+        if cfg.groups.is_empty() {
+            bail!("pool needs at least one model group");
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            metrics: Metrics::new(cfg.workers, cfg.latency_window.max(16)),
+            groups: cfg.groups.clone(),
+            max_batch: cfg.max_batch,
+            queue_cap: cfg.queue_cap.max(1),
+        });
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let mut handles = Vec::with_capacity(cfg.workers);
+        let mut spawn_err = None;
+        for i in 0..cfg.workers {
+            let sh = Arc::clone(&shared);
+            let factory = Arc::clone(&cfg.factory);
+            let tx = ready_tx.clone();
+            match std::thread::Builder::new()
+                .name(format!("usefuse-worker-{i}"))
+                .spawn(move || worker_loop(i, sh, factory, tx))
+            {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    spawn_err = Some(anyhow!("spawning worker {i}: {e}"));
+                    break;
+                }
+            }
+        }
+        drop(ready_tx);
+        let mut failure = spawn_err;
+        if failure.is_none() {
+            for _ in 0..handles.len() {
+                match ready_rx.recv() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        failure = Some(e);
+                        break;
+                    }
+                    Err(_) => {
+                        failure = Some(anyhow!("a worker died during startup"));
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            shared.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(WorkerPool {
+            shared,
+            workers: handles,
+        })
+    }
+
+    /// Submit an image to `group`; blocks until the response is ready.
+    pub fn classify(&self, group: &str, image: Tensor) -> Result<Response> {
+        self.classify_async(group, image)?
+            .recv()
+            .map_err(|_| anyhow!("pool dropped request"))?
+    }
+
+    /// Submit asynchronously; returns a receiver for the response.
+    /// Blocks only while the queue is at capacity (backpressure).
+    pub fn classify_async(&self, group: &str, image: Tensor) -> Result<Receiver<Result<Response>>> {
+        let gid = self
+            .shared
+            .groups
+            .iter()
+            .position(|g| g.name == group)
+            .ok_or_else(|| {
+                let known: Vec<&str> = self.shared.groups.iter().map(|g| g.name.as_str()).collect();
+                anyhow!("unknown model group '{group}' (serving: {known:?})")
+            })?;
+        let (tx, rx) = channel();
+        let mut st = self.shared.state.lock().unwrap();
+        st = self
+            .shared
+            .not_full
+            .wait_while(st, |s| !s.closed && s.q.len() >= self.shared.queue_cap)
+            .unwrap();
+        if st.closed {
+            bail!("pool is shut down");
+        }
+        st.q.push_back(Request {
+            group: gid,
+            image,
+            enqueued: Instant::now(),
+            resp: tx,
+        });
+        self.shared.metrics.on_enqueue();
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(rx)
+    }
+
+    /// Point-in-time snapshot of the pool's serving metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Router keys this pool serves, in configuration order.
+    pub fn groups(&self) -> Vec<String> {
+        self.shared.groups.iter().map(|g| g.name.clone()).collect()
+    }
+
+    /// Stop accepting requests, finish the queued ones, and join the
+    /// workers (equivalent to dropping the pool, but explicit).
+    pub fn shutdown(self) {}
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(idx: usize, shared: Arc<Shared>, factory: RuntimeFactory, ready: Sender<Result<()>>) {
+    let rt = match factory() {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    drop(ready);
+    loop {
+        // Drain one same-group batch under the lock; execute outside it.
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            st = shared
+                .not_empty
+                .wait_while(st, |s| s.q.is_empty() && !s.closed)
+                .unwrap();
+            if st.q.is_empty() {
+                return; // closed and fully drained
+            }
+            let first = st.q.pop_front().unwrap();
+            let gid = first.group;
+            let mut batch = vec![first];
+            let mut i = 0;
+            while batch.len() < shared.max_batch && i < st.q.len() {
+                if st.q[i].group == gid {
+                    batch.push(st.q.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+            shared.metrics.on_dequeue(batch.len());
+            drop(st);
+            shared.not_full.notify_all();
+            batch
+        };
+        execute_batch(idx, &shared, &rt, batch);
+    }
+}
+
+fn execute_batch(worker: usize, shared: &Shared, rt: &Runtime, batch: Vec<Request>) {
+    let gid = batch[0].group;
+    let group = &shared.groups[gid];
+    let bsize = batch.len();
+    let t_deq = Instant::now();
+    let images: Vec<&Tensor> = batch.iter().map(|r| &r.image).collect();
+    // A panicking program (host closure or binding bug) must fail the
+    // batch, not kill the worker thread — a dead worker would strand
+    // every queued and future request with no supervision to notice.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        rt.execute_stacked(&group.program, &images, &[])
+    }))
+    .unwrap_or_else(|payload| {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        Err(anyhow!("batch execution panicked: {msg}"))
+    });
+    let exec = t_deq.elapsed();
+    match result {
+        Ok(run) => {
+            shared.metrics.on_batch(worker, bsize, run.stacked, exec);
+            for (req, outs) in batch.into_iter().zip(run.outputs) {
+                let logits = outs
+                    .into_iter()
+                    .next()
+                    .map(|t| t.data)
+                    .unwrap_or_default();
+                // total_cmp: NaN logits must not panic the worker.
+                let class = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                shared.metrics.on_latency(req.enqueued.elapsed());
+                let resp = Response {
+                    class,
+                    logits,
+                    queue_wait: t_deq.saturating_duration_since(req.enqueued),
+                    exec,
+                    batch_size: bsize,
+                    worker,
+                    stacked: run.stacked,
+                    group: group.name.clone(),
+                };
+                let _ = req.resp.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            shared.metrics.on_batch_error(worker, bsize, exec);
+            let msg = e.to_string();
+            for req in batch {
+                let _ = req.resp.send(Err(anyhow!("{}: {msg}", group.program)));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{DType, ProgramMeta, TensorMeta};
+
+    /// Host factory: `echo` returns logits one-hot at `data[0] as usize`.
+    fn echo_factory() -> RuntimeFactory {
+        Arc::new(|| {
+            let mut rt = Runtime::host(Manifest::empty("."));
+            let meta = ProgramMeta {
+                file: std::path::PathBuf::new(),
+                inputs: vec![TensorMeta {
+                    shape: vec![2, 2, 1],
+                    dtype: DType::F32,
+                }],
+                outputs: vec![TensorMeta {
+                    shape: vec![10],
+                    dtype: DType::F32,
+                }],
+                n_runtime_inputs: 1,
+                weights: vec![],
+            };
+            rt.register_host(
+                "echo_infer",
+                meta,
+                Box::new(|ts, _| {
+                    let c = (ts[0].data[0] as usize) % 10;
+                    let mut logits = vec![0.0f32; 10];
+                    logits[c] = 1.0;
+                    Tensor::new(vec![10], logits).map(|t| vec![t])
+                }),
+            );
+            Ok(rt)
+        })
+    }
+
+    fn img(class: usize) -> Tensor {
+        let mut t = Tensor::zeros(vec![2, 2, 1]);
+        t.data[0] = class as f32;
+        t
+    }
+
+    #[test]
+    fn pool_serves_and_routes() {
+        let cfg = PoolConfig {
+            workers: 2,
+            ..PoolConfig::new(
+                vec![ModelGroup {
+                    name: "echo".into(),
+                    program: "echo_infer".into(),
+                }],
+                echo_factory(),
+            )
+        };
+        let pool = WorkerPool::start(cfg).expect("pool");
+        assert_eq!(pool.groups(), vec!["echo".to_string()]);
+        for c in 0..10 {
+            let r = pool.classify("echo", img(c)).expect("classify");
+            assert_eq!(r.class, c);
+            assert_eq!(r.group, "echo");
+            assert!(r.worker < 2);
+            assert!(r.batch_size >= 1);
+        }
+        assert!(pool.classify("nope", img(0)).is_err());
+        let snap = pool.metrics();
+        assert_eq!(snap.total_requests, 10);
+        assert_eq!(snap.queue_depth, 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn failing_factory_fails_startup() {
+        let cfg = PoolConfig {
+            workers: 3,
+            ..PoolConfig::new(
+                vec![ModelGroup {
+                    name: "g".into(),
+                    program: "p".into(),
+                }],
+                Arc::new(|| bail!("no runtime here")),
+            )
+        };
+        let err = WorkerPool::start(cfg).unwrap_err();
+        assert!(err.to_string().contains("no runtime here"));
+    }
+
+    #[test]
+    fn zero_config_is_rejected() {
+        let groups = vec![ModelGroup {
+            name: "g".into(),
+            program: "p".into(),
+        }];
+        let base = PoolConfig::new(groups, echo_factory());
+        assert!(WorkerPool::start(PoolConfig {
+            workers: 0,
+            ..base.clone()
+        })
+        .is_err());
+        assert!(WorkerPool::start(PoolConfig {
+            max_batch: 0,
+            ..base.clone()
+        })
+        .is_err());
+        assert!(WorkerPool::start(PoolConfig {
+            groups: vec![],
+            ..base
+        })
+        .is_err());
+    }
+}

@@ -1,45 +1,29 @@
 //! **Inference service**: the deployable face of the coordinator — a
-//! request queue with a dynamic batcher in front of a worker thread that
-//! owns the PJRT runtime (PJRT handles are not `Send`, so the runtime
-//! lives entirely inside its worker; std-thread + channels replace tokio
-//! in this offline environment).
+//! thin, backward-compatible facade over the multi-worker
+//! [`WorkerPool`](super::pool::WorkerPool).
 //!
-//! Requests are classified single images; the batcher drains the queue up
-//! to `max_batch` per wake-up, amortizing queue overhead, and per-request
-//! latency percentiles are tracked for the serve example.
+//! Historically this module owned a single worker thread that executed
+//! "batched" requests one at a time; it now configures a pool of N
+//! workers (each owning its own PJRT runtime), a shared dynamic batcher
+//! that drains up to `max_batch` requests per wake-up, and the stacked
+//! single-call batch execution path. Use [`WorkerPool`] directly to
+//! serve several model groups at once; this facade serves exactly one
+//! program, as before.
 
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::time::{Duration, Instant};
+use std::sync::mpsc::Receiver;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
-use crate::runtime::{Manifest, Runtime, Tensor};
-
-/// One classification request.
-struct Request {
-    image: Tensor,
-    enqueued: Instant,
-    resp: Sender<Result<Response>>,
-}
-
-/// Classification response with timing breakdown.
-#[derive(Clone, Debug)]
-pub struct Response {
-    /// Argmax class.
-    pub class: usize,
-    /// Raw logits.
-    pub logits: Vec<f32>,
-    /// Queue wait before the batcher picked the request up.
-    pub queue_wait: Duration,
-    /// Model execution time.
-    pub exec: Duration,
-    /// Size of the batch this request was served in.
-    pub batch_size: usize,
-}
+use super::pool::{artifacts_factory, ModelGroup, PoolConfig, WorkerPool};
+pub use super::pool::Response;
+use crate::coordinator::metrics::MetricsSnapshot;
+pub use crate::coordinator::metrics::percentile;
+use crate::runtime::Tensor;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
+    /// Artifact bundle directory (`make artifacts`).
     pub artifacts_dir: String,
     /// Program to serve (single-image classifier, e.g. "lenet_infer").
     pub program: String,
@@ -47,6 +31,8 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Queue capacity (backpressure bound).
     pub queue_cap: usize,
+    /// Worker threads, each owning a private runtime.
+    pub workers: usize,
 }
 
 impl Default for ServiceConfig {
@@ -56,141 +42,60 @@ impl Default for ServiceConfig {
             program: "lenet_infer".into(),
             max_batch: 8,
             queue_cap: 256,
+            workers: 2,
         }
     }
 }
 
 /// Handle to a running inference service.
 pub struct InferenceService {
-    tx: SyncSender<Request>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    pool: WorkerPool,
+    group: String,
 }
 
 impl InferenceService {
-    /// Start the worker (loads the runtime inside the thread) and return
-    /// once it is ready to serve.
+    /// Start the worker pool (each worker loads its runtime inside its
+    /// own thread) and return once every worker is ready to serve.
+    ///
+    /// ```no_run
+    /// # fn main() -> anyhow::Result<()> {
+    /// use usefuse::coordinator::service::{InferenceService, ServiceConfig};
+    /// use usefuse::runtime::Tensor;
+    ///
+    /// let svc = InferenceService::start(ServiceConfig::default())?;
+    /// let resp = svc.classify(Tensor::zeros(vec![32, 32, 1]))?;
+    /// println!("class {} (served in a batch of {})", resp.class, resp.batch_size);
+    /// # Ok(()) }
+    /// ```
     pub fn start(cfg: ServiceConfig) -> Result<InferenceService> {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_cap);
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
-        let worker = std::thread::Builder::new()
-            .name("usefuse-serve".into())
-            .spawn(move || worker_loop(cfg, rx, ready_tx))
-            .map_err(|e| anyhow!("spawning worker: {e}"))?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during startup"))??;
-        Ok(InferenceService {
-            tx,
-            worker: Some(worker),
-        })
+        let group = cfg.program.clone();
+        let pool = WorkerPool::start(PoolConfig {
+            workers: cfg.workers.max(1),
+            max_batch: cfg.max_batch.max(1),
+            queue_cap: cfg.queue_cap.max(1),
+            latency_window: 4096,
+            groups: vec![ModelGroup {
+                name: group.clone(),
+                program: group.clone(),
+            }],
+            factory: artifacts_factory(&cfg.artifacts_dir, std::slice::from_ref(&cfg.program)),
+        })?;
+        Ok(InferenceService { pool, group })
     }
 
     /// Submit an image; blocks until the response is ready.
     pub fn classify(&self, image: Tensor) -> Result<Response> {
-        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(Request {
-                image,
-                enqueued: Instant::now(),
-                resp: resp_tx,
-            })
-            .map_err(|_| anyhow!("service stopped"))?;
-        resp_rx.recv().map_err(|_| anyhow!("service dropped request"))?
+        self.pool.classify(&self.group, image)
     }
 
     /// Submit asynchronously; returns a receiver for the response.
     pub fn classify_async(&self, image: Tensor) -> Result<Receiver<Result<Response>>> {
-        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
-        self.tx
-            .send(Request {
-                image,
-                enqueued: Instant::now(),
-                resp: resp_tx,
-            })
-            .map_err(|_| anyhow!("service stopped"))?;
-        Ok(resp_rx)
+        self.pool.classify_async(&self.group, image)
     }
-}
 
-impl Drop for InferenceService {
-    fn drop(&mut self) {
-        // Closing the channel stops the worker loop.
-        let (dead_tx, _) = sync_channel(1);
-        let _ = std::mem::replace(&mut self.tx, dead_tx);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker_loop(cfg: ServiceConfig, rx: Receiver<Request>, ready: SyncSender<Result<()>>) {
-    let rt = match Manifest::load(&cfg.artifacts_dir)
-        .and_then(|m| Runtime::load(m, Some(&[cfg.program.as_str()])))
-    {
-        Ok(rt) => {
-            let _ = ready.send(Ok(()));
-            rt
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    // Batch loop: block for one request, then drain up to max_batch-1.
-    while let Ok(first) = rx.recv() {
-        let mut batch = vec![first];
-        while batch.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-        let bsize = batch.len();
-        for req in batch {
-            let queue_wait = req.enqueued.elapsed();
-            let t0 = Instant::now();
-            let result = rt
-                .execute(&cfg.program, &[&req.image], &[])
-                .map(|outs| {
-                    let logits = outs[0].data.clone();
-                    let class = logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap_or(0);
-                    Response {
-                        class,
-                        logits,
-                        queue_wait,
-                        exec: t0.elapsed(),
-                        batch_size: bsize,
-                    }
-                });
-            let _ = req.resp.send(result);
-        }
-    }
-}
-
-/// Latency percentile helper for the serve example.
-pub fn percentile(sorted_us: &[f64], p: f64) -> f64 {
-    if sorted_us.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted_us.len() - 1) as f64 * p / 100.0).round() as usize;
-    sorted_us[idx]
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn percentile_basics() {
-        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        assert_eq!(percentile(&v, 50.0), 3.0);
-        assert_eq!(percentile(&v, 100.0), 5.0);
-        assert_eq!(percentile(&[], 50.0), 0.0);
+    /// Serving metrics snapshot (latency percentiles, batch histogram,
+    /// queue depth, per-worker utilization).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.pool.metrics()
     }
 }

@@ -2,9 +2,13 @@
 //! back-propagation, Algorithm 3 (tile sizes), Algorithm 4 (uniform tile
 //! stride) and the executable [`plan::PyramidPlan`].
 
+/// Algorithm 3: fused tile-size computation.
 pub mod alg3;
+/// Algorithm 4: the uniform tile stride.
 pub mod alg4;
+/// The executable pyramid plan and its movement schedule.
 pub mod plan;
+/// Per-level layer specifications.
 pub mod spec;
 
 pub use alg3::{tile_size_matrix, tile_sizes, TileConfig};

@@ -24,6 +24,7 @@ pub enum StridePolicy {
 /// A fully-resolved fusion pyramid.
 #[derive(Clone, Debug)]
 pub struct PyramidPlan {
+    /// The fused conv stack, level 0 (input) to level Q−1 (output).
     pub specs: Vec<FusedConvSpec>,
     /// Final-level output region side (R_Q).
     pub r_out: usize,
@@ -36,14 +37,16 @@ pub struct PyramidPlan {
     /// Per-level start offsets in padded input coordinates (≤ 0; negative
     /// values are zero-filled halo from deeper levels' padding).
     pub starts: Vec<i64>,
+    /// The stride policy the plan was built with.
     pub policy: StridePolicy,
 }
 
 /// A tile position at one pyramid level for one movement step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileRect {
-    /// Top-left corner in padded input coordinates (may be negative).
+    /// Top-left row in padded input coordinates (may be negative).
     pub y0: i64,
+    /// Top-left column in padded input coordinates (may be negative).
     pub x0: i64,
     /// Side length.
     pub side: usize,
@@ -54,6 +57,30 @@ impl PyramidPlan {
     ///
     /// For [`StridePolicy::Uniform`], runs Algorithm 4 (trying the exact
     /// integer-α solution first, then the overhang-tolerant variant).
+    /// Returns `None` when no feasible tile configuration exists.
+    ///
+    /// ```
+    /// use usefuse::geometry::{FusedConvSpec, PoolSpec, PyramidPlan, StridePolicy};
+    ///
+    /// // Fused LeNet-5: two 5×5 convolutions, each followed by 2×2 pooling.
+    /// let lenet = vec![
+    ///     FusedConvSpec {
+    ///         name: "CL1".into(), k: 5, s: 1, pad: 0,
+    ///         pool: Some(PoolSpec { k: 2, s: 2 }), n_in: 1, m_out: 6, ifm: 32,
+    ///     },
+    ///     FusedConvSpec {
+    ///         name: "CL2".into(), k: 5, s: 1, pad: 0,
+    ///         pool: Some(PoolSpec { k: 2, s: 2 }), n_in: 6, m_out: 16, ifm: 14,
+    ///     },
+    /// ];
+    /// let plan = PyramidPlan::build(&lenet, 1, StridePolicy::Uniform).unwrap();
+    /// // The paper's §3.3 worked example: 16×16 and 6×6 tiles moving with
+    /// // uniform strides 4 and 2, in α² = 25 movements.
+    /// assert_eq!(plan.tiles, vec![16, 6]);
+    /// assert_eq!(plan.strides, vec![4, 2]);
+    /// assert_eq!(plan.alpha(), 5);
+    /// assert!(plan.covers_output());
+    /// ```
     pub fn build(
         specs: &[FusedConvSpec],
         r_out: usize,

@@ -12,15 +12,22 @@ use std::time::{Duration, Instant};
 /// Timing result for one benchmark.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// `group/name` label of the benchmark.
     pub name: String,
+    /// Median per-iteration duration across samples.
     pub median: Duration,
+    /// Fastest sample.
     pub min: Duration,
+    /// Slowest sample.
     pub max: Duration,
+    /// Samples actually taken (time budget may cut them short).
     pub samples: usize,
+    /// Iterations per timed sample (calibrated).
     pub iters_per_sample: u64,
 }
 
 impl Measurement {
+    /// Median nanoseconds per iteration.
     pub fn ns_per_iter(&self) -> f64 {
         self.median.as_secs_f64() * 1e9
     }
@@ -49,6 +56,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Runner for a benchmark group (honors the env vars above).
     pub fn new(group: impl Into<String>) -> Self {
         let fast = std::env::var("USEFUSE_BENCH_FAST").ok().as_deref() == Some("1");
         Bench {
@@ -121,6 +129,7 @@ impl Bench {
         self.results.last()
     }
 
+    /// All measurements taken so far.
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }

@@ -1,5 +1,6 @@
 //! Network zoo: layer configurations for the paper's evaluation CNNs.
 
+/// The network definitions (LeNet-5, AlexNet, VGG-16, ResNet-18).
 pub mod zoo;
 
 pub use zoo::{alexnet, by_name, lenet5, resnet18, vgg16, Network};

@@ -11,6 +11,7 @@ use crate::geometry::{FusedConvSpec, PoolSpec};
 /// A convolutional network: ordered conv(+pool) stack with metadata.
 #[derive(Clone, Debug)]
 pub struct Network {
+    /// Display name ("LeNet-5", …).
     pub name: &'static str,
     /// Input spatial dimension (square).
     pub input_dim: usize,

@@ -195,10 +195,13 @@ pub fn fig13(rt: &Runtime, samples_per_filter: usize) -> Result<(Vec<(String, f6
 /// Per-pyramid result for Fig. 14.
 #[derive(Clone, Debug)]
 pub struct Fig14Row {
+    /// Pyramid label (ResNet block tag).
     pub pyramid: String,
-    /// Effective cycles: (B3, online no-END, online + END).
+    /// Effective cycles under Baseline-3.
     pub b3: f64,
+    /// Effective cycles with online arithmetic, no END.
     pub online: f64,
+    /// Effective cycles with online arithmetic + END gating.
     pub online_end: f64,
 }
 

@@ -10,8 +10,11 @@ use crate::util::table::{fmt_count, fmt_duration_us, fmt_ops_per_s, Table};
 /// One row of Table 1/2: a layer (or the fused stack) under one design.
 #[derive(Clone, Debug)]
 pub struct PerfRow {
+    /// Network the layer belongs to.
     pub network: &'static str,
+    /// Layer (or fused-stack) label.
     pub layer: String,
+    /// Operation count (Eq. (2) convention).
     pub ops: u64,
     /// (design name, duration µs, performance ops/s)
     pub entries: Vec<(&'static str, f64, f64)>,
@@ -132,12 +135,19 @@ pub fn table2(m: &CycleModel) -> (Vec<PerfRow>, Table) {
 /// One row of Table 3/4.
 #[derive(Clone, Debug)]
 pub struct ResourceRow {
+    /// Network evaluated.
     pub network: &'static str,
+    /// Design-point display name.
     pub design: &'static str,
+    /// LUT usage.
     pub luts: f64,
+    /// 36 Kb BRAM blocks used.
     pub bram: f64,
+    /// Achieved throughput, ops/s.
     pub throughput: f64,
+    /// Latency of the fused stack, µs.
     pub latency_us: f64,
+    /// Speedup vs Baseline-3.
     pub speedup: f64,
 }
 
@@ -198,11 +208,17 @@ pub fn table_resources(pattern: Pattern, m: &CycleModel) -> (Vec<ResourceRow>, T
 /// One row of Table 5 (ours + cited literature rows).
 #[derive(Clone, Debug)]
 pub struct Table5Row {
+    /// Workload model (VGG-16 / ResNet-18).
     pub model: &'static str,
+    /// Accelerator name (ours or cited).
     pub design: String,
+    /// Clock frequency, MHz.
     pub freq_mhz: f64,
+    /// Throughput, GOPS.
     pub throughput_gops: f64,
+    /// End-to-end latency, ms (when reported).
     pub latency_ms: Option<f64>,
+    /// Whether the row is one of this paper's designs.
     pub ours: bool,
 }
 

@@ -1,48 +1,105 @@
-//! PJRT runtime: load AOT-compiled HLO-text programs, bind their weight
-//! parameters once, and execute them from the coordinator's hot path.
+//! Executable registry behind the coordinator's hot path.
 //!
-//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
-//! format (`HloModuleProto::from_text_file` reassigns instruction ids, so
-//! jax ≥ 0.5 modules load on xla_extension 0.5.1).
+//! Two backends live behind one [`Runtime`] front:
+//!
+//! - **PJRT** (`--features pjrt`): loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py`, binds their weight
+//!   parameters once, and executes them through the xla_extension
+//!   bindings. HLO *text* is the interchange format
+//!   (`HloModuleProto::from_text_file` reassigns instruction ids, so
+//!   jax ≥ 0.5 modules load on xla_extension 0.5.1).
+//! - **Host** (always available): programs registered as native Rust
+//!   closures via [`Runtime::register_host`]. The worker-pool tests and
+//!   benchmarks use this backend so the serving layer is exercised in
+//!   environments without artifacts or the XLA toolchain.
+//!
+//! Both backends share the same manifest-driven argument validation, and
+//! both serve [`Runtime::execute_stacked`], the single-call batched
+//! entry point the dynamic batcher drains into.
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::manifest::{DType, Manifest, ProgramMeta};
 use super::tensor::Tensor;
 
-/// A loaded, weight-bound executable.
-pub struct Program {
-    pub meta: ProgramMeta,
-    exe: xla::PjRtLoadedExecutable,
-    /// Weight literals in parameter order (bound at load time; the
-    /// request path only supplies the runtime inputs).
-    weights: Vec<xla::Literal>,
+/// A native program implementation: `(tensors, scalars) -> outputs`.
+pub type HostFn = Box<dyn Fn(&[&Tensor], &[i32]) -> Result<Vec<Tensor>> + Send + Sync>;
+
+enum Exec {
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        exe: xla::PjRtLoadedExecutable,
+        /// Weight literals in parameter order (bound at load time; the
+        /// request path only supplies the runtime inputs).
+        weights: Vec<xla::Literal>,
+    },
+    Host(HostFn),
 }
 
-/// The runtime: one PJRT CPU client + the program registry.
+/// A loaded, weight-bound executable (PJRT) or registered host closure.
+pub struct Program {
+    /// Manifest metadata: input/output shapes, weight binding order.
+    pub meta: ProgramMeta,
+    exec: Exec,
+}
+
+/// One batched execution through [`Runtime::execute_stacked`].
+#[derive(Debug)]
+pub struct StackedRun {
+    /// Per-request outputs, in submission order.
+    pub outputs: Vec<Vec<Tensor>>,
+    /// Whether one stacked call served the whole batch (vs a per-request
+    /// fallback loop because no batched program variant exists).
+    pub stacked: bool,
+    /// Name of the program that actually executed.
+    pub program: String,
+}
+
+/// The runtime: program registry plus (under `pjrt`) one PJRT CPU client.
 pub struct Runtime {
+    /// The artifact manifest the registry was built from.
     pub manifest: Manifest,
-    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
+    client: Option<xla::PjRtClient>,
     programs: BTreeMap<String, Program>,
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+/// If `key` names a batched variant of `base` (`{base}_b{N}`), return its
+/// batch capacity `N`. Single source of truth for the variant naming
+/// scheme, shared by [`Runtime::execute_stacked`]'s lookup and the
+/// serving layer's artifact loading.
+pub fn batched_suffix(key: &str, base: &str) -> Option<usize> {
+    key.strip_prefix(base)?
+        .strip_prefix("_b")?
+        .parse::<usize>()
+        .ok()
+}
+
 impl Runtime {
-    /// Create the client and load + compile the named programs (or all
-    /// programs if `names` is `None`).
+    /// Create the PJRT client and load + compile the named programs (or
+    /// all programs if `names` is `None`). Without the `pjrt` feature
+    /// this only succeeds for an empty program list — use
+    /// [`Runtime::host`] + [`Runtime::register_host`] instead.
     pub fn load(manifest: Manifest, names: Option<&[&str]>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
         let mut rt = Runtime {
             manifest,
-            client,
+            #[cfg(feature = "pjrt")]
+            client: None,
             programs: BTreeMap::new(),
         };
+        #[cfg(feature = "pjrt")]
+        {
+            rt.client =
+                Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?);
+        }
         let all: Vec<String> = match names {
             Some(ns) => ns.iter().map(|s| s.to_string()).collect(),
             None => rt.manifest.programs.keys().cloned().collect(),
@@ -53,7 +110,34 @@ impl Runtime {
         Ok(rt)
     }
 
-    /// Load one program lazily.
+    /// A runtime with no compiled programs, ready for
+    /// [`Runtime::register_host`] — the backend used by tests and the
+    /// serving benchmarks when no AOT artifacts exist.
+    pub fn host(manifest: Manifest) -> Runtime {
+        Runtime {
+            manifest,
+            #[cfg(feature = "pjrt")]
+            client: None,
+            programs: BTreeMap::new(),
+        }
+    }
+
+    /// Register a native program under `name`. The closure is validated
+    /// against `meta` exactly like a PJRT executable: callers must pass
+    /// tensors/scalars matching the runtime-input prefix, and the
+    /// closure's outputs must match `meta.outputs`.
+    pub fn register_host(&mut self, name: &str, meta: ProgramMeta, f: HostFn) {
+        self.manifest.programs.insert(name.to_string(), meta.clone());
+        self.programs.insert(
+            name.to_string(),
+            Program {
+                meta,
+                exec: Exec::Host(f),
+            },
+        );
+    }
+
+    /// Load one program lazily (PJRT backend).
     pub fn load_program(&mut self, name: &str) -> Result<()> {
         if self.programs.contains_key(name) {
             return Ok(());
@@ -64,55 +148,77 @@ impl Runtime {
             .get(name)
             .ok_or_else(|| anyhow!("unknown program '{name}'"))?
             .clone();
-        let path = meta
-            .file
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        #[cfg(feature = "pjrt")]
+        {
+            let path = meta
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .as_ref()
+                .ok_or_else(|| anyhow!("runtime has no PJRT client (built via Runtime::host)"))?
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
 
-        // Bind weights.
-        let mut weights = Vec::with_capacity(meta.weights.len());
-        for (i, key) in meta.weights.iter().enumerate() {
-            let blob = self
-                .manifest
-                .weights
-                .get(key)
-                .ok_or_else(|| anyhow!("{name}: missing weight blob '{key}'"))?
-                .clone();
-            let data = self.manifest.read_f32(&blob)?;
-            let want = &meta.inputs[meta.n_runtime_inputs + i];
-            if blob.shape != want.shape {
-                bail!(
-                    "{name}: weight '{key}' shape {:?} != program input {:?}",
-                    blob.shape,
-                    want.shape
-                );
+            // Bind weights.
+            let mut weights = Vec::with_capacity(meta.weights.len());
+            for (i, key) in meta.weights.iter().enumerate() {
+                let blob = self
+                    .manifest
+                    .weights
+                    .get(key)
+                    .ok_or_else(|| anyhow!("{name}: missing weight blob '{key}'"))?
+                    .clone();
+                let data = self.manifest.read_f32(&blob)?;
+                let want = &meta.inputs[meta.n_runtime_inputs + i];
+                if blob.shape != want.shape {
+                    bail!(
+                        "{name}: weight '{key}' shape {:?} != program input {:?}",
+                        blob.shape,
+                        want.shape
+                    );
+                }
+                weights.push(literal_f32(&blob.shape, &data)?);
             }
-            weights.push(literal_f32(&blob.shape, &data)?);
+            self.programs.insert(
+                name.to_string(),
+                Program {
+                    meta,
+                    exec: Exec::Pjrt { exe, weights },
+                },
+            );
+            Ok(())
         }
-        self.programs.insert(name.to_string(), Program { meta, exe, weights });
-        Ok(())
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = meta;
+            bail!(
+                "program '{name}': this build has no PJRT backend — rebuild with \
+                 `--features pjrt` (see DESIGN.md §Runtime) or register a host \
+                 program via Runtime::register_host"
+            )
+        }
     }
 
+    /// Look up a loaded program.
     pub fn program(&self, name: &str) -> Result<&Program> {
         self.programs
             .get(name)
             .ok_or_else(|| anyhow!("program '{name}' not loaded"))
     }
 
-    /// Execute a program: `tensors` fills the leading f32 runtime inputs,
-    /// `scalars` the i32 scalar inputs, matched against the manifest in
-    /// order. Returns all outputs as host tensors.
-    pub fn execute(&self, name: &str, tensors: &[&Tensor], scalars: &[i32]) -> Result<Vec<Tensor>> {
-        let prog = self.program(name)?;
-        let meta = &prog.meta;
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(meta.inputs.len());
+    /// Validate `tensors`/`scalars` against the program's runtime-input
+    /// prefix. Returns an error on any count or shape mismatch.
+    fn check_args(
+        meta: &ProgramMeta,
+        name: &str,
+        tensors: &[&Tensor],
+        scalars: &[i32],
+    ) -> Result<()> {
         let (mut ti, mut si) = (0usize, 0usize);
         for input in meta.inputs.iter().take(meta.n_runtime_inputs) {
             match input.dtype {
@@ -123,14 +229,12 @@ impl Runtime {
                     if t.shape != input.shape {
                         bail!("{name}: arg {ti} shape {:?} != {:?}", t.shape, input.shape);
                     }
-                    args.push(literal_f32(&t.shape, &t.data)?);
                     ti += 1;
                 }
                 DType::I32 => {
-                    let v = *scalars
+                    scalars
                         .get(si)
                         .ok_or_else(|| anyhow!("{name}: not enough scalar args"))?;
-                    args.push(xla::Literal::scalar(v));
                     si += 1;
                 }
             }
@@ -138,13 +242,75 @@ impl Runtime {
         if ti != tensors.len() || si != scalars.len() {
             bail!("{name}: extra args (used {ti} tensors, {si} scalars)");
         }
-        // Weight literals are cloned cheaply? No — Literal is not Clone;
-        // rebuild arg list by borrowing: execute takes Borrow<Literal>.
-        let mut all: Vec<&xla::Literal> = args.iter().collect();
-        all.extend(prog.weights.iter());
+        Ok(())
+    }
 
-        let result = prog
-            .exe
+    /// Execute a program: `tensors` fills the leading f32 runtime inputs,
+    /// `scalars` the i32 scalar inputs, matched against the manifest in
+    /// order. Returns all outputs as host tensors.
+    pub fn execute(&self, name: &str, tensors: &[&Tensor], scalars: &[i32]) -> Result<Vec<Tensor>> {
+        let prog = self.program(name)?;
+        let meta = &prog.meta;
+        Self::check_args(meta, name, tensors, scalars)?;
+        match &prog.exec {
+            Exec::Host(f) => {
+                let outs = f(tensors, scalars)?;
+                if outs.len() != meta.outputs.len() {
+                    bail!(
+                        "{name}: host program returned {} outputs, manifest says {}",
+                        outs.len(),
+                        meta.outputs.len()
+                    );
+                }
+                for (i, (out, om)) in outs.iter().zip(&meta.outputs).enumerate() {
+                    if out.shape != om.shape {
+                        bail!(
+                            "{name}: host output {i} shape {:?} != manifest {:?}",
+                            out.shape,
+                            om.shape
+                        );
+                    }
+                }
+                Ok(outs)
+            }
+            #[cfg(feature = "pjrt")]
+            Exec::Pjrt { exe, weights } => {
+                Self::execute_pjrt(name, meta, exe, weights, tensors, scalars)
+            }
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute_pjrt(
+        name: &str,
+        meta: &ProgramMeta,
+        exe: &xla::PjRtLoadedExecutable,
+        weights: &[xla::Literal],
+        tensors: &[&Tensor],
+        scalars: &[i32],
+    ) -> Result<Vec<Tensor>> {
+        use anyhow::Context as _;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(meta.inputs.len());
+        let (mut ti, mut si) = (0usize, 0usize);
+        for input in meta.inputs.iter().take(meta.n_runtime_inputs) {
+            match input.dtype {
+                DType::F32 => {
+                    let t = tensors[ti];
+                    args.push(literal_f32(&t.shape, &t.data)?);
+                    ti += 1;
+                }
+                DType::I32 => {
+                    args.push(xla::Literal::scalar(scalars[si]));
+                    si += 1;
+                }
+            }
+        }
+        // Literal is not Clone; execute takes Borrow<Literal>, so borrow
+        // the request args and the pre-bound weight literals.
+        let mut all: Vec<&xla::Literal> = args.iter().collect();
+        all.extend(weights.iter());
+
+        let result = exe
             .execute::<&xla::Literal>(&all)
             .map_err(|e| anyhow!("executing {name}: {e}"))?;
         let lit = result[0][0]
@@ -167,6 +333,127 @@ impl Runtime {
             outs.push(Tensor::new(om.shape.clone(), data).context("output shape")?);
         }
         Ok(outs)
+    }
+
+    /// Smallest loaded batched variant `{name}_b{N}` with `N ≥ want`.
+    fn batched_variant(&self, name: &str, want: usize) -> Option<(String, usize)> {
+        let mut best: Option<(String, usize)> = None;
+        for key in self.programs.keys() {
+            let Some(n) = batched_suffix(key, name) else {
+                continue;
+            };
+            if n >= want && best.as_ref().map_or(true, |&(_, bn)| n < bn) {
+                best = Some((key.clone(), n));
+            }
+        }
+        best
+    }
+
+    /// Largest-capacity loaded batched variant of `name`, if any.
+    fn largest_variant(&self, name: &str) -> Option<(String, usize)> {
+        let mut best: Option<(String, usize)> = None;
+        for key in self.programs.keys() {
+            let Some(n) = batched_suffix(key, name) else {
+                continue;
+            };
+            if best.as_ref().map_or(true, |&(_, bn)| n > bn) {
+                best = Some((key.clone(), n));
+            }
+        }
+        best
+    }
+
+    /// Execute `batch` requests of program `name` as **one stacked
+    /// call** when a batched program variant `{name}_b{N}` (emitted by
+    /// `aot.py`, or host-registered) is available: inputs are stacked
+    /// along a new leading axis (zero-padded to N), executed once, and
+    /// every output is split back per request. Batches larger than the
+    /// largest variant are split into stacked chunks of its capacity;
+    /// a batch of one prefers the cheaper unpadded program; and only
+    /// when no variant exists at all does this degrade to a per-request
+    /// loop. Callers always get per-request outputs in submission
+    /// order.
+    ///
+    /// `scalars` are broadcast to the batched program unchanged (the
+    /// classifier programs take none).
+    pub fn execute_stacked(
+        &self,
+        name: &str,
+        batch: &[&Tensor],
+        scalars: &[i32],
+    ) -> Result<StackedRun> {
+        if batch.is_empty() {
+            bail!("{name}: empty batch");
+        }
+        // A single request gains nothing from a zero-padded stacked call
+        // (a b4 variant costs ~4× the single-image program); prefer the
+        // plain program when it is loaded.
+        let prefer_plain = batch.len() == 1 && self.programs.contains_key(name);
+        if !prefer_plain {
+            if let Some((variant, n)) = self.batched_variant(name, batch.len()) {
+                let stacked = Tensor::stack(batch, n)?;
+                let outs = self.execute(&variant, &[&stacked], scalars)?;
+                // Split every program output along the leading batch axis.
+                let mut split: Vec<std::vec::IntoIter<Tensor>> = Vec::with_capacity(outs.len());
+                for o in outs {
+                    let parts = o.unstack()?;
+                    if parts.len() != n {
+                        bail!(
+                            "{variant}: output leading axis {} != batch capacity {n}",
+                            parts.len()
+                        );
+                    }
+                    split.push(parts.into_iter());
+                }
+                // Transpose [output][slot] -> [request][output] by moving
+                // the tensors out; the zero-padding tail slots are dropped.
+                let mut outputs: Vec<Vec<Tensor>> = Vec::with_capacity(batch.len());
+                for _ in 0..batch.len() {
+                    outputs.push(
+                        split
+                            .iter_mut()
+                            .map(|parts| parts.next().expect("length checked above"))
+                            .collect(),
+                    );
+                }
+                return Ok(StackedRun {
+                    outputs,
+                    stacked: true,
+                    program: variant,
+                });
+            }
+            // No single variant fits the whole batch: split it into
+            // chunks of the largest available capacity so oversized
+            // batches still amortize (e.g. 10 requests over b8 become
+            // one stacked b8 call + one b4/plain tail, not 10 calls).
+            if batch.len() > 1 {
+                if let Some((primary, cap)) = self.largest_variant(name) {
+                    if cap >= 2 {
+                        let mut outputs = Vec::with_capacity(batch.len());
+                        let mut any_stacked = false;
+                        for chunk in batch.chunks(cap) {
+                            let run = self.execute_stacked(name, chunk, scalars)?;
+                            any_stacked |= run.stacked;
+                            outputs.extend(run.outputs);
+                        }
+                        return Ok(StackedRun {
+                            outputs,
+                            stacked: any_stacked,
+                            program: primary,
+                        });
+                    }
+                }
+            }
+        }
+        let mut outputs = Vec::with_capacity(batch.len());
+        for &t in batch {
+            outputs.push(self.execute(name, &[t], scalars)?);
+        }
+        Ok(StackedRun {
+            outputs,
+            stacked: false,
+            program: name.to_string(),
+        })
     }
 
     /// Load a dataset blob as host tensors (first axis = batch).
@@ -200,7 +487,179 @@ impl Runtime {
         self.manifest.read_i32(&blob)
     }
 
+    /// Backend platform name: the PJRT platform, or `"host"` for the
+    /// native-closure backend.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        if let Some(c) = &self.client {
+            return c.platform_name();
+        }
+        "host".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorMeta;
+
+    /// Host runtime with a scalar-summing program and its _b4 variant.
+    fn toy_runtime() -> Runtime {
+        let mut rt = Runtime::host(Manifest::empty("."));
+        let meta = ProgramMeta {
+            file: std::path::PathBuf::new(),
+            inputs: vec![TensorMeta {
+                shape: vec![2, 2, 1],
+                dtype: DType::F32,
+            }],
+            outputs: vec![TensorMeta {
+                shape: vec![3],
+                dtype: DType::F32,
+            }],
+            n_runtime_inputs: 1,
+            weights: vec![],
+        };
+        rt.register_host(
+            "toy",
+            meta.clone(),
+            Box::new(|ts, _| {
+                let sum: f32 = ts[0].data.iter().sum();
+                Tensor::new(vec![3], vec![sum, 2.0 * sum, -sum]).map(|t| vec![t])
+            }),
+        );
+        let bmeta = ProgramMeta {
+            file: std::path::PathBuf::new(),
+            inputs: vec![TensorMeta {
+                shape: vec![4, 2, 2, 1],
+                dtype: DType::F32,
+            }],
+            outputs: vec![TensorMeta {
+                shape: vec![4, 3],
+                dtype: DType::F32,
+            }],
+            n_runtime_inputs: 1,
+            weights: vec![],
+        };
+        rt.register_host(
+            "toy_b4",
+            bmeta,
+            Box::new(|ts, _| {
+                let mut out = Vec::with_capacity(12);
+                for item in ts[0].unstack()? {
+                    let sum: f32 = item.data.iter().sum();
+                    out.extend_from_slice(&[sum, 2.0 * sum, -sum]);
+                }
+                Tensor::new(vec![4, 3], out).map(|t| vec![t])
+            }),
+        );
+        rt
+    }
+
+    #[test]
+    fn host_program_executes_and_validates() {
+        let rt = toy_runtime();
+        let img = Tensor::new(vec![2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let outs = rt.execute("toy", &[&img], &[]).unwrap();
+        assert_eq!(outs[0].data, vec![10.0, 20.0, -10.0]);
+        // Wrong input shape is rejected by the shared validation.
+        let bad = Tensor::zeros(vec![3, 3, 1]);
+        assert!(rt.execute("toy", &[&bad], &[]).is_err());
+        // Extra args are rejected.
+        assert!(rt.execute("toy", &[&img, &img], &[]).is_err());
+        assert!(rt.execute("toy", &[&img], &[7]).is_err());
+    }
+
+    #[test]
+    fn stacked_execution_uses_batched_variant() {
+        let rt = toy_runtime();
+        let a = Tensor::new(vec![2, 2, 1], vec![1.0; 4]).unwrap();
+        let b = Tensor::new(vec![2, 2, 1], vec![2.0; 4]).unwrap();
+        let run = rt.execute_stacked("toy", &[&a, &b], &[]).unwrap();
+        assert!(run.stacked);
+        assert_eq!(run.program, "toy_b4");
+        assert_eq!(run.outputs.len(), 2);
+        assert_eq!(run.outputs[0][0].data, vec![4.0, 8.0, -4.0]);
+        assert_eq!(run.outputs[1][0].data, vec![8.0, 16.0, -8.0]);
+        // A batch of one prefers the cheaper unpadded program.
+        let single = rt.execute_stacked("toy", &[&a], &[]).unwrap();
+        assert!(!single.stacked);
+        assert_eq!(single.program, "toy");
+        assert_eq!(single.outputs[0][0].data, vec![4.0, 8.0, -4.0]);
+    }
+
+    #[test]
+    fn batched_suffix_parses_variant_names() {
+        assert_eq!(batched_suffix("lenet_infer_b8", "lenet_infer"), Some(8));
+        assert_eq!(batched_suffix("lenet_infer", "lenet_infer"), None);
+        assert_eq!(batched_suffix("lenet_infer_bx", "lenet_infer"), None);
+        assert_eq!(batched_suffix("other_b8", "lenet_infer"), None);
+    }
+
+    #[test]
+    fn stacked_execution_matches_single_calls() {
+        let rt = toy_runtime();
+        let imgs: Vec<Tensor> = (0..3)
+            .map(|i| Tensor::new(vec![2, 2, 1], vec![i as f32; 4]).unwrap())
+            .collect();
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        let run = rt.execute_stacked("toy", &refs, &[]).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            let single = rt.execute("toy", &[img], &[]).unwrap();
+            assert_eq!(run.outputs[i], single, "request {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_batch_is_chunked_through_the_variant() {
+        let rt = toy_runtime();
+        // 5 requests > b4 capacity: one stacked chunk of 4 + a plain 1.
+        let imgs: Vec<Tensor> = (0..5)
+            .map(|i| Tensor::new(vec![2, 2, 1], vec![i as f32; 4]).unwrap())
+            .collect();
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        let run = rt.execute_stacked("toy", &refs, &[]).unwrap();
+        assert!(run.stacked);
+        assert_eq!(run.program, "toy_b4");
+        assert_eq!(run.outputs.len(), 5);
+        for (i, img) in imgs.iter().enumerate() {
+            let single = rt.execute("toy", &[img], &[]).unwrap();
+            assert_eq!(run.outputs[i], single, "request {i}");
+        }
+    }
+
+    #[test]
+    fn stacked_falls_back_without_variant() {
+        // A runtime with no batched variant at all loops per request.
+        let mut rt = Runtime::host(Manifest::empty("."));
+        let meta = ProgramMeta {
+            file: std::path::PathBuf::new(),
+            inputs: vec![TensorMeta {
+                shape: vec![2, 2, 1],
+                dtype: DType::F32,
+            }],
+            outputs: vec![TensorMeta {
+                shape: vec![1],
+                dtype: DType::F32,
+            }],
+            n_runtime_inputs: 1,
+            weights: vec![],
+        };
+        rt.register_host(
+            "solo",
+            meta,
+            Box::new(|ts, _| {
+                Tensor::new(vec![1], vec![ts[0].data.iter().sum()]).map(|t| vec![t])
+            }),
+        );
+        let imgs: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(vec![2, 2, 1])).collect();
+        let refs: Vec<&Tensor> = imgs.iter().collect();
+        let run = rt.execute_stacked("solo", &refs, &[]).unwrap();
+        assert!(!run.stacked);
+        assert_eq!(run.program, "solo");
+        assert_eq!(run.outputs.len(), 3);
+        // Empty batches are rejected.
+        assert!(rt.execute_stacked("solo", &[], &[]).is_err());
+        // Unknown programs fail to load without the pjrt feature.
+        assert!(rt.load_program("nope").is_err());
     }
 }

@@ -12,7 +12,9 @@ use crate::util::json::{parse, Json};
 /// Tensor dtype in the manifest.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE-754 float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -29,15 +31,20 @@ impl DType {
 /// Shape + dtype of one program input/output.
 #[derive(Clone, Debug)]
 pub struct TensorMeta {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 /// One AOT-compiled program.
 #[derive(Clone, Debug)]
 pub struct ProgramMeta {
+    /// HLO-text artifact path (unused for host-registered programs).
     pub file: PathBuf,
+    /// All program inputs: runtime inputs first, then bound weights.
     pub inputs: Vec<TensorMeta>,
+    /// Program outputs, in tuple order.
     pub outputs: Vec<TensorMeta>,
     /// How many leading inputs are provided at call time (the rest are
     /// weights bound at load time, in `weights` order).
@@ -49,8 +56,11 @@ pub struct ProgramMeta {
 /// A weight or dataset blob on disk.
 #[derive(Clone, Debug)]
 pub struct BlobMeta {
+    /// On-disk path of the little-endian binary blob.
     pub file: PathBuf,
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
@@ -58,22 +68,34 @@ pub struct BlobMeta {
 /// Algorithm 3/4 implementation at load time).
 #[derive(Clone, Debug)]
 pub struct GeometryMeta {
+    /// Final-level output region side R_Q.
     pub r_out: usize,
+    /// Per-level input tile sides H_1..H_Q (Algorithm 3).
     pub tiles: Vec<usize>,
+    /// Per-level uniform tile strides S^T_1..S^T_Q (Algorithm 4).
     pub strides: Vec<usize>,
+    /// Movement count per dimension (the pyramid's α).
     pub alpha: usize,
+    /// Per-level start offsets in padded input coordinates.
     pub starts: Vec<i64>,
+    /// The fused conv stack the geometry was planned for.
     pub levels: Vec<FusedConvSpec>,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact directory all blob/program paths are relative to.
     pub dir: PathBuf,
+    /// Operand precision in bits the artifacts were built for.
     pub precision: u32,
+    /// AOT-compiled (or host-registered) programs by name.
     pub programs: BTreeMap<String, ProgramMeta>,
+    /// Weight blobs by key.
     pub weights: BTreeMap<String, BlobMeta>,
+    /// Dataset blobs by key.
     pub data: BTreeMap<String, BlobMeta>,
+    /// Fusion geometry per fused group, cross-checked at executor build.
     pub geometry: BTreeMap<String, GeometryMeta>,
 }
 
@@ -106,6 +128,21 @@ fn blob_meta(dir: &Path, v: &Json, default_dtype: DType) -> Result<BlobMeta> {
 }
 
 impl Manifest {
+    /// Empty in-memory manifest (no artifacts on disk) — the starting
+    /// point for host-program runtimes built with
+    /// [`Runtime::host`](crate::runtime::Runtime::host), used by the
+    /// tests and the worker-pool benchmarks.
+    pub fn empty(dir: impl Into<PathBuf>) -> Manifest {
+        Manifest {
+            dir: dir.into(),
+            precision: crate::DEFAULT_PRECISION,
+            programs: BTreeMap::new(),
+            weights: BTreeMap::new(),
+            data: BTreeMap::new(),
+            geometry: BTreeMap::new(),
+        }
+    }
+
     /// Load and validate `dir/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();

@@ -1,10 +1,14 @@
-//! PJRT runtime: artifact manifest, host tensors, and the executable
-//! registry that runs the AOT-compiled JAX/Pallas programs.
+//! PJRT/host runtime: artifact manifest, host tensors, and the
+//! executable registry that runs the AOT-compiled JAX/Pallas programs
+//! (or natively-registered host closures in toolchain-free builds).
 
+/// Executable registry and the two execution backends.
 pub mod client;
+/// Artifact manifest (the `aot.py` ↔ Rust contract).
 pub mod manifest;
+/// Dense host tensors and the executor's slicing/assembly ops.
 pub mod tensor;
 
-pub use client::{Program, Runtime};
+pub use client::{batched_suffix, HostFn, Program, Runtime, StackedRun};
 pub use manifest::{BlobMeta, DType, GeometryMeta, Manifest, ProgramMeta, TensorMeta};
 pub use tensor::Tensor;

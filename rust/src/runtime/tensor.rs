@@ -6,11 +6,14 @@ use anyhow::{bail, Result};
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major element storage; `data.len() == shape.iter().product()`.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// Build a tensor, checking that `data` matches `shape`.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -19,6 +22,7 @@ impl Tensor {
         Ok(Tensor { shape, data })
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor {
@@ -27,12 +31,60 @@ impl Tensor {
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
+    }
+
+    /// Stack `items` (all of identical shape) along a new leading axis of
+    /// size `pad_to ≥ items.len()`, zero-filling the padding slots — the
+    /// input half of the dynamic batcher's single stacked call.
+    pub fn stack(items: &[&Tensor], pad_to: usize) -> Result<Tensor> {
+        let Some(first) = items.first() else {
+            bail!("stack of zero tensors");
+        };
+        if pad_to < items.len() {
+            bail!("stack: pad_to {} < batch {}", pad_to, items.len());
+        }
+        let item_len = first.len();
+        let mut shape = Vec::with_capacity(first.shape.len() + 1);
+        shape.push(pad_to);
+        shape.extend_from_slice(&first.shape);
+        let mut data = vec![0.0f32; pad_to * item_len];
+        for (i, t) in items.iter().enumerate() {
+            if t.shape != first.shape {
+                bail!(
+                    "stack: item {} shape {:?} != item 0 shape {:?}",
+                    i,
+                    t.shape,
+                    first.shape
+                );
+            }
+            data[i * item_len..(i + 1) * item_len].copy_from_slice(&t.data);
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Split along the leading axis into `shape[0]` tensors of the
+    /// remaining shape — the output half of the stacked batch call.
+    pub fn unstack(&self) -> Result<Vec<Tensor>> {
+        if self.shape.is_empty() {
+            bail!("unstack of a scalar tensor");
+        }
+        let n = self.shape[0];
+        let item_shape: Vec<usize> = self.shape[1..].to_vec();
+        let item_len: usize = item_shape.iter().product();
+        Ok((0..n)
+            .map(|i| Tensor {
+                shape: item_shape.clone(),
+                data: self.data[i * item_len..(i + 1) * item_len].to_vec(),
+            })
+            .collect())
     }
 
     /// Strides (row-major, in elements).
@@ -223,6 +275,23 @@ mod tests {
         let p = t.maxpool(2, 2).unwrap();
         assert_eq!(p.shape, vec![2, 2, 1]);
         assert_eq!(p.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn stack_pads_and_unstacks() {
+        let a = seq(vec![2, 2, 1]);
+        let b = Tensor::zeros(vec![2, 2, 1]);
+        let stacked = Tensor::stack(&[&a, &b], 4).unwrap();
+        assert_eq!(stacked.shape, vec![4, 2, 2, 1]);
+        let parts = stacked.unstack().unwrap();
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+        assert_eq!(parts[3], b); // zero padding
+        assert!(Tensor::stack(&[], 2).is_err());
+        assert!(Tensor::stack(&[&a], 0).is_err());
+        let c = seq(vec![3, 1, 1]);
+        assert!(Tensor::stack(&[&a, &c], 2).is_err());
     }
 
     #[test]

@@ -33,13 +33,18 @@ pub enum Pattern {
 /// A fully-specified design point.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DesignPoint {
+    /// Display name used in tables ("Proposed", "Baseline-1", …).
     pub name: &'static str,
+    /// Arithmetic paradigm of the compute units.
     pub arith: Arith,
+    /// Compute pattern (DS-1 spatial / DS-2 temporal).
     pub pattern: Pattern,
+    /// Tile-stride policy of the fusion pyramid.
     pub stride: StridePolicy,
 }
 
 impl DesignPoint {
+    /// The proposed design: online arithmetic + uniform stride.
     pub const fn proposed(pattern: Pattern) -> DesignPoint {
         DesignPoint {
             name: "Proposed",
@@ -48,6 +53,7 @@ impl DesignPoint {
             stride: StridePolicy::Uniform,
         }
     }
+    /// Baseline-1: conventional arithmetic + conv-stride movement.
     pub const fn baseline1(pattern: Pattern) -> DesignPoint {
         DesignPoint {
             name: "Baseline-1",
@@ -56,6 +62,7 @@ impl DesignPoint {
             stride: StridePolicy::ConvStride,
         }
     }
+    /// Baseline-2: online arithmetic + conv-stride movement.
     pub const fn baseline2(pattern: Pattern) -> DesignPoint {
         DesignPoint {
             name: "Baseline-2",
@@ -64,6 +71,7 @@ impl DesignPoint {
             stride: StridePolicy::ConvStride,
         }
     }
+    /// Baseline-3: conventional arithmetic + uniform stride.
     pub const fn baseline3(pattern: Pattern) -> DesignPoint {
         DesignPoint {
             name: "Baseline-3",

@@ -69,6 +69,7 @@ pub struct LayerEnergy {
 /// Energy model for the compute datapath of one conv layer.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EnergyModel {
+    /// Per-operation energy parameters.
     pub params: EnergyParams,
     // Precision (cycles per full SOP digit stream).
 }

@@ -18,14 +18,18 @@ use crate::geometry::{PyramidPlan, StridePolicy};
 /// Traffic breakdown in bytes.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Traffic {
+    /// Input feature-map bytes fetched from off-chip.
     pub input_bytes: f64,
+    /// Weight bytes fetched from off-chip.
     pub weight_bytes: f64,
+    /// Final output feature-map bytes written off-chip.
     pub output_bytes: f64,
     /// Intermediate feature-map spills (zero for uniform-stride fusion).
     pub intermediate_bytes: f64,
 }
 
 impl Traffic {
+    /// Total off-chip bytes moved.
     pub fn total(&self) -> f64 {
         self.input_bytes + self.weight_bytes + self.output_bytes + self.intermediate_bytes
     }

@@ -2,11 +2,17 @@
 //! (Eqs. 3–4), memory traffic / operational intensity, energy, and FPGA
 //! resources.
 
+/// Cycle/latency model (paper Eq. 3-6).
 pub mod cycles;
+/// The evaluated design points (Proposed, Baselines 1-3).
 pub mod design;
+/// Energy model with END-gated activity factors.
 pub mod energy;
+/// Off-chip memory-traffic model and operational intensity.
 pub mod memory;
+/// FPGA resource (LUT/BRAM) model.
 pub mod resources;
+/// Roofline-plot points (Fig. 10/11).
 pub mod roofline;
 
 pub use cycles::CycleModel;

@@ -58,7 +58,9 @@ impl Default for ResourceParams {
 /// Resource report for one design on one fused stack.
 #[derive(Clone, Copy, Debug)]
 pub struct Resources {
+    /// LUT count of the compute + control fabric.
     pub luts: f64,
+    /// 36 Kb BRAM blocks for the reuse buffers.
     pub bram36: f64,
     /// Channel-tiling factor applied to fit `max_mults` (1 = fully
     /// spatial; >1 multiplies the cycle counts of the array).
@@ -68,6 +70,7 @@ pub struct Resources {
 /// Analytic resource model.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ResourceModel {
+    /// Per-primitive resource-cost parameters.
     pub params: ResourceParams,
 }
 

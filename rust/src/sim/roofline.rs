@@ -13,6 +13,7 @@ use crate::geometry::{FusedConvSpec, PyramidPlan};
 /// One point of a performance-vs-OI figure.
 #[derive(Clone, Debug)]
 pub struct RooflinePoint {
+    /// Design-point display name.
     pub design: &'static str,
     /// Operational intensity, ops/byte.
     pub oi: f64,

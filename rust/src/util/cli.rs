@@ -16,9 +16,13 @@ pub struct Args {
 /// Declarative option spec used for usage text and validation.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Whether the option expects a value.
     pub takes_value: bool,
+    /// Default value applied when the option is absent.
     pub default: Option<&'static str>,
 }
 
@@ -66,12 +70,15 @@ impl Args {
         Ok(out)
     }
 
+    /// Whether the boolean flag `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+    /// Raw value of `--name` (default-filled).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
+    /// Value of `--name` parsed as usize.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         self.get(name)
             .map(|v| {
@@ -80,6 +87,7 @@ impl Args {
             })
             .transpose()
     }
+    /// Value of `--name` parsed as f64.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.get(name)
             .map(|v| {
@@ -88,6 +96,7 @@ impl Args {
             })
             .transpose()
     }
+    /// Positional (non-option) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

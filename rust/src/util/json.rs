@@ -12,24 +12,33 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (key-ordered).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Numeric value truncated to i64, if this is a number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
+    /// Non-negative integral numeric value, if this is one.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 {
@@ -39,24 +48,28 @@ impl Json {
             }
         })
     }
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// Object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -81,12 +94,21 @@ impl Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure in the input.
     pub at: usize,
+    /// Human-readable description of what was expected.
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -373,12 +395,15 @@ fn write_into(out: &mut String, v: &Json) {
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
+/// Build a [`Json::Num`].
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
+/// Build a [`Json::Str`].
 pub fn s(v: impl Into<String>) -> Json {
     Json::Str(v.into())
 }
+/// Build a [`Json::Arr`].
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

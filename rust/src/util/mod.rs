@@ -1,8 +1,13 @@
 //! Infrastructure substrates for the offline build environment:
 //! PRNG, JSON, CLI parsing, property testing, table formatting.
 
+/// Tiny command-line parser (clap replacement).
 pub mod cli;
+/// Minimal JSON parser/writer (serde replacement).
 pub mod json;
+/// Mini property-based testing framework (proptest replacement).
 pub mod prop;
+/// Deterministic xoshiro256++ PRNG (rand replacement).
 pub mod rng;
+/// Monospace table rendering for reports.
 pub mod table;

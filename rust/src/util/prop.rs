@@ -40,21 +40,27 @@ impl Gen {
                 as usize;
         self.usize(lo, hi_now.min(hi))
     }
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.f64() * (hi - lo)
     }
+    /// Uniform f32 in `[lo, hi)`.
     pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.f32_range(lo, hi)
     }
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.bool(0.5)
     }
+    /// Uniformly pick one element of a non-empty slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         self.rng.pick(xs)
     }
+    /// Vector of uniform i64 values in `[lo, hi]`.
     pub fn vec_i64(&mut self, len: usize, lo: i64, hi: i64) -> Vec<i64> {
         (0..len).map(|_| self.i64(lo, hi)).collect()
     }
+    /// Vector of uniform f32 values in `[lo, hi)`.
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..len).map(|_| self.f32(lo, hi)).collect()
     }
@@ -67,6 +73,7 @@ impl Gen {
 /// Property failure: message plus replay info.
 #[derive(Debug)]
 pub struct PropError {
+    /// Failure message (already formatted with replay info).
     pub msg: String,
 }
 

@@ -4,7 +4,9 @@
 /// Column alignment.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Align {
+    /// Left-justified cell text.
     Left,
+    /// Right-justified cell text.
     Right,
 }
 
@@ -18,6 +20,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given title.
     pub fn new(title: impl Into<String>) -> Self {
         Table {
             title: title.into(),
@@ -25,6 +28,7 @@ impl Table {
         }
     }
 
+    /// Set the header row (first column left-aligned by default).
     pub fn header(mut self, cols: &[&str]) -> Self {
         self.header = cols.iter().map(|s| s.to_string()).collect();
         self.aligns = vec![Align::Right; self.header.len()];
@@ -34,12 +38,14 @@ impl Table {
         self
     }
 
+    /// Override per-column alignment (must match the header width).
     pub fn aligns(mut self, aligns: &[Align]) -> Self {
         assert_eq!(aligns.len(), self.header.len());
         self.aligns = aligns.to_vec();
         self
     }
 
+    /// Append one data row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),

@@ -1,0 +1,149 @@
+//! Property test: the parallel fusion executor is **bit-identical** to
+//! the serial reference path, for any thread count and random inputs.
+//!
+//! Runs on the host-closure backend with a synthetic (but geometrically
+//! exact) fused LeNet stack: the manifest geometry is generated from the
+//! Rust Algorithm 3/4 plan itself, so `FusionExecutor::new`'s
+//! cross-check exercises the same code path as real artifacts.
+
+use usefuse::coordinator::FusionExecutor;
+use usefuse::geometry::{FusedConvSpec, PoolSpec, PyramidPlan, StridePolicy};
+use usefuse::prop_assert;
+use usefuse::runtime::{DType, GeometryMeta, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
+use usefuse::util::prop::prop_check;
+
+fn lenet_specs() -> Vec<FusedConvSpec> {
+    vec![
+        FusedConvSpec {
+            name: "CL1".into(),
+            k: 5,
+            s: 1,
+            pad: 0,
+            pool: Some(PoolSpec { k: 2, s: 2 }),
+            n_in: 1,
+            m_out: 6,
+            ifm: 32,
+        },
+        FusedConvSpec {
+            name: "CL2".into(),
+            k: 5,
+            s: 1,
+            pad: 0,
+            pool: Some(PoolSpec { k: 2, s: 2 }),
+            n_in: 6,
+            m_out: 16,
+            ifm: 14,
+        },
+    ]
+}
+
+/// Host runtime whose manifest geometry is generated from the Rust plan,
+/// with a deterministic (order-sensitive!) host tile program — if the
+/// parallel path permuted per-movement arithmetic, bits would differ.
+fn toy_runtime() -> Runtime {
+    let specs = lenet_specs();
+    let plan = PyramidPlan::build(&specs, 1, StridePolicy::Uniform).expect("plan");
+    let q = specs.len();
+    let h0 = plan.tiles[0];
+    let n_in = specs[0].n_in;
+    let m_out = specs.last().unwrap().m_out;
+    let r_out = plan.r_out;
+
+    let mut manifest = Manifest::empty(".");
+    manifest.geometry.insert(
+        "toy".to_string(),
+        GeometryMeta {
+            r_out: plan.r_out,
+            tiles: plan.tiles.clone(),
+            strides: plan.strides.clone(),
+            alpha: plan.alpha(),
+            starts: plan.starts.clone(),
+            levels: specs.clone(),
+        },
+    );
+    let mut rt = Runtime::host(manifest);
+
+    let mut inputs = vec![TensorMeta {
+        shape: vec![h0, h0, n_in],
+        dtype: DType::F32,
+    }];
+    for _ in 0..2 * q {
+        inputs.push(TensorMeta {
+            shape: vec![],
+            dtype: DType::I32,
+        });
+    }
+    let meta = ProgramMeta {
+        file: std::path::PathBuf::new(),
+        inputs,
+        outputs: vec![TensorMeta {
+            shape: vec![r_out, r_out, m_out],
+            dtype: DType::F32,
+        }],
+        n_runtime_inputs: 1 + 2 * q,
+        weights: vec![],
+    };
+    rt.register_host(
+        "toy_tile",
+        meta,
+        Box::new(move |ts, sc| {
+            // A fixed-order f32 reduction over the tile: sensitive both
+            // to every element and to accumulation order.
+            let mut acc = 0.0f32;
+            for (i, v) in ts[0].data.iter().enumerate() {
+                acc = acc * 0.9990234 + v * (((i % 13) as f32) - 6.0);
+            }
+            let mut data = Vec::with_capacity(r_out * r_out * m_out);
+            for c in 0..r_out * r_out * m_out {
+                let mut x = acc + c as f32 * 0.125;
+                for (j, &s) in sc.iter().enumerate() {
+                    x += s as f32 * (j + 1) as f32 * 0.0625;
+                }
+                data.push(x);
+            }
+            Tensor::new(vec![r_out, r_out, m_out], data).map(|t| vec![t])
+        }),
+    );
+    rt
+}
+
+#[test]
+fn parallel_run_is_bit_identical_to_serial() {
+    let rt = toy_runtime();
+    let exec = FusionExecutor::new(&rt, "toy").expect("geometry cross-check");
+    assert_eq!(exec.output_shape(), vec![5, 5, 16]);
+    prop_check("parallel ≡ serial fusion execution", 12, |g| {
+        let data = g.vec_f32(32 * 32, -2.0, 2.0);
+        let input = Tensor::new(vec![32, 32, 1], data).unwrap();
+        let (serial, s_stats) = exec.run(&input).unwrap();
+        for threads in [1usize, 2, 4, 7, 64] {
+            let (par, p_stats) = exec.run_parallel(&input, threads).unwrap();
+            prop_assert!(
+                par.shape == serial.shape,
+                "shape drift at {threads} threads: {:?} vs {:?}",
+                par.shape,
+                serial.shape
+            );
+            let identical = par
+                .data
+                .iter()
+                .zip(&serial.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            prop_assert!(identical, "bit drift at {threads} threads");
+            prop_assert!(
+                p_stats.tiles_executed == s_stats.tiles_executed,
+                "tile count drift: {} vs {}",
+                p_stats.tiles_executed,
+                s_stats.tiles_executed
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_run_rejects_bad_input_shape() {
+    let rt = toy_runtime();
+    let exec = FusionExecutor::new(&rt, "toy").expect("geometry cross-check");
+    assert!(exec.run_parallel(&Tensor::zeros(vec![16, 16, 1]), 4).is_err());
+}

@@ -1,0 +1,180 @@
+//! Offline, dependency-free shim for the subset of the `anyhow` API the
+//! `usefuse` crate uses: [`Error`], [`Result`], the [`Context`] trait and
+//! the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build environment has no crates.io access, so this path crate
+//! stands in for the real `anyhow`. Semantics match where it matters:
+//! any `std::error::Error` converts into [`Error`] via `?` (the source
+//! chain is flattened into the message), `context`/`with_context` prefix
+//! a message, and `Error` deliberately does NOT implement
+//! `std::error::Error` (exactly like real anyhow, which is what makes
+//! the blanket `From` impl coherent).
+
+use std::fmt;
+
+/// A string-backed error value compatible with `anyhow::Error` usage.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` defaulting to [`Error`], as in anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Adds `context`/`with_context` to `Result` and `Option`.
+pub trait Context<T> {
+    /// Prefix the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Prefix the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{ctx}: {e}"),
+        })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error {
+            msg: ctx.to_string(),
+        })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error {
+            msg: f().to_string(),
+        })
+    }
+}
+
+/// Construct an [`Error`] from a message literal, a displayable value, or
+/// a format string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(e.to_string().starts_with("outer: "));
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x = {x}").to_string(), "x = 3");
+        assert_eq!(anyhow!("x = {}", x).to_string(), "x = 3");
+        let s = String::from("owned");
+        assert_eq!(anyhow!(s).to_string(), "owned");
+        fn bails() -> Result<()> {
+            bail!("bailed {}", 7)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "bailed 7");
+        fn ensures(v: i32) -> Result<i32> {
+            ensure!(v > 0, "v must be positive, got {v}");
+            Ok(v)
+        }
+        assert!(ensures(1).is_ok());
+        assert!(ensures(-1).unwrap_err().to_string().contains("-1"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Stub of the `xla` (xla_extension) bindings used by `usefuse`'s PJRT
+//! backend.
+//!
+//! The offline build environment cannot ship the real XLA toolchain, so
+//! this crate mirrors exactly the API surface `runtime::client` touches
+//! and fails at *runtime* (never compile time) with a clear message.
+//! Deployments with real PJRT swap the `xla` path dependency in
+//! `rust/Cargo.toml` for the real bindings; no Rust source changes are
+//! needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+const STUB_MSG: &str =
+    "xla stub: this build vendors a placeholder for the xla_extension bindings; \
+     point the `xla` path dependency at the real crate to execute PJRT programs";
+
+/// Error type mirroring `xla::Error` (Display-able, std error).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Marker trait for element types transferable to/from literals.
+pub trait ElementType {}
+impl ElementType for f32 {}
+impl ElementType for i32 {}
+
+/// Host-side literal value (stub).
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: ElementType + Copy>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    /// Build a rank-0 literal.
+    pub fn scalar<T: ElementType>(_v: T) -> Literal {
+        Literal(())
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error(STUB_MSG.into()))
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(STUB_MSG.into()))
+    }
+
+    /// Copy the literal out as a host vector.
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer (stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to the host.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments.
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// PJRT client (stub).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.into()))
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.into()))
+    }
+
+    /// Platform name string.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
