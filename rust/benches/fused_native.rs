@@ -1,0 +1,51 @@
+//! `fused_native` — tile throughput of the artifact-free native fusion
+//! backend: the fused LeNet pyramid executed end-to-end through the
+//! vectorized `F32Engine` and the digit-serial `SopEngine` (SOP + END),
+//! serial and across the thread pool. Also prints each engine's verify
+//! residual and, for the SOP engine, the live END statistics recorded
+//! during the timed runs.
+use usefuse::coordinator::FusionExecutor;
+use usefuse::harness::{black_box, Bench};
+use usefuse::nets;
+use usefuse::runtime::EngineKind;
+
+fn main() {
+    let mut b = Bench::new("fused_native");
+    let specs = nets::lenet5().paper_fusion()[0].clone();
+    let input = nets::random_input(&specs[0], 7);
+
+    for kind in [EngineKind::F32, EngineKind::Sop { n_bits: 8 }] {
+        let (weights, biases) = nets::random_weights(&specs, 42);
+        let exec = FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
+            .expect("uniform LeNet plan");
+        let label = kind.label();
+        b.bench(&format!("lenet_pyramid_{label}"), || {
+            black_box(exec.run(&input).expect("run").1.tiles_executed)
+        });
+        b.bench(&format!("lenet_pyramid_{label}_par4"), || {
+            black_box(exec.run_parallel(&input, 4).expect("run").1.tiles_executed)
+        });
+
+        let (out, stats) = exec.run(&input).expect("run");
+        let tile_us =
+            stats.wall.as_secs_f64() * 1e6 / stats.tiles_executed.max(1) as f64;
+        println!(
+            "engine {label}: {} tiles, {:.1} µs/tile, output {} elems",
+            stats.tiles_executed,
+            tile_us,
+            out.len()
+        );
+        let rel = exec.verify(&input).expect("verify");
+        println!("  verify vs exact f32 golden: max rel err {rel:.3e}");
+        for (j, c) in exec.end_counters().iter().enumerate() {
+            println!(
+                "  level {j}: {} SOPs, {:.1}% terminated, {:.1}% undetermined, \
+                 {:.1}% digits executed",
+                c.sops,
+                100.0 * c.detection_rate(),
+                100.0 * c.undetermined_rate(),
+                100.0 * c.executed_digit_fraction()
+            );
+        }
+    }
+}

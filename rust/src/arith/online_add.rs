@@ -108,8 +108,8 @@ impl OnlineAdd {
         assert_eq!(x.len(), y.len());
         let mut a = OnlineAdd::new();
         let mut out = Vec::with_capacity(x.len() + 2);
-        for i in 0..x.len() {
-            out.push(a.push(x[i], y[i]));
+        for (&xd, &yd) in x.iter().zip(y) {
+            out.push(a.push(xd, yd));
         }
         out.push(a.push(0, 0));
         out.push(a.push(0, 0));

@@ -28,10 +28,12 @@ use super::end_unit::{classify_stream, EndState};
 use super::online_add::OnlineAdd;
 use super::online_mul::OnlineMul;
 
-/// Tree depth for `m` operands.
+/// Tree depth for `m` operands: `⌈log2 m⌉`, computed exactly in integer
+/// arithmetic (`next_power_of_two` + `ilog2`; the former `f64::log2`
+/// round-trip loses exactness for large `m`).
 pub fn tree_levels(m: usize) -> u32 {
     assert!(m > 0);
-    (m as f64).log2().ceil() as u32
+    m.next_power_of_two().ilog2()
 }
 
 /// Compute the full output digit stream of the SOP
@@ -247,6 +249,24 @@ impl SopPipeline {
     /// Adder-tree depth.
     pub fn levels(&self) -> u32 {
         self.levels
+    }
+
+    /// Replace the bias operand's value without rebuilding the pipeline.
+    ///
+    /// The native SOP engine quantizes the bias with a per-tile activation
+    /// scale, so the bias digits change between tiles while the weights
+    /// (and thus the tree shape) stay fixed. Only valid on pipelines
+    /// constructed **with** a bias operand — the operand count, and with
+    /// it the adder-tree width, is part of the pipeline's structure.
+    pub fn set_bias(&mut self, bias: Fixed) {
+        assert!(
+            self.bias.is_some(),
+            "set_bias on a pipeline built without a bias operand"
+        );
+        self.bias = Some(bias);
+        self.bias_digits.clear();
+        self.bias_digits.extend(to_sd_digits(bias));
+        self.bias_digits.resize(self.n_out, 0);
     }
 
     /// Evaluate one window of activations through the pipeline with END
@@ -498,6 +518,36 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn tree_levels_is_exact_ceil_log2() {
+        // Spot-check the integer ⌈log2⌉ against the definition, including
+        // the exact powers of two where a float round-trip is fragile.
+        for m in 1usize..=4096 {
+            let expect = (0..).find(|&l| (1usize << l) >= m).unwrap();
+            assert_eq!(tree_levels(m), expect, "m={m}");
+        }
+        assert_eq!(tree_levels(1), 0);
+        assert_eq!(tree_levels(2), 1);
+        assert_eq!(tree_levels((1 << 40) + 1), 41);
+    }
+
+    #[test]
+    fn set_bias_matches_fresh_pipeline() {
+        let n = 8u32;
+        let w: Vec<Fixed> = (0..9).map(|i| Fixed::quantize(0.07 * i as f64 - 0.3, n)).collect();
+        let a: Vec<Fixed> = (0..9).map(|i| Fixed::quantize(0.4 - 0.08 * i as f64, n)).collect();
+        let b1 = Fixed::quantize(0.25, n);
+        let b2 = Fixed::quantize(-0.375, n);
+        let mut reused = SopPipeline::new(&w, Some(b1), 12);
+        let _ = reused.run(&a);
+        reused.set_bias(b2);
+        let got = reused.run(&a);
+        let fresh = SopPipeline::new(&w, Some(b2), 12).run(&a);
+        assert_eq!(got.state, fresh.state);
+        assert_eq!(got.decided_at, fresh.decided_at);
+        assert!((got.value - fresh.value).abs() < 1e-12 || got.state == EndState::Terminate);
     }
 
     #[test]

@@ -1,11 +1,20 @@
 //! **END statistics from real activations** (paper §4.3, Figs. 12–14).
 //!
-//! For each sampled output pixel of a conv layer, the collector extracts
-//! the real input window, quantizes window + filter to n-bit fractions,
-//! and runs the bit-exact digit-pipelined SOP unit with the END unit
-//! attached ([`crate::arith::sop::sop_with_end`]). The resulting
-//! per-filter detection rates and termination cycles drive the energy
-//! model (Fig. 13) and the effective-cycle comparison (Fig. 14).
+//! Two collection paths feed the same [`EndActivity`] aggregate:
+//!
+//! - **Live fused runs** (preferred): a native
+//!   [`FusionExecutor`](super::FusionExecutor) with the
+//!   [`EngineKind::Sop`](crate::runtime::EngineKind) engine records
+//!   per-level [`EndCounters`] *while the fused pyramid executes* —
+//!   every SOP of every tile, not a post-hoc sample;
+//!   [`activity_from_counters`] converts them for the energy model.
+//! - **Post-hoc sampling** ([`layer_end_stats`]): for each sampled
+//!   output pixel of a conv layer, extract the real input window,
+//!   quantize window + filter to n-bit fractions, and run the bit-exact
+//!   digit-pipelined SOP unit with the END unit attached
+//!   ([`crate::arith::sop::sop_with_end`]). Kept for the
+//!   artifact-driven figures, where the activations come from PJRT
+//!   golden dumps.
 //!
 //! Quantization scales each operand set by its max-|value| (a positive
 //! factor), which preserves every SOP's sign and the relative digit
@@ -16,9 +25,22 @@ use anyhow::{bail, Result};
 use crate::arith::digit::Fixed;
 use crate::arith::end_unit::EndState;
 use crate::geometry::FusedConvSpec;
-use crate::runtime::Tensor;
+use crate::runtime::{EndCounters, Tensor};
 use crate::sim::EndActivity;
 use crate::util::rng::Rng;
+
+/// Convert live engine counters (recorded by the SOP engine during a
+/// native fused run) into the aggregate activity factors the energy
+/// model consumes — the real-fused-run replacement for the post-hoc
+/// activation-dump sampling path.
+pub fn activity_from_counters(c: &EndCounters) -> EndActivity {
+    EndActivity {
+        sops: c.sops,
+        mean_executed_fraction: c.mean_exec_fraction(),
+        negative_fraction: c.detection_rate(),
+        undetermined_fraction: c.undetermined_rate(),
+    }
+}
 
 /// Sampling configuration.
 #[derive(Clone, Debug)]

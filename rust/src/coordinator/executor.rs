@@ -1,15 +1,31 @@
 //! The **fusion executor**: drives the pyramid plan over a real input,
-//! executing the AOT-compiled tile program per movement and reassembling
-//! the fused stack's output feature map — the paper's §3.4 dataflow with
-//! real numerics through PJRT.
+//! executing one tile program per movement and reassembling the fused
+//! stack's output feature map — the paper's §3.4 dataflow.
 //!
-//! At construction the executor rebuilds the geometry with the Rust
-//! Algorithm 3/4 and cross-checks it against the manifest recorded by
-//! `aot.py` (the Python mirror); any drift fails fast.
+//! Three program sources feed the same movement loop:
+//!
+//! 1. **PJRT** — AOT-compiled tile/golden programs from `aot.py`
+//!    (`--features pjrt`);
+//! 2. **host closures** — natively registered programs in the
+//!    [`Runtime`] registry (tests, serving benchmarks);
+//! 3. **native engines** — no runtime and no artifacts at all:
+//!    [`FusionExecutor::native`] executes every level of the pyramid
+//!    directly over host tensors through a pluggable
+//!    [`ComputeEngine`](crate::runtime::ComputeEngine) — the vectorized
+//!    [`EngineKind::F32`] reference or the digit-serial
+//!    [`EngineKind::Sop`] SOP+END datapath, which records live per-level
+//!    END statistics while the fused stack runs.
+//!
+//! For the registry-backed sources, the executor rebuilds the geometry
+//! with the Rust Algorithm 3/4 and cross-checks it against the manifest
+//! recorded by `aot.py` (the Python mirror); any drift fails fast.
+
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::geometry::{PyramidPlan, StridePolicy};
+use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
+use crate::runtime::engine::{conv2d, ComputeEngine, EndCounters, EngineKind};
 use crate::runtime::{GeometryMeta, Runtime, Tensor};
 
 /// Execution statistics of one fused evaluation.
@@ -25,9 +41,48 @@ pub struct ExecStats {
     pub wall: std::time::Duration,
 }
 
+/// The native program source: per-level weights/biases plus the engine
+/// kind, and the END counters aggregated across every run.
+struct NativeFusion {
+    kind: EngineKind,
+    /// Per-level `(K, K, N, M)` filter tensors.
+    weights: Vec<Tensor>,
+    /// Per-level `(M,)` bias vectors.
+    biases: Vec<Vec<f32>>,
+    /// Live END statistics merged from every engine instance (one per
+    /// worker thread) that has executed tiles for this executor.
+    counters: Mutex<Vec<EndCounters>>,
+}
+
+impl NativeFusion {
+    fn absorb(&self, per_level: Vec<EndCounters>) {
+        if per_level.is_empty() {
+            return;
+        }
+        let mut agg = self.counters.lock().unwrap();
+        if agg.len() < per_level.len() {
+            agg.resize(per_level.len(), EndCounters::default());
+        }
+        for (a, c) in agg.iter_mut().zip(&per_level) {
+            a.merge(c);
+        }
+    }
+}
+
+/// Where tile programs come from.
+enum Source<'rt> {
+    /// PJRT executables or host closures in the runtime registry.
+    Programs {
+        /// Borrowed runtime owning the program registry.
+        rt: &'rt Runtime,
+    },
+    /// Artifact-free native engine execution.
+    Native(NativeFusion),
+}
+
 /// Executor for one fused group (e.g. "lenet", "alexnet", "vgg").
 pub struct FusionExecutor<'rt> {
-    rt: &'rt Runtime,
+    source: Source<'rt>,
     /// Fused-group name (manifest key, program prefix).
     pub group: String,
     /// The resolved fusion pyramid (Algorithms 3 + 4).
@@ -36,7 +91,8 @@ pub struct FusionExecutor<'rt> {
 }
 
 impl<'rt> FusionExecutor<'rt> {
-    /// Build the executor, cross-checking Rust geometry vs the manifest.
+    /// Build a registry-backed executor, cross-checking Rust geometry vs
+    /// the manifest.
     pub fn new(rt: &'rt Runtime, group: &str) -> Result<FusionExecutor<'rt>> {
         let geom = rt
             .manifest
@@ -58,11 +114,95 @@ impl<'rt> FusionExecutor<'rt> {
             );
         }
         Ok(FusionExecutor {
-            rt,
+            source: Source::Programs { rt },
             group: group.to_string(),
             plan,
             geom,
         })
+    }
+
+    /// Build a **native** executor: the fused stack executes entirely on
+    /// the host through `kind`'s [`ComputeEngine`] — no runtime, no
+    /// manifest, no AOT artifacts. `weights[j]` is level `j`'s
+    /// `(K, K, N, M)` filter tensor and `biases[j]` its `(M,)` bias.
+    ///
+    /// `run`, `run_parallel` and `verify` all work unchanged; with
+    /// [`EngineKind::Sop`] the executor additionally accumulates live
+    /// per-level END statistics, readable via
+    /// [`FusionExecutor::end_counters`].
+    pub fn native(
+        group: &str,
+        specs: &[FusedConvSpec],
+        r_out: usize,
+        weights: Vec<Tensor>,
+        biases: Vec<Vec<f32>>,
+        kind: EngineKind,
+    ) -> Result<FusionExecutor<'static>> {
+        let plan = PyramidPlan::build(specs, r_out, StridePolicy::Uniform)
+            .ok_or_else(|| anyhow!("{group}: Algorithm 3/4 found no uniform plan"))?;
+        if weights.len() != specs.len() || biases.len() != specs.len() {
+            bail!(
+                "{group}: {} weight / {} bias tensors for {} levels",
+                weights.len(),
+                biases.len(),
+                specs.len()
+            );
+        }
+        for (j, spec) in specs.iter().enumerate() {
+            let want = [spec.k, spec.k, spec.n_in, spec.m_out];
+            if weights[j].shape != want {
+                bail!(
+                    "{group} level {j}: weights {:?}, want {:?}",
+                    weights[j].shape,
+                    want
+                );
+            }
+            if biases[j].len() != spec.m_out {
+                bail!(
+                    "{group} level {j}: bias len {} != {}",
+                    biases[j].len(),
+                    spec.m_out
+                );
+            }
+        }
+        let geom = GeometryMeta {
+            r_out: plan.r_out,
+            tiles: plan.tiles.clone(),
+            strides: plan.strides.clone(),
+            alpha: plan.alpha(),
+            starts: plan.starts.clone(),
+            levels: specs.to_vec(),
+        };
+        Ok(FusionExecutor {
+            source: Source::Native(NativeFusion {
+                kind,
+                weights,
+                biases,
+                counters: Mutex::new(Vec::new()),
+            }),
+            group: group.to_string(),
+            plan,
+            geom,
+        })
+    }
+
+    /// The engine kind of a native executor (`None` for the registry
+    /// program sources).
+    pub fn engine_kind(&self) -> Option<EngineKind> {
+        match &self.source {
+            Source::Programs { .. } => None,
+            Source::Native(nf) => Some(nf.kind),
+        }
+    }
+
+    /// Live per-level END statistics accumulated across every `run` /
+    /// `run_parallel` / `verify` on this executor — non-empty only for
+    /// the native [`EngineKind::Sop`] source. Index = pyramid level.
+    pub fn end_counters(&self) -> Vec<EndCounters> {
+        match &self.source {
+            Source::Programs { .. } => Vec::new(),
+            Source::Native(nf) => nf.counters.lock().unwrap().clone(),
+        }
     }
 
     /// Output feature-map shape of the fused stack.
@@ -85,12 +225,29 @@ impl<'rt> FusionExecutor<'rt> {
         Ok(())
     }
 
-    /// Execute one pyramid movement `(iy, ix)`: extract the level-0 tile
-    /// into `tile` (the caller's reusable buffer), run the tile program,
-    /// and return the produced output region. `scalars` is the caller's
-    /// reusable per-level offset buffer of length `2 * depth`.
-    fn movement(
+    /// Extract the level-0 tile of movement `(iy, ix)` into the caller's
+    /// reusable buffer.
+    fn extract_tile(
         &self,
+        iy: usize,
+        ix: usize,
+        input: &Tensor,
+        tile: &mut Tensor,
+    ) -> Result<()> {
+        let spec0 = &self.plan.specs[0];
+        let h0 = self.plan.tiles[0];
+        let rect = self.plan.tile_rect(0, iy, ix);
+        // Real data occupies [pad, pad + ifm) in padded coords.
+        input.extract_window(rect.y0, rect.x0, h0, spec0.pad as i64, tile)
+    }
+
+    /// Execute one pyramid movement through the runtime registry.
+    /// `scalars` is the caller's reusable per-level offset buffer of
+    /// length `2 * depth`.
+    #[allow(clippy::too_many_arguments)]
+    fn movement_programs(
+        &self,
+        rt: &Runtime,
         program: &str,
         iy: usize,
         ix: usize,
@@ -98,26 +255,56 @@ impl<'rt> FusionExecutor<'rt> {
         tile: &mut Tensor,
         scalars: &mut [i32],
     ) -> Result<Tensor> {
-        let spec0 = &self.plan.specs[0];
-        let h0 = self.plan.tiles[0];
-        let rect = self.plan.tile_rect(0, iy, ix);
-        // Real data occupies [pad, pad + ifm) in padded coords.
-        input.extract_window(rect.y0, rect.x0, h0, spec0.pad as i64, tile)?;
+        self.extract_tile(iy, ix, input, tile)?;
         for (j, spec) in self.plan.specs.iter().enumerate() {
             let r = self.plan.tile_rect(j, iy, ix);
             debug_assert_eq!(r.y0.rem_euclid(spec.s as i64), 0);
             scalars[2 * j] = (r.y0 / spec.s as i64) as i32;
             scalars[2 * j + 1] = (r.x0 / spec.s as i64) as i32;
         }
-        let mut outs = self.rt.execute(program, &[&*tile], scalars)?;
+        let mut outs = rt.execute(program, &[&*tile], scalars)?;
         Ok(outs.swap_remove(0))
     }
 
+    /// Execute one pyramid movement natively: the engine evaluates every
+    /// level over the tile, and the executor re-applies the geometry —
+    /// after each non-final level, tile cells whose global coordinates
+    /// fall outside the next level's real feature map are zeroed (they
+    /// are convolution padding / boundary halo in the reference
+    /// computation, not values a conv over a zero-filled halo would
+    /// produce).
+    fn movement_native(
+        &self,
+        nf: &NativeFusion,
+        engine: &mut dyn ComputeEngine,
+        iy: usize,
+        ix: usize,
+        input: &Tensor,
+        tile: &mut Tensor,
+    ) -> Result<Tensor> {
+        self.extract_tile(iy, ix, input, tile)?;
+        let mut cur: Option<Tensor> = None;
+        for (j, spec) in self.plan.specs.iter().enumerate() {
+            let inp: &Tensor = cur.as_ref().unwrap_or(tile);
+            let mut out = engine.run_level(j, spec, inp, &nf.weights[j], &nf.biases[j])?;
+            if j + 1 < self.plan.depth() {
+                // Level j's output region is exactly level j+1's input
+                // tile, in level-(j+1) padded coordinates.
+                let next = &self.plan.specs[j + 1];
+                debug_assert_eq!(out.shape[0], self.plan.tiles[j + 1]);
+                let r = self.plan.tile_rect(j + 1, iy, ix);
+                out.mask_outside(r.y0, r.x0, next.pad as i64, next.ifm)?;
+            }
+            cur = Some(out);
+        }
+        Ok(cur.expect("plan has at least one level"))
+    }
+
     /// Output-map stride between adjacent movements at the final level.
+    /// Exact by construction: [`PyramidPlan::build`] rejects plans whose
+    /// final stride is not a multiple of the chain factor.
     fn out_stride(&self) -> usize {
-        let q = self.plan.depth();
-        let last = self.plan.specs.last().unwrap();
-        self.plan.strides[q - 1] / last.chain_factor()
+        self.plan.out_pitch()
     }
 
     /// Run the fused stack tile-by-tile, assembling the output
@@ -132,17 +319,32 @@ impl<'rt> FusionExecutor<'rt> {
         let program = format!("{}_tile", self.group);
         let p_out = self.out_stride();
 
+        let mut engine: Option<Box<dyn ComputeEngine>> = match &self.source {
+            Source::Native(nf) => Some(nf.kind.build()),
+            Source::Programs { .. } => None,
+        };
         let mut out = Tensor::zeros(self.output_shape());
         let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
         let mut stats = ExecStats::default();
         let mut scalars = vec![0i32; 2 * q];
         for iy in 0..a {
             for ix in 0..a {
-                let region = self.movement(&program, iy, ix, input, &mut tile, &mut scalars)?;
+                let region = match (&self.source, engine.as_deref_mut()) {
+                    (Source::Programs { rt }, _) => self.movement_programs(
+                        rt, &program, iy, ix, input, &mut tile, &mut scalars,
+                    )?,
+                    (Source::Native(nf), Some(e)) => {
+                        self.movement_native(nf, e, iy, ix, input, &mut tile)?
+                    }
+                    _ => unreachable!("native source always builds an engine"),
+                };
                 out.place_window(&region, (iy * p_out) as i64, (ix * p_out) as i64)?;
                 stats.tiles_executed += 1;
                 stats.input_bytes += tile.len() * 4;
             }
+        }
+        if let (Source::Native(nf), Some(mut e)) = (&self.source, engine) {
+            nf.absorb(e.take_end_counters());
         }
         stats.output_bytes = out.len() * 4;
         stats.wall = t0.elapsed();
@@ -151,13 +353,15 @@ impl<'rt> FusionExecutor<'rt> {
 
     /// Like [`FusionExecutor::run`], but executes the α² independent
     /// `(iy, ix)` tile movements across a scoped thread pool of up to
-    /// `threads` workers, each with its own tile buffer. Output is
-    /// assembled after the join and is **bit-identical** to the serial
-    /// path (the movements are data-independent; overlapping output
-    /// pixels receive identical values from either producer).
+    /// `threads` workers, each with its own tile buffer (and, for the
+    /// native source, its own engine instance — END counters are merged
+    /// after the join). Output is assembled after the join and is
+    /// **bit-identical** to the serial path (the movements are
+    /// data-independent; overlapping output pixels receive identical
+    /// values from either producer).
     ///
     /// Under the `pjrt` feature the PJRT handles are not `Sync`, so this
-    /// falls back to the serial path; the host backend parallelizes.
+    /// falls back to the serial path; the host backends parallelize.
     #[cfg(not(feature = "pjrt"))]
     pub fn run_parallel(&self, input: &Tensor, threads: usize) -> Result<(Tensor, ExecStats)> {
         self.check_input(input)?;
@@ -175,21 +379,36 @@ impl<'rt> FusionExecutor<'rt> {
         let n_threads = threads.clamp(1, moves.len().max(1));
         let chunk = moves.len().div_ceil(n_threads);
 
-        let regions: Result<Vec<Vec<(usize, usize, Tensor)>>> = std::thread::scope(|s| {
+        type ChunkResult = (Vec<(usize, usize, Tensor)>, Vec<EndCounters>);
+        let regions: Result<Vec<ChunkResult>> = std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(n_threads);
             for piece in moves.chunks(chunk) {
                 let program = &program;
                 handles.push(s.spawn(move || {
-                    // Per-thread reusable tile + offset buffers.
+                    // Per-thread reusable tile/offset buffers + engine.
                     let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
                     let mut scalars = vec![0i32; 2 * q];
+                    let mut engine: Option<Box<dyn ComputeEngine>> = match &self.source {
+                        Source::Native(nf) => Some(nf.kind.build()),
+                        Source::Programs { .. } => None,
+                    };
                     let mut done = Vec::with_capacity(piece.len());
                     for &(iy, ix) in piece {
-                        let region =
-                            self.movement(program, iy, ix, input, &mut tile, &mut scalars)?;
+                        let region = match (&self.source, engine.as_deref_mut()) {
+                            (Source::Programs { rt }, _) => self.movement_programs(
+                                rt, program, iy, ix, input, &mut tile, &mut scalars,
+                            )?,
+                            (Source::Native(nf), Some(e)) => {
+                                self.movement_native(nf, e, iy, ix, input, &mut tile)?
+                            }
+                            _ => unreachable!("native source always builds an engine"),
+                        };
                         done.push((iy, ix, region));
                     }
-                    Ok(done)
+                    let counters = engine
+                        .map(|mut e| e.take_end_counters())
+                        .unwrap_or_default();
+                    Ok((done, counters))
                 }));
             }
             handles
@@ -200,7 +419,10 @@ impl<'rt> FusionExecutor<'rt> {
 
         let mut out = Tensor::zeros(self.output_shape());
         let mut stats = ExecStats::default();
-        for chunk_regions in regions? {
+        for (chunk_regions, counters) in regions? {
+            if let Source::Native(nf) = &self.source {
+                nf.absorb(counters);
+            }
             for (iy, ix, region) in chunk_regions {
                 out.place_window(&region, (iy * p_out) as i64, (ix * p_out) as i64)?;
                 stats.tiles_executed += 1;
@@ -221,11 +443,36 @@ impl<'rt> FusionExecutor<'rt> {
         self.run(input)
     }
 
-    /// Run the golden full-map program; returns per-level pre-activations
-    /// followed by the final output.
+    /// Run the golden full-map reference; returns per-level
+    /// pre-activations followed by the final output.
+    ///
+    /// For the registry sources this is the AOT `{group}_full` program;
+    /// for the native source it is an exact f32 full-map evaluation
+    /// (explicit padding → conv+bias → ReLU → pool per level) —
+    /// independent of the engine kind, so it stays a true oracle for
+    /// the digit-serial engine.
     pub fn golden(&self, input: &Tensor) -> Result<Vec<Tensor>> {
-        self.rt
-            .execute(&format!("{}_full", self.group), &[input], &[])
+        match &self.source {
+            Source::Programs { rt } => {
+                rt.execute(&format!("{}_full", self.group), &[input], &[])
+            }
+            Source::Native(nf) => {
+                let mut outs = Vec::with_capacity(self.plan.depth() + 1);
+                let mut x = input.clone();
+                for (j, spec) in self.plan.specs.iter().enumerate() {
+                    let padded = x.pad_spatial(spec.pad)?;
+                    let pre = conv2d(spec, &padded, &nf.weights[j], &nf.biases[j])?;
+                    let act = pre.relu();
+                    x = match spec.pool {
+                        Some(p) => act.maxpool(p.k, p.s)?,
+                        None => act,
+                    };
+                    outs.push(pre);
+                }
+                outs.push(x);
+                Ok(outs)
+            }
+        }
     }
 
     /// The fusion-correctness invariant: tile-assembled output ≡ golden
@@ -238,7 +485,8 @@ impl<'rt> FusionExecutor<'rt> {
         Ok(assembled.max_abs_diff(gold_out)? / scale)
     }
 
-    /// Manifest geometry (levels as recorded by aot.py).
+    /// Manifest geometry (as recorded by aot.py, or synthesized from the
+    /// plan for native executors).
     pub fn geometry(&self) -> &GeometryMeta {
         &self.geom
     }

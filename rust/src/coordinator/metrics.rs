@@ -100,16 +100,28 @@ impl Metrics {
         }
     }
 
-    /// Record one drained batch that **failed**: the requests are not
-    /// counted as served (they keep `total_requests`, `mean_batch` and
-    /// the batch histogram honest), but the worker's busy time still
-    /// accrues and the errors are surfaced in their own counter.
+    /// Record one drained batch that **failed**. An error batch is still
+    /// a batch the worker executed, so it counts toward `total_batches`,
+    /// the batch-size histogram, and the worker's `batches`/busy-time
+    /// counters (utilization stays honest); its requests are recorded in
+    /// `error_requests` — never in `total_requests`, which counts only
+    /// successfully served requests. `mean_batch` is computed over all
+    /// drained requests (served + errored), so error batches do not skew
+    /// it toward zero.
     pub fn on_batch_error(&self, worker: usize, batch_size: usize, busy: Duration) {
+        self.total_batches.fetch_add(1, Ordering::Relaxed);
         self.error_requests
             .fetch_add(batch_size as u64, Ordering::Relaxed);
+        *self
+            .batch_hist
+            .lock()
+            .unwrap()
+            .entry(batch_size)
+            .or_default() += 1;
         if let Some(w) = self.workers.get(worker) {
             w.busy_ns
                 .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+            w.batches.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -129,12 +141,13 @@ impl Metrics {
         let hist = self.batch_hist.lock().unwrap().clone();
         let uptime = self.started.elapsed();
         let requests = self.total_requests.load(Ordering::Relaxed);
+        let errors = self.error_requests.load(Ordering::Relaxed);
         let batches = self.total_batches.load(Ordering::Relaxed);
         MetricsSnapshot {
             total_requests: requests,
             total_batches: batches,
             stacked_batches: self.stacked_batches.load(Ordering::Relaxed),
-            error_requests: self.error_requests.load(Ordering::Relaxed),
+            error_requests: errors,
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_peak: self.queue_peak.load(Ordering::Relaxed),
             p50_us: percentile(&lat, 50.0),
@@ -143,7 +156,7 @@ impl Metrics {
             mean_batch: if batches == 0 {
                 0.0
             } else {
-                requests as f64 / batches as f64
+                (requests + errors) as f64 / batches as f64
             },
             batch_hist: hist,
             workers: self
@@ -179,7 +192,9 @@ pub struct MetricsSnapshot {
     /// Requests successfully served since startup (errors excluded —
     /// see [`MetricsSnapshot::error_requests`]).
     pub total_requests: u64,
-    /// Batches executed since startup.
+    /// Batches executed since startup, including error batches (the
+    /// worker ran them; only their requests are excluded from
+    /// `total_requests`).
     pub total_batches: u64,
     /// Batches that went through one stacked program call.
     pub stacked_batches: u64,
@@ -195,7 +210,8 @@ pub struct MetricsSnapshot {
     pub p95_us: f64,
     /// 99th-percentile latency over the rolling window, µs.
     pub p99_us: f64,
-    /// Mean requests per executed batch.
+    /// Mean requests per executed batch, over every drained batch
+    /// (served and errored requests alike).
     pub mean_batch: f64,
     /// batch size → count of batches drained at that size.
     pub batch_hist: BTreeMap<usize, u64>,
@@ -281,6 +297,25 @@ mod tests {
         // Display renders without panicking and mentions the histogram.
         let text = format!("{s}");
         assert!(text.contains("batch sizes:"));
+    }
+
+    #[test]
+    fn error_batches_count_as_executed_work() {
+        let m = Metrics::new(1, 16);
+        m.on_batch(0, 4, true, Duration::from_millis(1));
+        m.on_batch_error(0, 2, Duration::from_millis(3));
+        let s = m.snapshot();
+        // Served vs errored requests are kept apart…
+        assert_eq!(s.total_requests, 4);
+        assert_eq!(s.error_requests, 2);
+        // …but the error batch is executed work: it shows up in the batch
+        // count, the histogram, the worker's counters, and mean_batch.
+        assert_eq!(s.total_batches, 2);
+        assert_eq!(s.batch_hist[&2], 1);
+        assert_eq!(s.workers[0].batches, 2);
+        assert_eq!(s.workers[0].requests, 4);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9, "mean {}", s.mean_batch);
+        assert!(s.workers[0].utilization > 0.0);
     }
 
     #[test]

@@ -13,7 +13,9 @@ pub mod pool;
 /// Single-program facade over the worker pool.
 pub mod service;
 
-pub use end_stats::{layer_end_stats, EndConfig, FilterEndStats, LayerEndStats};
+pub use end_stats::{
+    activity_from_counters, layer_end_stats, EndConfig, FilterEndStats, LayerEndStats,
+};
 pub use executor::{ExecStats, FusionExecutor};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
 pub use pool::{ModelGroup, PoolConfig, RuntimeFactory, WorkerPool};

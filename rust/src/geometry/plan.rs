@@ -14,10 +14,17 @@ use super::spec::FusedConvSpec;
 /// How tile strides are chosen — the axis the paper's baselines vary on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StridePolicy {
-    /// The paper's uniform tile stride (Algorithm 4).
+    /// The paper's uniform tile stride (Algorithm 4). Uniform plans are
+    /// **assemblable**: [`PyramidPlan::build`] guarantees the final tile
+    /// stride advances the output map by a whole number of pixels, so
+    /// the executor can place every tile's output exactly.
     Uniform,
     /// Tile stride = convolution stride at every level (Baselines 1–2):
-    /// levels move at different rates and recompute heavily.
+    /// levels move at different rates and recompute heavily. These plans
+    /// exist for movement/recompute **accounting only** — their final
+    /// stride is generally not a multiple of the chain factor, so they
+    /// cannot be assembled tile-by-tile ([`PyramidPlan::out_rect`] and
+    /// [`PyramidPlan::out_pitch`] reject them loudly).
     ConvStride,
 }
 
@@ -91,7 +98,7 @@ impl PyramidPlan {
             StridePolicy::Uniform => {
                 let u = uniform_stride(specs, &cfg, true)
                     .or_else(|| uniform_stride(specs, &cfg, false))?;
-                Some(Self::assemble(specs, cfg, u, policy))
+                Self::assemble(specs, cfg, u, policy)
             }
             StridePolicy::ConvStride => {
                 // Each level moves by its own conv stride; movement counts
@@ -123,9 +130,19 @@ impl PyramidPlan {
         cfg: TileConfig,
         u: UniformStride,
         policy: StridePolicy,
-    ) -> PyramidPlan {
+    ) -> Option<PyramidPlan> {
+        // Assembly invariant: the final-level tile stride must advance
+        // the output map by a whole number of pixels. A non-divisible
+        // stride would make `out_rect`/`out_pitch` truncate, misplacing
+        // every assembled tile (release builds used to do this
+        // silently) — such configurations are rejected here, at build
+        // time, instead.
+        let q = specs.len();
+        if u.strides[q - 1] % specs[q - 1].chain_factor() != 0 {
+            return None;
+        }
         let starts = Self::compute_starts(specs);
-        PyramidPlan {
+        Some(PyramidPlan {
             specs: specs.to_vec(),
             r_out: cfg.r_out,
             tiles: cfg.tiles,
@@ -133,7 +150,7 @@ impl PyramidPlan {
             alphas: vec![u.alpha; specs.len()],
             starts,
             policy,
-        }
+        })
     }
 
     /// Start offsets: level Q starts at 0; each lower level must start
@@ -154,14 +171,44 @@ impl PyramidPlan {
         self.specs.len()
     }
 
-    /// Movement count per dimension at the final level (the pyramid's α).
+    /// Movement count per dimension at the final level. For uniform
+    /// plans this is *the* shared pyramid α; conv-stride plans have no
+    /// shared α — consult [`PyramidPlan::alphas`] per level instead.
     pub fn alpha(&self) -> usize {
         *self.alphas.last().unwrap()
     }
 
-    /// Total pyramid execution rounds (α²) for uniform plans.
+    /// Total tile executions of the plan. Uniform plans run α²
+    /// synchronized pyramid rounds (every level moves once per round).
+    /// Conv-stride plans desynchronize: each level runs its **own** α_j²
+    /// movements, so the true movement total is Σ_j α_j² — using the
+    /// last level's α² for every level (the old behaviour) undercounts
+    /// the baselines' movement and recompute.
     pub fn rounds(&self) -> usize {
-        self.alpha() * self.alpha()
+        match self.policy {
+            StridePolicy::Uniform => self.alpha() * self.alpha(),
+            StridePolicy::ConvStride => self.alphas.iter().map(|a| a * a).sum(),
+        }
+    }
+
+    /// Output-map stride between adjacent movements at the final level
+    /// (`S^T_Q / chain_Q`, in output pixels).
+    ///
+    /// # Panics
+    /// On non-assemblable plans (a final stride that is not a multiple
+    /// of the chain factor — conv-stride baselines). [`PyramidPlan::build`]
+    /// guarantees divisibility for every Uniform plan it returns.
+    pub fn out_pitch(&self) -> usize {
+        let q = self.depth() - 1;
+        let chain = self.specs[q].chain_factor();
+        assert_eq!(
+            self.strides[q] % chain,
+            0,
+            "plan is not assemblable: final stride {} is not a multiple of \
+             the chain factor {chain} (conv-stride plans are accounting-only)",
+            self.strides[q]
+        );
+        self.strides[q] / chain
     }
 
     /// Tile rectangle at `level` for movement step `(iy, ix)`.
@@ -176,11 +223,12 @@ impl PyramidPlan {
 
     /// The final-level output rectangle (in the fused stack's output
     /// feature map) produced by movement step `(iy, ix)`.
+    ///
+    /// # Panics
+    /// On non-assemblable (conv-stride) plans — see
+    /// [`PyramidPlan::out_pitch`].
     pub fn out_rect(&self, iy: usize, ix: usize) -> TileRect {
-        let q = self.depth() - 1;
-        let chain = self.specs[q].chain_factor() as i64;
-        let p_out = self.strides[q] as i64 / chain;
-        debug_assert_eq!(self.strides[q] as i64 % chain, 0);
+        let p_out = self.out_pitch() as i64;
         TileRect {
             y0: iy as i64 * p_out,
             x0: ix as i64 * p_out,
@@ -190,15 +238,24 @@ impl PyramidPlan {
 
     /// Verify that the plan covers every output pixel of the fused stack
     /// (the correctness property Alg. 4's conditions exist to guarantee).
+    ///
+    /// Coverage is computed from exact window math
+    /// ([`FusedConvSpec::output_range_for_tile`]), so it is also correct
+    /// for conv-stride plans, whose misaligned movements produce
+    /// overlapping, partially-empty output regions.
     pub fn covers_output(&self) -> bool {
-        let out_dim = self.specs.last().unwrap().level_out();
+        let q = self.depth() - 1;
+        let spec = &self.specs[q];
+        let out_dim = spec.level_out();
         let a = self.alpha();
         let mut covered = vec![false; out_dim * out_dim];
         for iy in 0..a {
             for ix in 0..a {
-                let r = self.out_rect(iy, ix);
-                for y in r.y0.max(0)..(r.y0 + r.side as i64).min(out_dim as i64) {
-                    for x in r.x0.max(0)..(r.x0 + r.side as i64).min(out_dim as i64) {
+                let r = self.tile_rect(q, iy, ix);
+                let (y0, ny) = spec.output_range_for_tile(r.y0, r.side);
+                let (x0, nx) = spec.output_range_for_tile(r.x0, r.side);
+                for y in y0.max(0)..(y0 + ny as i64).min(out_dim as i64) {
+                    for x in x0.max(0)..(x0 + nx as i64).min(out_dim as i64) {
                         covered[y as usize * out_dim + x as usize] = true;
                     }
                 }
@@ -269,6 +326,47 @@ mod tests {
         // α per level: (32-16)/1+1 = 17, (14-6)/1+1 = 9 — the mismatch the
         // paper's uniform stride eliminates.
         assert_eq!(p.alphas, vec![17, 9]);
+        // True movement total is per-level (17² + 9²), not the last
+        // level's count squared (the old 81 undercounted the baseline).
+        assert_eq!(p.rounds(), 17 * 17 + 9 * 9);
+    }
+
+    /// Regression: `covers_output` on a conv-stride plan used to divide
+    /// the final stride (1) by the chain factor (2) — a debug-assert
+    /// failure in debug builds and a silent `p_out = 0` misplacement in
+    /// release. The exact window math now reports the true (overlapping)
+    /// coverage without panicking.
+    #[test]
+    fn conv_stride_coverage_is_exact() {
+        let p = PyramidPlan::build(&lenet(), 1, StridePolicy::ConvStride).unwrap();
+        assert!(p.covers_output());
+    }
+
+    /// Conv-stride plans cannot be assembled tile-by-tile: the output
+    /// pitch is fractional. `out_rect` must fail loudly, not truncate.
+    #[test]
+    #[should_panic(expected = "not assemblable")]
+    fn out_rect_rejects_conv_stride_plans() {
+        let p = PyramidPlan::build(&lenet(), 1, StridePolicy::ConvStride).unwrap();
+        let _ = p.out_rect(1, 1);
+    }
+
+    /// Regression for the build-time guard: a uniform-stride solution
+    /// whose final stride is not a multiple of the chain factor must be
+    /// rejected at `build` time (`assemble` returns `None`) instead of
+    /// producing a plan whose assembly would truncate.
+    #[test]
+    fn assemble_rejects_non_divisible_final_stride() {
+        let specs = lenet();
+        let cfg = crate::geometry::alg3::tile_sizes(&specs, 1).unwrap();
+        // Strides (2, 1): chain-consistent between levels (2 = 1 × 2)
+        // but the final stride 1 is not a multiple of CL2's chain
+        // factor 2 — the shape of plan out_rect would misplace.
+        let bad = crate::geometry::alg4::UniformStride {
+            strides: vec![2, 1],
+            alpha: 9,
+        };
+        assert!(PyramidPlan::assemble(&specs, cfg, bad, StridePolicy::Uniform).is_none());
     }
 
     #[test]
@@ -359,6 +457,17 @@ mod tests {
                     "coverage stride bound violated at level {j}: {p:?}"
                 );
             }
+            // Every built Uniform plan is assemblable: the output pitch
+            // division is exact (the build-time guard's invariant).
+            let q = p.depth() - 1;
+            prop_assert!(
+                p.strides[q] % p.specs[q].chain_factor() == 0,
+                "non-assemblable uniform plan escaped build: {p:?}"
+            );
+            prop_assert!(
+                p.out_pitch() * p.specs[q].chain_factor() == p.strides[q],
+                "out_pitch inconsistent: {p:?}"
+            );
             Ok(())
         });
     }

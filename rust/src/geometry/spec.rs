@@ -98,6 +98,45 @@ impl FusedConvSpec {
         }
     }
 
+    /// Range of **global** output indices of this level computable from
+    /// an input tile of side `h` whose first padded-coordinate row (or
+    /// column) is `y0` — the exact-window form of
+    /// [`Self::output_for_tile`] that stays correct when `y0` is *not*
+    /// aligned to the level's chain factor (conv-stride baseline
+    /// movement). Returns `(first_index, count)`; `count` is 0 when no
+    /// complete window fits inside the tile.
+    ///
+    /// A conv output `cy` needs padded rows `[cy·s, cy·s + k)`; a pool
+    /// output `py` additionally needs the conv rows `[py·ps, py·ps + pk)`
+    /// to all be computable.
+    pub fn output_range_for_tile(&self, y0: i64, h: usize) -> (i64, usize) {
+        fn div_ceil_i(a: i64, b: i64) -> i64 {
+            a.div_euclid(b) + (a.rem_euclid(b) != 0) as i64
+        }
+        fn to_range(start: i64, end: i64) -> (i64, usize) {
+            if end < start {
+                (start, 0)
+            } else {
+                (start, (end - start + 1) as usize)
+            }
+        }
+        let (s, k, h) = (self.s as i64, self.k as i64, h as i64);
+        if h < k {
+            return (0, 0);
+        }
+        let cy_start = div_ceil_i(y0, s);
+        let cy_end = (y0 + h - k).div_euclid(s);
+        match self.pool {
+            None => to_range(cy_start, cy_end),
+            Some(p) => {
+                let (ps, pk) = (p.s as i64, p.k as i64);
+                let py_start = div_ceil_i(cy_start, ps);
+                let py_end = (cy_end - (pk - 1)).div_euclid(ps);
+                to_range(py_start, py_end)
+            }
+        }
+    }
+
     /// MAC-based operation count of this convolution layer
     /// (paper Eq. (2) convention: 2·M·N·R·C·K²).
     pub fn num_operations(&self) -> u64 {
@@ -171,6 +210,33 @@ mod tests {
             ifm: 224,
         };
         assert_eq!(vgg1.num_operations(), 173_408_256);
+    }
+
+    #[test]
+    fn output_range_agrees_with_output_for_tile_when_aligned() {
+        let l = lenet_cl1();
+        // Chain-aligned tile origins reproduce output_for_tile exactly.
+        for (y0, h) in [(0i64, 16usize), (4, 16), (8, 16), (0, 6), (2, 8)] {
+            let (start, count) = l.output_range_for_tile(y0, h);
+            assert_eq!(start, y0 / l.chain_factor() as i64, "y0={y0}");
+            assert_eq!(count, l.output_for_tile(h), "y0={y0} h={h}");
+        }
+    }
+
+    #[test]
+    fn output_range_handles_misaligned_origins() {
+        let l = lenet_cl1(); // k=5 s=1 pool(2,2): chain factor 2
+        // A tile at odd y0 can only produce pool outputs whose conv pair
+        // starts at the next even row.
+        let (start, count) = l.output_range_for_tile(1, 16);
+        // conv rows computable: [1, 12]; pool windows [2,3]..[10,11].
+        assert_eq!((start, count), (1, 5));
+        // Tile smaller than the kernel: nothing computable.
+        assert_eq!(l.output_range_for_tile(0, 4).1, 0);
+        // One-row movement of a 6-wide tile computes no new pool output.
+        let cl2 = FusedConvSpec { ifm: 14, n_in: 6, m_out: 16, ..lenet_cl1() };
+        assert_eq!(cl2.output_range_for_tile(1, 6).1, 0);
+        assert_eq!(cl2.output_range_for_tile(2, 6), (1, 1));
     }
 
     #[test]

@@ -161,7 +161,7 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         println!("{}", report::figures::fig11(&m).1.render());
     }
     if want("fig12") || want("fig13") || want("fig14") {
-        let rt = report::figures::load_runtime_for(&[
+        match report::figures::load_runtime_for(&[
             "resnet_stem",
             "resnet_s1",
             "resnet_s2a",
@@ -170,15 +170,35 @@ fn cmd_report(argv: &[String]) -> Result<()> {
             "resnet_s3b",
             "resnet_s4a",
             "resnet_s4b",
-        ])?;
-        if want("fig12") {
-            println!("{}", report::figures::fig12(&rt, samples)?.1.render());
-        }
-        if want("fig13") {
-            println!("{}", report::figures::fig13(&rt, samples)?.1.render());
-        }
-        if want("fig14") {
-            println!("{}", report::figures::fig14(&rt, samples)?.1.render());
+        ]) {
+            Ok(rt) => {
+                if want("fig12") {
+                    println!("{}", report::figures::fig12(&rt, samples)?.1.render());
+                }
+                if want("fig13") {
+                    println!("{}", report::figures::fig13(&rt, samples)?.1.render());
+                }
+                if want("fig14") {
+                    println!("{}", report::figures::fig14(&rt, samples)?.1.render());
+                }
+            }
+            Err(e) => {
+                // No artifacts: drive figs 12–14 from live native fused
+                // runs (SOP engine, synthetic weights) instead.
+                eprintln!("artifacts unavailable ({e}); using the native SOP-engine path");
+                if want("fig12") || want("fig13") {
+                    let (_, t12, t13) = report::figures::fig12_13_native(8, 0xF16)?;
+                    if want("fig12") {
+                        println!("{}", t12.render());
+                    }
+                    if want("fig13") {
+                        println!("{}", t13.render());
+                    }
+                }
+                if want("fig14") {
+                    println!("{}", report::figures::fig14_native(8, 0xF14)?.1.render());
+                }
+            }
         }
     }
     Ok(())

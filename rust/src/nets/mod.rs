@@ -3,4 +3,6 @@
 /// The network definitions (LeNet-5, AlexNet, VGG-16, ResNet-18).
 pub mod zoo;
 
-pub use zoo::{alexnet, by_name, lenet5, resnet18, vgg16, Network};
+pub use zoo::{
+    alexnet, by_name, lenet5, random_input, random_weights, resnet18, vgg16, Network,
+};

@@ -25,6 +25,7 @@ pub struct Network {
     pub res_blocks: Vec<(usize, bool)>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn conv(
     name: &str,
     ifm: usize,
@@ -172,6 +173,48 @@ pub fn resnet18() -> Network {
         convs,
         res_blocks,
     }
+}
+
+/// Seeded synthetic parameters for a fused stack: per-level
+/// `(K, K, N, M)` weight tensors and `(M,)` bias vectors — the
+/// artifact-free input to [`FusionExecutor::native`]
+/// (tests, benches and the no-artifact figure paths).
+///
+/// Weights are fan-in-normalized normals (`σ = 1/√(K²·N)`), so
+/// activations neither explode nor die through the stack and the SOP
+/// sign statistics stay in the paper's regime; biases are small
+/// uniform values in ±0.05.
+///
+/// [`FusionExecutor::native`]: crate::coordinator::FusionExecutor::native
+pub fn random_weights(
+    specs: &[FusedConvSpec],
+    seed: u64,
+) -> (Vec<crate::runtime::Tensor>, Vec<Vec<f32>>) {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut weights = Vec::with_capacity(specs.len());
+    let mut biases = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let fan_in = (spec.k * spec.k * spec.n_in) as f64;
+        let scale = (1.0 / fan_in.sqrt()) as f32;
+        let n = spec.k * spec.k * spec.n_in * spec.m_out;
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * scale).collect();
+        weights.push(
+            crate::runtime::Tensor::new(vec![spec.k, spec.k, spec.n_in, spec.m_out], data)
+                .expect("shape matches data by construction"),
+        );
+        biases.push((0..spec.m_out).map(|_| (rng.f32() - 0.5) * 0.1).collect());
+    }
+    (weights, biases)
+}
+
+/// Seeded synthetic input feature map for a fused stack's level 0:
+/// ReLU'd unit normals (non-negative, like real post-activation maps).
+pub fn random_input(spec0: &FusedConvSpec, seed: u64) -> crate::runtime::Tensor {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let n = spec0.ifm * spec0.ifm * spec0.n_in;
+    let data: Vec<f32> = (0..n).map(|_| (rng.normal() as f32).max(0.0)).collect();
+    crate::runtime::Tensor::new(vec![spec0.ifm, spec0.ifm, spec0.n_in], data)
+        .expect("shape matches data by construction")
 }
 
 /// Look a network up by name.

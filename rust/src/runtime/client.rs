@@ -342,7 +342,7 @@ impl Runtime {
             let Some(n) = batched_suffix(key, name) else {
                 continue;
             };
-            if n >= want && best.as_ref().map_or(true, |&(_, bn)| n < bn) {
+            if n >= want && best.as_ref().is_none_or(|&(_, bn)| n < bn) {
                 best = Some((key.clone(), n));
             }
         }
@@ -356,7 +356,7 @@ impl Runtime {
             let Some(n) = batched_suffix(key, name) else {
                 continue;
             };
-            if best.as_ref().map_or(true, |&(_, bn)| n > bn) {
+            if best.as_ref().is_none_or(|&(_, bn)| n > bn) {
                 best = Some((key.clone(), n));
             }
         }

@@ -1,0 +1,564 @@
+//! **Native compute engines** for the fusion executor: per-level tile
+//! execution of a [`FusedConvSpec`] (conv → bias → ReLU → pool) directly
+//! over host [`Tensor`]s, with no AOT artifacts and no PJRT.
+//!
+//! Two implementations live behind the [`ComputeEngine`] trait:
+//!
+//! - [`F32Engine`] — a plain f32 reference path (filter-major inner
+//!   loops over contiguous memory, so the compiler auto-vectorizes it);
+//!   this is both the fast host backend and the verification oracle for
+//!   the bit-level engine.
+//! - [`SopEngine`] — the paper's datapath: every output pixel of every
+//!   filter is one digit-serial sum-of-products driven through a reused
+//!   [`SopPipeline`] with the END unit attached (§3.1/§3.2). The engine
+//!   records **live** per-level END statistics ([`EndCounters`]) while
+//!   the fused stack executes — the measurement the paper's Figs. 12–14
+//!   are built from — instead of re-sampling windows from activation
+//!   dumps after the fact.
+//!
+//! Engines are deliberately geometry-blind: they evaluate whatever tile
+//! they are handed. Tile scheduling, halo masking between levels, and
+//! output assembly stay in the coordinator's
+//! [`FusionExecutor`](crate::coordinator::FusionExecutor).
+
+use anyhow::{bail, Result};
+
+use super::tensor::Tensor;
+use crate::arith::digit::Fixed;
+use crate::arith::end_unit::EndState;
+use crate::arith::sop::SopPipeline;
+use crate::geometry::FusedConvSpec;
+
+/// Which native engine to run, with its configuration. `Copy` so plans
+/// and executors can hand it to per-thread engine instances freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Vectorized f32 reference engine.
+    F32,
+    /// Digit-serial SOP + END engine at `n_bits` operand precision.
+    Sop {
+        /// Operand precision in bits (1 sign + `n_bits - 1` fraction).
+        n_bits: u32,
+    },
+}
+
+impl EngineKind {
+    /// Instantiate a fresh engine of this kind (one per worker thread;
+    /// engines are stateful).
+    pub fn build(self) -> Box<dyn ComputeEngine> {
+        match self {
+            EngineKind::F32 => Box::new(F32Engine),
+            EngineKind::Sop { n_bits } => Box::new(SopEngine::new(n_bits)),
+        }
+    }
+
+    /// Short display label ("f32" / "sop").
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::F32 => "f32",
+            EngineKind::Sop { .. } => "sop",
+        }
+    }
+}
+
+/// Live END statistics for one pyramid level, accumulated across every
+/// SOP the [`SopEngine`] executes at that level. All counters are raw
+/// sums so per-thread instances merge losslessly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EndCounters {
+    /// SOPs executed (one per output pixel per filter).
+    pub sops: u64,
+    /// SOPs the END unit terminated early (surely negative).
+    pub terminated: u64,
+    /// SOPs proven surely positive (run to completion; tracked for
+    /// statistics, like the hardware).
+    pub positive: u64,
+    /// SOPs that stayed undetermined (near-zero results).
+    pub undetermined: u64,
+    /// Output digits actually produced with END gating.
+    pub executed_digits: u64,
+    /// Output digits of the full (END-disabled) evaluations.
+    pub total_digits: u64,
+    /// Sum of per-SOP executed fractions of the digit-production window
+    /// (see [`crate::arith::sop::SopEndResult::digit_exec_fraction`]).
+    pub exec_fraction_sum: f64,
+}
+
+impl EndCounters {
+    /// Merge another accumulator into this one (per-thread reduction).
+    pub fn merge(&mut self, o: &EndCounters) {
+        self.sops += o.sops;
+        self.terminated += o.terminated;
+        self.positive += o.positive;
+        self.undetermined += o.undetermined;
+        self.executed_digits += o.executed_digits;
+        self.total_digits += o.total_digits;
+        self.exec_fraction_sum += o.exec_fraction_sum;
+    }
+
+    /// Fraction of SOPs terminated early (the paper's detection rate).
+    pub fn detection_rate(&self) -> f64 {
+        if self.sops == 0 {
+            0.0
+        } else {
+            self.terminated as f64 / self.sops as f64
+        }
+    }
+
+    /// Fraction of SOPs left undetermined.
+    pub fn undetermined_rate(&self) -> f64 {
+        if self.sops == 0 {
+            0.0
+        } else {
+            self.undetermined as f64 / self.sops as f64
+        }
+    }
+
+    /// Executed fraction of all output digits (END on vs END off).
+    pub fn executed_digit_fraction(&self) -> f64 {
+        if self.total_digits == 0 {
+            1.0
+        } else {
+            self.executed_digits as f64 / self.total_digits as f64
+        }
+    }
+
+    /// Mean per-SOP executed fraction of the digit-production window —
+    /// the activity factor the energy model consumes.
+    pub fn mean_exec_fraction(&self) -> f64 {
+        if self.sops == 0 {
+            1.0
+        } else {
+            self.exec_fraction_sum / self.sops as f64
+        }
+    }
+}
+
+/// A pluggable per-level tile engine: executes one fused level
+/// (convolution + bias + ReLU + optional max-pool) over a host tensor
+/// tile. Implementations are stateful (they cache per-level compiled
+/// state and accumulate statistics) and therefore one instance serves
+/// one worker thread.
+pub trait ComputeEngine: Send {
+    /// Engine name for logs and benches ("f32", "sop", …).
+    fn name(&self) -> &'static str;
+
+    /// Evaluate one fused level over `input` (an `(H, H, N)` tile in
+    /// padded coordinates): convolution at `spec.s` with `weights`
+    /// (`(K, K, N, M)`) and `bias` (`M`), then ReLU, then the optional
+    /// pooling stage. Returns the `(H', H', M)` level output.
+    ///
+    /// `level` identifies the pyramid level for per-level state reuse
+    /// and statistics; callers must pass the same `spec`/`weights` for
+    /// the same `level` across calls.
+    fn run_level(
+        &mut self,
+        level: usize,
+        spec: &FusedConvSpec,
+        input: &Tensor,
+        weights: &Tensor,
+        bias: &[f32],
+    ) -> Result<Tensor>;
+
+    /// Drain the per-level END counters accumulated so far (index =
+    /// pyramid level). Engines without an END unit return an empty vec.
+    fn take_end_counters(&mut self) -> Vec<EndCounters> {
+        Vec::new()
+    }
+}
+
+/// Shape-check the level inputs shared by every engine.
+fn check_level_args(
+    spec: &FusedConvSpec,
+    input: &Tensor,
+    weights: &Tensor,
+    bias: &[f32],
+) -> Result<(usize, usize)> {
+    let (k, n, m) = (spec.k, spec.n_in, spec.m_out);
+    if input.shape.len() != 3 || input.shape[2] != n {
+        bail!(
+            "{}: engine input {:?}, want (H, W, {n})",
+            spec.name,
+            input.shape
+        );
+    }
+    if weights.shape != [k, k, n, m] {
+        bail!(
+            "{}: weights {:?}, want ({k}, {k}, {n}, {m})",
+            spec.name,
+            weights.shape
+        );
+    }
+    if bias.len() != m {
+        bail!("{}: bias len {} != {m}", spec.name, bias.len());
+    }
+    let (h, w) = (input.shape[0], input.shape[1]);
+    if h < k || w < k {
+        bail!("{}: tile {h}×{w} smaller than kernel {k}", spec.name);
+    }
+    Ok((h, w))
+}
+
+/// Valid convolution + bias of an `(H, W, N)` input with `(K, K, N, M)`
+/// weights at stride `spec.s` — the **pre-activation** map. The input is
+/// taken as already padded (executor tiles and the golden path's
+/// [`Tensor::pad_spatial`] both supply padded-coordinate data).
+pub fn conv2d(
+    spec: &FusedConvSpec,
+    input: &Tensor,
+    weights: &Tensor,
+    bias: &[f32],
+) -> Result<Tensor> {
+    let (h, w) = check_level_args(spec, input, weights, bias)?;
+    let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
+    let out_h = (h - k) / s + 1;
+    let out_w = (w - k) / s + 1;
+    let mut out = Tensor::zeros(vec![out_h, out_w, m]);
+    for oy in 0..out_h {
+        for ox in 0..out_w {
+            let base = (oy * out_w + ox) * m;
+            out.data[base..base + m].copy_from_slice(bias);
+            for dy in 0..k {
+                for dx in 0..k {
+                    let src = ((oy * s + dy) * w + (ox * s + dx)) * n;
+                    for c in 0..n {
+                        let a = input.data[src + c];
+                        if a == 0.0 {
+                            continue; // zero-filled halo rows are common
+                        }
+                        let wb = ((dy * k + dx) * n + c) * m;
+                        let acc = &mut out.data[base..base + m];
+                        let wrow = &weights.data[wb..wb + m];
+                        for (o, wv) in acc.iter_mut().zip(wrow) {
+                            *o += a * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The vectorized f32 reference engine (and verification oracle for the
+/// digit-serial path).
+pub struct F32Engine;
+
+impl ComputeEngine for F32Engine {
+    fn name(&self) -> &'static str {
+        "f32"
+    }
+
+    fn run_level(
+        &mut self,
+        _level: usize,
+        spec: &FusedConvSpec,
+        input: &Tensor,
+        weights: &Tensor,
+        bias: &[f32],
+    ) -> Result<Tensor> {
+        let mut act = conv2d(spec, input, weights, bias)?;
+        for v in act.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        match spec.pool {
+            Some(p) => act.maxpool(p.k, p.s),
+            None => Ok(act),
+        }
+    }
+}
+
+/// Per-level compiled state of the [`SopEngine`]: the filter weights
+/// quantized once, and one reusable [`SopPipeline`] per output filter
+/// (zero allocation per SOP on the hot path).
+struct SopLevel {
+    w_scale: f32,
+    pipes: Vec<SopPipeline>,
+}
+
+/// The digit-serial MSDF engine: every output pixel is a bank-of-online-
+/// multipliers + adder-tree SOP with the END unit gating it, exactly the
+/// paper's WPU. Values are quantized per tile (activations share one
+/// scale; weights were scaled once per level), evaluated digit-serially,
+/// and de-quantized back to f32 — so outputs match [`F32Engine`] within
+/// the quantization bound, while per-level [`EndCounters`] record the
+/// live termination behaviour.
+pub struct SopEngine {
+    n_bits: u32,
+    n_out_digits: usize,
+    levels: Vec<Option<SopLevel>>,
+    counters: Vec<EndCounters>,
+    /// Reusable quantized-window buffer.
+    window: Vec<Fixed>,
+}
+
+impl SopEngine {
+    /// Engine with `n_bits` operand precision (1 sign + `n_bits - 1`
+    /// fraction bits; the paper evaluates n = 8).
+    pub fn new(n_bits: u32) -> SopEngine {
+        assert!((2..=24).contains(&n_bits), "n_bits out of range");
+        SopEngine {
+            n_bits,
+            // Same convention as the END experiments: n + 4 result digits
+            // (enough for the convergence bound to sit below 2^-n).
+            n_out_digits: (n_bits + 4) as usize,
+            levels: Vec::new(),
+            counters: Vec::new(),
+            window: Vec::new(),
+        }
+    }
+
+    /// Build (once) the quantized per-filter pipelines for `level`.
+    fn compile_level(
+        &mut self,
+        level: usize,
+        spec: &FusedConvSpec,
+        weights: &Tensor,
+    ) {
+        if self.levels.len() <= level {
+            self.levels.resize_with(level + 1, || None);
+        }
+        if self.counters.len() <= level {
+            self.counters.resize(level + 1, EndCounters::default());
+        }
+        if self.levels[level].is_some() {
+            return;
+        }
+        let (k, n, m) = (spec.k, spec.n_in, spec.m_out);
+        let w_scale = weights.max_abs().max(1e-12);
+        let inv = 1.0 / w_scale;
+        let win = k * k * n;
+        let mut pipes = Vec::with_capacity(m);
+        let mut wq = vec![Fixed::zero(self.n_bits - 1); win];
+        for f in 0..m {
+            for dy in 0..k {
+                for dx in 0..k {
+                    for c in 0..n {
+                        let v = weights.data[((dy * k + dx) * n + c) * m + f];
+                        wq[(dy * k + dx) * n + c] =
+                            Fixed::quantize((v * inv) as f64 * 0.999, self.n_bits);
+                    }
+                }
+            }
+            // Bias operand present from the start; its value is set per
+            // tile (the activation scale changes tile to tile).
+            pipes.push(SopPipeline::new(
+                &wq,
+                Some(Fixed::zero(self.n_bits - 1)),
+                self.n_out_digits,
+            ));
+        }
+        self.levels[level] = Some(SopLevel { w_scale, pipes });
+    }
+}
+
+impl ComputeEngine for SopEngine {
+    fn name(&self) -> &'static str {
+        "sop"
+    }
+
+    fn run_level(
+        &mut self,
+        level: usize,
+        spec: &FusedConvSpec,
+        input: &Tensor,
+        weights: &Tensor,
+        bias: &[f32],
+    ) -> Result<Tensor> {
+        let (h, w) = check_level_args(spec, input, weights, bias)?;
+        self.compile_level(level, spec, weights);
+        let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
+        let nb = self.n_bits;
+        let st = self.levels[level].as_mut().expect("compiled above");
+        let ctr = &mut self.counters[level];
+
+        // Per-tile quantization scales: activations share one scale; the
+        // bias enters each SOP as b / (act_scale · w_scale), so the
+        // activation scale is raised when needed to keep it inside the
+        // (-1, 1) operand range.
+        let max_b = bias.iter().fold(0.0f32, |mb, b| mb.max(b.abs()));
+        let act_scale = input.max_abs().max(max_b / st.w_scale).max(1e-12);
+        let dequant = act_scale as f64 * st.w_scale as f64;
+        let inv_a = 1.0 / act_scale;
+        for (pipe, &b) in st.pipes.iter_mut().zip(bias) {
+            pipe.set_bias(Fixed::quantize(
+                (b / (act_scale * st.w_scale)) as f64 * 0.999,
+                nb,
+            ));
+        }
+
+        let out_h = (h - k) / s + 1;
+        let out_w = (w - k) / s + 1;
+        let mut act = Tensor::zeros(vec![out_h, out_w, m]);
+        self.window.resize(k * k * n, Fixed::zero(nb - 1));
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                // Quantize the window once; all M filters share it.
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let src = ((oy * s + dy) * w + (ox * s + dx)) * n;
+                        for c in 0..n {
+                            self.window[(dy * k + dx) * n + c] = Fixed::quantize(
+                                (input.data[src + c] * inv_a) as f64 * 0.999,
+                                nb,
+                            );
+                        }
+                    }
+                }
+                let base = (oy * out_w + ox) * m;
+                for (f, pipe) in st.pipes.iter_mut().enumerate() {
+                    let r = pipe.run(&self.window);
+                    ctr.sops += 1;
+                    ctr.executed_digits += r.executed_digits() as u64;
+                    ctr.total_digits += r.total_digits as u64;
+                    ctr.exec_fraction_sum += r.digit_exec_fraction();
+                    act.data[base + f] = match r.state {
+                        EndState::Terminate => {
+                            ctr.terminated += 1;
+                            0.0 // END fired: ReLU output is provably 0
+                        }
+                        EndState::SurelyPositive => {
+                            ctr.positive += 1;
+                            (r.value * dequant) as f32
+                        }
+                        EndState::Undetermined => {
+                            ctr.undetermined += 1;
+                            ((r.value * dequant) as f32).max(0.0)
+                        }
+                    };
+                }
+            }
+        }
+        match spec.pool {
+            Some(p) => act.maxpool(p.k, p.s),
+            None => Ok(act),
+        }
+    }
+
+    fn take_end_counters(&mut self) -> Vec<EndCounters> {
+        std::mem::take(&mut self.counters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::PoolSpec;
+    use crate::util::rng::Rng;
+
+    fn spec(k: usize, s: usize, n_in: usize, m_out: usize, pool: Option<(usize, usize)>) -> FusedConvSpec {
+        FusedConvSpec {
+            name: "T".into(),
+            k,
+            s,
+            pad: 0,
+            pool: pool.map(|(k, s)| PoolSpec { k, s }),
+            n_in,
+            m_out,
+            ifm: 8,
+        }
+    }
+
+    fn random_tensor(shape: Vec<usize>, rng: &mut Rng, scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.normal() as f32 * scale).collect()).unwrap()
+    }
+
+    #[test]
+    fn conv2d_known_values() {
+        // 3×3×1 input, 2×2 all-ones kernel, single filter, bias 0.5.
+        let sp = spec(2, 1, 1, 1, None);
+        let input = Tensor::new(vec![3, 3, 1], (0..9).map(|i| i as f32).collect()).unwrap();
+        let weights = Tensor::new(vec![2, 2, 1, 1], vec![1.0; 4]).unwrap();
+        let out = conv2d(&sp, &input, &weights, &[0.5]).unwrap();
+        assert_eq!(out.shape, vec![2, 2, 1]);
+        // Window sums: 0+1+3+4, 1+2+4+5, 3+4+6+7, 4+5+7+8 (+0.5).
+        assert_eq!(out.data, vec![8.5, 12.5, 20.5, 24.5]);
+    }
+
+    #[test]
+    fn conv2d_rejects_bad_shapes() {
+        let sp = spec(3, 1, 2, 4, None);
+        let ok_w = Tensor::zeros(vec![3, 3, 2, 4]);
+        assert!(conv2d(&sp, &Tensor::zeros(vec![4, 4, 1]), &ok_w, &[0.0; 4]).is_err());
+        assert!(conv2d(&sp, &Tensor::zeros(vec![4, 4, 2]), &Tensor::zeros(vec![3, 3, 2, 3]), &[0.0; 4]).is_err());
+        assert!(conv2d(&sp, &Tensor::zeros(vec![4, 4, 2]), &ok_w, &[0.0; 3]).is_err());
+        assert!(conv2d(&sp, &Tensor::zeros(vec![2, 2, 2]), &ok_w, &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn f32_engine_applies_relu_and_pool() {
+        let sp = spec(2, 1, 1, 1, Some((2, 2)));
+        let input = Tensor::new(
+            vec![4, 4, 1],
+            vec![
+                1.0, -1.0, 2.0, -2.0, //
+                3.0, -3.0, 4.0, -4.0, //
+                -1.0, 1.0, -2.0, 2.0, //
+                -3.0, 3.0, -4.0, 4.0,
+            ],
+        )
+        .unwrap();
+        let weights = Tensor::new(vec![2, 2, 1, 1], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let out = F32Engine
+            .run_level(0, &sp, &input, &weights, &[0.0])
+            .unwrap();
+        assert_eq!(out.shape, vec![1, 1, 1]);
+        // Conv (window sums) on the 3×3 map: only (0,1) = -1+2-3+4 = 2
+        // and (2,1) = -2 are nonzero; ReLU clips the -2, and the 2×2/2
+        // pool over the top-left window keeps the 2.
+        assert_eq!(out.data, vec![2.0]);
+    }
+
+    /// The SOP engine tracks the f32 engine within the quantization
+    /// bound, and its counters add up.
+    #[test]
+    fn sop_engine_matches_f32_within_quantization() {
+        let mut rng = Rng::new(11);
+        let sp = spec(3, 1, 2, 4, Some((2, 2)));
+        let input = random_tensor(vec![6, 6, 2], &mut rng, 1.0).relu();
+        let weights = random_tensor(vec![3, 3, 2, 4], &mut rng, 0.3);
+        let bias = vec![0.05, -0.05, 0.0, 0.1];
+        let golden = F32Engine
+            .run_level(0, &sp, &input, &weights, &bias)
+            .unwrap();
+        let mut sop = SopEngine::new(12);
+        let got = sop.run_level(0, &sp, &input, &weights, &bias).unwrap();
+        assert_eq!(got.shape, golden.shape);
+        let scale = golden.max_abs().max(1e-6);
+        let rel = got.max_abs_diff(&golden).unwrap() / scale;
+        assert!(rel < 0.05, "rel err {rel}");
+        let ctr = sop.take_end_counters();
+        assert_eq!(ctr.len(), 1);
+        let c = ctr[0];
+        // 4×4 conv outputs × 4 filters.
+        assert_eq!(c.sops, 16 * 4);
+        assert_eq!(c.terminated + c.positive + c.undetermined, c.sops);
+        assert!(c.executed_digits <= c.total_digits);
+        assert!(c.mean_exec_fraction() <= 1.0 + 1e-12);
+        // Draining resets.
+        assert!(sop.take_end_counters().is_empty());
+    }
+
+    /// All-negative pre-activations terminate (and produce exact zeros).
+    #[test]
+    fn sop_engine_end_terminates_negative_layers() {
+        let mut rng = Rng::new(12);
+        let sp = spec(3, 1, 1, 2, None);
+        let input = random_tensor(vec![5, 5, 1], &mut rng, 1.0).relu();
+        // Strongly negative weights + negative bias: every SOP < 0.
+        let weights = Tensor::new(
+            vec![3, 3, 1, 2],
+            (0..18).map(|_| -0.3 - rng.f32() * 0.5).collect(),
+        )
+        .unwrap();
+        let mut sop = SopEngine::new(8);
+        let out = sop
+            .run_level(0, &sp, &input, &weights, &[-0.2, -0.4])
+            .unwrap();
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        let c = sop.take_end_counters()[0];
+        assert!(c.detection_rate() > 0.9, "rate {}", c.detection_rate());
+        assert!(c.executed_digit_fraction() < 1.0);
+    }
+}

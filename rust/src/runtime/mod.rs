@@ -1,14 +1,19 @@
-//! PJRT/host runtime: artifact manifest, host tensors, and the
-//! executable registry that runs the AOT-compiled JAX/Pallas programs
-//! (or natively-registered host closures in toolchain-free builds).
+//! PJRT/host runtime: artifact manifest, host tensors, the executable
+//! registry that runs the AOT-compiled JAX/Pallas programs (or
+//! natively-registered host closures in toolchain-free builds), and the
+//! native per-level compute engines ([`engine`]) that execute fused
+//! levels directly — no artifacts required at all.
 
 /// Executable registry and the two execution backends.
 pub mod client;
+/// Native per-level compute engines (f32 reference + digit-serial SOP).
+pub mod engine;
 /// Artifact manifest (the `aot.py` ↔ Rust contract).
 pub mod manifest;
 /// Dense host tensors and the executor's slicing/assembly ops.
 pub mod tensor;
 
 pub use client::{batched_suffix, HostFn, Program, Runtime, StackedRun};
+pub use engine::{ComputeEngine, EndCounters, EngineKind, F32Engine, SopEngine};
 pub use manifest::{BlobMeta, DType, GeometryMeta, Manifest, ProgramMeta, TensorMeta};
 pub use tensor::Tensor;

@@ -176,12 +176,20 @@ impl Tensor {
         }
     }
 
-    /// Valid max pooling of an (H, W, C) tensor.
+    /// Valid max pooling of an (H, W, C) tensor. Fails (rather than
+    /// panicking on `h - k` underflow) when the window exceeds the map
+    /// or the stride is zero.
     pub fn maxpool(&self, k: usize, stride: usize) -> Result<Tensor> {
         if self.shape.len() != 3 {
             bail!("maxpool wants (H, W, C)");
         }
         let (h, w, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        if k == 0 || stride == 0 {
+            bail!("maxpool: window {k} / stride {stride} must be positive");
+        }
+        if k > h || k > w {
+            bail!("maxpool: window {k} exceeds map {h}×{w}");
+        }
         let r = (h - k) / stride + 1;
         let cc = (w - k) / stride + 1;
         let mut out = Tensor::zeros(vec![r, cc, c]);
@@ -199,6 +207,58 @@ impl Tensor {
             }
         }
         Ok(out)
+    }
+
+    /// Symmetric spatial zero-padding of an (H, W, C) tensor: returns a
+    /// `(H+2p, W+2p, C)` tensor with `self` centred — the native golden
+    /// path's explicit padding between fused levels.
+    pub fn pad_spatial(&self, pad: usize) -> Result<Tensor> {
+        if self.shape.len() != 3 {
+            bail!("pad_spatial wants (H, W, C)");
+        }
+        if pad == 0 {
+            return Ok(self.clone());
+        }
+        let (h, w, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        let mut out = Tensor::zeros(vec![h + 2 * pad, w + 2 * pad, c]);
+        let ow = w + 2 * pad;
+        for y in 0..h {
+            let dst = ((y + pad) * ow + pad) * c;
+            let src = y * w * c;
+            out.data[dst..dst + w * c].copy_from_slice(&self.data[src..src + w * c]);
+        }
+        Ok(out)
+    }
+
+    /// Zero every cell of an (H, W, C) tensor whose *global* spatial
+    /// coordinate falls outside the real data band `[off, off + valid)`
+    /// in either dimension, where the tensor's local origin sits at
+    /// global `(y0, x0)`. This is the fusion executor's inter-level halo
+    /// mask: tile cells beyond a level's feature map are zero padding in
+    /// the reference computation, not the `relu(bias)` a native conv
+    /// over a zero-filled halo would produce.
+    pub fn mask_outside(&mut self, y0: i64, x0: i64, off: i64, valid: usize) -> Result<()> {
+        if self.shape.len() != 3 {
+            bail!("mask_outside wants (H, W, C)");
+        }
+        let (h, w, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        let lo = off;
+        let hi = off + valid as i64;
+        for y in 0..h {
+            let gy = y0 + y as i64;
+            let row = y * w * c;
+            if gy < lo || gy >= hi {
+                self.data[row..row + w * c].fill(0.0);
+                continue;
+            }
+            for x in 0..w {
+                let gx = x0 + x as i64;
+                if gx < lo || gx >= hi {
+                    self.data[row + x * c..row + (x + 1) * c].fill(0.0);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Max |value| (for quantization scaling).
@@ -275,6 +335,44 @@ mod tests {
         let p = t.maxpool(2, 2).unwrap();
         assert_eq!(p.shape, vec![2, 2, 1]);
         assert_eq!(p.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_rejects_oversized_window() {
+        let t = seq(vec![3, 3, 1]);
+        assert!(t.maxpool(4, 1).is_err()); // was an (h - k) underflow panic
+        assert!(t.maxpool(2, 0).is_err());
+        assert!(t.maxpool(0, 1).is_err());
+        assert!(t.maxpool(3, 1).is_ok()); // window == map is the 1×1 edge case
+    }
+
+    #[test]
+    fn pad_spatial_centres_the_map() {
+        let t = seq(vec![2, 2, 1]);
+        let p = t.pad_spatial(1).unwrap();
+        assert_eq!(p.shape, vec![4, 4, 1]);
+        assert_eq!(p.at3(0, 0, 0), 0.0);
+        assert_eq!(p.at3(1, 1, 0), 0.0); // seq starts at 0.0
+        assert_eq!(p.at3(1, 2, 0), 1.0);
+        assert_eq!(p.at3(2, 2, 0), 3.0);
+        assert_eq!(t.pad_spatial(0).unwrap(), t);
+    }
+
+    #[test]
+    fn mask_outside_zeroes_the_halo() {
+        // A 4×4 tile whose origin sits at global (-1, 1); real data band
+        // is [0, 3) in both dimensions.
+        let mut t = Tensor::new(vec![4, 4, 1], vec![1.0; 16]).unwrap();
+        t.mask_outside(-1, 1, 0, 3).unwrap();
+        // Row 0 (global y = -1) fully zeroed.
+        assert_eq!(&t.data[0..4], &[0.0; 4]);
+        // Columns at global x = 3, 4 (locals 2, 3) zeroed in rows 1..4.
+        for y in 1..4 {
+            assert_eq!(t.at3(y, 0, 0), 1.0, "y={y}"); // global x = 1
+            assert_eq!(t.at3(y, 1, 0), 1.0); // global x = 2
+            assert_eq!(t.at3(y, 2, 0), 0.0); // global x = 3
+            assert_eq!(t.at3(y, 3, 0), 0.0); // global x = 4
+        }
     }
 
     #[test]

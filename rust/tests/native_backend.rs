@@ -1,0 +1,220 @@
+//! Integration tests of the **artifact-free native fusion backend**:
+//! `FusionExecutor::native` runs the fused stack end-to-end through the
+//! pluggable compute engines with no AOT artifacts, no manifest and no
+//! runtime — the acceptance invariant of the SOP+END engine work.
+//!
+//! - the fused LeNet stack verifies (tile assembly ≡ full-map golden)
+//!   for both the f32 and the digit-serial SOP engine;
+//! - the SOP engine's live END counters are consistent;
+//! - parallel execution is identical to serial for both engines;
+//! - property: SOP ≈ F32 on random small fused stacks within the
+//!   quantization bound.
+
+use usefuse::coordinator::FusionExecutor;
+use usefuse::geometry::{FusedConvSpec, PoolSpec, PyramidPlan, StridePolicy};
+use usefuse::nets;
+use usefuse::prop_assert;
+use usefuse::runtime::EngineKind;
+use usefuse::util::prop::prop_check;
+
+/// The paper's fused LeNet stack (CONV1+POOL1, CONV2+POOL2) with seeded
+/// synthetic parameters and input.
+fn lenet_native(
+    kind: EngineKind,
+) -> (FusionExecutor<'static>, usefuse::runtime::Tensor) {
+    let specs = nets::lenet5().paper_fusion()[0].clone();
+    let (weights, biases) = nets::random_weights(&specs, 41);
+    let exec = FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
+        .expect("uniform LeNet plan");
+    let input = nets::random_input(&specs[0], 42);
+    (exec, input)
+}
+
+/// Acceptance: fused LeNet verifies end-to-end with **no artifacts**
+/// through the f32 engine. Tile assembly is bit-identical to the
+/// full-map golden (same summation order, same windows).
+#[test]
+fn lenet_f32_engine_verifies_without_artifacts() {
+    let (exec, input) = lenet_native(EngineKind::F32);
+    assert_eq!(exec.engine_kind(), Some(EngineKind::F32));
+    assert_eq!(exec.output_shape(), vec![5, 5, 16]);
+    let rel = exec.verify(&input).expect("verify");
+    assert!(rel < 1e-6, "f32 tile assembly diverged: rel err {rel}");
+    // The f32 engine has no END unit: no counters.
+    assert!(exec.end_counters().is_empty());
+}
+
+/// Acceptance: the same stack through the digit-serial SOP+END engine —
+/// output matches the exact f32 golden within the n=12 quantization
+/// bound, and the executor accumulated live per-level END statistics
+/// for every SOP of every tile movement.
+#[test]
+fn lenet_sop_engine_verifies_without_artifacts() {
+    let (exec, input) = lenet_native(EngineKind::Sop { n_bits: 12 });
+    let rel = exec.verify(&input).expect("verify");
+    assert!(rel < 0.05, "SOP engine outside quantization bound: {rel}");
+
+    let counters = exec.end_counters();
+    assert_eq!(counters.len(), 2, "one counter per pyramid level");
+    // verify() ran the pyramid once: 25 movements; level 0 computes
+    // 12×12 conv pixels × 6 filters per movement, level 1 2×2 × 16.
+    assert_eq!(counters[0].sops, 25 * 12 * 12 * 6);
+    assert_eq!(counters[1].sops, 25 * 2 * 2 * 16);
+    for (j, c) in counters.iter().enumerate() {
+        assert_eq!(
+            c.terminated + c.positive + c.undetermined,
+            c.sops,
+            "level {j} counter mismatch"
+        );
+        assert!(c.executed_digits <= c.total_digits, "level {j}");
+        assert!(c.mean_exec_fraction() <= 1.0 + 1e-12, "level {j}");
+    }
+    // Zero-mean weights on non-negative inputs: a substantial fraction
+    // of SOPs is negative, so END must terminate some and save digits.
+    let c0 = counters[0];
+    assert!(
+        (0.15..0.85).contains(&c0.detection_rate()),
+        "level-0 detection rate {} implausible",
+        c0.detection_rate()
+    );
+    assert!(c0.executed_digit_fraction() < 1.0);
+}
+
+/// run_parallel is identical to run for both native engines (engines
+/// are per-thread but quantization depends only on tile content).
+#[test]
+fn native_parallel_matches_serial() {
+    for kind in [EngineKind::F32, EngineKind::Sop { n_bits: 8 }] {
+        let (exec, input) = lenet_native(kind);
+        let (serial, s_stats) = exec.run(&input).expect("serial");
+        let (parallel, p_stats) = exec.run_parallel(&input, 4).expect("parallel");
+        assert_eq!(serial.data, parallel.data, "engine {:?}", kind);
+        assert_eq!(s_stats.tiles_executed, p_stats.tiles_executed);
+    }
+}
+
+/// END counters accumulate across runs and are merged from every
+/// parallel worker: two runs double every count.
+#[test]
+fn end_counters_accumulate_across_runs() {
+    let (exec, input) = lenet_native(EngineKind::Sop { n_bits: 8 });
+    exec.run(&input).expect("run 1");
+    let after_one = exec.end_counters();
+    exec.run_parallel(&input, 3).expect("run 2");
+    let after_two = exec.end_counters();
+    for (a, b) in after_one.iter().zip(&after_two) {
+        assert_eq!(2 * a.sops, b.sops);
+        assert_eq!(2 * a.terminated, b.terminated);
+        assert_eq!(2 * a.executed_digits, b.executed_digits);
+    }
+}
+
+/// Native constructors validate their inputs.
+#[test]
+fn native_rejects_mismatched_parameters() {
+    let specs = nets::lenet5().paper_fusion()[0].clone();
+    let (weights, biases) = nets::random_weights(&specs, 1);
+    // Missing a level's weights.
+    assert!(FusionExecutor::native(
+        "bad",
+        &specs,
+        1,
+        weights[..1].to_vec(),
+        biases.clone(),
+        EngineKind::F32
+    )
+    .is_err());
+    // Wrong filter shape.
+    let mut wrong = weights.clone();
+    wrong[0] = usefuse::runtime::Tensor::zeros(vec![3, 3, 1, 6]);
+    assert!(
+        FusionExecutor::native("bad", &specs, 1, wrong, biases.clone(), EngineKind::F32).is_err()
+    );
+    // Wrong bias length.
+    let mut bad_b = biases.clone();
+    bad_b[1] = vec![0.0; 3];
+    assert!(
+        FusionExecutor::native("bad", &specs, 1, weights, bad_b, EngineKind::F32).is_err()
+    );
+}
+
+/// Property: over random small fused stacks, the SOP engine's fused
+/// output matches the f32 engine within the quantization bound.
+#[test]
+fn sop_matches_f32_on_random_stacks() {
+    prop_check("native SOP ≈ F32 on random fused stacks", 10, |g| {
+        let q = g.usize(1, 2);
+        let mut specs = Vec::new();
+        let mut ifm = g.usize(8, 12);
+        let mut n_in = g.usize(1, 2);
+        for j in 0..q {
+            let k = *g.pick(&[1usize, 3]);
+            let pad = if k == 3 && g.bool() { 1 } else { 0 };
+            let spec = FusedConvSpec {
+                name: format!("L{j}"),
+                k,
+                s: 1,
+                pad,
+                pool: g.bool().then_some(PoolSpec { k: 2, s: 2 }),
+                n_in,
+                m_out: g.usize(1, 3),
+                ifm,
+            };
+            if spec.ifm_padded() < spec.k {
+                return Ok(());
+            }
+            let conv = spec.conv_out();
+            if let Some(p) = spec.pool {
+                if conv < p.k {
+                    return Ok(());
+                }
+            }
+            if spec.level_out() < 2 {
+                return Ok(());
+            }
+            ifm = spec.level_out();
+            n_in = spec.m_out;
+            specs.push(spec);
+        }
+        if PyramidPlan::build(&specs, 1, StridePolicy::Uniform).is_none() {
+            return Ok(()); // infeasible geometry: nothing to compare
+        }
+        let seed = g.usize(0, 1 << 20) as u64;
+        let (weights, biases) = nets::random_weights(&specs, seed);
+        let input = nets::random_input(&specs[0], seed ^ 0xA5A5);
+
+        let f32_exec = FusionExecutor::native(
+            "prop",
+            &specs,
+            1,
+            weights.clone(),
+            biases.clone(),
+            EngineKind::F32,
+        )
+        .expect("f32 executor");
+        let sop_exec = FusionExecutor::native(
+            "prop",
+            &specs,
+            1,
+            weights,
+            biases,
+            EngineKind::Sop { n_bits: 12 },
+        )
+        .expect("sop executor");
+        let (reference, _) = f32_exec.run(&input).expect("f32 run");
+        let (got, _) = sop_exec.run(&input).expect("sop run");
+        prop_assert!(got.shape == reference.shape, "shape mismatch");
+        // Affine quantization bound: the absolute error scales with the
+        // output magnitude (operand rounding) plus a constant floor for
+        // near-zero maps, where END/ReLU decisions near the boundary
+        // leave an O(2^-n · scale) residue but the reference max is tiny.
+        let diff = got.max_abs_diff(&reference).expect("diff");
+        let tol = 0.02 + 0.03 * reference.max_abs();
+        prop_assert!(
+            diff <= tol,
+            "SOP engine off by {diff} (tol {tol}) on stack {:?}",
+            specs.iter().map(|s| (s.k, s.pad, s.pool.is_some(), s.n_in, s.m_out, s.ifm)).collect::<Vec<_>>()
+        );
+        Ok(())
+    });
+}
