@@ -13,6 +13,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::runtime::engine::EndCounters;
+
 /// Latency percentile over an already-sorted sample (nearest-rank with
 /// linear index rounding; `p` in percent).
 pub fn percentile(sorted_us: &[f64], p: f64) -> f64 {
@@ -170,6 +172,7 @@ impl Metrics {
                     .min(1.0),
                 })
                 .collect(),
+            end_levels: Vec::new(),
             uptime,
         }
     }
@@ -217,6 +220,11 @@ pub struct MetricsSnapshot {
     pub batch_hist: BTreeMap<usize, u64>,
     /// Per-worker counters, indexed by worker id.
     pub workers: Vec<WorkerSnapshot>,
+    /// Live per-conv-level END statistics merged across every worker —
+    /// populated only when the pool serves a native SOP pipeline (see
+    /// [`native_factory`](super::pool::native_factory)); empty for the
+    /// artifact backends and the f32 engine.
+    pub end_levels: Vec<EndCounters>,
     /// Time since the registry was created.
     pub uptime: Duration,
 }
@@ -249,6 +257,17 @@ impl std::fmt::Display for MetricsSnapshot {
                 w.requests,
                 w.batches,
                 100.0 * w.utilization
+            )?;
+        }
+        for (j, c) in self.end_levels.iter().enumerate() {
+            writeln!(
+                f,
+                "END level {j}: {} SOPs, {:.1}% detected, {:.1}% undetermined, \
+                 {:.1}% digits executed",
+                c.sops,
+                100.0 * c.detection_rate(),
+                100.0 * c.undetermined_rate(),
+                100.0 * c.executed_digit_fraction()
             )?;
         }
         Ok(())
@@ -316,6 +335,25 @@ mod tests {
         assert_eq!(s.workers[0].requests, 4);
         assert!((s.mean_batch - 3.0).abs() < 1e-9, "mean {}", s.mean_batch);
         assert!(s.workers[0].utilization > 0.0);
+    }
+
+    #[test]
+    fn end_levels_render_in_display() {
+        let m = Metrics::new(1, 16);
+        let mut s = m.snapshot();
+        assert!(s.end_levels.is_empty(), "plain snapshots carry no END data");
+        s.end_levels.push(EndCounters {
+            sops: 100,
+            terminated: 60,
+            positive: 30,
+            undetermined: 10,
+            executed_digits: 500,
+            total_digits: 1200,
+            exec_fraction_sum: 40.0,
+        });
+        let text = format!("{s}");
+        assert!(text.contains("END level 0"), "{text}");
+        assert!(text.contains("60.0% detected"), "{text}");
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The L3 coordinator: fusion-pyramid execution over PJRT, END-statistics
-//! collection from real activations, and the multi-worker batched
-//! inference serving layer (pool + router + metrics).
+//! collection from real activations, the artifact-free full-network
+//! native pipeline, and the multi-worker batched inference serving layer
+//! (pool + router + metrics).
 
 /// END statistics from real activations (paper §4.3).
 pub mod end_stats;
@@ -8,6 +9,8 @@ pub mod end_stats;
 pub mod executor;
 /// Serving metrics: percentiles, queue depth, batch histogram.
 pub mod metrics;
+/// Full-network native inference: chained pyramids + classifier head.
+pub mod pipeline;
 /// The multi-worker batched serving core with model-group routing.
 pub mod pool;
 /// Single-program facade over the worker pool.
@@ -18,5 +21,9 @@ pub use end_stats::{
 };
 pub use executor::{ExecStats, FusionExecutor};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
-pub use pool::{ModelGroup, PoolConfig, RuntimeFactory, WorkerPool};
-pub use service::{InferenceService, Response, ServiceConfig};
+pub use pipeline::{Inference, NativePipeline, PipelineParams};
+pub use pool::{
+    native_factory, pipeline_end_source, EndCounterSource, ModelGroup, PoolConfig,
+    RuntimeFactory, WorkerPool,
+};
+pub use service::{InferenceService, Response, ServiceBackend, ServiceConfig};

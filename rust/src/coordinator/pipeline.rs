@@ -1,0 +1,486 @@
+//! The **native pipeline**: artifact-free full-network inference.
+//!
+//! [`NativePipeline`] chains fusion pyramids across a whole
+//! [`Network`](crate::nets::Network): the conv stack is partitioned into
+//! its canonical stages ([`Network::pipeline_stages`]), each stage runs
+//! through [`FusionExecutor::native`] as one fusion pyramid (falling
+//! back to per-level pyramids when Algorithm 3/4 has no fused uniform
+//! plan for a miniature stage), intermediate feature maps hand off
+//! between pyramids, ResNet shortcuts are added back around their
+//! blocks (identity or 1×1 projection), and a Rust
+//! [`ClassifierHead`] turns the final feature map into logits — no PJRT,
+//! no AOT artifacts, no Python anywhere on the path.
+//!
+//! With [`EngineKind::Sop`] the pipeline additionally accumulates the
+//! live per-conv-level END statistics of every executor it owns,
+//! readable via [`NativePipeline::end_counters`] and surfaced through
+//! the serving layer's
+//! [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot).
+//!
+//! [`Network::pipeline_stages`]: crate::nets::Network::pipeline_stages
+
+use anyhow::{anyhow, bail, Result};
+
+use super::executor::FusionExecutor;
+use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
+use crate::nets::{ClassifierHead, Network};
+use crate::runtime::engine::{conv2d, EndCounters, EngineKind};
+use crate::runtime::Tensor;
+
+/// Complete parameter set of a full-network pipeline: one `(K, K, N, M)`
+/// filter tensor and `(M,)` bias per conv level, projection-shortcut
+/// parameters for the residual stages that need one (in stage order),
+/// and the classifier head.
+#[derive(Clone, Debug)]
+pub struct PipelineParams {
+    /// Per-conv-level filter tensors, indexed like `Network::convs`.
+    pub conv_weights: Vec<Tensor>,
+    /// Per-conv-level bias vectors, indexed like `Network::convs`.
+    pub conv_biases: Vec<Vec<f32>>,
+    /// 1×1 projection filters for downsampling residual stages, in
+    /// stage order (`(1, 1, N, M)` each).
+    pub ds_weights: Vec<Tensor>,
+    /// Projection biases matching `ds_weights`.
+    pub ds_biases: Vec<Vec<f32>>,
+    /// The classifier head (flatten/GAP + FC chain).
+    pub head: ClassifierHead,
+}
+
+impl PipelineParams {
+    /// Seeded synthetic parameters for `net`, fully determined by
+    /// `seed`: conv parameters from
+    /// [`random_weights`](crate::nets::random_weights)`(&net.convs, seed)`,
+    /// projection parameters from the same generator at `seed ^ 0xD5`
+    /// over the stages' downsample specs, and the head from
+    /// [`ClassifierHead::synthetic`] at `seed ^ 0xAD`. Tests reproduce
+    /// any piece independently from the same derivations.
+    pub fn synthetic(net: &Network, seed: u64) -> PipelineParams {
+        let (conv_weights, conv_biases) = crate::nets::random_weights(&net.convs, seed);
+        let ds_specs: Vec<FusedConvSpec> = net
+            .pipeline_stages()
+            .iter()
+            .filter_map(|st| net.downsample_spec(st))
+            .collect();
+        let (ds_weights, ds_biases) = crate::nets::random_weights(&ds_specs, seed ^ 0xD5);
+        let last = net.convs.last().expect("network has conv levels");
+        let feat = [last.level_out(), last.level_out(), last.m_out];
+        let head = ClassifierHead::synthetic(net.name, &feat, seed ^ 0xAD);
+        PipelineParams {
+            conv_weights,
+            conv_biases,
+            ds_weights,
+            ds_biases,
+            head,
+        }
+    }
+}
+
+/// How a residual stage's shortcut reaches the stage output.
+enum Shortcut {
+    /// Same-shape skip: the stage input is added back unchanged.
+    Identity,
+    /// 1×1 strided projection of the stage input (channel/stride match).
+    Downsample {
+        spec: FusedConvSpec,
+        weights: Tensor,
+        bias: Vec<f32>,
+    },
+}
+
+/// One pipeline stage: usually a single fused pyramid; split into
+/// per-level pyramids when the stage has no fused uniform plan (tiny
+/// miniatures). The optional shortcut wraps the whole stage.
+struct Stage {
+    execs: Vec<FusionExecutor<'static>>,
+    shortcut: Option<Shortcut>,
+}
+
+/// The result of one pipeline inference.
+#[derive(Clone, Debug)]
+pub struct Inference {
+    /// Final conv feature map (before the classifier head).
+    pub features: Tensor,
+    /// Raw class logits.
+    pub logits: Tensor,
+    /// Softmax of the logits.
+    pub probs: Vec<f32>,
+    /// Argmax class.
+    pub class: usize,
+}
+
+/// Artifact-free full-network inference engine: chained fusion pyramids
+/// plus the classifier head. Safe to share across worker threads
+/// (`infer` takes `&self`; every run builds its own per-thread engines,
+/// and END counters merge internally).
+pub struct NativePipeline {
+    net: Network,
+    kind: EngineKind,
+    stages: Vec<Stage>,
+    head: ClassifierHead,
+    threads: usize,
+}
+
+/// Pick the output-region size R_Q for a stage: the smallest feasible
+/// movement count with real tiling (α ≥ 2, so assembly and inter-level
+/// masking are exercised without pathological movement counts), falling
+/// back to a single-movement plan when nothing tiles.
+fn choose_r_out(specs: &[FusedConvSpec]) -> Option<usize> {
+    let out_dim = specs.last()?.level_out();
+    let mut best: Option<(usize, usize)> = None; // (alpha, r_out)
+    let mut fallback: Option<usize> = None;
+    for r_out in 1..=out_dim {
+        let Some(plan) = PyramidPlan::build(specs, r_out, StridePolicy::Uniform) else {
+            continue;
+        };
+        let a = plan.alpha();
+        if a >= 2 {
+            if best.is_none_or(|(ba, _)| a < ba) {
+                best = Some((a, r_out));
+            }
+        } else {
+            fallback = Some(r_out);
+        }
+    }
+    best.map(|(_, r)| r).or(fallback)
+}
+
+impl NativePipeline {
+    /// Build a pipeline over `net` with explicit parameters. Validates
+    /// that the stage partition covers the conv stack, that every
+    /// parameter matches its level, and that every stage has a uniform
+    /// pyramid plan (fused, or per-level after the split fallback).
+    pub fn new(net: &Network, kind: EngineKind, params: PipelineParams) -> Result<NativePipeline> {
+        if net.convs.is_empty() {
+            bail!("{}: network has no conv levels", net.name);
+        }
+        if let EngineKind::Sop { n_bits } = kind {
+            // SopEngine::new asserts this range; catching it here turns
+            // a per-request worker panic into a construction error.
+            if !(2..=24).contains(&n_bits) {
+                bail!("{}: SOP precision n_bits = {n_bits} outside 2..=24", net.name);
+            }
+        }
+        if params.conv_weights.len() != net.convs.len()
+            || params.conv_biases.len() != net.convs.len()
+        {
+            bail!(
+                "{}: {} weight / {} bias sets for {} conv levels",
+                net.name,
+                params.conv_weights.len(),
+                params.conv_biases.len(),
+                net.convs.len()
+            );
+        }
+        let stage_specs = net.pipeline_stages();
+        // The partition invariant everything below leans on.
+        let mut next = 0;
+        for st in &stage_specs {
+            if st.first != next || st.len == 0 {
+                bail!("{}: stage partition has a gap at conv {next}", net.name);
+            }
+            next = st.first + st.len;
+        }
+        if next != net.convs.len() {
+            bail!("{}: stage partition covers {next}/{} convs", net.name, net.convs.len());
+        }
+
+        let mut w_iter = params.conv_weights.into_iter();
+        let mut b_iter = params.conv_biases.into_iter();
+        let mut ds_w = params.ds_weights.into_iter();
+        let mut ds_b = params.ds_biases.into_iter();
+        let mut stages = Vec::with_capacity(stage_specs.len());
+        for (si, st) in stage_specs.iter().enumerate() {
+            let specs = &net.convs[st.range()];
+            let weights: Vec<Tensor> = w_iter.by_ref().take(st.len).collect();
+            let biases: Vec<Vec<f32>> = b_iter.by_ref().take(st.len).collect();
+            let execs = if let Some(r_out) = choose_r_out(specs) {
+                vec![FusionExecutor::native(
+                    &format!("{}_s{si}", net.name),
+                    specs,
+                    r_out,
+                    weights,
+                    biases,
+                    kind,
+                )?]
+            } else {
+                // No fused uniform plan (miniature stages at 1-2 px
+                // maps): run the stage's levels as single-level
+                // pyramids. The shortcut still wraps the whole stage.
+                let mut singles = Vec::with_capacity(st.len);
+                for (li, ((spec, w), b)) in
+                    specs.iter().zip(weights).zip(biases).enumerate()
+                {
+                    let r_out = choose_r_out(std::slice::from_ref(spec)).ok_or_else(|| {
+                        anyhow!("{}: no uniform plan even for level {}", net.name, spec.name)
+                    })?;
+                    singles.push(FusionExecutor::native(
+                        &format!("{}_s{si}l{li}", net.name),
+                        std::slice::from_ref(spec),
+                        r_out,
+                        vec![w],
+                        vec![b],
+                        kind,
+                    )?);
+                }
+                singles
+            };
+            let shortcut = match net.downsample_spec(st) {
+                Some(spec) => {
+                    let weights = ds_w
+                        .next()
+                        .ok_or_else(|| anyhow!("{}: missing projection weights", net.name))?;
+                    let bias = ds_b
+                        .next()
+                        .ok_or_else(|| anyhow!("{}: missing projection bias", net.name))?;
+                    let want = [spec.k, spec.k, spec.n_in, spec.m_out];
+                    if weights.shape != want {
+                        bail!(
+                            "{}: projection weights {:?}, want {:?}",
+                            spec.name,
+                            weights.shape,
+                            want
+                        );
+                    }
+                    if bias.len() != spec.m_out {
+                        bail!("{}: projection bias len {}", spec.name, bias.len());
+                    }
+                    Some(Shortcut::Downsample {
+                        spec,
+                        weights,
+                        bias,
+                    })
+                }
+                None if st.residual => Some(Shortcut::Identity),
+                None => None,
+            };
+            stages.push(Stage { execs, shortcut });
+        }
+        if ds_w.next().is_some() || ds_b.next().is_some() {
+            bail!("{}: more projection parameters than downsampling stages", net.name);
+        }
+        let last = net.convs.last().expect("non-empty");
+        let feat = if params.head.global_avg_pool {
+            last.m_out
+        } else {
+            last.level_out() * last.level_out() * last.m_out
+        };
+        if params.head.in_features() != feat {
+            bail!(
+                "{}: head fan-in {} != final feature size {feat}",
+                net.name,
+                params.head.in_features()
+            );
+        }
+        Ok(NativePipeline {
+            net: net.clone(),
+            kind,
+            stages,
+            head: params.head,
+            threads: 1,
+        })
+    }
+
+    /// Pipeline over `net` with seeded synthetic parameters
+    /// ([`PipelineParams::synthetic`]).
+    pub fn synthetic(net: &Network, kind: EngineKind, seed: u64) -> Result<NativePipeline> {
+        Self::new(net, kind, PipelineParams::synthetic(net, seed))
+    }
+
+    /// Execute each pyramid's tile movements across up to `threads`
+    /// worker threads ([`FusionExecutor::run_parallel`]; bit-identical
+    /// to the serial path). `1` (the default) stays serial.
+    pub fn with_threads(mut self, threads: usize) -> NativePipeline {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The network this pipeline serves.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// The engine kind every stage executes with.
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// Input image shape `(H, H, C)`.
+    pub fn input_shape(&self) -> Vec<usize> {
+        let c0 = &self.net.convs[0];
+        vec![c0.ifm, c0.ifm, c0.n_in]
+    }
+
+    /// Number of classifier classes.
+    pub fn num_classes(&self) -> usize {
+        self.head.num_classes()
+    }
+
+    /// The classifier head.
+    pub fn head(&self) -> &ClassifierHead {
+        &self.head
+    }
+
+    /// Number of pipeline stages (fusion groups + the split fallbacks).
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Run the full network over one image: chained fusion pyramids,
+    /// residual shortcuts, classifier head, softmax.
+    pub fn infer(&self, image: &Tensor) -> Result<Inference> {
+        let want = self.input_shape();
+        if image.shape != want {
+            bail!(
+                "{}: input shape {:?}, expected {:?}",
+                self.net.name,
+                image.shape,
+                want
+            );
+        }
+        let mut x = image.clone();
+        for stage in &self.stages {
+            let saved = if stage.shortcut.is_some() {
+                Some(x.clone())
+            } else {
+                None
+            };
+            for exec in &stage.execs {
+                let (out, _) = if self.threads > 1 {
+                    exec.run_parallel(&x, self.threads)?
+                } else {
+                    exec.run(&x)?
+                };
+                x = out;
+            }
+            if let (Some(shortcut), Some(saved)) = (&stage.shortcut, saved) {
+                let skip = match shortcut {
+                    Shortcut::Identity => saved,
+                    Shortcut::Downsample {
+                        spec,
+                        weights,
+                        bias,
+                    } => conv2d(spec, &saved, weights, bias)?,
+                };
+                // Post-activation residual variant: both paths are
+                // already activated, and the sum is re-rectified (see
+                // DESIGN.md §Native pipeline).
+                x = x.add(&skip)?.relu();
+            }
+        }
+        let logits = self.head.forward(&x)?;
+        let probs = logits.softmax().data;
+        let class = logits
+            .data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok(Inference {
+            features: x,
+            logits,
+            probs,
+            class,
+        })
+    }
+
+    /// Live per-conv-level END statistics accumulated across every
+    /// inference on this pipeline, concatenated over the stages in conv
+    /// order — non-empty only for [`EngineKind::Sop`], and only after
+    /// at least one inference. Projection shortcuts run on the exact
+    /// f32 path and contribute no counters.
+    pub fn end_counters(&self) -> Vec<EndCounters> {
+        self.stages
+            .iter()
+            .flat_map(|s| s.execs.iter().flat_map(|e| e.end_counters()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets;
+
+    #[test]
+    fn lenet_pipeline_classifies_deterministically() {
+        let net = nets::lenet5();
+        let pipe = NativePipeline::synthetic(&net, EngineKind::F32, 77).expect("pipeline");
+        assert_eq!(pipe.input_shape(), vec![32, 32, 1]);
+        assert_eq!(pipe.num_classes(), 10);
+        let img = nets::random_input(&net.convs[0], 5);
+        let a = pipe.infer(&img).expect("infer");
+        assert_eq!(a.logits.shape, vec![10]);
+        assert_eq!(a.features.shape, vec![5, 5, 16]);
+        assert!((a.probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(a.class < 10);
+        // Deterministic across calls and across identically-seeded
+        // pipelines.
+        let b = pipe.infer(&img).expect("infer again");
+        assert_eq!(a.logits.data, b.logits.data);
+        let pipe2 = NativePipeline::synthetic(&net, EngineKind::F32, 77).expect("pipeline 2");
+        assert_eq!(pipe2.infer(&img).expect("infer").logits.data, a.logits.data);
+        // A different seed yields different logits.
+        let other = NativePipeline::synthetic(&net, EngineKind::F32, 78).expect("pipeline 3");
+        assert_ne!(other.infer(&img).expect("infer").logits.data, a.logits.data);
+    }
+
+    #[test]
+    fn pipeline_rejects_bad_inputs_and_params() {
+        let net = nets::lenet5();
+        let pipe = NativePipeline::synthetic(&net, EngineKind::F32, 1).expect("pipeline");
+        assert!(pipe.infer(&Tensor::zeros(vec![28, 28, 1])).is_err());
+        // Truncated conv parameters are rejected up front.
+        let mut p = PipelineParams::synthetic(&net, 1);
+        p.conv_weights.pop();
+        assert!(NativePipeline::new(&net, EngineKind::F32, p).is_err());
+        // Surplus projection parameters are rejected too.
+        let mut p = PipelineParams::synthetic(&net, 1);
+        p.ds_weights.push(Tensor::zeros(vec![1, 1, 1, 1]));
+        p.ds_biases.push(vec![0.0]);
+        assert!(NativePipeline::new(&net, EngineKind::F32, p).is_err());
+        // Out-of-range SOP precision errors at construction instead of
+        // panicking lazily inside a worker's first run.
+        assert!(NativePipeline::synthetic(&net, EngineKind::Sop { n_bits: 30 }, 1).is_err());
+        assert!(NativePipeline::synthetic(&net, EngineKind::Sop { n_bits: 1 }, 1).is_err());
+    }
+
+    #[test]
+    fn parallel_inference_is_bit_identical() {
+        let net = nets::tiny("resnet18").expect("tiny resnet");
+        let pipe = NativePipeline::synthetic(&net, EngineKind::F32, 9).expect("pipeline");
+        let img = nets::random_input(&net.convs[0], 10);
+        let serial = pipe.infer(&img).expect("serial");
+        let threaded = NativePipeline::synthetic(&net, EngineKind::F32, 9)
+            .expect("pipeline")
+            .with_threads(4);
+        let parallel = threaded.infer(&img).expect("parallel");
+        assert_eq!(serial.logits.data, parallel.logits.data);
+        assert_eq!(serial.features.data, parallel.features.data);
+    }
+
+    #[test]
+    fn sop_pipeline_accumulates_counters_per_level() {
+        let net = nets::tiny("vgg16").expect("tiny vgg");
+        let pipe =
+            NativePipeline::synthetic(&net, EngineKind::Sop { n_bits: 8 }, 3).expect("pipeline");
+        assert!(pipe.end_counters().is_empty(), "no counters before any run");
+        let img = nets::random_input(&net.convs[0], 4);
+        pipe.infer(&img).expect("infer");
+        let counters = pipe.end_counters();
+        assert_eq!(counters.len(), net.convs.len(), "one counter per conv level");
+        for (j, c) in counters.iter().enumerate() {
+            assert!(c.sops > 0, "level {j} executed no SOPs");
+            assert_eq!(c.terminated + c.positive + c.undetermined, c.sops, "level {j}");
+            assert!(c.terminated + c.undetermined <= c.sops);
+            assert!(c.executed_digits <= c.total_digits, "level {j}");
+        }
+        // A second inference doubles every deterministic counter.
+        pipe.infer(&img).expect("infer again");
+        let twice = pipe.end_counters();
+        for (a, b) in counters.iter().zip(&twice) {
+            assert_eq!(2 * a.sops, b.sops);
+            assert_eq!(2 * a.total_digits, b.total_digits);
+        }
+    }
+}

@@ -25,11 +25,18 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::{Metrics, MetricsSnapshot};
-use crate::runtime::{Manifest, Runtime, Tensor};
+use super::pipeline::NativePipeline;
+use crate::runtime::engine::EndCounters;
+use crate::runtime::{DType, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
 
 /// Builds one private [`Runtime`] per worker thread. The closure runs
 /// *inside* the worker (PJRT clients must not cross threads).
 pub type RuntimeFactory = Arc<dyn Fn() -> Result<Runtime> + Send + Sync>;
+
+/// Reads the live per-conv-level END statistics a serving backend
+/// accumulates (merged across workers) — wired into
+/// [`MetricsSnapshot::end_levels`] by [`WorkerPool::metrics`].
+pub type EndCounterSource = Arc<dyn Fn() -> Vec<EndCounters> + Send + Sync>;
 
 /// One servable model group: the router key clients address, and the
 /// program every worker executes for it.
@@ -58,6 +65,9 @@ pub struct PoolConfig {
     pub groups: Vec<ModelGroup>,
     /// Per-worker runtime builder.
     pub factory: RuntimeFactory,
+    /// Optional live END statistics source, merged into every
+    /// [`MetricsSnapshot`] (native SOP serving; `None` otherwise).
+    pub end_source: Option<EndCounterSource>,
 }
 
 impl PoolConfig {
@@ -71,6 +81,7 @@ impl PoolConfig {
             latency_window: 4096,
             groups,
             factory,
+            end_source: None,
         }
     }
 }
@@ -95,6 +106,60 @@ pub fn artifacts_factory(dir: &str, programs: &[String]) -> RuntimeFactory {
         let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
         Runtime::load(manifest, Some(&refs))
     })
+}
+
+/// [`RuntimeFactory`] serving a shared **artifact-free**
+/// [`NativePipeline`]: every worker's runtime registers the pipeline's
+/// classifier (`{net}_infer`) as a host closure over the *same*
+/// pipeline — the weights exist once, [`NativePipeline::infer`] takes
+/// `&self`, and each run builds its own per-thread engines, so workers
+/// execute concurrently and END counters merge internally. Pair with
+/// [`pipeline_end_source`] to surface the live END statistics in
+/// [`MetricsSnapshot::end_levels`].
+///
+/// The router key is the network name (e.g. `"lenet5"`); the program is
+/// `"{net}_infer"`. Deliberately **no** stacked `_b{N}` variants: a
+/// host closure has no per-call dispatch overhead to amortize (a
+/// stacked call would just be this loop behind one padded tensor), and
+/// evaluating zero-padded batch slots would waste full digit-serial
+/// inferences *and* pollute the live END statistics with synthetic
+/// all-zero images. Drained batches execute per request; the dynamic
+/// batcher still amortizes queue wake-ups.
+pub fn native_factory(pipeline: &Arc<NativePipeline>) -> RuntimeFactory {
+    let pipeline = Arc::clone(pipeline);
+    Arc::new(move || {
+        let mut rt = Runtime::host(Manifest::empty("."));
+        let name = format!("{}_infer", pipeline.network().name);
+        let meta = ProgramMeta {
+            file: std::path::PathBuf::new(),
+            inputs: vec![TensorMeta {
+                shape: pipeline.input_shape(),
+                dtype: DType::F32,
+            }],
+            outputs: vec![TensorMeta {
+                shape: vec![pipeline.num_classes()],
+                dtype: DType::F32,
+            }],
+            n_runtime_inputs: 1,
+            weights: vec![],
+        };
+        let p = Arc::clone(&pipeline);
+        rt.register_host(
+            &name,
+            meta,
+            Box::new(move |ts, _| p.infer(ts[0]).map(|inf| vec![inf.logits])),
+        );
+        Ok(rt)
+    })
+}
+
+/// An [`EndCounterSource`] reading the live END statistics of a shared
+/// native pipeline (non-empty only for the SOP engine, after at least
+/// one inference). Hand it to [`PoolConfig::end_source`] next to
+/// [`native_factory`].
+pub fn pipeline_end_source(pipeline: &Arc<NativePipeline>) -> EndCounterSource {
+    let pipeline = Arc::clone(pipeline);
+    Arc::new(move || pipeline.end_counters())
 }
 
 /// Classification response with serving metadata.
@@ -139,6 +204,7 @@ struct Shared {
     groups: Vec<ModelGroup>,
     max_batch: usize,
     queue_cap: usize,
+    end_source: Option<EndCounterSource>,
 }
 
 impl Shared {
@@ -149,11 +215,11 @@ impl Shared {
     }
 }
 
-/// Handle to a running worker pool. Dropping it drains the queue, stops
-/// the workers and joins them.
+/// Handle to a running worker pool. [`WorkerPool::shutdown`] (or a
+/// drop) stops intake, drains the queue, and joins the workers.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl WorkerPool {
@@ -182,6 +248,7 @@ impl WorkerPool {
             groups: cfg.groups.clone(),
             max_batch: cfg.max_batch,
             queue_cap: cfg.queue_cap.max(1),
+            end_source: cfg.end_source.clone(),
         });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -227,7 +294,7 @@ impl WorkerPool {
         }
         Ok(WorkerPool {
             shared,
-            workers: handles,
+            workers: Mutex::new(handles),
         })
     }
 
@@ -272,9 +339,15 @@ impl WorkerPool {
         Ok(rx)
     }
 
-    /// Point-in-time snapshot of the pool's serving metrics.
+    /// Point-in-time snapshot of the pool's serving metrics, including
+    /// the live END statistics when an
+    /// [`end_source`](PoolConfig::end_source) is configured.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        let mut snap = self.shared.metrics.snapshot();
+        if let Some(src) = &self.shared.end_source {
+            snap.end_levels = src();
+        }
+        snap
     }
 
     /// Router keys this pool serves, in configuration order.
@@ -283,16 +356,24 @@ impl WorkerPool {
     }
 
     /// Stop accepting requests, finish the queued ones, and join the
-    /// workers (equivalent to dropping the pool, but explicit).
-    pub fn shutdown(self) {}
+    /// workers. Afterwards every `classify`/`classify_async` call — and
+    /// any submitter blocked on backpressure — fails fast with a
+    /// "pool is shut down" error instead of hanging. Idempotent; a drop
+    /// performs the same sequence.
+    pub fn shutdown(&self) {
+        // Closing wakes the workers (they drain the queue, answer every
+        // in-flight request, then exit) and every blocked submitter.
+        self.shared.close();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.shared.close();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 

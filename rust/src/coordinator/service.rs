@@ -9,23 +9,57 @@
 //! single-call batch execution path. Use [`WorkerPool`] directly to
 //! serve several model groups at once; this facade serves exactly one
 //! program, as before.
+//!
+//! Two backends serve that program:
+//!
+//! - [`ServiceBackend::Artifacts`] (default): the AOT artifact bundle,
+//!   exactly as before;
+//! - [`ServiceBackend::Native`]: **zero artifacts** — `program` names a
+//!   zoo network (`"lenet5"`, `"alexnet"`, `"vgg16"`, `"resnet18"`) and
+//!   the pool serves a chained-pyramid
+//!   [`NativePipeline`](super::pipeline::NativePipeline) with seeded
+//!   synthetic weights, surfacing live END statistics through
+//!   [`MetricsSnapshot::end_levels`] when the SOP engine is selected.
 
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::pool::{artifacts_factory, ModelGroup, PoolConfig, WorkerPool};
+use super::pipeline::NativePipeline;
+use super::pool::{
+    artifacts_factory, native_factory, pipeline_end_source, ModelGroup, PoolConfig, WorkerPool,
+};
 pub use super::pool::Response;
 use crate::coordinator::metrics::MetricsSnapshot;
 pub use crate::coordinator::metrics::percentile;
-use crate::runtime::Tensor;
+use crate::nets::Network;
+use crate::runtime::{EngineKind, Tensor};
+
+/// Where the served program's computation comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceBackend {
+    /// AOT artifact bundle at [`ServiceConfig::artifacts_dir`]
+    /// (PJRT executables or host-registered programs).
+    Artifacts,
+    /// Artifact-free native pipeline over the zoo network named by
+    /// [`ServiceConfig::program`], with seeded synthetic weights.
+    Native {
+        /// Native engine the pipeline executes with.
+        kind: EngineKind,
+        /// Seed of the synthetic weights/head.
+        seed: u64,
+    },
+}
 
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Artifact bundle directory (`make artifacts`).
     pub artifacts_dir: String,
-    /// Program to serve (single-image classifier, e.g. "lenet_infer").
+    /// Program to serve: a classifier program name for the artifact
+    /// backend (e.g. "lenet_infer"), or a zoo network name for the
+    /// native backend (e.g. "lenet5").
     pub program: String,
     /// Max requests drained per batch.
     pub max_batch: usize,
@@ -33,6 +67,8 @@ pub struct ServiceConfig {
     pub queue_cap: usize,
     /// Worker threads, each owning a private runtime.
     pub workers: usize,
+    /// Computation backend (artifacts by default).
+    pub backend: ServiceBackend,
 }
 
 impl Default for ServiceConfig {
@@ -43,6 +79,7 @@ impl Default for ServiceConfig {
             max_batch: 8,
             queue_cap: 256,
             workers: 2,
+            backend: ServiceBackend::Artifacts,
         }
     }
 }
@@ -68,7 +105,55 @@ impl InferenceService {
     /// # Ok(()) }
     /// ```
     pub fn start(cfg: ServiceConfig) -> Result<InferenceService> {
-        let group = cfg.program.clone();
+        match cfg.backend {
+            ServiceBackend::Artifacts => {
+                let group = cfg.program.clone();
+                let pool = WorkerPool::start(PoolConfig {
+                    workers: cfg.workers.max(1),
+                    max_batch: cfg.max_batch.max(1),
+                    queue_cap: cfg.queue_cap.max(1),
+                    latency_window: 4096,
+                    groups: vec![ModelGroup {
+                        name: group.clone(),
+                        program: group.clone(),
+                    }],
+                    factory: artifacts_factory(
+                        &cfg.artifacts_dir,
+                        std::slice::from_ref(&cfg.program),
+                    ),
+                    end_source: None,
+                })?;
+                Ok(InferenceService { pool, group })
+            }
+            ServiceBackend::Native { kind, seed } => {
+                let net = crate::nets::by_name(&cfg.program).ok_or_else(|| {
+                    anyhow!(
+                        "native backend: '{}' is not a zoo network \
+                         (lenet5/alexnet/vgg16/resnet18)",
+                        cfg.program
+                    )
+                })?;
+                Self::start_native(&net, kind, seed, &cfg)
+            }
+        }
+    }
+
+    /// Start an **artifact-free** service over an explicit network
+    /// (full-size zoo entries, [`tiny`](crate::nets::tiny) miniatures,
+    /// or any custom [`Network`]) — the native equivalent of
+    /// [`InferenceService::start`]. Weights are seeded synthetic
+    /// parameters; one shared [`NativePipeline`] serves every worker,
+    /// and with [`EngineKind::Sop`] the metrics snapshots carry live
+    /// per-level END statistics.
+    pub fn start_native(
+        net: &Network,
+        kind: EngineKind,
+        seed: u64,
+        cfg: &ServiceConfig,
+    ) -> Result<InferenceService> {
+        let pipeline = Arc::new(NativePipeline::synthetic(net, kind, seed)?);
+        let group = net.name.to_string();
+        let program = format!("{group}_infer");
         let pool = WorkerPool::start(PoolConfig {
             workers: cfg.workers.max(1),
             max_batch: cfg.max_batch.max(1),
@@ -76,9 +161,10 @@ impl InferenceService {
             latency_window: 4096,
             groups: vec![ModelGroup {
                 name: group.clone(),
-                program: group.clone(),
+                program,
             }],
-            factory: artifacts_factory(&cfg.artifacts_dir, std::slice::from_ref(&cfg.program)),
+            factory: native_factory(&pipeline),
+            end_source: Some(pipeline_end_source(&pipeline)),
         })?;
         Ok(InferenceService { pool, group })
     }

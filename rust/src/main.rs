@@ -3,19 +3,20 @@
 //!
 //! ```text
 //! usefuse plan   --net lenet5 --q 2 --r-out 1
-//! usefuse report --what table1        (table1..5, fig10..14, all)
+//! usefuse report --what table1        (table1..5, fig10..14, zoo, all)
 //! usefuse verify --group lenet        (tile assembly vs golden, PJRT)
+//! usefuse serve  --native lenet5      (artifact-free serving demo)
 //! usefuse end    --group alexnet --samples 200
 //! usefuse info                        (artifact manifest summary)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 
-use usefuse::coordinator::{layer_end_stats, EndConfig, FusionExecutor};
+use usefuse::coordinator::{layer_end_stats, EndConfig, FusionExecutor, InferenceService, ServiceConfig};
 use usefuse::geometry::{PyramidPlan, StridePolicy};
 use usefuse::nets;
 use usefuse::report;
-use usefuse::runtime::{Manifest, Runtime, Tensor};
+use usefuse::runtime::{EngineKind, Manifest, Runtime, Tensor};
 use usefuse::sim::{CycleModel, DesignPoint, Pattern, TrafficModel};
 use usefuse::util::cli::{usage, Args, OptSpec};
 
@@ -41,6 +42,7 @@ fn run(argv: &[String]) -> Result<()> {
         "plan" => cmd_plan(rest),
         "report" => cmd_report(rest),
         "verify" => cmd_verify(rest),
+        "serve" => cmd_serve(rest),
         "end" => cmd_end(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -56,8 +58,9 @@ fn print_help() {
         "usefuse — USEFUSE fused-layer CNN accelerator reproduction\n\n\
          commands:\n\
          \x20 plan    plan a fusion pyramid (Algorithms 3 + 4)\n\
-         \x20 report  regenerate a paper table/figure (table1..5, fig10..14, all)\n\
+         \x20 report  regenerate a paper table/figure (table1..5, fig10..14, zoo, all)\n\
          \x20 verify  run tile-by-tile fusion via PJRT and check vs golden\n\
+         \x20 serve   run the batched serving demo (--native <net> needs no artifacts)\n\
          \x20 end     END statistics for a fused group's first conv layer\n\
          \x20 info    summarize the artifact bundle\n"
     );
@@ -129,7 +132,7 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
 
 fn cmd_report(argv: &[String]) -> Result<()> {
     let specs = [
-        OptSpec { name: "what", help: "table1..table5, fig10..fig14, all", takes_value: true, default: Some("all") },
+        OptSpec { name: "what", help: "table1..table5, fig10..fig14, zoo, all", takes_value: true, default: Some("all") },
         OptSpec { name: "samples", help: "END samples per filter (figs 12-14)", takes_value: true, default: Some("150") },
     ];
     let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
@@ -153,6 +156,10 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     }
     if want("table5") {
         println!("{}", report::tables::table5(&m).1.render());
+    }
+    if want("zoo") {
+        // Artifact-free end-to-end zoo summary (native SOP pipelines).
+        println!("{}", report::figures::table_zoo_native(8, 0x200)?.1.render());
     }
     if want("fig10") {
         println!("{}", report::figures::fig10(&m).1.render());
@@ -242,6 +249,107 @@ fn cmd_verify(argv: &[String]) -> Result<()> {
     } else {
         bail!("fusion correctness FAILED (worst {worst:.3e})")
     }
+}
+
+/// `usefuse serve`: stand the batched inference service up, push seeded
+/// demo traffic through it, and print the serving metrics. With
+/// `--native <net>` the whole path is artifact-free (chained native
+/// fusion pyramids + the Rust classifier head); without it the classic
+/// artifact bundle is served.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "native", help: "zoo network for artifact-free serving (lenet5/alexnet/vgg16/resnet18)", takes_value: true, default: None },
+        OptSpec { name: "program", help: "artifact program (when not --native)", takes_value: true, default: Some("lenet_infer") },
+        OptSpec { name: "engine", help: "native engine: f32 or sop", takes_value: true, default: Some("f32") },
+        OptSpec { name: "bits", help: "SOP operand precision", takes_value: true, default: Some("8") },
+        OptSpec { name: "requests", help: "demo requests to push", takes_value: true, default: Some("16") },
+        OptSpec { name: "workers", help: "worker threads", takes_value: true, default: Some("2") },
+        OptSpec { name: "batch", help: "max dynamic batch", takes_value: true, default: Some("8") },
+        OptSpec { name: "input-dim", help: "shrink the net to this input size (native only; 0 = full)", takes_value: true, default: Some("0") },
+        OptSpec { name: "ch-div", help: "divide channel counts (native only)", takes_value: true, default: Some("1") },
+        OptSpec { name: "seed", help: "synthetic weight seed (native only)", takes_value: true, default: Some("42") },
+    ];
+    let args = Args::parse(argv, &specs)
+        .map_err(|e| anyhow!("{e}\n{}", usage("serve", "run the serving demo", &specs)))?;
+    let requests = args.get_usize("requests").map_err(|e| anyhow!(e))?.unwrap();
+    let workers = args.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap();
+    let max_batch = args.get_usize("batch").map_err(|e| anyhow!(e))?.unwrap();
+    let cfg = ServiceConfig {
+        workers,
+        max_batch,
+        ..Default::default()
+    };
+
+    let svc = match args.get("native") {
+        Some(name) => {
+            let mut net = nets::by_name(name)
+                .ok_or_else(|| anyhow!("unknown network '{name}'"))?;
+            let input_dim = args.get_usize("input-dim").map_err(|e| anyhow!(e))?.unwrap();
+            let ch_div = args.get_usize("ch-div").map_err(|e| anyhow!(e))?.unwrap();
+            if input_dim > 0 || ch_div > 1 {
+                let dim = if input_dim > 0 { input_dim } else { net.input_dim };
+                net = net.scaled(dim, ch_div.max(1)).ok_or_else(|| {
+                    anyhow!("{name}: input {dim} / ch-div {ch_div} is infeasible")
+                })?;
+            }
+            let kind = match args.get("engine").unwrap() {
+                "f32" => EngineKind::F32,
+                "sop" => EngineKind::Sop {
+                    n_bits: args.get_usize("bits").map_err(|e| anyhow!(e))?.unwrap() as u32,
+                },
+                other => bail!("unknown engine '{other}' (f32 or sop)"),
+            };
+            let seed = args.get_usize("seed").map_err(|e| anyhow!(e))?.unwrap() as u64;
+            println!(
+                "serving {} natively ({} engine, {} conv levels, input {}×{}×{}, no artifacts)",
+                net.name,
+                kind.label(),
+                net.convs.len(),
+                net.input_dim,
+                net.input_dim,
+                net.input_ch
+            );
+            let svc = InferenceService::start_native(&net, kind, seed, &cfg)?;
+            // Seeded demo traffic.
+            let mut pending = Vec::with_capacity(requests);
+            for i in 0..requests {
+                let img = nets::random_input(&net.convs[0], seed ^ (1000 + i as u64));
+                pending.push(svc.classify_async(img)?);
+            }
+            for (i, rx) in pending.into_iter().enumerate() {
+                let r = rx.recv().map_err(|_| anyhow!("service dropped request"))??;
+                println!(
+                    "  request {i:>3}: class {:>3}  batch {}  worker {}  wait {:?}",
+                    r.class, r.batch_size, r.worker, r.queue_wait
+                );
+            }
+            svc
+        }
+        None => {
+            let program = args.get("program").unwrap().to_string();
+            let svc = InferenceService::start(ServiceConfig {
+                program: program.clone(),
+                ..cfg
+            })?;
+            println!("serving {program} from the artifact bundle");
+            let manifest = Manifest::load("artifacts")?;
+            let images = {
+                let rt = Runtime::host(manifest);
+                rt.load_dataset("lenet_test_x")?
+            };
+            let mut pending = Vec::with_capacity(requests);
+            for i in 0..requests {
+                pending.push(svc.classify_async(images[i % images.len()].clone())?);
+            }
+            for (i, rx) in pending.into_iter().enumerate() {
+                let r = rx.recv().map_err(|_| anyhow!("service dropped request"))??;
+                println!("  request {i:>3}: class {:>3}  batch {}", r.class, r.batch_size);
+            }
+            svc
+        }
+    };
+    println!("\n{}", svc.metrics());
+    Ok(())
 }
 
 fn cmd_end(argv: &[String]) -> Result<()> {

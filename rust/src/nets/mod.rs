@@ -4,5 +4,6 @@
 pub mod zoo;
 
 pub use zoo::{
-    alexnet, by_name, lenet5, random_input, random_weights, resnet18, vgg16, Network,
+    alexnet, by_name, head_layout, lenet5, random_input, random_weights, resnet18, tiny,
+    vgg16, ClassifierHead, FcLayer, Network, StageSpec,
 };

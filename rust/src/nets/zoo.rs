@@ -7,6 +7,7 @@
 //! keep the standard definition and report both.
 
 use crate::geometry::{FusedConvSpec, PoolSpec};
+use crate::runtime::Tensor;
 
 /// A convolutional network: ordered conv(+pool) stack with metadata.
 #[derive(Clone, Debug)]
@@ -217,6 +218,127 @@ pub fn random_input(spec0: &FusedConvSpec, seed: u64) -> crate::runtime::Tensor 
         .expect("shape matches data by construction")
 }
 
+/// One stage of the full-network native pipeline: a contiguous range of
+/// conv levels executed as one fusion pyramid, plus whether a residual
+/// shortcut wraps the stage (ResNet blocks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageSpec {
+    /// Index of the stage's first conv level in [`Network::convs`].
+    pub first: usize,
+    /// Number of consecutive conv levels fused by the stage.
+    pub len: usize,
+    /// Whether the stage input is added back to the stage output
+    /// (identity or 1×1-projected shortcut).
+    pub residual: bool,
+}
+
+impl StageSpec {
+    /// The conv-index range this stage covers.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.first..self.first + self.len
+    }
+}
+
+/// Classifier-head layout for a zoo network given its final conv feature
+/// shape `(H, H, C)`: whether the head starts with global average
+/// pooling, and the FC dimension chain (input features first, class
+/// count last).
+///
+/// LeNet keeps its canonical 400-120-84-10 head; ResNet its canonical
+/// GAP→FC head. The AlexNet/VGG heads use reduced hidden widths
+/// (512/256 instead of 4096/4096) — the synthetic weights carry no
+/// trained information, and the full-width heads would only add memory
+/// (see EXPERIMENTS.md §Substitutions).
+pub fn head_layout(net_name: &str, feature_shape: &[usize]) -> (bool, Vec<usize>) {
+    let gap = matches!(net_name, "resnet18" | "resnet");
+    let feat: usize = if gap {
+        feature_shape.last().copied().unwrap_or(0)
+    } else {
+        feature_shape.iter().product()
+    };
+    let dims = match net_name {
+        "lenet5" | "lenet" => vec![feat, 120, 84, 10],
+        "alexnet" | "vgg16" | "vgg" => vec![feat, 512, 256, 1000],
+        "resnet18" | "resnet" => vec![feat, 1000],
+        _ => vec![feat, 64, 10],
+    };
+    (gap, dims)
+}
+
+/// One fully-connected classifier layer: `(fan_in, fan_out)` row-major
+/// weights plus a `(fan_out,)` bias.
+#[derive(Clone, Debug)]
+pub struct FcLayer {
+    /// Weight matrix, shape `(fan_in, fan_out)`.
+    pub w: Tensor,
+    /// Bias vector of length `fan_out`.
+    pub b: Vec<f32>,
+}
+
+/// The classifier head that turns the fused stack's final feature map
+/// into logits: optional global average pooling, then a chain of
+/// fully-connected layers with ReLU between (none after the last).
+#[derive(Clone, Debug)]
+pub struct ClassifierHead {
+    /// Whether the head starts with global average pooling (ResNet).
+    pub global_avg_pool: bool,
+    /// FC layers in order; the last layer's fan-out is the class count.
+    pub layers: Vec<FcLayer>,
+}
+
+impl ClassifierHead {
+    /// Seeded synthetic head for `net_name` over a final feature map of
+    /// `feature_shape` — same fan-in-normalized recipe as
+    /// [`random_weights`], layout from [`head_layout`].
+    pub fn synthetic(net_name: &str, feature_shape: &[usize], seed: u64) -> ClassifierHead {
+        let (global_avg_pool, dims) = head_layout(net_name, feature_shape);
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for pair in dims.windows(2) {
+            let (fan_in, fan_out) = (pair[0], pair[1]);
+            let scale = (1.0 / (fan_in as f64).sqrt()) as f32;
+            let data: Vec<f32> = (0..fan_in * fan_out)
+                .map(|_| rng.normal() as f32 * scale)
+                .collect();
+            let w = Tensor::new(vec![fan_in, fan_out], data)
+                .expect("shape matches data by construction");
+            let b = (0..fan_out).map(|_| (rng.f32() - 0.5) * 0.1).collect();
+            layers.push(FcLayer { w, b });
+        }
+        ClassifierHead {
+            global_avg_pool,
+            layers,
+        }
+    }
+
+    /// Number of output classes (the last layer's fan-out).
+    pub fn num_classes(&self) -> usize {
+        self.layers.last().map_or(0, |l| l.w.shape[1])
+    }
+
+    /// Input features the head expects (the first layer's fan-in).
+    pub fn in_features(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.w.shape[0])
+    }
+
+    /// Forward pass: features → logits. ReLU between hidden layers,
+    /// none after the final (logit) layer.
+    pub fn forward(&self, features: &Tensor) -> anyhow::Result<Tensor> {
+        let mut x = if self.global_avg_pool {
+            features.global_avg_pool()?
+        } else {
+            features.flattened()
+        };
+        for (i, layer) in self.layers.iter().enumerate() {
+            x = x.fully_connected(&layer.w, &layer.b)?;
+            if i + 1 < self.layers.len() {
+                x = x.relu();
+            }
+        }
+        Ok(x)
+    }
+}
+
 /// Look a network up by name.
 pub fn by_name(name: &str) -> Option<Network> {
     match name {
@@ -271,6 +393,140 @@ impl Network {
     /// Total conv operations of the network (Eq. (2) convention).
     pub fn total_conv_ops(&self) -> u64 {
         self.convs.iter().map(|c| c.num_operations()).sum()
+    }
+
+    /// The canonical full-network stage partition the native pipeline
+    /// executes: every conv level appears in exactly one stage, in
+    /// order. Residual networks keep their block structure (each
+    /// two-conv block is one stage wrapped by a shortcut; the stem and
+    /// any other pre-block prefix fuse pairwise); feed-forward networks
+    /// fuse adjacent chainable layers pairwise (Q=2), like
+    /// [`Network::fuse_pairs`].
+    pub fn pipeline_stages(&self) -> Vec<StageSpec> {
+        let mut stages = Vec::new();
+        let first_block = self
+            .res_blocks
+            .first()
+            .map_or(self.convs.len(), |&(i, _)| i);
+        let mut i = 0;
+        while i < first_block {
+            let chainable = i + 1 < first_block
+                && self.convs[i].level_out() == self.convs[i + 1].ifm
+                && self.convs[i].m_out == self.convs[i + 1].n_in;
+            let len = if chainable { 2 } else { 1 };
+            stages.push(StageSpec {
+                first: i,
+                len,
+                residual: false,
+            });
+            i += len;
+        }
+        for &(b, _) in &self.res_blocks {
+            stages.push(StageSpec {
+                first: b,
+                len: 2,
+                residual: true,
+            });
+        }
+        stages
+    }
+
+    /// The 1×1 projection ("downsample") conv of a residual stage whose
+    /// identity shortcut cannot type-check (stride ≠ 1 or a channel
+    /// change) — standard ResNet shortcut projection. `None` for
+    /// non-residual stages and for identity-shortcut blocks.
+    pub fn downsample_spec(&self, stage: &StageSpec) -> Option<FusedConvSpec> {
+        if !stage.residual {
+            return None;
+        }
+        let ca = &self.convs[stage.first];
+        let cb = &self.convs[stage.first + stage.len - 1];
+        if ca.s == 1 && ca.n_in == cb.m_out {
+            return None; // identity shortcut
+        }
+        Some(FusedConvSpec {
+            name: format!("{}_ds", ca.name),
+            k: 1,
+            s: ca.s,
+            pad: 0,
+            pool: None,
+            n_in: ca.n_in,
+            m_out: cb.m_out,
+            ifm: ca.ifm,
+        })
+    }
+
+    /// A structurally-identical miniature of this network: same kernel
+    /// sizes, strides, padding, pooling stages and residual topology,
+    /// with the input shrunk to `input_dim` and every channel count
+    /// divided by `ch_div` (floor, min 1; the first conv keeps the real
+    /// input channel count). Returns `None` when the smaller spatial
+    /// dims become infeasible (a map smaller than a kernel or pooling
+    /// window).
+    pub fn scaled(&self, input_dim: usize, ch_div: usize) -> Option<Network> {
+        if input_dim == 0 || ch_div == 0 {
+            return None;
+        }
+        let mut convs = Vec::with_capacity(self.convs.len());
+        let mut dim = input_dim;
+        let mut prev_m = self.input_ch;
+        for c in &self.convs {
+            let m_out = (c.m_out / ch_div).max(1);
+            let spec = FusedConvSpec {
+                name: c.name.clone(),
+                k: c.k,
+                s: c.s,
+                pad: c.pad,
+                pool: c.pool,
+                n_in: prev_m,
+                m_out,
+                ifm: dim,
+            };
+            // Checked dim chain: avoid the panicking asserts in
+            // conv_out/level_out for infeasible miniatures.
+            let padded = spec.ifm_padded();
+            if padded < spec.k {
+                return None;
+            }
+            let conv = (padded - spec.k) / spec.s + 1;
+            let out = match spec.pool {
+                Some(p) => {
+                    if conv < p.k {
+                        return None;
+                    }
+                    (conv - p.k) / p.s + 1
+                }
+                None => conv,
+            };
+            if out == 0 {
+                return None;
+            }
+            dim = out;
+            prev_m = m_out;
+            convs.push(spec);
+        }
+        Some(Network {
+            name: self.name,
+            input_dim,
+            input_ch: self.input_ch,
+            convs,
+            res_blocks: self.res_blocks.clone(),
+        })
+    }
+}
+
+/// Miniature zoo variants preserving each network's layer structure at a
+/// fraction of the spatial/channel size — small enough for artifact-free
+/// tests and the live native report paths, while still exercising every
+/// stage shape (big-stride stems, padded chains, residual projections).
+/// LeNet-5 is already small and stays full-size.
+pub fn tiny(name: &str) -> Option<Network> {
+    match name {
+        "lenet5" | "lenet" => Some(lenet5()),
+        "alexnet" => alexnet().scaled(67, 32),
+        "vgg16" | "vgg" => vgg16().scaled(32, 16),
+        "resnet18" | "resnet" => resnet18().scaled(32, 16),
+        _ => None,
     }
 }
 
@@ -346,6 +602,97 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The pipeline stage partition covers every conv exactly once, in
+    /// order, for every zoo network (full and miniature).
+    #[test]
+    fn pipeline_stages_partition_the_conv_stack() {
+        for net in [lenet5(), alexnet(), vgg16(), resnet18()]
+            .into_iter()
+            .chain(["lenet5", "alexnet", "vgg16", "resnet18"].iter().map(|n| tiny(n).unwrap()))
+        {
+            let stages = net.pipeline_stages();
+            let mut next = 0;
+            for st in &stages {
+                assert_eq!(st.first, next, "{}: gap before stage {st:?}", net.name);
+                assert!(st.len >= 1);
+                next = st.first + st.len;
+            }
+            assert_eq!(next, net.convs.len(), "{}: stages don't cover", net.name);
+            // Residual stages appear exactly where res_blocks says.
+            let res: Vec<usize> = stages.iter().filter(|s| s.residual).map(|s| s.first).collect();
+            let blocks: Vec<usize> = net.res_blocks.iter().map(|&(i, _)| i).collect();
+            assert_eq!(res, blocks, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn downsample_specs_match_block_geometry() {
+        let net = resnet18();
+        let mut n_ds = 0;
+        for st in net.pipeline_stages() {
+            let Some(ds) = net.downsample_spec(&st) else {
+                continue;
+            };
+            n_ds += 1;
+            let ca = &net.convs[st.first];
+            let cb = &net.convs[st.first + 1];
+            assert_eq!(ds.k, 1);
+            assert_eq!(ds.s, ca.s);
+            assert_eq!(ds.n_in, ca.n_in);
+            assert_eq!(ds.m_out, cb.m_out);
+            // The projection output dims must match the main path.
+            assert_eq!(ds.level_out(), cb.level_out(), "{}", ds.name);
+        }
+        // ResNet-18 has exactly three projection shortcuts (stage edges).
+        assert_eq!(n_ds, 3);
+        // Feed-forward nets never have one.
+        let vgg = vgg16();
+        for st in vgg.pipeline_stages() {
+            assert!(vgg.downsample_spec(&st).is_none());
+        }
+    }
+
+    #[test]
+    fn scaled_miniatures_chain_and_reject_infeasible() {
+        for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
+            let net = tiny(name).expect("tiny preset feasible");
+            assert_eq!(net.name, name);
+            // Dims chain through the miniature exactly like the original.
+            for w in net.convs.windows(2) {
+                assert_eq!(w[0].level_out(), w[1].ifm, "{name}: {}", w[0].name);
+                assert_eq!(w[0].m_out, w[1].n_in, "{name}");
+            }
+            assert_eq!(net.convs[0].n_in, net.input_ch);
+        }
+        // An input too small for AlexNet's 11×11 stem is rejected, not a
+        // panic.
+        assert!(alexnet().scaled(8, 4).is_none());
+        assert!(lenet5().scaled(0, 1).is_none());
+        assert!(lenet5().scaled(32, 0).is_none());
+    }
+
+    #[test]
+    fn classifier_head_shapes_and_forward() {
+        // LeNet keeps its canonical 400-120-84-10 head.
+        let head = ClassifierHead::synthetic("lenet5", &[5, 5, 16], 3);
+        assert!(!head.global_avg_pool);
+        assert_eq!(head.in_features(), 400);
+        assert_eq!(head.num_classes(), 10);
+        assert_eq!(head.layers.len(), 3);
+        let logits = head.forward(&Tensor::zeros(vec![5, 5, 16])).unwrap();
+        assert_eq!(logits.shape, vec![10]);
+        // Deterministic in the seed.
+        let again = ClassifierHead::synthetic("lenet5", &[5, 5, 16], 3);
+        assert_eq!(head.layers[0].w.data, again.layers[0].w.data);
+        // ResNet pools globally first: fan-in is the channel count.
+        let r = ClassifierHead::synthetic("resnet18", &[7, 7, 512], 3);
+        assert!(r.global_avg_pool);
+        assert_eq!(r.in_features(), 512);
+        assert_eq!(r.num_classes(), 1000);
+        // A wrong-shaped feature map errors instead of panicking.
+        assert!(head.forward(&Tensor::zeros(vec![4, 4, 16])).is_err());
     }
 
     #[test]

@@ -426,6 +426,90 @@ pub fn fig14_native(n_bits: u32, seed: u64) -> Result<(Vec<Fig14Row>, Table)> {
     Ok((rows, t))
 }
 
+/// One network's row in the native zoo summary ([`table_zoo_native`]).
+#[derive(Clone, Debug)]
+pub struct ZooNativeRow {
+    /// Network name.
+    pub net: String,
+    /// Conv levels executed natively.
+    pub levels: usize,
+    /// Pipeline stages (fusion pyramids) the network partitioned into.
+    pub stages: usize,
+    /// Total SOPs across all levels of one inference.
+    pub sops: u64,
+    /// SOP-weighted END detection rate.
+    pub detection: f64,
+    /// SOP-weighted undetermined rate.
+    pub undetermined: f64,
+    /// Executed fraction of all output digits.
+    pub digit_fraction: f64,
+    /// Argmax class of the (synthetic-weight) inference.
+    pub class: usize,
+}
+
+/// **Native numbers for the deep networks**: run every zoo entry
+/// end-to-end — chained fusion pyramids, residual shortcuts, classifier
+/// head — through the digit-serial SOP engine with seeded synthetic
+/// weights and **no artifacts**, and summarize the live END statistics
+/// per network. Deep networks run as their structurally-identical
+/// [`tiny`](crate::nets::tiny) miniatures (full-size conv stacks at
+/// these depths would take hours digit-serially; the stage shapes and
+/// END behaviour are what the table is after).
+pub fn table_zoo_native(n_bits: u32, seed: u64) -> Result<(Vec<ZooNativeRow>, Table)> {
+    use crate::coordinator::NativePipeline;
+
+    let mut rows = Vec::new();
+    for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
+        let net = crate::nets::tiny(name)
+            .ok_or_else(|| anyhow!("{name}: tiny preset infeasible"))?;
+        let pipe = NativePipeline::synthetic(&net, EngineKind::Sop { n_bits }, seed)?;
+        let input = random_input(&net.convs[0], seed ^ 0x200);
+        let inf = pipe.infer(&input)?;
+        let counters = pipe.end_counters();
+        let mut total = EndCounters::default();
+        for c in &counters {
+            total.merge(c);
+        }
+        rows.push(ZooNativeRow {
+            net: name.to_string(),
+            levels: counters.len(),
+            stages: pipe.num_stages(),
+            sops: total.sops,
+            detection: total.detection_rate(),
+            undetermined: total.undetermined_rate(),
+            digit_fraction: total.executed_digit_fraction(),
+            class: inf.class,
+        });
+    }
+    let mut t = Table::new(
+        "Native zoo — artifact-free end-to-end inference (SOP+END engine, miniature \
+         deep networks, synthetic weights)",
+    )
+    .header(&[
+        "Network",
+        "Levels",
+        "Stages",
+        "SOPs",
+        "Negative %",
+        "Undetermined %",
+        "Executed digits %",
+        "Top-1",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.net.clone(),
+            r.levels.to_string(),
+            r.stages.to_string(),
+            r.sops.to_string(),
+            format!("{:.1}", 100.0 * r.detection),
+            format!("{:.1}", 100.0 * r.undetermined),
+            format!("{:.1}", 100.0 * r.digit_fraction),
+            r.class.to_string(),
+        ]);
+    }
+    Ok((rows, t))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

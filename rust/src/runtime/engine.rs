@@ -540,6 +540,60 @@ mod tests {
         assert!(sop.take_end_counters().is_empty());
     }
 
+    /// `merge` is the per-thread reduction: it must be commutative and
+    /// associative with exact count accounting (every field is a raw
+    /// sum; the f64 fraction sums here use dyadic values, so even the
+    /// float field is exact).
+    #[test]
+    fn end_counter_merge_is_commutative_associative_and_exact() {
+        fn c(m: u64) -> EndCounters {
+            EndCounters {
+                sops: 10 * m,
+                terminated: 3 * m,
+                positive: 5 * m,
+                undetermined: 2 * m,
+                executed_digits: 40 * m,
+                total_digits: 100 * m,
+                exec_fraction_sum: 0.25 * m as f64,
+            }
+        }
+        let (a, b, d) = (c(1), c(7), c(31));
+        // Commutativity.
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        // Associativity.
+        let mut ab_d = ab;
+        ab_d.merge(&d);
+        let mut bd = b;
+        bd.merge(&d);
+        let mut a_bd = a;
+        a_bd.merge(&bd);
+        assert_eq!(ab_d, a_bd);
+        // Exact accounting: the merge of 1+7+31 "units" is 39 units.
+        assert_eq!(ab_d, c(39));
+        assert_eq!(ab_d.terminated + ab_d.positive + ab_d.undetermined, ab_d.sops);
+        // The zero counter is the identity.
+        let mut z = EndCounters::default();
+        z.merge(&a);
+        assert_eq!(z, a);
+        let mut az = a;
+        az.merge(&EndCounters::default());
+        assert_eq!(az, a);
+    }
+
+    /// Derived rates behave at the boundaries (empty counters, END off).
+    #[test]
+    fn end_counter_rates_are_safe_on_empty() {
+        let z = EndCounters::default();
+        assert_eq!(z.detection_rate(), 0.0);
+        assert_eq!(z.undetermined_rate(), 0.0);
+        assert_eq!(z.executed_digit_fraction(), 1.0);
+        assert_eq!(z.mean_exec_fraction(), 1.0);
+    }
+
     /// All-negative pre-activations terminate (and produce exact zeros).
     #[test]
     fn sop_engine_end_terminates_negative_layers() {

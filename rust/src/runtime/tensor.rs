@@ -12,6 +12,24 @@ pub struct Tensor {
     pub data: Vec<f32>,
 }
 
+/// The shared GEMM row kernel behind [`Tensor::matmul`] and
+/// [`Tensor::fully_connected`]: `acc += x · w`, where `w` is a row-major
+/// matrix with `acc.len()` columns and `x.len()` rows. Zero inputs skip
+/// their row (post-ReLU activations are sparse); the caller seeds `acc`
+/// (zeros or a bias).
+fn gemm_accumulate(acc: &mut [f32], x: &[f32], w: &[f32]) {
+    let n = acc.len();
+    for (k, &a) in x.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let row = &w[k * n..(k + 1) * n];
+        for (o, wv) in acc.iter_mut().zip(row) {
+            *o += a * wv;
+        }
+    }
+}
+
 impl Tensor {
     /// Build a tensor, checking that `data` matches `shape`.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
@@ -261,6 +279,118 @@ impl Tensor {
         Ok(())
     }
 
+    /// Elementwise sum with another tensor of the same shape — the
+    /// pipeline's residual-shortcut addition.
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add: shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        })
+    }
+
+    /// The tensor reshaped to one dimension (classifier-head flatten).
+    pub fn flattened(&self) -> Tensor {
+        Tensor {
+            shape: vec![self.data.len()],
+            data: self.data.clone(),
+        }
+    }
+
+    /// Global average pooling of an (H, W, C) tensor to a `(C,)` vector
+    /// (the ResNet classifier entry). Accumulates in row-major order, so
+    /// results are deterministic.
+    pub fn global_avg_pool(&self) -> Result<Tensor> {
+        if self.shape.len() != 3 {
+            bail!("global_avg_pool wants (H, W, C), got {:?}", self.shape);
+        }
+        let (h, w, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        if h == 0 || w == 0 {
+            bail!("global_avg_pool of an empty map {h}×{w}");
+        }
+        if c == 0 {
+            return Ok(Tensor::zeros(vec![0]));
+        }
+        let mut out = Tensor::zeros(vec![c]);
+        for row in self.data.chunks_exact(c) {
+            for (o, v) in out.data.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / (h * w) as f32;
+        for o in out.data.iter_mut() {
+            *o *= inv;
+        }
+        Ok(out)
+    }
+
+    /// Matrix product of two 2-D tensors: `(A, B) × (B, C) → (A, C)`.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || other.shape.len() != 2 || self.shape[1] != other.shape[0] {
+            bail!("matmul: {:?} × {:?}", self.shape, other.shape);
+        }
+        let (a, b, c) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mut out = Tensor::zeros(vec![a, c]);
+        for i in 0..a {
+            gemm_accumulate(
+                &mut out.data[i * c..(i + 1) * c],
+                &self.data[i * b..(i + 1) * b],
+                &other.data,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Fully-connected layer: flatten `self`, multiply by `weights`
+    /// (`(fan_in, fan_out)`, row-major) and add `bias` — the classifier
+    /// head's building block. Accumulation order matches [`Tensor::matmul`]
+    /// (input-major; the bias seeds the accumulator), so a head
+    /// evaluation is bit-reproducible.
+    pub fn fully_connected(&self, weights: &Tensor, bias: &[f32]) -> Result<Tensor> {
+        if weights.shape.len() != 2 {
+            bail!("fully_connected: weights {:?} not 2-D", weights.shape);
+        }
+        let (fan_in, fan_out) = (weights.shape[0], weights.shape[1]);
+        if self.data.len() != fan_in {
+            bail!(
+                "fully_connected: input {:?} flattens to {} != fan-in {fan_in}",
+                self.shape,
+                self.data.len()
+            );
+        }
+        if bias.len() != fan_out {
+            bail!("fully_connected: bias len {} != {fan_out}", bias.len());
+        }
+        let mut out = Tensor {
+            shape: vec![fan_out],
+            data: bias.to_vec(),
+        };
+        gemm_accumulate(&mut out.data, &self.data, &weights.data);
+        Ok(out)
+    }
+
+    /// Numerically-stable softmax over the flattened elements.
+    pub fn softmax(&self) -> Tensor {
+        let max = self.data.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        if !max.is_finite() {
+            // Empty or non-finite input: degrade to a copy rather than NaN.
+            return self.clone();
+        }
+        let exps: Vec<f32> = self.data.iter().map(|v| (v - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        Tensor {
+            shape: self.shape.clone(),
+            data: exps.iter().map(|e| e / sum).collect(),
+        }
+    }
+
     /// Max |value| (for quantization scaling).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
@@ -373,6 +503,94 @@ mod tests {
             assert_eq!(t.at3(y, 2, 0), 0.0); // global x = 3
             assert_eq!(t.at3(y, 3, 0), 0.0); // global x = 4
         }
+    }
+
+    /// Satellite regression set: padding and masking must survive
+    /// zero-size rects and full-map bands without panicking.
+    #[test]
+    fn mask_outside_zero_size_band_zeroes_everything() {
+        // valid = 0: the real-data band is empty, every cell is halo.
+        let mut t = Tensor::new(vec![3, 3, 2], vec![1.0; 18]).unwrap();
+        t.mask_outside(0, 0, 0, 0).unwrap();
+        assert!(t.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mask_outside_full_map_band_is_identity() {
+        // The band covers the whole tile: nothing is masked.
+        let mut t = seq(vec![4, 4, 1]);
+        let orig = t.clone();
+        t.mask_outside(0, 0, 0, 4).unwrap();
+        assert_eq!(t, orig);
+        // A band strictly larger than the tile is also an identity.
+        t.mask_outside(1, 1, 0, 100).unwrap();
+        assert_eq!(t, orig);
+    }
+
+    #[test]
+    fn mask_and_pad_handle_empty_tensors() {
+        // Zero-height map: no rows to mask or pad, no panic.
+        let mut empty = Tensor::zeros(vec![0, 4, 2]);
+        empty.mask_outside(-3, 7, 0, 0).unwrap();
+        assert!(empty.is_empty());
+        let padded = Tensor::zeros(vec![0, 0, 3]).pad_spatial(2).unwrap();
+        assert_eq!(padded.shape, vec![4, 4, 3]);
+        assert!(padded.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn add_and_flatten() {
+        let a = seq(vec![2, 2, 1]);
+        let b = Tensor::new(vec![2, 2, 1], vec![10.0; 4]).unwrap();
+        let sum = a.add(&b).unwrap();
+        assert_eq!(sum.data, vec![10.0, 11.0, 12.0, 13.0]);
+        assert!(a.add(&seq(vec![4, 1, 1])).is_err());
+        assert_eq!(a.flattened().shape, vec![4]);
+        assert_eq!(a.flattened().data, a.data);
+    }
+
+    #[test]
+    fn global_avg_pool_means_each_channel() {
+        let t = Tensor::new(
+            vec![2, 2, 2],
+            vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0],
+        )
+        .unwrap();
+        let g = t.global_avg_pool().unwrap();
+        assert_eq!(g.shape, vec![2]);
+        assert_eq!(g.data, vec![2.5, 25.0]);
+        assert!(Tensor::zeros(vec![4]).global_avg_pool().is_err());
+        assert!(Tensor::zeros(vec![0, 2, 2]).global_avg_pool().is_err());
+    }
+
+    #[test]
+    fn matmul_and_fully_connected_known_values() {
+        // (2,3) × (3,2), hand-checked.
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = Tensor::new(vec![3, 2], vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]).unwrap();
+        let m = a.matmul(&b).unwrap();
+        assert_eq!(m.shape, vec![2, 2]);
+        assert_eq!(m.data, vec![58.0, 64.0, 139.0, 154.0]);
+        assert!(a.matmul(&a).is_err());
+        // fully_connected flattens and adds the bias.
+        let x = Tensor::new(vec![1, 3, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        let fc = x.fully_connected(&b, &[0.5, -0.5]).unwrap();
+        assert_eq!(fc.data, vec![58.5, 63.5]);
+        assert!(x.fully_connected(&b, &[0.0]).is_err());
+        assert!(Tensor::zeros(vec![2]).fully_connected(&b, &[0.0, 0.0]).is_err());
+    }
+
+    #[test]
+    fn softmax_is_a_distribution() {
+        let t = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let s = t.softmax();
+        let sum: f32 = s.data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(s.data[2] > s.data[1] && s.data[1] > s.data[0]);
+        // Huge logits must not overflow (stability via max subtraction).
+        let big = Tensor::new(vec![2], vec![1000.0, 1001.0]).unwrap().softmax();
+        assert!(big.data.iter().all(|v| v.is_finite()));
+        assert!((big.data.iter().sum::<f32>() - 1.0).abs() < 1e-6);
     }
 
     #[test]

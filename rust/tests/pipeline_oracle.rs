@@ -1,0 +1,232 @@
+//! **Zoo-wide oracle suite** for the artifact-free native pipeline: for
+//! every zoo network (full-size LeNet-5, structurally-identical
+//! miniatures of AlexNet / VGG-16 / ResNet-18 — see `nets::tiny`) with
+//! seeded synthetic weights,
+//!
+//! - the chained-pyramid `F32Engine` pipeline must be **bit-identical**
+//!   to a plain layer-by-layer reference conv loop written directly
+//!   against `conv2d`/`pad_spatial`/`relu`/`maxpool` (same residual
+//!   handling, independent of the executor's tiling/masking/assembly
+//!   machinery);
+//! - the `SopEngine` pipeline must match that reference within the
+//!   documented quantization bound (n = 12: `0.01 + 0.05·max|ref|`,
+//!   ≥ 6× margin over the observed errors);
+//! - the classifier head must agree with an independent flatten/GEMM
+//!   evaluation of the same synthetic head weights;
+//! - every network's paper fusion group must admit a conv-stride
+//!   (baseline) plan that covers the output with asymmetric per-level
+//!   movement and strictly more movement than the uniform plan — the
+//!   accounting property Algorithm 4 exists to eliminate.
+
+use usefuse::coordinator::{NativePipeline, PipelineParams};
+use usefuse::geometry::{PyramidPlan, StridePolicy};
+use usefuse::nets::{self, Network};
+use usefuse::runtime::engine::conv2d;
+use usefuse::runtime::{EngineKind, Tensor};
+
+const SEED: u64 = 7;
+
+fn zoo() -> Vec<Network> {
+    ["lenet5", "alexnet", "vgg16", "resnet18"]
+        .iter()
+        .map(|n| nets::tiny(n).expect("tiny preset feasible"))
+        .collect()
+}
+
+/// The plain layer-by-layer reference: explicit padding, conv+bias,
+/// ReLU, pooling per level; residual shortcuts (identity or 1×1
+/// projection) added back post-activation and re-rectified, exactly as
+/// the pipeline defines them. No tiling anywhere.
+fn reference_features(net: &Network, params: &PipelineParams, input: &Tensor) -> Tensor {
+    let mut x = input.clone();
+    let mut ds_i = 0;
+    for st in net.pipeline_stages() {
+        let saved = x.clone();
+        for j in st.range() {
+            let spec = &net.convs[j];
+            let padded = x.pad_spatial(spec.pad).expect("pad");
+            let act = conv2d(spec, &padded, &params.conv_weights[j], &params.conv_biases[j])
+                .expect("conv")
+                .relu();
+            x = match spec.pool {
+                Some(p) => act.maxpool(p.k, p.s).expect("pool"),
+                None => act,
+            };
+        }
+        if st.residual {
+            let shortcut = match net.downsample_spec(&st) {
+                Some(spec) => {
+                    let s = conv2d(
+                        &spec,
+                        &saved,
+                        &params.ds_weights[ds_i],
+                        &params.ds_biases[ds_i],
+                    )
+                    .expect("projection");
+                    ds_i += 1;
+                    s
+                }
+                None => saved,
+            };
+            x = x.add(&shortcut).expect("residual add").relu();
+        }
+    }
+    x
+}
+
+/// F32 oracle: the chained pyramids (tiling, halo masking, assembly,
+/// stage hand-off, residual adds) reproduce the reference **bit for
+/// bit** on every zoo network.
+#[test]
+fn f32_pipeline_is_bit_identical_to_reference() {
+    for net in zoo() {
+        let params = PipelineParams::synthetic(&net, SEED);
+        let input = nets::random_input(&net.convs[0], SEED ^ 0xA5A5);
+        let reference = reference_features(&net, &params, &input);
+
+        let pipe = NativePipeline::synthetic(&net, EngineKind::F32, SEED).expect("pipeline");
+        let inf = pipe.infer(&input).expect("infer");
+        assert_eq!(inf.features.shape, reference.shape, "{}", net.name);
+        assert_eq!(
+            inf.features.data, reference.data,
+            "{}: chained-pyramid output diverged from the reference conv loop",
+            net.name
+        );
+        // The classifier head agrees with an independent evaluation of
+        // the same synthetic weights over the reference features.
+        let logits = params.head.forward(&reference).expect("head");
+        assert_eq!(inf.logits.data, logits.data, "{}", net.name);
+        assert_eq!(inf.logits.shape, vec![params.head.num_classes()]);
+    }
+}
+
+/// Independent head check: forward() must equal a hand-rolled
+/// flatten → (GEMM + bias → ReLU)* → GEMM evaluation.
+#[test]
+fn classifier_head_matches_naive_gemm() {
+    for net in zoo() {
+        let params = PipelineParams::synthetic(&net, SEED);
+        let last = net.convs.last().unwrap();
+        let feat = nets::random_input(
+            &usefuse::geometry::FusedConvSpec {
+                ifm: last.level_out(),
+                n_in: last.m_out,
+                ..last.clone()
+            },
+            13,
+        );
+        let head = &params.head;
+        let mut x: Vec<f32> = if head.global_avg_pool {
+            let (h, c) = (last.level_out(), last.m_out);
+            let mut v = vec![0.0f32; c];
+            for (i, val) in feat.data.iter().enumerate() {
+                v[i % c] += val;
+            }
+            // Multiply by the reciprocal, like Tensor::global_avg_pool
+            // (f32 division would round differently).
+            let inv = 1.0 / (h * h) as f32;
+            v.iter().map(|s| s * inv).collect()
+        } else {
+            feat.data.clone()
+        };
+        for (li, layer) in head.layers.iter().enumerate() {
+            let (fan_in, fan_out) = (layer.w.shape[0], layer.w.shape[1]);
+            assert_eq!(x.len(), fan_in, "{}: layer {li}", net.name);
+            let mut y = layer.b.clone();
+            for (k, &v) in x.iter().enumerate() {
+                if v == 0.0 {
+                    continue;
+                }
+                for (o, w) in y.iter_mut().zip(&layer.w.data[k * fan_out..(k + 1) * fan_out]) {
+                    *o += v * w;
+                }
+            }
+            if li + 1 < head.layers.len() {
+                for v in y.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            x = y;
+        }
+        let got = head.forward(&feat).expect("forward");
+        assert_eq!(got.data, x, "{}", net.name);
+    }
+}
+
+/// SOP oracle: the digit-serial pipeline tracks the exact reference
+/// within the n = 12 quantization bound on every zoo network, and its
+/// END counters stay consistent at every conv level.
+#[test]
+fn sop_pipeline_matches_reference_within_quantization() {
+    for net in zoo() {
+        let params = PipelineParams::synthetic(&net, SEED);
+        let input = nets::random_input(&net.convs[0], SEED ^ 0xA5A5);
+        let reference = reference_features(&net, &params, &input);
+
+        let pipe = NativePipeline::synthetic(&net, EngineKind::Sop { n_bits: 12 }, SEED)
+            .expect("pipeline");
+        let inf = pipe.infer(&input).expect("infer");
+        assert_eq!(inf.features.shape, reference.shape, "{}", net.name);
+        let diff = inf.features.max_abs_diff(&reference).expect("diff");
+        // Affine quantization bound: operand rounding scales with the
+        // output magnitude; the constant floor covers near-zero maps
+        // where END/ReLU boundary decisions leave an O(2^-n) residue.
+        let tol = 0.01 + 0.05 * reference.max_abs();
+        assert!(
+            diff <= tol,
+            "{}: SOP pipeline off by {diff} (tol {tol})",
+            net.name
+        );
+
+        let counters = pipe.end_counters();
+        assert_eq!(counters.len(), net.convs.len(), "{}", net.name);
+        for (j, c) in counters.iter().enumerate() {
+            assert!(c.sops > 0, "{}: level {j} ran no SOPs", net.name);
+            assert_eq!(
+                c.terminated + c.positive + c.undetermined,
+                c.sops,
+                "{}: level {j}",
+                net.name
+            );
+            assert!(c.terminated + c.undetermined <= c.sops);
+            assert!(c.executed_digits <= c.total_digits, "{}: level {j}", net.name);
+            assert!(c.mean_exec_fraction() <= 1.0 + 1e-12, "{}: level {j}", net.name);
+        }
+    }
+}
+
+/// Conv-stride (baseline) plans exist for every network's paper fusion
+/// group, cover every output pixel, and pay the asymmetric-movement
+/// penalty the uniform stride eliminates — the accounting half of the
+/// oracle (conv-stride plans are not assemblable, so there is nothing
+/// to execute; `rounds()` is their comparison currency).
+#[test]
+fn conv_stride_plans_cover_and_cost_more_per_network() {
+    for net in [
+        nets::lenet5(),
+        nets::alexnet(),
+        nets::vgg16(),
+        nets::resnet18(),
+    ] {
+        let specs = net.paper_fusion()[0].clone();
+        let cs = PyramidPlan::build(&specs, 1, StridePolicy::ConvStride)
+            .unwrap_or_else(|| panic!("{}: no conv-stride plan", net.name));
+        assert!(cs.covers_output(), "{}: conv-stride plan skips pixels", net.name);
+        // Asymmetric movement: levels advance at different rates.
+        assert!(
+            cs.alphas.windows(2).any(|w| w[0] != w[1]),
+            "{}: conv-stride α unexpectedly uniform: {:?}",
+            net.name,
+            cs.alphas
+        );
+        let uniform = PyramidPlan::build(&specs, 1, StridePolicy::Uniform)
+            .unwrap_or_else(|| panic!("{}: no uniform plan", net.name));
+        assert!(
+            cs.rounds() > uniform.rounds(),
+            "{}: conv-stride movement {} not worse than uniform {}",
+            net.name,
+            cs.rounds(),
+            uniform.rounds()
+        );
+    }
+}

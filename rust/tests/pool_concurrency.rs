@@ -5,13 +5,23 @@
 //!   arrive, be routed to the right program, and carry a sane batch size;
 //! - with a deliberately blocked worker, queued requests are drained as
 //!   **one stacked program call** (batched `_b{N}` variant);
-//! - the router isolates model groups: batches never mix programs.
+//! - the router isolates model groups: batches never mix programs;
+//! - the same concurrency and backpressure scenarios hold under the
+//!   **artifact-free native factory** (a shared `NativePipeline` behind
+//!   every worker), with consistent merged END statistics in the
+//!   metrics snapshots;
+//! - `shutdown` drains the queue, answers every queued request, joins
+//!   the workers, and makes later submissions fail fast.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use usefuse::coordinator::pool::{ModelGroup, PoolConfig, RuntimeFactory, WorkerPool};
-use usefuse::runtime::{DType, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
+use usefuse::coordinator::pipeline::NativePipeline;
+use usefuse::coordinator::pool::{
+    native_factory, pipeline_end_source, ModelGroup, PoolConfig, RuntimeFactory, WorkerPool,
+};
+use usefuse::nets;
+use usefuse::runtime::{DType, EngineKind, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
 
 // Long enough that the submitting thread can enqueue a handful of
 // requests behind the sleeping worker even on a badly preempted CI
@@ -117,6 +127,7 @@ fn sixteen_clients_hammer_the_pool() {
             latency_window: 1024,
             groups: groups(),
             factory: toy_factory(),
+            end_source: None,
         })
         .expect("pool"),
     );
@@ -163,6 +174,7 @@ fn queued_requests_drain_as_one_stacked_call() {
         latency_window: 256,
         groups: groups(),
         factory: toy_factory(),
+        end_source: None,
     })
     .expect("pool");
 
@@ -214,6 +226,165 @@ fn queued_requests_drain_as_one_stacked_call() {
     assert_eq!(snap.batch_hist[&4], 2);
 }
 
+/// Shared artifact-free pipeline + pool config for the native-factory
+/// scenarios (full-size LeNet-5, synthetic weights, no artifacts on
+/// disk anywhere).
+fn native_pool(kind: EngineKind, workers: usize, queue_cap: usize) -> (Arc<NativePipeline>, WorkerPool) {
+    let net = nets::lenet5();
+    let pipeline = Arc::new(NativePipeline::synthetic(&net, kind, 0xFACE).expect("pipeline"));
+    let pool = WorkerPool::start(PoolConfig {
+        workers,
+        max_batch: 4,
+        queue_cap,
+        latency_window: 512,
+        groups: vec![ModelGroup {
+            name: "lenet5".into(),
+            program: "lenet5_infer".into(),
+        }],
+        factory: native_factory(&pipeline),
+        end_source: Some(pipeline_end_source(&pipeline)),
+    })
+    .expect("native pool");
+    (pipeline, pool)
+}
+
+/// The hammer scenario from the artifact path, re-run against the
+/// native factory: concurrent clients, a tiny queue (real
+/// backpressure), and zero artifacts. Every response must arrive with
+/// sane routing metadata, and the accounting must balance.
+#[test]
+fn native_factory_survives_concurrent_clients_and_backpressure() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 6;
+    // queue_cap 2 « the request volume: submitters block on the
+    // condvar (backpressure) and must all still be served.
+    let (_pipeline, pool) = native_pool(EngineKind::F32, 2, 2);
+    let pool = Arc::new(pool);
+    std::thread::scope(|s| {
+        for t in 0..CLIENTS {
+            let pool = Arc::clone(&pool);
+            s.spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let img = nets::random_input(&nets::lenet5().convs[0], (t * 100 + i) as u64);
+                    let r = pool.classify("lenet5", img).expect("classify");
+                    assert_eq!(r.group, "lenet5");
+                    assert_eq!(r.logits.len(), 10, "client {t} request {i}");
+                    assert!(r.class < 10);
+                    assert!(r.worker < 2);
+                    assert!((1..=4).contains(&r.batch_size));
+                }
+            });
+        }
+    });
+    let snap = pool.metrics();
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(snap.total_requests, total);
+    assert_eq!(snap.error_requests, 0);
+    assert_eq!(snap.queue_depth, 0);
+    let hist_total: u64 = snap
+        .batch_hist
+        .iter()
+        .map(|(size, count)| *size as u64 * count)
+        .sum();
+    assert_eq!(hist_total, total);
+    // The f32 engine has no END unit: the source reports empty.
+    assert!(snap.end_levels.is_empty());
+    // Unknown groups are still rejected by the router.
+    assert!(pool
+        .classify("lenet", Tensor::zeros(vec![32, 32, 1]))
+        .is_err());
+}
+
+/// Under the SOP engine, merged END counters from every worker surface
+/// through the metrics snapshot and stay consistent under concurrency:
+/// `detected + undetermined ≤ total`, the state partition is exact, and
+/// counts only grow.
+#[test]
+fn native_factory_merges_consistent_end_counters() {
+    let (pipeline, pool) = native_pool(EngineKind::Sop { n_bits: 8 }, 2, 16);
+    let pool = Arc::new(pool);
+    let check = |snap: &usefuse::coordinator::MetricsSnapshot| {
+        assert_eq!(snap.end_levels.len(), 2, "one counter per fused LeNet level");
+        for (j, c) in snap.end_levels.iter().enumerate() {
+            assert!(c.terminated + c.undetermined <= c.sops, "level {j}");
+            assert_eq!(c.terminated + c.positive + c.undetermined, c.sops, "level {j}");
+            assert!(c.executed_digits <= c.total_digits, "level {j}");
+        }
+    };
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let pool = Arc::clone(&pool);
+            s.spawn(move || {
+                for i in 0..3 {
+                    let img = nets::random_input(&nets::lenet5().convs[0], (t * 10 + i) as u64);
+                    let r = pool.classify("lenet5", img).expect("classify");
+                    assert!(r.class < 10);
+                }
+            });
+        }
+    });
+    let snap = pool.metrics();
+    assert_eq!(snap.total_requests, 12);
+    check(&snap);
+    // The snapshot is exactly the shared pipeline's live counters.
+    assert_eq!(pipeline.end_counters()[0].sops, snap.end_levels[0].sops);
+    // More traffic only grows the counters.
+    let before = snap.end_levels[0].sops;
+    let img = nets::random_input(&nets::lenet5().convs[0], 999);
+    pool.classify("lenet5", img).expect("classify");
+    assert!(pool.metrics().end_levels[0].sops > before);
+}
+
+/// Satellite regression: `shutdown` used to be a no-op. It must stop
+/// intake (later calls error out instead of hanging), finish what was
+/// queued, and join the workers; a second shutdown and the final drop
+/// are no-ops.
+#[test]
+fn shutdown_drains_queue_then_rejects_new_requests() {
+    let pool = WorkerPool::start(PoolConfig {
+        workers: 1,
+        max_batch: 4,
+        queue_cap: 64,
+        latency_window: 256,
+        groups: groups(),
+        factory: toy_factory(),
+        end_source: None,
+    })
+    .expect("pool");
+
+    // Park the single worker on a slow request, then pile work up
+    // behind it so the queue is provably non-empty at shutdown time.
+    let slow_rx = pool.classify_async("toy", slow_img()).expect("slow submit");
+    let t0 = Instant::now();
+    while pool.metrics().queue_depth > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never woke");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let pending: Vec<_> = (0..3)
+        .map(|i| pool.classify_async("toy", img(i)).expect("submit"))
+        .collect();
+
+    pool.shutdown();
+
+    // Everything submitted before the shutdown was served, not dropped.
+    let slow = slow_rx.recv().expect("slow recv").expect("slow resp");
+    assert_eq!(slow.class, 0);
+    for (i, rx) in pending.into_iter().enumerate() {
+        let r = rx.recv().expect("recv").expect("resp");
+        assert_eq!(r.class, i, "queued request {i} lost in shutdown");
+    }
+    // New work is rejected loudly instead of hanging forever.
+    let err = pool.classify("toy", img(1)).unwrap_err();
+    assert!(err.to_string().contains("shut down"), "{err}");
+    assert!(pool.classify_async("toy", img(2)).is_err());
+    // Metrics stay readable and consistent after the join.
+    let snap = pool.metrics();
+    assert_eq!(snap.total_requests, 4);
+    assert_eq!(snap.queue_depth, 0);
+    // Idempotent.
+    pool.shutdown();
+}
+
 #[test]
 fn router_isolates_model_groups() {
     let pool = Arc::new(
@@ -224,6 +395,7 @@ fn router_isolates_model_groups() {
             latency_window: 256,
             groups: groups(),
             factory: toy_factory(),
+            end_source: None,
         })
         .expect("pool"),
     );
