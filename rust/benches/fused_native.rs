@@ -1,20 +1,28 @@
 //! `fused_native` — tile throughput of the artifact-free native fusion
 //! backend: the fused LeNet pyramid executed end-to-end through the
-//! vectorized `F32Engine` and the digit-serial `SopEngine` (SOP + END),
-//! serial and across the thread pool. Also prints each engine's verify
-//! residual and, for the SOP engine, the live END statistics recorded
-//! during the timed runs.
+//! vectorized `F32Engine`, the digit-serial `SopEngine` (SOP + END) and
+//! the bit-sliced 64-lane `SopSlicedEngine`, serial and across the
+//! thread pool. Also prints each engine's verify residual, the live END
+//! statistics recorded during the timed runs, and the headline
+//! **sliced-vs-scalar SOP speedup** (EXPERIMENTS.md expects ≥ 4×; the
+//! END statistics of the two SOP engines must be byte-identical).
 use usefuse::coordinator::FusionExecutor;
 use usefuse::harness::{black_box, Bench};
 use usefuse::nets;
-use usefuse::runtime::EngineKind;
+use usefuse::runtime::{EndCounters, EngineKind};
 
 fn main() {
     let mut b = Bench::new("fused_native");
     let specs = nets::lenet5().paper_fusion()[0].clone();
     let input = nets::random_input(&specs[0], 7);
 
-    for kind in [EngineKind::F32, EngineKind::Sop { n_bits: 8 }] {
+    let mut tile_us = Vec::new();
+    let mut end_stats: Vec<(String, Vec<EndCounters>)> = Vec::new();
+    for kind in [
+        EngineKind::F32,
+        EngineKind::Sop { n_bits: 8 },
+        EngineKind::SopSliced { n_bits: 8 },
+    ] {
         let (weights, biases) = nets::random_weights(&specs, 42);
         let exec = FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
             .expect("uniform LeNet plan");
@@ -27,12 +35,12 @@ fn main() {
         });
 
         let (out, stats) = exec.run(&input).expect("run");
-        let tile_us =
-            stats.wall.as_secs_f64() * 1e6 / stats.tiles_executed.max(1) as f64;
+        let us = stats.wall.as_secs_f64() * 1e6 / stats.tiles_executed.max(1) as f64;
+        tile_us.push((label.to_string(), us));
         println!(
             "engine {label}: {} tiles, {:.1} µs/tile, output {} elems",
             stats.tiles_executed,
-            tile_us,
+            us,
             out.len()
         );
         let rel = exec.verify(&input).expect("verify");
@@ -47,5 +55,35 @@ fn main() {
                 100.0 * c.executed_digit_fraction()
             );
         }
+        if !exec.end_counters().is_empty() {
+            end_stats.push((label.to_string(), exec.end_counters()));
+        }
+    }
+
+    // Headline: bit-slicing speedup over the scalar digit-serial path.
+    let us_of = |name: &str| tile_us.iter().find(|(l, _)| l == name).map(|(_, u)| *u);
+    if let (Some(sop), Some(sliced)) = (us_of("sop"), us_of("sop-sliced")) {
+        println!(
+            "sliced-vs-scalar SOP tile throughput: {:.2}× (scalar {sop:.1} µs/tile, \
+             sliced {sliced:.1} µs/tile)",
+            sop / sliced.max(1e-9)
+        );
+    }
+    // The two SOP engines must report identical END behaviour — the
+    // differential harness proves it per run; this surfaces it in the
+    // bench output (counts only: the timed loops above ran different
+    // numbers of accumulating iterations per engine).
+    if let [(_, a), (_, b)] = &end_stats[..] {
+        let rate = |cs: &[EndCounters]| -> Vec<(f64, f64)> {
+            cs.iter()
+                .map(|c| (c.detection_rate(), c.executed_digit_fraction()))
+                .collect()
+        };
+        assert_eq!(
+            rate(a),
+            rate(b),
+            "scalar and sliced SOP engines disagree on END rates"
+        );
+        println!("END detection rates: scalar and sliced SOP engines identical");
     }
 }

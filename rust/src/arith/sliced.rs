@@ -1,0 +1,1040 @@
+//! **Bit-sliced 64-lane MSDF datapath** — the word-parallel twin of the
+//! scalar online units (paper §3.1–§3.2), advancing 64 independent
+//! sums-of-products per digit step.
+//!
+//! ## Digit-plane layout
+//!
+//! A radix-2 signed digit d ∈ {-1, 0, 1} of 64 concurrent lanes is held
+//! as one [`DigitPlane`] — a `(pos, neg)` bitmask pair where bit `l` of
+//! `pos` means lane `l`'s digit is +1 and bit `l` of `neg` means it is
+//! −1 (`pos & neg == 0` always). A full digit *stream* is a sequence of
+//! planes, one per MSDF position:
+//!
+//! ```text
+//!            lane:  63 ........ 2 1 0
+//! position 1 pos:    0 ........ 0 1 0     lane 0: digits  0,+1,-1,…
+//!            neg:    1 ........ 0 0 0     lane 1: digits +1, 0, 0,…
+//! position 2 pos:    0 ........ 1 0 0     lane 63: digits -1,+1, …
+//!            neg:    0 ........ 0 0 1     …
+//! ```
+//!
+//! [`transpose_lanes`] converts up to 64 [`Fixed`] operands into this
+//! transposed form; **lane-tail masking** handles ragged groups: lanes
+//! beyond the active count are simply fed all-zero digit streams and
+//! excluded from every result via the caller's `active` mask — the
+//! datapath computes them, the results are never read.
+//!
+//! ## Word-parallel recurrences
+//!
+//! - [`SlicedOnlineAdd`] re-expresses the scalar adder's two bounded
+//!   transfer decompositions (`split_t1`/`split_t2` in
+//!   [`online_add`](super::online_add)) as ~15 boolean operations on
+//!   planes; the two inter-digit state values (`u ∈ {-1,0}`,
+//!   `s ∈ {0,1}`) become one bitmask each.
+//! - [`SlicedOnlineMul`] keeps the Algorithm-1 residual `w` of all 64
+//!   lanes as `f+4` bit planes of its two's-complement representation
+//!   and implements `v = 2w + x·Y` as a plane shift plus a ripple-carry
+//!   add of the per-lane selected addend (Y, −Y or 0 — the serial digit
+//!   only *selects*, so the shared parallel operand broadcasts for
+//!   free). The SELM selection and the `w ← v − z·2^(f+2)` update are a
+//!   handful of sign/range tests on the high planes.
+//! - [`SlicedEnd`] exploits that the scalar END recurrence
+//!   (`acc ← 2·acc + z`, decide on `|acc| ≥ 1`) decides exactly at the
+//!   **first non-zero output digit**, so the whole unit is three
+//!   bitmasks plus a per-lane decision-cycle record.
+//!
+//! All three are **bit-identical** to their scalar twins — digit for
+//! digit, residual for residual, decision cycle for decision cycle —
+//! which the property tests below and `tests/engine_equivalence.rs`
+//! pin down.
+
+use super::digit::{is_valid_digit, to_sd_digits, Digit, Fixed};
+use super::end_unit::EndState;
+use super::online_mul::DELTA_OLM;
+use super::sop::{tree_levels, SopEndResult};
+
+/// Number of lanes a digit plane carries (one per bit of a machine word).
+pub const LANES: usize = 64;
+
+/// Maximum residual bit-planes of a [`SlicedOnlineMul`]: `f + 4` for the
+/// largest supported operand precision (`frac_bits ≤ 24`).
+const MAX_PLANES: usize = 28;
+
+/// One signed digit of 64 lanes: bit `l` of `pos`/`neg` set means lane
+/// `l`'s digit is +1/−1 (never both). Lanes with neither bit are 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DigitPlane {
+    /// Lanes whose digit is +1.
+    pub pos: u64,
+    /// Lanes whose digit is −1.
+    pub neg: u64,
+}
+
+impl DigitPlane {
+    /// The all-zero digit plane.
+    pub const ZERO: DigitPlane = DigitPlane { pos: 0, neg: 0 };
+
+    /// Plane with the same digit in every lane.
+    #[inline]
+    pub fn broadcast(d: Digit) -> DigitPlane {
+        debug_assert!(is_valid_digit(d));
+        match d {
+            1 => DigitPlane { pos: u64::MAX, neg: 0 },
+            -1 => DigitPlane { pos: 0, neg: u64::MAX },
+            _ => DigitPlane::ZERO,
+        }
+    }
+
+    /// Read one lane's digit.
+    #[inline]
+    pub fn get(self, lane: usize) -> Digit {
+        debug_assert!(lane < LANES);
+        ((self.pos >> lane) & 1) as i8 - ((self.neg >> lane) & 1) as i8
+    }
+
+    /// Set one lane's digit.
+    #[inline]
+    pub fn set(&mut self, lane: usize, d: Digit) {
+        debug_assert!(lane < LANES && is_valid_digit(d));
+        let bit = 1u64 << lane;
+        self.pos &= !bit;
+        self.neg &= !bit;
+        match d {
+            1 => self.pos |= bit,
+            -1 => self.neg |= bit,
+            _ => {}
+        }
+    }
+
+    /// The representation invariant: no lane is both +1 and −1.
+    #[inline]
+    pub fn is_valid(self) -> bool {
+        self.pos & self.neg == 0
+    }
+}
+
+/// Transpose up to 64 [`Fixed`] operands (all with `frac` fraction bits)
+/// into their MSDF digit planes: `out[j]` holds digit position `j + 1`
+/// of every lane. Lanes beyond `lanes.len()` are zero — the lane-tail
+/// masking rule for ragged groups.
+pub fn transpose_lanes(lanes: &[Fixed], frac: u32, out: &mut [DigitPlane]) {
+    assert!(lanes.len() <= LANES, "more than {LANES} lanes");
+    assert_eq!(out.len(), frac as usize, "plane buffer != frac digits");
+    out.fill(DigitPlane::ZERO);
+    for (lane, x) in lanes.iter().enumerate() {
+        debug_assert_eq!(x.frac_bits, frac, "mixed-precision lanes");
+        if x.q == 0 {
+            continue;
+        }
+        let mag = x.q.unsigned_abs();
+        let bit = 1u64 << lane;
+        for (j, plane) in out.iter_mut().enumerate() {
+            if (mag >> (frac as usize - 1 - j)) & 1 == 1 {
+                if x.q < 0 {
+                    plane.neg |= bit;
+                } else {
+                    plane.pos |= bit;
+                }
+            }
+        }
+    }
+}
+
+/// 64-lane radix-2 online adder — the word-parallel twin of
+/// [`OnlineAdd`](super::online_add::OnlineAdd). One `push` advances all
+/// 64 independent additions by one digit position with ~15 boolean ops.
+#[derive(Clone, Debug, Default)]
+pub struct SlicedOnlineAdd {
+    /// Lanes whose pending transfer digit `u` is −1 (`u ∈ {-1, 0}`).
+    un: u64,
+    /// Lanes whose pending sum digit `s` is 1 (`s ∈ {0, 1}`).
+    sp: u64,
+}
+
+impl SlicedOnlineAdd {
+    /// Fresh adder with cleared residual state in every lane.
+    pub fn new() -> SlicedOnlineAdd {
+        SlicedOnlineAdd::default()
+    }
+
+    /// Clear all lane state (equivalent to 64 fresh scalar adders).
+    pub fn reset(&mut self) {
+        self.un = 0;
+        self.sp = 0;
+    }
+
+    /// Feed one digit plane pair, producing one output plane — the
+    /// plane-wise form of the scalar `split_t1`/`split_t2` cascade.
+    #[inline]
+    pub fn push(&mut self, x: DigitPlane, y: DigitPlane) -> DigitPlane {
+        debug_assert!(x.is_valid() && y.is_valid());
+        // g = x + y ∈ [-2, 2]: P = x⁺+y⁺ and N = x⁻+y⁻ as 2-bit tallies;
+        // P = 2 (p1) excludes N > 0 per-lane (valid digits), so g
+        // decomposes into the five masks below.
+        let p1 = x.pos & y.pos;
+        let p0 = x.pos ^ y.pos;
+        let n1 = x.neg & y.neg;
+        let n0 = x.neg ^ y.neg;
+        // t1 = ⌊(g+1)/2⌋: +1 for g ∈ {1, 2}, −1 for g = −2.
+        let t1p = p1 | (p0 & !n0);
+        let t1n = n1;
+        // u = g − 2·t1 ∈ {-1, 0}: −1 exactly when g is odd.
+        let u_neg = p0 ^ n0;
+        // v = u_prev + t1 ∈ [-2, 1]; t2 = ⌊v/2⌋ ∈ {-1, 0} is −1 iff v < 0.
+        let t2n = t1n | (self.un & !t1p);
+        // s = v − 2·t2 ∈ {0, 1}: the parity of v.
+        let s = t1p ^ t1n ^ self.un;
+        // z = s_prev + t2 ∈ {-1, 0, 1}.
+        let z = DigitPlane {
+            pos: self.sp & !t2n,
+            neg: t2n & !self.sp,
+        };
+        self.un = u_neg;
+        self.sp = s;
+        debug_assert!(z.is_valid());
+        z
+    }
+}
+
+/// 64-lane serial–parallel online multiplier — the word-parallel twin of
+/// [`OnlineMul`](super::online_mul::OnlineMul) for one shared parallel
+/// operand `Y` and 64 independent serial operands. The Algorithm-1
+/// residual of every lane lives in `f + 4` two's-complement bit planes.
+#[derive(Clone, Debug)]
+pub struct SlicedOnlineMul {
+    /// Shared parallel operand, raw integer (value = `y_q · 2^-f`).
+    y_q: i64,
+    /// Fractional bits of the parallel operand.
+    f: u32,
+    /// Residual plane count: `f + 4` (|v| ≤ 7·2^f needs f+4 signed bits).
+    bits: u32,
+    /// Residual bit planes: `w[j]` holds bit `j` of every lane's
+    /// two's-complement residual (in units of `2^-(f+2)`).
+    w: [u64; MAX_PLANES],
+    /// Steps taken (consumed input digit planes).
+    step: u32,
+}
+
+impl SlicedOnlineMul {
+    /// Create a 64-lane multiplier for shared parallel operand `y`.
+    pub fn new(y: Fixed) -> SlicedOnlineMul {
+        assert!(
+            (y.frac_bits as usize) + 4 <= MAX_PLANES,
+            "frac_bits {} too large for the sliced multiplier",
+            y.frac_bits
+        );
+        SlicedOnlineMul {
+            y_q: y.q,
+            f: y.frac_bits,
+            bits: y.frac_bits + 4,
+            w: [0; MAX_PLANES],
+            step: 0,
+        }
+    }
+
+    /// Clear all lane residuals (equivalent to 64 fresh scalar units).
+    pub fn reset(&mut self) {
+        self.w = [0; MAX_PLANES];
+        self.step = 0;
+    }
+
+    /// Feed the next serial digit plane (MSDF); emits the next output
+    /// plane once past the online delay — plane-for-plane identical to
+    /// 64 scalar [`OnlineMul`](super::online_mul::OnlineMul)s.
+    #[inline]
+    pub fn step(&mut self, x: DigitPlane) -> Option<DigitPlane> {
+        debug_assert!(x.is_valid());
+        self.step += 1;
+        let b = self.bits as usize;
+        let f = self.f as usize;
+        // v = 2w + x·Y. The shift drops w's top plane — safe because
+        // |2w| ≤ 6·2^f fits f+4 signed bits; the serial digit selects
+        // the addend per lane: Y (x = +1), ~Y with carry-in 1 (x = −1,
+        // two's-complement negation) or 0, then one ripple-carry add
+        // over the planes.
+        let mut v = [0u64; MAX_PLANES];
+        v[1..b].copy_from_slice(&self.w[..b - 1]);
+        let mut carry = x.neg;
+        for (j, vj) in v.iter_mut().enumerate().take(b) {
+            let a = if (self.y_q >> j) & 1 == 1 { x.pos } else { x.neg };
+            let s = *vj ^ a ^ carry;
+            carry = (*vj & a) | (carry & (*vj ^ a));
+            *vj = s;
+        }
+        if self.step <= DELTA_OLM {
+            // Initialization: accumulate without emitting.
+            self.w[..b].copy_from_slice(&v[..b]);
+            return None;
+        }
+        // SELM on v̂ = v >> f (a 4-bit signed value per lane):
+        // z = +1 iff v̂ ≥ 2 — sign clear and any of bits f+1..b-2 set;
+        // z = −1 iff v̂ ≤ −2 — sign set and bits f..b-2 not all set
+        // (the only sign-set value above −2 is −1 = all ones).
+        let sign = v[b - 1];
+        let mut mid_or = 0u64;
+        for vj in &v[f + 1..b - 1] {
+            mid_or |= vj;
+        }
+        let mut mid_and = u64::MAX;
+        for vj in &v[f..b - 1] {
+            mid_and &= vj;
+        }
+        let z = DigitPlane {
+            pos: !sign & mid_or,
+            neg: sign & !mid_and,
+        };
+        // w = v − z·2^(f+2): subtracting 2^(f+2) adds all-ones from
+        // plane f+2 up (two's complement), adding it sets plane f+2 —
+        // a short ripple over the top planes only.
+        let mut carry = 0u64;
+        for (j, vj) in v.iter_mut().enumerate().take(b).skip(f + 2) {
+            let a = z.pos | if j == f + 2 { z.neg } else { 0 };
+            let s = *vj ^ a ^ carry;
+            carry = (*vj & a) | (carry & (*vj ^ a));
+            *vj = s;
+        }
+        self.w[..b].copy_from_slice(&v[..b]);
+        Some(z)
+    }
+
+    /// Extract one lane's residual as a signed integer (in units of
+    /// `2^-(f+2)`) — the quantity the scalar unit's invariant bounds by
+    /// `3·2^f`. For cross-checking against [`OnlineMul`]'s state.
+    ///
+    /// [`OnlineMul`]: super::online_mul::OnlineMul
+    pub fn lane_residual(&self, lane: usize) -> i64 {
+        assert!(lane < LANES);
+        let mut val: i64 = 0;
+        for j in 0..self.bits as usize {
+            val |= (((self.w[j] >> lane) & 1) as i64) << j;
+        }
+        if val >= 1 << (self.bits - 1) {
+            val -= 1 << self.bits;
+        }
+        val
+    }
+}
+
+/// 64-lane early-negative-detection unit — the word-parallel twin of
+/// [`EndUnit`](super::end_unit::EndUnit).
+///
+/// The scalar recurrence (`acc ← 2·acc + z`, decide once `|acc| ≥ 1`)
+/// keeps `acc = 0` through every leading zero and leaves the
+/// undetermined band at the **first non-zero digit** — so per lane the
+/// whole unit reduces to "which sign was the first non-zero digit, and
+/// at which position": three bitmasks and a decision-cycle record.
+#[derive(Clone, Debug)]
+pub struct SlicedEnd {
+    /// Lanes still in the undetermined band (no non-zero digit yet).
+    undecided: u64,
+    /// Lanes decided surely-negative (terminate).
+    term: u64,
+    /// Lanes decided surely-positive.
+    positive: u64,
+    /// Digit planes observed so far.
+    step: u32,
+    /// Per-lane decision position (1-based digit index; 0 = undecided).
+    decided_at: [u32; LANES],
+}
+
+impl Default for SlicedEnd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SlicedEnd {
+    /// Fresh unit: every lane undetermined.
+    pub fn new() -> SlicedEnd {
+        SlicedEnd {
+            undecided: u64::MAX,
+            term: 0,
+            positive: 0,
+            step: 0,
+            decided_at: [0; LANES],
+        }
+    }
+
+    /// Reset every lane to undetermined.
+    pub fn reset(&mut self) {
+        *self = SlicedEnd::new();
+    }
+
+    /// Observe the next output digit plane. Decisions saturate exactly
+    /// like 64 scalar units: a decided lane ignores later digits.
+    #[inline]
+    pub fn observe(&mut self, z: DigitPlane) {
+        debug_assert!(z.is_valid());
+        self.step += 1;
+        let newly_term = self.undecided & z.neg;
+        let newly_pos = self.undecided & z.pos;
+        let mut newly = newly_term | newly_pos;
+        while newly != 0 {
+            let lane = newly.trailing_zeros() as usize;
+            self.decided_at[lane] = self.step;
+            newly &= newly - 1;
+        }
+        self.term |= newly_term;
+        self.positive |= newly_pos;
+        self.undecided &= !(newly_term | newly_pos);
+    }
+
+    /// Lanes decided surely-negative (ReLU output provably 0).
+    pub fn terminated(&self) -> u64 {
+        self.term
+    }
+
+    /// Lanes decided surely-positive.
+    pub fn positive(&self) -> u64 {
+        self.positive
+    }
+
+    /// One lane's decision state.
+    pub fn state(&self, lane: usize) -> EndState {
+        assert!(lane < LANES);
+        let bit = 1u64 << lane;
+        if self.term & bit != 0 {
+            EndState::Terminate
+        } else if self.positive & bit != 0 {
+            EndState::SurelyPositive
+        } else {
+            EndState::Undetermined
+        }
+    }
+
+    /// One lane's decision position (None while undetermined).
+    pub fn decided_at(&self, lane: usize) -> Option<u32> {
+        assert!(lane < LANES);
+        (self.decided_at[lane] != 0).then_some(self.decided_at[lane])
+    }
+}
+
+/// Result of one 64-lane SOP evaluation: per-lane END state, decision
+/// position and reconstructed value, in the same terms as the scalar
+/// [`SopEndResult`] (use [`SlicedSopResult::lane`] to extract one).
+#[derive(Clone, Copy, Debug)]
+pub struct SlicedSopResult {
+    /// Adder-tree depth (shared by all lanes).
+    pub levels: u32,
+    /// Total digits of the full stream (shared by all lanes).
+    pub total_digits: u32,
+    /// Lanes whose END unit terminated early (surely negative).
+    pub terminated: u64,
+    /// Lanes proven surely positive.
+    pub positive: u64,
+    /// Per-lane decision position (total_digits where undecided).
+    pub decided_at: [u32; LANES],
+    /// Per-lane SOP value reconstructed from the output stream
+    /// (post-scaling, prefix value for terminated lanes) — identical
+    /// arithmetic to the scalar pipeline's accumulator.
+    pub value: [f64; LANES],
+}
+
+impl SlicedSopResult {
+    /// An all-zero result (scratch-buffer initializer).
+    pub fn empty() -> SlicedSopResult {
+        SlicedSopResult {
+            levels: 0,
+            total_digits: 0,
+            terminated: 0,
+            positive: 0,
+            decided_at: [0; LANES],
+            value: [0.0; LANES],
+        }
+    }
+
+    /// Extract one lane as a scalar [`SopEndResult`] — field-for-field
+    /// what [`SopPipeline::run`](super::sop::SopPipeline::run) returns
+    /// for that lane's window.
+    pub fn lane(&self, lane: usize) -> SopEndResult {
+        assert!(lane < LANES);
+        let bit = 1u64 << lane;
+        let state = if self.terminated & bit != 0 {
+            EndState::Terminate
+        } else if self.positive & bit != 0 {
+            EndState::SurelyPositive
+        } else {
+            EndState::Undetermined
+        };
+        SopEndResult {
+            state,
+            decided_at: self.decided_at[lane],
+            total_digits: self.total_digits,
+            levels: self.levels,
+            value: self.value[lane],
+        }
+    }
+}
+
+/// Reusable 64-lane columnar SOP pipeline — the bit-sliced twin of
+/// [`SopPipeline`](super::sop::SopPipeline): the same bank-of-
+/// multipliers + adder-tree + END structure, stepped in the same
+/// lockstep order, but every step advances 64 windows at once. One
+/// instance per filter; weights are the shared parallel operands.
+///
+/// Per-lane digits, END decisions and values are **bit-identical** to
+/// running the scalar pipeline on each lane's window separately — with
+/// one scheduling difference: the scalar pipeline halts at its single
+/// window's termination, the sliced pipeline halts once *every* active
+/// lane has terminated (per-lane accounting still uses each lane's own
+/// decision position, so `EndCounters` match exactly).
+pub struct SopSlicedPipeline {
+    weights: Vec<Fixed>,
+    has_bias: bool,
+    bias_digits: Vec<Digit>,
+    n_out: usize,
+    levels: u32,
+    width: usize,
+    // Reused unit state.
+    muls: Vec<SlicedOnlineMul>,
+    adders: Vec<SlicedOnlineAdd>,
+    adder_row_off: Vec<usize>,
+    end: SlicedEnd,
+    cur: Vec<DigitPlane>,
+    next: Vec<DigitPlane>,
+    out_planes: Vec<DigitPlane>,
+}
+
+impl SopSlicedPipeline {
+    /// Build a pipeline for `weights` (+ optional `bias`) producing
+    /// `n_out` result digits — same tree shape as the scalar
+    /// [`SopPipeline::new`](super::sop::SopPipeline::new).
+    pub fn new(weights: &[Fixed], bias: Option<Fixed>, n_out: usize) -> SopSlicedPipeline {
+        assert!(!weights.is_empty());
+        let m = weights.len() + bias.is_some() as usize;
+        let levels = tree_levels(m.max(2));
+        let l = levels as usize;
+        let width = 1usize << levels;
+        let mut adder_row_off = Vec::with_capacity(l + 1);
+        let mut off = 0usize;
+        for lv in 0..l {
+            adder_row_off.push(off);
+            off += width >> (lv + 1);
+        }
+        adder_row_off.push(off);
+        let bias_digits = match bias {
+            Some(b) => {
+                let mut d = to_sd_digits(b);
+                d.resize(n_out, 0);
+                d
+            }
+            None => Vec::new(),
+        };
+        let total_positions = l + n_out + l;
+        SopSlicedPipeline {
+            weights: weights.to_vec(),
+            has_bias: bias.is_some(),
+            bias_digits,
+            n_out,
+            levels,
+            width,
+            muls: weights.iter().map(|w| SlicedOnlineMul::new(*w)).collect(),
+            adders: vec![SlicedOnlineAdd::new(); off],
+            adder_row_off,
+            end: SlicedEnd::new(),
+            cur: vec![DigitPlane::ZERO; width],
+            next: vec![DigitPlane::ZERO; width / 2],
+            out_planes: Vec::with_capacity(total_positions),
+        }
+    }
+
+    /// Adder-tree depth.
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+
+    /// Replace the bias operand's value without rebuilding the pipeline
+    /// (see [`SopPipeline::set_bias`](super::sop::SopPipeline::set_bias)
+    /// — the bias broadcasts to every lane).
+    pub fn set_bias(&mut self, bias: Fixed) {
+        assert!(
+            self.has_bias,
+            "set_bias on a pipeline built without a bias operand"
+        );
+        self.bias_digits.clear();
+        self.bias_digits.extend(to_sd_digits(bias));
+        self.bias_digits.resize(self.n_out, 0);
+    }
+
+    /// Evaluate up to 64 windows at once. `acts` holds the transposed
+    /// activation digit planes, `acts[i * act_frac + j]` = digit
+    /// position `j + 1` of operand `i` across lanes (see
+    /// [`transpose_lanes`]); `active` masks the live lanes (ragged
+    /// tails feed zero streams in the dead lanes and are never read).
+    ///
+    /// Resets all unit state in place; allocation-free after warm-up.
+    pub fn run(&mut self, acts: &[DigitPlane], act_frac: u32, active: u64) -> SlicedSopResult {
+        let frac = act_frac as usize;
+        assert_eq!(
+            acts.len(),
+            self.weights.len() * frac,
+            "transposed activations don't match operand count × frac digits"
+        );
+        let l = self.levels as usize;
+        let n_out = self.n_out;
+        let leaf_len = l + n_out;
+        let total_positions = leaf_len + l;
+        let total_iters = total_positions + l;
+
+        // Reset unit state.
+        for mul in self.muls.iter_mut() {
+            mul.reset();
+        }
+        for a in self.adders.iter_mut() {
+            a.reset();
+        }
+        self.end.reset();
+        self.out_planes.clear();
+
+        let n_leaves = self.weights.len();
+        let width = self.width;
+        // Serial input digit plane `j` (0-based) of operand `i`,
+        // zero-padded past the stream end like the scalar `input_digit`.
+        let in_plane = |acts: &[DigitPlane], i: usize, j: usize| -> DigitPlane {
+            if j < frac {
+                acts[i * frac + j]
+            } else {
+                DigitPlane::ZERO
+            }
+        };
+
+        for t in 1..=total_iters {
+            // Leaf planes for stream position t.
+            if t <= l {
+                self.cur[..width].fill(DigitPlane::ZERO); // alignment zeros
+            } else {
+                let u = t - l; // multiplier output index (1-based)
+                for i in 0..n_leaves {
+                    if u > n_out {
+                        self.cur[i] = DigitPlane::ZERO;
+                        continue;
+                    }
+                    let mul = &mut self.muls[i];
+                    if u == 1 {
+                        // Online delay: two init steps before digit 1.
+                        mul.step(in_plane(acts, i, 0));
+                        mul.step(in_plane(acts, i, 1));
+                    }
+                    let x = in_plane(acts, i, u + 1);
+                    self.cur[i] = mul.step(x).expect("warmed multiplier emits");
+                }
+                let mut k = n_leaves;
+                if self.has_bias {
+                    self.cur[k] = DigitPlane::broadcast(
+                        self.bias_digits.get(u - 1).copied().unwrap_or(0),
+                    );
+                    k += 1;
+                }
+                self.cur[k..width].fill(DigitPlane::ZERO);
+            }
+            // Cascade through the adder tree; level lv's first output
+            // (its position-0 digit) is dropped at iteration t == lv+1.
+            let mut cur_w = width;
+            let mut dropped = false;
+            for lv in 0..l {
+                let row = &mut self.adders[self.adder_row_off[lv]..self.adder_row_off[lv + 1]];
+                for (a, adder) in row.iter_mut().enumerate() {
+                    self.next[a] = adder.push(self.cur[2 * a], self.cur[2 * a + 1]);
+                }
+                cur_w >>= 1;
+                self.cur[..cur_w].copy_from_slice(&self.next[..cur_w]);
+                if t == lv + 1 {
+                    debug_assert_eq!(
+                        self.cur[0],
+                        DigitPlane::ZERO,
+                        "position-0 transfer fired"
+                    );
+                    dropped = true;
+                    break; // deeper levels have no input yet
+                }
+            }
+            if dropped || t <= l {
+                continue;
+            }
+            // Final-stream digit plane for position t - levels.
+            let z = self.cur[0];
+            self.out_planes.push(z);
+            self.end.observe(z);
+            // Hardware termination, lane-wise: stop only once every
+            // active lane's END unit has fired.
+            if active & !self.end.terminated() == 0 {
+                break;
+            }
+        }
+
+        // Per-lane reconstruction — the scalar pipeline's prefix
+        // accumulator, replayed from the recorded planes.
+        let mut res = SlicedSopResult {
+            levels: self.levels,
+            total_digits: total_positions as u32,
+            terminated: self.end.terminated() & active,
+            positive: self.end.positive() & active,
+            decided_at: [total_positions as u32; LANES],
+            value: [0.0; LANES],
+        };
+        for lane in 0..LANES {
+            if (active >> lane) & 1 == 0 {
+                continue;
+            }
+            if let Some(at) = self.end.decided_at(lane) {
+                res.decided_at[lane] = at;
+            }
+            // Terminated lanes accumulate up to the deciding digit
+            // (where the scalar pipeline broke); the rest see the full
+            // stream, which exists because the loop above only stops
+            // early once every active lane has terminated.
+            let plen = if res.terminated & (1u64 << lane) != 0 {
+                res.decided_at[lane] as usize
+            } else {
+                total_positions
+            };
+            let mut acc: i64 = 0;
+            for p in &self.out_planes[..plen] {
+                acc = acc * 2 + p.get(lane) as i64;
+            }
+            res.value[lane] =
+                acc as f64 / 2f64.powi(plen as i32) * 2f64.powi(2 * self.levels as i32);
+        }
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::end_unit::EndUnit;
+    use crate::arith::online_add::OnlineAdd;
+    use crate::arith::online_mul::OnlineMul;
+    use crate::arith::sop::SopPipeline;
+    use crate::prop_assert;
+    use crate::util::prop::{prop_check, Gen};
+
+    fn rand_fixed(g: &mut Gen, n: u32) -> Fixed {
+        let max = (1i64 << (n - 1)) - 1;
+        Fixed::new(g.i64(-max, max), n - 1)
+    }
+
+    fn rand_digit(g: &mut Gen) -> Digit {
+        g.i64(-1, 1) as i8
+    }
+
+    #[test]
+    fn digit_plane_roundtrip_and_broadcast() {
+        let mut p = DigitPlane::ZERO;
+        for lane in 0..LANES {
+            let d = (lane % 3) as i8 - 1; // cycles through -1, 0, +1
+            p.set(lane, d);
+            assert_eq!(p.get(lane), d);
+            assert!(p.is_valid());
+        }
+        for d in [-1i8, 0, 1] {
+            let b = DigitPlane::broadcast(d);
+            assert!(b.is_valid());
+            for lane in [0, 31, 63] {
+                assert_eq!(b.get(lane), d);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matches_to_sd_digits() {
+        prop_check("transpose_lanes == per-lane to_sd_digits", 200, |g| {
+            let n = g.usize(2, 16) as u32;
+            let frac = n - 1;
+            let lanes_n = *g.pick(&[1usize, 2, 17, 63, 64]);
+            let lanes: Vec<Fixed> = (0..lanes_n).map(|_| rand_fixed(g, n)).collect();
+            let mut planes = vec![DigitPlane::ZERO; frac as usize];
+            transpose_lanes(&lanes, frac, &mut planes);
+            for (lane, x) in lanes.iter().enumerate() {
+                let ds = to_sd_digits(*x);
+                for (j, &d) in ds.iter().enumerate() {
+                    prop_assert!(
+                        planes[j].get(lane) == d,
+                        "lane {lane} digit {j}: {} vs {d}",
+                        planes[j].get(lane)
+                    );
+                }
+            }
+            // Dead lanes are zero streams.
+            for p in &planes {
+                for lane in lanes_n..LANES {
+                    prop_assert!(p.get(lane) == 0, "dead lane {lane} non-zero");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The sliced adder is digit-for-digit identical to 64 scalar
+    /// adders on arbitrary (fully redundant) SD streams.
+    #[test]
+    fn sliced_add_matches_scalar_digit_for_digit() {
+        prop_check("sliced online add == 64 scalar adders", 300, |g| {
+            let len = g.usize(1, 30);
+            let xs: Vec<Vec<Digit>> =
+                (0..LANES).map(|_| (0..len).map(|_| rand_digit(g)).collect()).collect();
+            let ys: Vec<Vec<Digit>> =
+                (0..LANES).map(|_| (0..len).map(|_| rand_digit(g)).collect()).collect();
+            let mut scal: Vec<OnlineAdd> = (0..LANES).map(|_| OnlineAdd::new()).collect();
+            let mut sliced = SlicedOnlineAdd::new();
+            for j in 0..len {
+                let mut xp = DigitPlane::ZERO;
+                let mut yp = DigitPlane::ZERO;
+                for lane in 0..LANES {
+                    xp.set(lane, xs[lane][j]);
+                    yp.set(lane, ys[lane][j]);
+                }
+                let z = sliced.push(xp, yp);
+                for (lane, s) in scal.iter_mut().enumerate() {
+                    let want = s.push(xs[lane][j], ys[lane][j]);
+                    prop_assert!(
+                        z.get(lane) == want,
+                        "lane {lane} pos {j}: {} vs {want}",
+                        z.get(lane)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The sliced multiplier is digit-for-digit AND residual-for-
+    /// residual identical to 64 scalar units, for shared parallel
+    /// operands of every supported precision — including all-zero and
+    /// sign-boundary (±max) serial operands.
+    #[test]
+    fn sliced_mul_matches_scalar_digit_for_digit() {
+        prop_check("sliced online mul == 64 scalar muls", 120, |g| {
+            let n = g.usize(2, 16) as u32;
+            let frac = n - 1;
+            let max = (1i64 << frac) - 1;
+            let y = rand_fixed(g, n);
+            let mut xs: Vec<Fixed> = (0..LANES).map(|_| rand_fixed(g, n)).collect();
+            xs[0] = Fixed::zero(frac); // all-zero operand
+            xs[1] = Fixed::new(max, frac); // sign boundaries
+            xs[2] = Fixed::new(-max, frac);
+            let n_steps = frac as usize + g.usize(2, 8);
+            let mut scal: Vec<OnlineMul> = xs.iter().map(|_| OnlineMul::new(y)).collect();
+            let mut sliced = SlicedOnlineMul::new(y);
+            for j in 0..n_steps {
+                let mut xplane = DigitPlane::ZERO;
+                let ds: Vec<Digit> = (0..LANES)
+                    .map(|lane| {
+                        let d = to_sd_digits(xs[lane]).get(j).copied().unwrap_or(0);
+                        xplane.set(lane, d);
+                        d
+                    })
+                    .collect();
+                let out = sliced.step(xplane);
+                for (lane, s) in scal.iter_mut().enumerate() {
+                    let want = s.step(ds[lane]);
+                    match (out, want) {
+                        (None, None) => {}
+                        (Some(z), Some(w)) => {
+                            prop_assert!(
+                                z.get(lane) == w,
+                                "lane {lane} step {j}: {} vs {w} (y={:?})",
+                                z.get(lane),
+                                y
+                            );
+                        }
+                        _ => prop_assert!(false, "emission mismatch at step {j}"),
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Cross-check the bit-plane residual against an exact integer
+    /// replay of the scalar recurrence (the multiplier's entire state).
+    #[test]
+    fn sliced_mul_residual_tracks_scalar_recurrence() {
+        prop_check("sliced residual == scalar recurrence", 120, |g| {
+            let n = g.usize(2, 16) as u32;
+            let frac = n - 1;
+            let y = rand_fixed(g, n);
+            let xs: Vec<Vec<Digit>> = (0..LANES)
+                .map(|_| (0..frac as usize + 4).map(|_| rand_digit(g)).collect())
+                .collect();
+            let mut sliced = SlicedOnlineMul::new(y);
+            // Scalar replay of Algorithm 1 in plain integers.
+            let mut w_ref = [0i64; LANES];
+            for j in 0..frac as usize + 4 {
+                let mut xplane = DigitPlane::ZERO;
+                for (lane, s) in xs.iter().enumerate() {
+                    xplane.set(lane, s[j]);
+                }
+                sliced.step(xplane);
+                for (lane, s) in xs.iter().enumerate() {
+                    let v = 2 * w_ref[lane] + s[j] as i64 * y.q;
+                    w_ref[lane] = if j < DELTA_OLM as usize {
+                        v
+                    } else {
+                        let quarters = v >> frac;
+                        let z: i64 = if quarters >= 2 {
+                            1
+                        } else if quarters <= -2 {
+                            -1
+                        } else {
+                            0
+                        };
+                        v - (z << (frac + 2))
+                    };
+                }
+                for lane in [0usize, 7, 31, 63] {
+                    prop_assert!(
+                        sliced.lane_residual(lane) == w_ref[lane],
+                        "lane {lane} step {j}: residual {} vs {}",
+                        sliced.lane_residual(lane),
+                        w_ref[lane]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The sliced END unit decides on exactly the same cycle as 64
+    /// scalar units — including all-zero streams (never decides) and
+    /// sign-boundary streams (decides on the last digit).
+    #[test]
+    fn sliced_end_matches_scalar_cycles() {
+        prop_check("sliced END == 64 EndUnits", 300, |g| {
+            let len = g.usize(1, 24);
+            let mut streams: Vec<Vec<Digit>> = (0..LANES)
+                .map(|_| (0..len).map(|_| *g.pick(&[-1i8, 0, 0, 1])).collect())
+                .collect();
+            streams[0] = vec![0; len]; // all-zero: stays undetermined
+            streams[1] = vec![0; len]; // sign boundary: decides at the end
+            streams[1][len - 1] = 1;
+            streams[2] = vec![0; len];
+            streams[2][len - 1] = -1;
+            let mut scal: Vec<EndUnit> = (0..LANES).map(|_| EndUnit::new()).collect();
+            let mut sliced = SlicedEnd::new();
+            for j in 0..len {
+                let mut z = DigitPlane::ZERO;
+                for (lane, s) in streams.iter().enumerate() {
+                    z.set(lane, s[j]);
+                }
+                sliced.observe(z);
+                for (lane, s) in scal.iter_mut().enumerate() {
+                    s.observe(streams[lane][j]);
+                    prop_assert!(
+                        sliced.state(lane) == s.state(),
+                        "lane {lane} after digit {j}: {:?} vs {:?}",
+                        sliced.state(lane),
+                        s.state()
+                    );
+                }
+            }
+            for (lane, s) in scal.iter().enumerate() {
+                prop_assert!(
+                    sliced.decided_at(lane) == s.decided_at(),
+                    "lane {lane}: decided_at {:?} vs {:?}",
+                    sliced.decided_at(lane),
+                    s.decided_at()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// End-to-end: the sliced SOP pipeline reproduces the scalar
+    /// pipeline's END state, decision position, totals and value on
+    /// every lane — for full, ragged and single-lane groups, with and
+    /// without bias.
+    #[test]
+    fn sliced_pipeline_matches_scalar_per_lane() {
+        prop_check("sliced SOP pipeline == 64 scalar pipelines", 40, |g| {
+            let n = *g.pick(&[4u32, 8, 12]);
+            let frac = n - 1;
+            let m = g.usize(1, 10);
+            let n_out = (n + 4) as usize;
+            let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let bias = if g.bool() { Some(rand_fixed(g, n)) } else { None };
+            let lanes_n = *g.pick(&[1usize, 17, 63, 64]);
+            let active = if lanes_n == LANES {
+                u64::MAX
+            } else {
+                (1u64 << lanes_n) - 1
+            };
+            let windows: Vec<Vec<Fixed>> = (0..lanes_n)
+                .map(|_| (0..m).map(|_| rand_fixed(g, n)).collect())
+                .collect();
+
+            // Transpose [lane][operand] into per-operand digit planes.
+            let mut acts = vec![DigitPlane::ZERO; m * frac as usize];
+            for i in 0..m {
+                let ops: Vec<Fixed> = windows.iter().map(|w| w[i]).collect();
+                transpose_lanes(&ops, frac, &mut acts[i * frac as usize..(i + 1) * frac as usize]);
+            }
+
+            let mut sliced = SopSlicedPipeline::new(&weights, bias, n_out);
+            let res = sliced.run(&acts, frac, active);
+            let mut scalar = SopPipeline::new(&weights, bias, n_out);
+            for (lane, win) in windows.iter().enumerate() {
+                let want = scalar.run(win);
+                let got = res.lane(lane);
+                prop_assert!(
+                    got.state == want.state,
+                    "lane {lane}: state {:?} vs {:?}",
+                    got.state,
+                    want.state
+                );
+                prop_assert!(
+                    got.decided_at == want.decided_at,
+                    "lane {lane}: decided_at {} vs {}",
+                    got.decided_at,
+                    want.decided_at
+                );
+                prop_assert!(got.total_digits == want.total_digits, "totals differ");
+                prop_assert!(got.levels == want.levels, "levels differ");
+                prop_assert!(
+                    got.value.to_bits() == want.value.to_bits(),
+                    "lane {lane}: value {} vs {} (not bit-identical)",
+                    got.value,
+                    want.value
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// set_bias re-steers the broadcast bias lane exactly like a fresh
+    /// pipeline (the executor swaps the bias every tile).
+    #[test]
+    fn set_bias_matches_fresh_pipeline() {
+        let n = 8u32;
+        let frac = n - 1;
+        let w: Vec<Fixed> = (0..9)
+            .map(|i| Fixed::quantize(0.07 * i as f64 - 0.3, n))
+            .collect();
+        let windows: Vec<Vec<Fixed>> = (0..5)
+            .map(|l| {
+                (0..9)
+                    .map(|i| Fixed::quantize(0.3 - 0.06 * ((i + l) % 9) as f64, n))
+                    .collect()
+            })
+            .collect();
+        let mut acts = vec![DigitPlane::ZERO; 9 * frac as usize];
+        for i in 0..9 {
+            let ops: Vec<Fixed> = windows.iter().map(|w| w[i]).collect();
+            transpose_lanes(&ops, frac, &mut acts[i * frac as usize..(i + 1) * frac as usize]);
+        }
+        let active = (1u64 << windows.len()) - 1;
+        let b1 = Fixed::quantize(0.25, n);
+        let b2 = Fixed::quantize(-0.375, n);
+        let mut reused = SopSlicedPipeline::new(&w, Some(b1), 12);
+        let _ = reused.run(&acts, frac, active);
+        reused.set_bias(b2);
+        let got = reused.run(&acts, frac, active);
+        let fresh = SopSlicedPipeline::new(&w, Some(b2), 12).run(&acts, frac, active);
+        for lane in 0..windows.len() {
+            let (a, b) = (got.lane(lane), fresh.lane(lane));
+            assert_eq!(a.state, b.state);
+            assert_eq!(a.decided_at, b.decided_at);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+    }
+}

@@ -12,9 +12,10 @@
 //!    [`FusionExecutor::native`] executes every level of the pyramid
 //!    directly over host tensors through a pluggable
 //!    [`ComputeEngine`](crate::runtime::ComputeEngine) — the vectorized
-//!    [`EngineKind::F32`] reference or the digit-serial
-//!    [`EngineKind::Sop`] SOP+END datapath, which records live per-level
-//!    END statistics while the fused stack runs.
+//!    [`EngineKind::F32`] reference, the digit-serial
+//!    [`EngineKind::Sop`] SOP+END datapath, or its bit-sliced 64-lane
+//!    twin [`EngineKind::SopSliced`]; the SOP engines record live
+//!    per-level END statistics while the fused stack runs.
 //!
 //! For the registry-backed sources, the executor rebuilds the geometry
 //! with the Rust Algorithm 3/4 and cross-checks it against the manifest

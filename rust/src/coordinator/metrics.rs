@@ -15,14 +15,24 @@ use std::time::{Duration, Instant};
 
 use crate::runtime::engine::EndCounters;
 
-/// Latency percentile over an already-sorted sample (nearest-rank with
-/// linear index rounding; `p` in percent).
+/// Latency percentile over an already-sorted sample (standard
+/// nearest-rank definition: the smallest sample covering `p`% of the
+/// distribution; `p` in percent).
+///
+/// Edge cases are explicit rather than degenerate: an **empty** sample
+/// returns `NaN` — there is no latency to report, and the previous
+/// `0.0` rendered as a fake "0 µs p50" in dashboards and bench tables
+/// (the snapshot `Display` prints `n/a` for it). A **single** sample is
+/// every percentile of itself. With the former index-rounding formula,
+/// those two windows produced misleading zeros / biased upper-ranks;
+/// `benches/fused_native.rs`-style metrics rows depend on these being
+/// trustworthy.
 pub fn percentile(sorted_us: &[f64], p: f64) -> f64 {
     if sorted_us.is_empty() {
-        return 0.0;
+        return f64::NAN;
     }
-    let idx = ((sorted_us.len() - 1) as f64 * p / 100.0).round() as usize;
-    sorted_us[idx]
+    let rank = (p / 100.0 * sorted_us.len() as f64).ceil() as usize;
+    sorted_us[rank.clamp(1, sorted_us.len()) - 1]
 }
 
 /// Per-worker counters (owned by [`Metrics`], one slot per worker).
@@ -207,11 +217,14 @@ pub struct MetricsSnapshot {
     pub queue_depth: usize,
     /// Highest queue depth observed.
     pub queue_peak: usize,
-    /// Median end-to-end latency over the rolling window, µs.
+    /// Median end-to-end latency over the rolling window, µs (`NaN`
+    /// when no latency has been recorded — see [`percentile`]).
     pub p50_us: f64,
-    /// 95th-percentile latency over the rolling window, µs.
+    /// 95th-percentile latency over the rolling window, µs (`NaN` when
+    /// the window is empty).
     pub p95_us: f64,
-    /// 99th-percentile latency over the rolling window, µs.
+    /// 99th-percentile latency over the rolling window, µs (`NaN` when
+    /// the window is empty).
     pub p99_us: f64,
     /// Mean requests per executed batch, over every drained batch
     /// (served and errored requests alike).
@@ -240,10 +253,23 @@ impl std::fmt::Display for MetricsSnapshot {
             self.stacked_batches,
             self.error_requests
         )?;
+        // NaN percentiles mean "no latencies recorded yet" — print n/a
+        // instead of a misleading number.
+        let us = |v: f64| {
+            if v.is_nan() {
+                "n/a".to_string()
+            } else {
+                format!("{v:.0}")
+            }
+        };
         writeln!(
             f,
-            "latency p50/p95/p99: {:.0} / {:.0} / {:.0} µs  queue depth {} (peak {})",
-            self.p50_us, self.p95_us, self.p99_us, self.queue_depth, self.queue_peak
+            "latency p50/p95/p99: {} / {} / {} µs  queue depth {} (peak {})",
+            us(self.p50_us),
+            us(self.p95_us),
+            us(self.p99_us),
+            self.queue_depth,
+            self.queue_peak
         )?;
         write!(f, "batch sizes:")?;
         for (size, count) in &self.batch_hist {
@@ -283,8 +309,45 @@ mod tests {
         let v = vec![1.0, 2.0, 3.0, 4.0, 5.0];
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 95.0), 5.0);
         assert_eq!(percentile(&v, 100.0), 5.0);
-        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    /// Regression: the 0- and 1-sample windows used to be degenerate
+    /// (empty → a fake 0 µs for every percentile; the index-rounding
+    /// formula biased small windows). Empty now reports NaN ("no data"),
+    /// one sample is every percentile of itself, and two samples split
+    /// p50 (lower median) from p99 (max).
+    #[test]
+    fn percentile_edge_cases_zero_one_two_samples() {
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert!(percentile(&[], p).is_nan(), "empty p{p} must be NaN");
+        }
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0, "single-sample p{p}");
+        }
+        let two = [10.0, 90.0];
+        assert_eq!(percentile(&two, 50.0), 10.0, "lower median of 2");
+        assert_eq!(percentile(&two, 99.0), 90.0);
+        assert_eq!(percentile(&two, 100.0), 90.0);
+    }
+
+    /// Regression: a snapshot with no recorded latencies renders "n/a"
+    /// rather than a misleading 0 µs row, and one latency makes every
+    /// percentile equal to it.
+    #[test]
+    fn snapshot_latency_edge_cases() {
+        let m = Metrics::new(1, 16);
+        let s = m.snapshot();
+        assert!(s.p50_us.is_nan() && s.p95_us.is_nan() && s.p99_us.is_nan());
+        let text = format!("{s}");
+        assert!(text.contains("n/a / n/a / n/a"), "{text}");
+        m.on_latency(Duration::from_micros(250));
+        let s = m.snapshot();
+        assert_eq!(s.p50_us, 250.0);
+        assert_eq!(s.p95_us, 250.0);
+        assert_eq!(s.p99_us, 250.0);
+        assert!(format!("{s}").contains("250 / 250 / 250"));
     }
 
     #[test]

@@ -11,7 +11,8 @@
 //! [`ClassifierHead`] turns the final feature map into logits — no PJRT,
 //! no AOT artifacts, no Python anywhere on the path.
 //!
-//! With [`EngineKind::Sop`] the pipeline additionally accumulates the
+//! With [`EngineKind::Sop`] or the bit-sliced
+//! [`EngineKind::SopSliced`] the pipeline additionally accumulates the
 //! live per-conv-level END statistics of every executor it owns,
 //! readable via [`NativePipeline::end_counters`] and surfaced through
 //! the serving layer's
@@ -153,9 +154,10 @@ impl NativePipeline {
         if net.convs.is_empty() {
             bail!("{}: network has no conv levels", net.name);
         }
-        if let EngineKind::Sop { n_bits } = kind {
-            // SopEngine::new asserts this range; catching it here turns
-            // a per-request worker panic into a construction error.
+        if let EngineKind::Sop { n_bits } | EngineKind::SopSliced { n_bits } = kind {
+            // The SOP engines assert this range at construction;
+            // catching it here turns a per-request worker panic into a
+            // construction error.
             if !(2..=24).contains(&n_bits) {
                 bail!("{}: SOP precision n_bits = {n_bits} outside 2..=24", net.name);
             }
@@ -386,9 +388,10 @@ impl NativePipeline {
 
     /// Live per-conv-level END statistics accumulated across every
     /// inference on this pipeline, concatenated over the stages in conv
-    /// order — non-empty only for [`EngineKind::Sop`], and only after
-    /// at least one inference. Projection shortcuts run on the exact
-    /// f32 path and contribute no counters.
+    /// order — non-empty only for [`EngineKind::Sop`] /
+    /// [`EngineKind::SopSliced`], and only after at least one
+    /// inference. Projection shortcuts run on the exact f32 path and
+    /// contribute no counters.
     pub fn end_counters(&self) -> Vec<EndCounters> {
         self.stages
             .iter()

@@ -143,7 +143,8 @@ impl InferenceService {
     /// or any custom [`Network`]) — the native equivalent of
     /// [`InferenceService::start`]. Weights are seeded synthetic
     /// parameters; one shared [`NativePipeline`] serves every worker,
-    /// and with [`EngineKind::Sop`] the metrics snapshots carry live
+    /// and with [`EngineKind::Sop`] or the bit-sliced
+    /// [`EngineKind::SopSliced`] the metrics snapshots carry live
     /// per-level END statistics.
     pub fn start_native(
         net: &Network,

@@ -58,7 +58,7 @@ fn print_help() {
         "usefuse — USEFUSE fused-layer CNN accelerator reproduction\n\n\
          commands:\n\
          \x20 plan    plan a fusion pyramid (Algorithms 3 + 4)\n\
-         \x20 report  regenerate a paper table/figure (table1..5, fig10..14, zoo, all)\n\
+         \x20 report  regenerate a paper table/figure (table1..5, fig10..14, zoo, engines, all)\n\
          \x20 verify  run tile-by-tile fusion via PJRT and check vs golden\n\
          \x20 serve   run the batched serving demo (--native <net> needs no artifacts)\n\
          \x20 end     END statistics for a fused group's first conv layer\n\
@@ -132,7 +132,7 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
 
 fn cmd_report(argv: &[String]) -> Result<()> {
     let specs = [
-        OptSpec { name: "what", help: "table1..table5, fig10..fig14, zoo, all", takes_value: true, default: Some("all") },
+        OptSpec { name: "what", help: "table1..table5, fig10..fig14, zoo, engines, all", takes_value: true, default: Some("all") },
         OptSpec { name: "samples", help: "END samples per filter (figs 12-14)", takes_value: true, default: Some("150") },
     ];
     let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
@@ -160,6 +160,10 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     if want("zoo") {
         // Artifact-free end-to-end zoo summary (native SOP pipelines).
         println!("{}", report::figures::table_zoo_native(8, 0x200)?.1.render());
+    }
+    if want("engines") {
+        // Three-way f32 / sop / sop-sliced fused-pyramid throughput.
+        println!("{}", report::figures::table_engines_native(8, 0xE6E)?.1.render());
     }
     if want("fig10") {
         println!("{}", report::figures::fig10(&m).1.render());
@@ -260,7 +264,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "native", help: "zoo network for artifact-free serving (lenet5/alexnet/vgg16/resnet18)", takes_value: true, default: None },
         OptSpec { name: "program", help: "artifact program (when not --native)", takes_value: true, default: Some("lenet_infer") },
-        OptSpec { name: "engine", help: "native engine: f32 or sop", takes_value: true, default: Some("f32") },
+        OptSpec { name: "engine", help: "native engine: f32, sop or sop-sliced", takes_value: true, default: Some("f32") },
         OptSpec { name: "bits", help: "SOP operand precision", takes_value: true, default: Some("8") },
         OptSpec { name: "requests", help: "demo requests to push", takes_value: true, default: Some("16") },
         OptSpec { name: "workers", help: "worker threads", takes_value: true, default: Some("2") },
@@ -297,7 +301,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 "sop" => EngineKind::Sop {
                     n_bits: args.get_usize("bits").map_err(|e| anyhow!(e))?.unwrap() as u32,
                 },
-                other => bail!("unknown engine '{other}' (f32 or sop)"),
+                "sop-sliced" => EngineKind::SopSliced {
+                    n_bits: args.get_usize("bits").map_err(|e| anyhow!(e))?.unwrap() as u32,
+                },
+                other => bail!("unknown engine '{other}' (f32, sop or sop-sliced)"),
             };
             let seed = args.get_usize("seed").map_err(|e| anyhow!(e))?.unwrap() as u64;
             println!(

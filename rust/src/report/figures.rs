@@ -426,6 +426,96 @@ pub fn fig14_native(n_bits: u32, seed: u64) -> Result<(Vec<Fig14Row>, Table)> {
     Ok((rows, t))
 }
 
+/// One engine's row in the native three-way throughput comparison
+/// ([`table_engines_native`]).
+#[derive(Clone, Debug)]
+pub struct EngineThroughputRow {
+    /// Engine label ("f32" / "sop" / "sop-sliced").
+    pub engine: String,
+    /// Pyramid movements executed by one fused run.
+    pub tiles: usize,
+    /// Mean wall-clock microseconds per tile movement.
+    pub us_per_tile: f64,
+    /// Max relative error of the tile-assembled output vs the exact
+    /// f32 golden.
+    pub rel_err: f32,
+    /// SOP-weighted END detection rate across levels (0 for f32).
+    pub detection: f64,
+    /// Total SOPs executed (0 for f32).
+    pub sops: u64,
+}
+
+/// **Three-way native engine throughput**: the fused LeNet pyramid
+/// executed end-to-end through every native engine — vectorized f32,
+/// scalar digit-serial SOP and the bit-sliced 64-lane SOP — with one
+/// timed run each, the verify residual against the exact f32 golden,
+/// and the live END statistics of the digit-serial engines. The last
+/// table column reports each engine's speedup over the scalar SOP
+/// engine — the bit-slicing lever `benches/fused_native.rs` measures
+/// with proper repetition (this table is a single-run snapshot).
+pub fn table_engines_native(
+    n_bits: u32,
+    seed: u64,
+) -> Result<(Vec<EngineThroughputRow>, Table)> {
+    let net = by_name("lenet5").expect("zoo has lenet5");
+    let specs = net.paper_fusion()[0].clone();
+    let input = random_input(&specs[0], seed ^ 0x5EED);
+    let mut rows = Vec::new();
+    for kind in [
+        EngineKind::F32,
+        EngineKind::Sop { n_bits },
+        EngineKind::SopSliced { n_bits },
+    ] {
+        let (weights, biases) = random_weights(&specs, seed);
+        let exec = FusionExecutor::native("lenet5", &specs, 1, weights, biases, kind)?;
+        let (_, stats) = exec.run(&input)?;
+        let rel_err = exec.verify(&input)?;
+        let counters = exec.end_counters();
+        let mut total = EndCounters::default();
+        for c in &counters {
+            total.merge(c);
+        }
+        rows.push(EngineThroughputRow {
+            engine: kind.label().to_string(),
+            tiles: stats.tiles_executed,
+            us_per_tile: stats.wall.as_secs_f64() * 1e6 / stats.tiles_executed.max(1) as f64,
+            rel_err,
+            detection: total.detection_rate(),
+            sops: total.sops,
+        });
+    }
+    let sop_us = rows
+        .iter()
+        .find(|r| r.engine == "sop")
+        .map(|r| r.us_per_tile)
+        .unwrap_or(0.0);
+    let mut t = Table::new(
+        "Native engines — fused LeNet pyramid, f32 vs scalar SOP vs bit-sliced SOP \
+         (synthetic weights)",
+    )
+    .header(&[
+        "Engine",
+        "Tiles",
+        "µs/tile",
+        "Verify rel err",
+        "SOPs",
+        "Negative %",
+        "Speedup vs sop",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.engine.clone(),
+            r.tiles.to_string(),
+            format!("{:.1}", r.us_per_tile),
+            format!("{:.2e}", r.rel_err),
+            r.sops.to_string(),
+            format!("{:.1}", 100.0 * r.detection),
+            format!("{:.2}×", sop_us / r.us_per_tile.max(1e-9)),
+        ]);
+    }
+    Ok((rows, t))
+}
+
 /// One network's row in the native zoo summary ([`table_zoo_native`]).
 #[derive(Clone, Debug)]
 pub struct ZooNativeRow {

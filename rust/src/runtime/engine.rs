@@ -2,12 +2,12 @@
 //! execution of a [`FusedConvSpec`] (conv → bias → ReLU → pool) directly
 //! over host [`Tensor`]s, with no AOT artifacts and no PJRT.
 //!
-//! Two implementations live behind the [`ComputeEngine`] trait:
+//! Three implementations live behind the [`ComputeEngine`] trait:
 //!
 //! - [`F32Engine`] — a plain f32 reference path (filter-major inner
 //!   loops over contiguous memory, so the compiler auto-vectorizes it);
 //!   this is both the fast host backend and the verification oracle for
-//!   the bit-level engine.
+//!   the bit-level engines.
 //! - [`SopEngine`] — the paper's datapath: every output pixel of every
 //!   filter is one digit-serial sum-of-products driven through a reused
 //!   [`SopPipeline`] with the END unit attached (§3.1/§3.2). The engine
@@ -15,6 +15,11 @@
 //!   the fused stack executes — the measurement the paper's Figs. 12–14
 //!   are built from — instead of re-sampling windows from activation
 //!   dumps after the fact.
+//! - [`SopSlicedEngine`] — the same datapath **bit-sliced 64 wide**
+//!   ([`crate::arith::sliced`]): output pixels are gathered into lane
+//!   groups of 64 per filter and one pass of the digit loop advances
+//!   all of them, with bit-identical outputs and [`EndCounters`] to the
+//!   scalar engine (pinned by `tests/engine_equivalence.rs`).
 //!
 //! Engines are deliberately geometry-blind: they evaluate whatever tile
 //! they are handed. Tile scheduling, halo masking between levels, and
@@ -26,7 +31,10 @@ use anyhow::{bail, Result};
 use super::tensor::Tensor;
 use crate::arith::digit::Fixed;
 use crate::arith::end_unit::EndState;
-use crate::arith::sop::SopPipeline;
+use crate::arith::sliced::{
+    transpose_lanes, DigitPlane, SlicedSopResult, SopSlicedPipeline, LANES,
+};
+use crate::arith::sop::{SopEndResult, SopPipeline};
 use crate::geometry::FusedConvSpec;
 
 /// Which native engine to run, with its configuration. `Copy` so plans
@@ -40,6 +48,13 @@ pub enum EngineKind {
         /// Operand precision in bits (1 sign + `n_bits - 1` fraction).
         n_bits: u32,
     },
+    /// Bit-sliced 64-lane SOP + END engine at `n_bits` operand
+    /// precision — bit-identical to [`EngineKind::Sop`], one digit step
+    /// advances 64 output pixels.
+    SopSliced {
+        /// Operand precision in bits (1 sign + `n_bits - 1` fraction).
+        n_bits: u32,
+    },
 }
 
 impl EngineKind {
@@ -49,14 +64,16 @@ impl EngineKind {
         match self {
             EngineKind::F32 => Box::new(F32Engine),
             EngineKind::Sop { n_bits } => Box::new(SopEngine::new(n_bits)),
+            EngineKind::SopSliced { n_bits } => Box::new(SopSlicedEngine::new(n_bits)),
         }
     }
 
-    /// Short display label ("f32" / "sop").
+    /// Short display label ("f32" / "sop" / "sop-sliced").
     pub fn label(self) -> &'static str {
         match self {
             EngineKind::F32 => "f32",
             EngineKind::Sop { .. } => "sop",
+            EngineKind::SopSliced { .. } => "sop-sliced",
         }
     }
 }
@@ -268,6 +285,54 @@ impl ComputeEngine for F32Engine {
     }
 }
 
+/// Quantize filter `f`'s `(K, K, N)` weight window into `wq` with the
+/// shared per-level scale `inv = 1 / w_scale` at `n_bits` precision.
+/// One expression, shared by the scalar and sliced engines — the bit
+/// equality of the two datapaths starts at identical operands.
+fn quantize_filter(
+    wq: &mut [Fixed],
+    weights: &Tensor,
+    spec: &FusedConvSpec,
+    f: usize,
+    inv: f32,
+    n_bits: u32,
+) {
+    let (k, n, m) = (spec.k, spec.n_in, spec.m_out);
+    for dy in 0..k {
+        for dx in 0..k {
+            for c in 0..n {
+                let v = weights.data[((dy * k + dx) * n + c) * m + f];
+                wq[(dy * k + dx) * n + c] = Fixed::quantize((v * inv) as f64 * 0.999, n_bits);
+            }
+        }
+    }
+}
+
+/// Apply one SOP result to an output cell and the level's counters —
+/// the single accounting path shared by the scalar and sliced engines
+/// (output bits and counter sums must match exactly between them).
+#[inline]
+fn record_sop(ctr: &mut EndCounters, out: &mut f32, r: &SopEndResult, dequant: f64) {
+    ctr.sops += 1;
+    ctr.executed_digits += r.executed_digits() as u64;
+    ctr.total_digits += r.total_digits as u64;
+    ctr.exec_fraction_sum += r.digit_exec_fraction();
+    *out = match r.state {
+        EndState::Terminate => {
+            ctr.terminated += 1;
+            0.0 // END fired: ReLU output is provably 0
+        }
+        EndState::SurelyPositive => {
+            ctr.positive += 1;
+            (r.value * dequant) as f32
+        }
+        EndState::Undetermined => {
+            ctr.undetermined += 1;
+            ((r.value * dequant) as f32).max(0.0)
+        }
+    };
+}
+
 /// Per-level compiled state of the [`SopEngine`]: the filter weights
 /// quantized once, and one reusable [`SopPipeline`] per output filter
 /// (zero allocation per SOP on the hot path).
@@ -331,15 +396,7 @@ impl SopEngine {
         let mut pipes = Vec::with_capacity(m);
         let mut wq = vec![Fixed::zero(self.n_bits - 1); win];
         for f in 0..m {
-            for dy in 0..k {
-                for dx in 0..k {
-                    for c in 0..n {
-                        let v = weights.data[((dy * k + dx) * n + c) * m + f];
-                        wq[(dy * k + dx) * n + c] =
-                            Fixed::quantize((v * inv) as f64 * 0.999, self.n_bits);
-                    }
-                }
-            }
+            quantize_filter(&mut wq, weights, spec, f, inv, self.n_bits);
             // Bias operand present from the start; its value is set per
             // tile (the activation scale changes tile to tile).
             pipes.push(SopPipeline::new(
@@ -408,26 +465,203 @@ impl ComputeEngine for SopEngine {
                 let base = (oy * out_w + ox) * m;
                 for (f, pipe) in st.pipes.iter_mut().enumerate() {
                     let r = pipe.run(&self.window);
-                    ctr.sops += 1;
-                    ctr.executed_digits += r.executed_digits() as u64;
-                    ctr.total_digits += r.total_digits as u64;
-                    ctr.exec_fraction_sum += r.digit_exec_fraction();
-                    act.data[base + f] = match r.state {
-                        EndState::Terminate => {
-                            ctr.terminated += 1;
-                            0.0 // END fired: ReLU output is provably 0
-                        }
-                        EndState::SurelyPositive => {
-                            ctr.positive += 1;
-                            (r.value * dequant) as f32
-                        }
-                        EndState::Undetermined => {
-                            ctr.undetermined += 1;
-                            ((r.value * dequant) as f32).max(0.0)
-                        }
-                    };
+                    record_sop(ctr, &mut act.data[base + f], &r, dequant);
                 }
             }
+        }
+        match spec.pool {
+            Some(p) => act.maxpool(p.k, p.s),
+            None => Ok(act),
+        }
+    }
+
+    fn take_end_counters(&mut self) -> Vec<EndCounters> {
+        std::mem::take(&mut self.counters)
+    }
+}
+
+/// Per-level compiled state of the [`SopSlicedEngine`]: weights
+/// quantized once (identically to the scalar engine), one reusable
+/// 64-lane [`SopSlicedPipeline`] per output filter.
+struct SopSlicedLevel {
+    w_scale: f32,
+    pipes: Vec<SopSlicedPipeline>,
+}
+
+/// The bit-sliced 64-lane MSDF engine: the same quantization, the same
+/// online-multiplier/adder-tree/END recurrences and the same per-SOP
+/// accounting as [`SopEngine`], but output pixels are gathered into
+/// lane groups of up to 64 per filter and every digit step advances
+/// the whole group as word-parallel boolean operations over
+/// [`DigitPlane`]s ([`crate::arith::sliced`]).
+///
+/// Outputs and [`EndCounters`] are **bit-identical** to the scalar
+/// engine: identical operand quantization (shared `quantize_filter`
+/// path), identical digit streams (the sliced units are digit-exact
+/// twins), identical value/output arithmetic (shared `record_sop`
+/// path) and identical f64 counter-accumulation order (pixel-major,
+/// filter-inner — the group's results are buffered so accounting
+/// replays in scalar order). `tests/engine_equivalence.rs` pins all of
+/// this down.
+///
+/// Ragged lane tails (a level whose pixel count is not a multiple of
+/// 64) run with the dead lanes fed all-zero digit streams and masked
+/// out of every result.
+pub struct SopSlicedEngine {
+    n_bits: u32,
+    n_out_digits: usize,
+    levels: Vec<Option<SopSlicedLevel>>,
+    counters: Vec<EndCounters>,
+    /// Reusable quantized windows of one lane group: window element `i`
+    /// of lane `l` at `[i * LANES + l]`.
+    lane_windows: Vec<Fixed>,
+    /// Reusable transposed digit planes: operand `i`, digit `j` at
+    /// `[i * frac + j]`.
+    planes: Vec<DigitPlane>,
+    /// Reusable per-filter results of the current lane group (buffered
+    /// so counters accumulate in the scalar engine's order).
+    results: Vec<SlicedSopResult>,
+}
+
+impl SopSlicedEngine {
+    /// Engine with `n_bits` operand precision (1 sign + `n_bits - 1`
+    /// fraction bits), matching [`SopEngine::new`].
+    pub fn new(n_bits: u32) -> SopSlicedEngine {
+        assert!((2..=24).contains(&n_bits), "n_bits out of range");
+        SopSlicedEngine {
+            n_bits,
+            // Same result-digit convention as the scalar engine.
+            n_out_digits: (n_bits + 4) as usize,
+            levels: Vec::new(),
+            counters: Vec::new(),
+            lane_windows: Vec::new(),
+            planes: Vec::new(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Build (once) the quantized per-filter 64-lane pipelines for
+    /// `level` — operand-identical to [`SopEngine`]'s compilation.
+    fn compile_level(&mut self, level: usize, spec: &FusedConvSpec, weights: &Tensor) {
+        if self.levels.len() <= level {
+            self.levels.resize_with(level + 1, || None);
+        }
+        if self.counters.len() <= level {
+            self.counters.resize(level + 1, EndCounters::default());
+        }
+        if self.levels[level].is_some() {
+            return;
+        }
+        let (k, n, m) = (spec.k, spec.n_in, spec.m_out);
+        let w_scale = weights.max_abs().max(1e-12);
+        let inv = 1.0 / w_scale;
+        let win = k * k * n;
+        let mut pipes = Vec::with_capacity(m);
+        let mut wq = vec![Fixed::zero(self.n_bits - 1); win];
+        for f in 0..m {
+            quantize_filter(&mut wq, weights, spec, f, inv, self.n_bits);
+            pipes.push(SopSlicedPipeline::new(
+                &wq,
+                Some(Fixed::zero(self.n_bits - 1)),
+                self.n_out_digits,
+            ));
+        }
+        self.levels[level] = Some(SopSlicedLevel { w_scale, pipes });
+    }
+}
+
+impl ComputeEngine for SopSlicedEngine {
+    fn name(&self) -> &'static str {
+        "sop-sliced"
+    }
+
+    fn run_level(
+        &mut self,
+        level: usize,
+        spec: &FusedConvSpec,
+        input: &Tensor,
+        weights: &Tensor,
+        bias: &[f32],
+    ) -> Result<Tensor> {
+        let (h, w) = check_level_args(spec, input, weights, bias)?;
+        self.compile_level(level, spec, weights);
+        let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
+        let nb = self.n_bits;
+        let frac = (nb - 1) as usize;
+        let st = self.levels[level].as_mut().expect("compiled above");
+        let ctr = &mut self.counters[level];
+
+        // Per-tile quantization scales — expression-identical to the
+        // scalar engine (same floats in, same Fixed operands out).
+        let max_b = bias.iter().fold(0.0f32, |mb, b| mb.max(b.abs()));
+        let act_scale = input.max_abs().max(max_b / st.w_scale).max(1e-12);
+        let dequant = act_scale as f64 * st.w_scale as f64;
+        let inv_a = 1.0 / act_scale;
+        for (pipe, &b) in st.pipes.iter_mut().zip(bias) {
+            pipe.set_bias(Fixed::quantize(
+                (b / (act_scale * st.w_scale)) as f64 * 0.999,
+                nb,
+            ));
+        }
+
+        let out_h = (h - k) / s + 1;
+        let out_w = (w - k) / s + 1;
+        let pixels = out_h * out_w;
+        let win = k * k * n;
+        let mut act = Tensor::zeros(vec![out_h, out_w, m]);
+        self.lane_windows.resize(win * LANES, Fixed::zero(nb - 1));
+        self.planes.resize(win * frac, DigitPlane::ZERO);
+        self.results.resize_with(m, SlicedSopResult::empty);
+
+        let mut start = 0usize;
+        while start < pixels {
+            // Gather the next ≤64 output pixels (row-major, the scalar
+            // engine's pixel order) into the lane-group buffers.
+            let lanes_n = LANES.min(pixels - start);
+            let active = if lanes_n == LANES {
+                u64::MAX
+            } else {
+                (1u64 << lanes_n) - 1
+            };
+            for lane in 0..lanes_n {
+                let p = start + lane;
+                let (oy, ox) = (p / out_w, p % out_w);
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let src = ((oy * s + dy) * w + (ox * s + dx)) * n;
+                        for c in 0..n {
+                            self.lane_windows[((dy * k + dx) * n + c) * LANES + lane] =
+                                Fixed::quantize(
+                                    (input.data[src + c] * inv_a) as f64 * 0.999,
+                                    nb,
+                                );
+                        }
+                    }
+                }
+            }
+            for i in 0..win {
+                transpose_lanes(
+                    &self.lane_windows[i * LANES..i * LANES + lanes_n],
+                    frac as u32,
+                    &mut self.planes[i * frac..(i + 1) * frac],
+                );
+            }
+            // One 64-wide run per filter; all filters share the group's
+            // transposed windows.
+            for (f, pipe) in st.pipes.iter_mut().enumerate() {
+                self.results[f] = pipe.run(&self.planes, frac as u32, active);
+            }
+            // Replay the accounting in the scalar engine's order
+            // (pixel-major, filter-inner) so the f64 counter sums are
+            // bit-identical to `SopEngine`.
+            for lane in 0..lanes_n {
+                let base = (start + lane) * m;
+                for (f, res) in self.results.iter().enumerate() {
+                    let r = res.lane(lane);
+                    record_sop(ctr, &mut act.data[base + f], &r, dequant);
+                }
+            }
+            start += lanes_n;
         }
         match spec.pool {
             Some(p) => act.maxpool(p.k, p.s),
@@ -592,6 +826,31 @@ mod tests {
         assert_eq!(z.undetermined_rate(), 0.0);
         assert_eq!(z.executed_digit_fraction(), 1.0);
         assert_eq!(z.mean_exec_fraction(), 1.0);
+    }
+
+    /// The bit-sliced engine is bit-identical to the scalar SOP engine
+    /// on one level: same output bits, same `EndCounters` — including a
+    /// ragged lane tail (49 pixels) and a full group (64 pixels).
+    #[test]
+    fn sliced_engine_bit_identical_to_scalar() {
+        for (dim, n_bits) in [(9usize, 8u32), (10, 8), (9, 12)] {
+            let mut rng = Rng::new(21);
+            let sp = spec(3, 1, 2, 3, Some((2, 2)));
+            let input = random_tensor(vec![dim, dim, 2], &mut rng, 1.0).relu();
+            let weights = random_tensor(vec![3, 3, 2, 3], &mut rng, 0.3);
+            let bias = vec![0.03, -0.07, 0.01];
+            let mut scal = SopEngine::new(n_bits);
+            let mut sliced = SopSlicedEngine::new(n_bits);
+            let a = scal.run_level(0, &sp, &input, &weights, &bias).unwrap();
+            let b = sliced.run_level(0, &sp, &input, &weights, &bias).unwrap();
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.data, b.data, "dim {dim} n_bits {n_bits}");
+            assert_eq!(
+                scal.take_end_counters(),
+                sliced.take_end_counters(),
+                "dim {dim} n_bits {n_bits}"
+            );
+        }
     }
 
     /// All-negative pre-activations terminate (and produce exact zeros).

@@ -1,0 +1,217 @@
+//! **Cross-engine differential harness**: the bit-sliced 64-lane SOP
+//! engine must be *bit-identical* — outputs and per-level
+//! [`EndCounters`] alike, not approximately equal — to the scalar
+//! digit-serial `SopEngine` it parallelizes. This is the acceptance
+//! gate of the sliced datapath:
+//!
+//! - randomized fused tiles over the conv levels of all four zoo
+//!   miniatures at n_bits ∈ {8, 12, 16};
+//! - ragged lane tails of 1, 63, 64 and 65 output pixels (the masking
+//!   boundary cases of the 64-wide grouping);
+//! - whole fused pyramids (serial and parallel movement execution);
+//! - whole networks end-to-end through `NativePipeline` (chained
+//!   pyramids, shortcuts, classifier head).
+
+use usefuse::coordinator::{FusionExecutor, NativePipeline};
+use usefuse::geometry::FusedConvSpec;
+use usefuse::nets;
+use usefuse::runtime::engine::{ComputeEngine, EndCounters, EngineKind};
+use usefuse::runtime::{SopEngine, SopSlicedEngine, Tensor};
+use usefuse::util::rng::Rng;
+
+/// Random non-negative activation tile of the given shape (post-ReLU
+/// statistics, like real inter-level maps).
+fn random_tile(shape: Vec<usize>, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| (rng.normal() as f32).max(0.0)).collect())
+        .expect("shape matches data")
+}
+
+/// Random filter tensor + bias for a spec (zero-mean weights, small
+/// biases — the regime where END fires on a real fraction of SOPs).
+fn random_params(spec: &FusedConvSpec, seed: u64) -> (Tensor, Vec<f32>) {
+    let mut rng = Rng::new(seed ^ 0xF11);
+    let n = spec.k * spec.k * spec.n_in * spec.m_out;
+    let scale = 1.0 / ((spec.k * spec.k * spec.n_in) as f32).sqrt();
+    let w = Tensor::new(
+        vec![spec.k, spec.k, spec.n_in, spec.m_out],
+        (0..n).map(|_| rng.normal() as f32 * scale).collect(),
+    )
+    .expect("shape matches data");
+    let b = (0..spec.m_out).map(|_| (rng.f32() - 0.5) * 0.1).collect();
+    (w, b)
+}
+
+/// Run one level through both engines and require bit equality of the
+/// output tensor and the drained `EndCounters`.
+fn assert_level_equivalent(spec: &FusedConvSpec, input: &Tensor, n_bits: u32, tag: &str) {
+    let (weights, bias) = random_params(spec, n_bits as u64 ^ 0xC0DE);
+    let mut scalar = SopEngine::new(n_bits);
+    let mut sliced = SopSlicedEngine::new(n_bits);
+    let a = scalar
+        .run_level(0, spec, input, &weights, &bias)
+        .unwrap_or_else(|e| panic!("{tag}: scalar engine failed: {e}"));
+    let b = sliced
+        .run_level(0, spec, input, &weights, &bias)
+        .unwrap_or_else(|e| panic!("{tag}: sliced engine failed: {e}"));
+    assert_eq!(a.shape, b.shape, "{tag}: shape");
+    assert_eq!(a.data, b.data, "{tag}: outputs not bit-identical");
+    let (ca, cb) = (scalar.take_end_counters(), sliced.take_end_counters());
+    assert_eq!(ca, cb, "{tag}: EndCounters differ");
+    assert_eq!(ca.len(), 1, "{tag}: one level, one counter");
+    assert!(ca[0].sops > 0, "{tag}: no SOPs executed");
+}
+
+/// A tile input sized so the conv output of `spec` has exactly
+/// `out_h × out_w` pixels (in padded coordinates, pad already applied).
+fn tile_for(spec: &FusedConvSpec, out_h: usize, out_w: usize, seed: u64) -> Tensor {
+    let h = (out_h - 1) * spec.s + spec.k;
+    let w = (out_w - 1) * spec.s + spec.k;
+    random_tile(vec![h, w, spec.n_in], seed)
+}
+
+/// Ragged lane tails: pixel counts of 1 (single lane), 63 (one short
+/// group), 64 (exactly one full group) and 65 (full group + 1-lane
+/// tail), each at n ∈ {8, 12, 16}.
+#[test]
+fn ragged_lane_tails_are_bit_identical() {
+    let spec = FusedConvSpec {
+        name: "ragged".into(),
+        k: 3,
+        s: 1,
+        pad: 0,
+        pool: None,
+        n_in: 2,
+        m_out: 3,
+        ifm: 8,
+    };
+    for &(out_h, out_w) in &[(1usize, 1usize), (7, 9), (8, 8), (5, 13)] {
+        for n_bits in [8u32, 12, 16] {
+            let input = tile_for(&spec, out_h, out_w, (out_h * 100 + out_w) as u64);
+            assert_level_equivalent(
+                &spec,
+                &input,
+                n_bits,
+                &format!("ragged {out_h}×{out_w} n={n_bits}"),
+            );
+        }
+    }
+}
+
+/// Randomized fused tiles over every *distinct* conv shape
+/// (K, S, N, M) of all four zoo miniatures, at n_bits ∈ {8, 12, 16}.
+/// Tiles are kept small (a handful of pixels) so the matrix stays
+/// CI-sized in debug mode — the full-map runs below cover the
+/// many-group regime, the ragged test above the masking boundaries.
+#[test]
+fn zoo_miniature_levels_are_bit_identical() {
+    for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
+        let net = nets::tiny(name).expect("tiny preset");
+        let mut seen: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for (li, conv) in net.convs.iter().enumerate() {
+            let shape = (conv.k, conv.s, conv.n_in, conv.m_out);
+            if seen.contains(&shape) {
+                continue; // repeated block shapes add no new datapath
+            }
+            seen.push(shape);
+            let mut spec = conv.clone();
+            spec.pool = None; // pooling is engine-independent; keep levels lean
+            let input = tile_for(&spec, 2, 3, (li as u64) << 3);
+            for n_bits in [8u32, 12, 16] {
+                assert_level_equivalent(
+                    &spec,
+                    &input,
+                    n_bits,
+                    &format!("{name} conv{li} n={n_bits}"),
+                );
+            }
+        }
+    }
+}
+
+/// Whole fused LeNet pyramid: serial and 4-thread parallel execution
+/// produce bit-identical outputs and merged counters across engines.
+#[test]
+fn lenet_pyramid_bit_identical_serial_and_parallel() {
+    let specs = nets::lenet5().paper_fusion()[0].clone();
+    let input = nets::random_input(&specs[0], 77);
+    let build = |kind| {
+        let (weights, biases) = nets::random_weights(&specs, 41);
+        FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
+            .expect("uniform LeNet plan")
+    };
+    let scalar = build(EngineKind::Sop { n_bits: 8 });
+    let sliced = build(EngineKind::SopSliced { n_bits: 8 });
+
+    let (a, _) = scalar.run(&input).expect("scalar run");
+    let (b, _) = sliced.run(&input).expect("sliced run");
+    assert_eq!(a.data, b.data, "serial pyramid outputs differ");
+    assert_eq!(
+        scalar.end_counters(),
+        sliced.end_counters(),
+        "serial pyramid counters differ"
+    );
+
+    let (ap, _) = scalar.run_parallel(&input, 4).expect("scalar parallel");
+    let (bp, _) = sliced.run_parallel(&input, 4).expect("sliced parallel");
+    assert_eq!(ap.data, bp.data, "parallel pyramid outputs differ");
+    assert_eq!(
+        scalar.end_counters(),
+        sliced.end_counters(),
+        "parallel pyramid counters differ"
+    );
+}
+
+/// All four zoo miniatures end-to-end through `NativePipeline`:
+/// chained pyramids, residual shortcuts and the classifier head on top
+/// of the two SOP engines give bit-identical logits and per-level
+/// counters.
+#[test]
+fn zoo_pipelines_are_bit_identical_end_to_end() {
+    for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
+        let net = nets::tiny(name).expect("tiny preset");
+        let scalar = NativePipeline::synthetic(&net, EngineKind::Sop { n_bits: 8 }, 0x51)
+            .expect("scalar pipeline");
+        let sliced = NativePipeline::synthetic(&net, EngineKind::SopSliced { n_bits: 8 }, 0x51)
+            .expect("sliced pipeline");
+        let img = nets::random_input(&net.convs[0], 0x1A);
+        let a = scalar.infer(&img).expect("scalar infer");
+        let b = sliced.infer(&img).expect("sliced infer");
+        assert_eq!(a.logits.data, b.logits.data, "{name}: logits differ");
+        assert_eq!(a.class, b.class, "{name}: class differs");
+        let (ca, cb) = (scalar.end_counters(), sliced.end_counters());
+        assert_eq!(ca, cb, "{name}: pipeline counters differ");
+        assert_eq!(ca.len(), net.convs.len(), "{name}: one counter per level");
+        let total = ca.iter().fold(EndCounters::default(), |mut t, c| {
+            t.merge(c);
+            t
+        });
+        assert_eq!(
+            total.terminated + total.positive + total.undetermined,
+            total.sops,
+            "{name}: counter accounting"
+        );
+    }
+}
+
+/// The sliced engine is still an engine: its output obeys the same
+/// quantization bound against the exact f32 reference that the scalar
+/// engine is held to (sanity that bit-equality is not "both wrong").
+#[test]
+fn sliced_engine_tracks_f32_reference() {
+    let specs = nets::lenet5().paper_fusion()[0].clone();
+    let input = nets::random_input(&specs[0], 99);
+    let (weights, biases) = nets::random_weights(&specs, 55);
+    let exec = FusionExecutor::native(
+        "lenet",
+        &specs,
+        1,
+        weights,
+        biases,
+        EngineKind::SopSliced { n_bits: 12 },
+    )
+    .expect("plan");
+    let rel = exec.verify(&input).expect("verify");
+    assert!(rel < 0.05, "sliced engine outside quantization bound: {rel}");
+}
