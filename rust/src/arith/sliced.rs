@@ -466,6 +466,16 @@ impl SlicedSopResult {
     }
 }
 
+/// One shared bias value as `n_out` broadcast digit planes: digit `j`
+/// of [`to_sd_digits`]`(bias)` in every lane, zero-padded to the result
+/// length — plane-for-plane what the scalar pipeline's resized
+/// `bias_digits` feed.
+fn broadcast_bias_planes(bias: Fixed, n_out: usize) -> Vec<DigitPlane> {
+    let mut digits = to_sd_digits(bias);
+    digits.resize(n_out, 0);
+    digits.into_iter().map(DigitPlane::broadcast).collect()
+}
+
 /// Reusable 64-lane columnar SOP pipeline — the bit-sliced twin of
 /// [`SopPipeline`](super::sop::SopPipeline): the same bank-of-
 /// multipliers + adder-tree + END structure, stepped in the same
@@ -481,7 +491,13 @@ impl SlicedSopResult {
 pub struct SopSlicedPipeline {
     weights: Vec<Fixed>,
     has_bias: bool,
-    bias_digits: Vec<Digit>,
+    /// Bias operand digit planes, one per result digit position. A
+    /// shared bias broadcasts the same digit to every lane
+    /// ([`SopSlicedPipeline::set_bias`]); per-lane biases hold each
+    /// lane's own digit stream ([`SopSlicedPipeline::set_lane_biases`] —
+    /// the per-window quantization path, where each output pixel's
+    /// bias operand is scaled by its own window).
+    bias_planes: Vec<DigitPlane>,
     n_out: usize,
     levels: u32,
     width: usize,
@@ -512,19 +528,15 @@ impl SopSlicedPipeline {
             off += width >> (lv + 1);
         }
         adder_row_off.push(off);
-        let bias_digits = match bias {
-            Some(b) => {
-                let mut d = to_sd_digits(b);
-                d.resize(n_out, 0);
-                d
-            }
+        let bias_planes = match bias {
+            Some(b) => broadcast_bias_planes(b, n_out),
             None => Vec::new(),
         };
         let total_positions = l + n_out + l;
         SopSlicedPipeline {
             weights: weights.to_vec(),
             has_bias: bias.is_some(),
-            bias_digits,
+            bias_planes,
             n_out,
             levels,
             width,
@@ -551,9 +563,28 @@ impl SopSlicedPipeline {
             self.has_bias,
             "set_bias on a pipeline built without a bias operand"
         );
-        self.bias_digits.clear();
-        self.bias_digits.extend(to_sd_digits(bias));
-        self.bias_digits.resize(self.n_out, 0);
+        self.bias_planes = broadcast_bias_planes(bias, self.n_out);
+    }
+
+    /// Give every lane its **own** bias operand value — digit-for-digit
+    /// what [`SopPipeline::set_bias`](super::sop::SopPipeline::set_bias)
+    /// with `biases[lane]` would feed a scalar pipeline running that
+    /// lane's window. Lanes beyond `biases.len()` get all-zero digit
+    /// streams (the dead-lane rule; their results are never read).
+    ///
+    /// All biases must share one precision (`frac_bits`), as
+    /// [`transpose_lanes`] requires.
+    pub fn set_lane_biases(&mut self, biases: &[Fixed]) {
+        assert!(
+            self.has_bias,
+            "set_lane_biases on a pipeline built without a bias operand"
+        );
+        assert!(!biases.is_empty() && biases.len() <= LANES);
+        let frac = biases[0].frac_bits;
+        debug_assert!((frac as usize) <= self.n_out, "bias digits exceed n_out");
+        self.bias_planes.resize(self.n_out, DigitPlane::ZERO);
+        transpose_lanes(biases, frac, &mut self.bias_planes[..frac as usize]);
+        self.bias_planes[frac as usize..].fill(DigitPlane::ZERO);
     }
 
     /// Evaluate up to 64 windows at once. `acts` holds the transposed
@@ -620,9 +651,13 @@ impl SopSlicedPipeline {
                 }
                 let mut k = n_leaves;
                 if self.has_bias {
-                    self.cur[k] = DigitPlane::broadcast(
-                        self.bias_digits.get(u - 1).copied().unwrap_or(0),
-                    );
+                    // Past the stream end (u > n_out) the operand pads
+                    // with zero digits, like every leaf.
+                    self.cur[k] = self
+                        .bias_planes
+                        .get(u - 1)
+                        .copied()
+                        .unwrap_or(DigitPlane::ZERO);
                     k += 1;
                 }
                 self.cur[k..width].fill(DigitPlane::ZERO);
@@ -993,6 +1028,64 @@ mod tests {
                 prop_assert!(
                     got.value.to_bits() == want.value.to_bits(),
                     "lane {lane}: value {} vs {} (not bit-identical)",
+                    got.value,
+                    want.value
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Per-lane biases are digit-exact with running each lane through a
+    /// scalar pipeline carrying that lane's own bias — the per-window
+    /// quantization path, where adjacent output pixels quantize the
+    /// shared bias with different activation scales.
+    #[test]
+    fn per_lane_biases_match_scalar_pipelines() {
+        prop_check("set_lane_biases == per-lane scalar set_bias", 30, |g| {
+            let n = *g.pick(&[4u32, 8, 12]);
+            let frac = n - 1;
+            let m = g.usize(1, 8);
+            let n_out = (n + 4) as usize;
+            let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let lanes_n = *g.pick(&[1usize, 5, 63, 64]);
+            let active = if lanes_n == LANES {
+                u64::MAX
+            } else {
+                (1u64 << lanes_n) - 1
+            };
+            let windows: Vec<Vec<Fixed>> = (0..lanes_n)
+                .map(|_| (0..m).map(|_| rand_fixed(g, n)).collect())
+                .collect();
+            let lane_biases: Vec<Fixed> = (0..lanes_n).map(|_| rand_fixed(g, n)).collect();
+            let mut acts = vec![DigitPlane::ZERO; m * frac as usize];
+            for i in 0..m {
+                let ops: Vec<Fixed> = windows.iter().map(|w| w[i]).collect();
+                transpose_lanes(
+                    &ops,
+                    frac,
+                    &mut acts[i * frac as usize..(i + 1) * frac as usize],
+                );
+            }
+            let mut sliced = SopSlicedPipeline::new(&weights, Some(Fixed::zero(frac)), n_out);
+            sliced.set_lane_biases(&lane_biases);
+            let res = sliced.run(&acts, frac, active);
+            let mut scalar = SopPipeline::new(&weights, Some(Fixed::zero(frac)), n_out);
+            for (lane, win) in windows.iter().enumerate() {
+                scalar.set_bias(lane_biases[lane]);
+                let want = scalar.run(win);
+                let got = res.lane(lane);
+                prop_assert!(
+                    got.state == want.state && got.decided_at == want.decided_at,
+                    "lane {lane}: {:?}@{} vs {:?}@{}",
+                    got.state,
+                    got.decided_at,
+                    want.state,
+                    want.decided_at
+                );
+                prop_assert!(
+                    got.value.to_bits() == want.value.to_bits(),
+                    "lane {lane}: value {} vs {}",
                     got.value,
                     want.value
                 );

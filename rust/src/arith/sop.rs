@@ -253,11 +253,12 @@ impl SopPipeline {
 
     /// Replace the bias operand's value without rebuilding the pipeline.
     ///
-    /// The native SOP engine quantizes the bias with a per-tile activation
-    /// scale, so the bias digits change between tiles while the weights
-    /// (and thus the tree shape) stay fixed. Only valid on pipelines
-    /// constructed **with** a bias operand — the operand count, and with
-    /// it the adder-tree width, is part of the pipeline's structure.
+    /// The native SOP engine quantizes the bias with each output
+    /// pixel's own (per-window) activation scale, so the bias digits
+    /// change between SOPs while the weights (and thus the tree shape)
+    /// stay fixed. Only valid on pipelines constructed **with** a bias
+    /// operand — the operand count, and with it the adder-tree width,
+    /// is part of the pipeline's structure.
     pub fn set_bias(&mut self, bias: Fixed) {
         assert!(
             self.bias.is_some(),

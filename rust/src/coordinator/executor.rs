@@ -1,6 +1,9 @@
 //! The **fusion executor**: drives the pyramid plan over a real input,
 //! executing one tile program per movement and reassembling the fused
-//! stack's output feature map — the paper's §3.4 dataflow.
+//! stack's output feature map — the paper's §3.4 dataflow, including
+//! its **output-pixel reuse**: adjacent movements overlap, and the
+//! native path serves the overlap from per-level stripe buffers instead
+//! of recomputing it.
 //!
 //! Three program sources feed the same movement loop:
 //!
@@ -17,16 +20,45 @@
 //!    twin [`EngineKind::SopSliced`]; the SOP engines record live
 //!    per-level END statistics while the fused stack runs.
 //!
+//! ## Inter-tile reuse (§3.4)
+//!
+//! The native path runs a **row-sweep** movement schedule. Within a
+//! sweep row, each level's output tile advances by `out_step` pixels
+//! per movement, so `out_overlap = out_side − out_step` columns of the
+//! previous movement's output are this movement's left overlap: the
+//! working tile shifts left in place and only the fresh stripe is
+//! computed ([`ComputeEngine::run_level_region`]). The serial [`run`]
+//! additionally chains sweep rows through a per-level **row ring
+//! buffer** (the bottom `out_overlap` rows of every movement of the
+//! previous row), so an interior movement computes only the
+//! `out_step × out_step` bottom-right block — the full
+//! [`PyramidPlan::fresh_region`]. [`run_parallel`] keeps rows
+//! independent (that is exactly what makes them parallelizable, and
+//! what the hardware's `H × S^T` stripe buffer model assumes) and
+//! reuses the column overlap only.
+//!
+//! Reuse is **bit-sound**: every engine guarantees that a pixel's value
+//! is a function of its own window (and therefore of its global
+//! coordinates) alone — see the producer-independence notes in
+//! [`crate::runtime::engine`] — and the inter-level halo mask depends
+//! only on global coordinates, so a stitched tile is bit-identical to a
+//! recomputed one. `tests/engine_equivalence.rs` pins reuse-on ≡
+//! reuse-off for all three engines.
+//!
 //! For the registry-backed sources, the executor rebuilds the geometry
 //! with the Rust Algorithm 3/4 and cross-checks it against the manifest
 //! recorded by `aot.py` (the Python mirror); any drift fails fast.
+//!
+//! [`run`]: FusionExecutor::run
+//! [`run_parallel`]: FusionExecutor::run_parallel
+//! [`ComputeEngine::run_level_region`]: crate::runtime::ComputeEngine::run_level_region
 
 use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
-use crate::runtime::engine::{conv2d, ComputeEngine, EndCounters, EngineKind};
+use crate::geometry::{FreshRegion, FusedConvSpec, PyramidPlan, StridePolicy};
+use crate::runtime::engine::{conv2d, ComputeEngine, EndCounters, EngineKind, OutRegion};
 use crate::runtime::{GeometryMeta, Runtime, Tensor};
 
 /// Execution statistics of one fused evaluation.
@@ -34,12 +66,69 @@ use crate::runtime::{GeometryMeta, Runtime, Tensor};
 pub struct ExecStats {
     /// Tile-program invocations (= pyramid movements = α²).
     pub tiles_executed: usize,
-    /// Bytes moved host→device for level-0 tiles.
+    /// Bytes moved into level-0 tile buffers, fresh and halo alike
+    /// (= `input_fresh_bytes + input_halo_bytes`).
     pub input_bytes: usize,
+    /// Level-0 bytes not served from **this schedule's** reuse buffers
+    /// — the off-chip input traffic of the executed movement order.
+    /// The serial 2-D-reuse sweep fetches each input pixel once; the
+    /// row-parallel schedule re-fetches the row halo (rows are
+    /// independent by design), so its fresh count sits between the
+    /// serial and the reuse-off totals.
+    pub input_fresh_bytes: usize,
+    /// Level-0 bytes served from on-chip reuse buffers instead of
+    /// re-fetched (0 when reuse is off — then every halo byte is
+    /// re-read from DRAM and counted fresh).
+    pub input_halo_bytes: usize,
     /// Bytes of assembled output.
     pub output_bytes: usize,
+    /// Output pixels computed by the engines, across all levels and
+    /// movements.
+    pub fresh_pixels: u64,
+    /// Output pixels served from §3.4 reuse buffers instead of being
+    /// recomputed — the paper's redundant-computation reduction.
+    /// `fresh_pixels + reused_pixels` is invariant in the reuse knob.
+    pub reused_pixels: u64,
     /// Wall-clock time of the tile loop.
     pub wall: std::time::Duration,
+}
+
+impl ExecStats {
+    /// Account one level-0 tile fetch: of the `side²` tile pixels,
+    /// `fresh_area` are new off-chip traffic and the rest is halo. One
+    /// accounting path for every execution mode (the serial and
+    /// parallel loops used to duplicate — and disagree on — this).
+    fn record_input_tile(&mut self, side: usize, n_in: usize, fresh_area: usize) {
+        let total = side * side * n_in * 4;
+        let fresh = fresh_area * n_in * 4;
+        self.input_bytes += total;
+        self.input_fresh_bytes += fresh;
+        self.input_halo_bytes += total - fresh;
+    }
+
+    /// Account one level's output region for one movement: `fresh`
+    /// pixels computed, `total − fresh` served from reuse buffers.
+    fn record_level_pixels(&mut self, fresh: usize, total: usize) {
+        self.fresh_pixels += fresh as u64;
+        self.reused_pixels += (total - fresh) as u64;
+    }
+
+    /// Merge another run's counters (parallel chunk reduction). Wall
+    /// clock and output bytes are set by the caller at the end.
+    fn merge(&mut self, o: &ExecStats) {
+        self.tiles_executed += o.tiles_executed;
+        self.input_bytes += o.input_bytes;
+        self.input_fresh_bytes += o.input_fresh_bytes;
+        self.input_halo_bytes += o.input_halo_bytes;
+        self.fresh_pixels += o.fresh_pixels;
+        self.reused_pixels += o.reused_pixels;
+    }
+
+    /// Fraction of all output pixels served from reuse buffers instead
+    /// of recomputed (0 when nothing ran or reuse is off).
+    pub fn reuse_fraction(&self) -> f64 {
+        crate::util::ratio(self.reused_pixels, self.fresh_pixels + self.reused_pixels)
+    }
 }
 
 /// The native program source: per-level weights/biases plus the engine
@@ -81,6 +170,23 @@ enum Source<'rt> {
     Native(NativeFusion),
 }
 
+/// Per-level working state of the native row-sweep reuse schedule.
+struct LevelState {
+    /// The level's stitched output tile for the current movement (the
+    /// next level's input tile). Shifted left by `out_step` between
+    /// adjacent movements; only the fresh region is recomputed.
+    out_tile: Tensor,
+    /// Row ring buffer (serial schedule only): the bottom `overlap`
+    /// rows of every movement of the previous sweep row, slot `ix` at
+    /// rows `[ix·overlap, (ix+1)·overlap)`.
+    row_band: Option<Tensor>,
+    /// Output-region side ([`PyramidPlan::out_side`]).
+    side: usize,
+    /// Reusable overlap per edge ([`PyramidPlan::out_overlap`]); forced
+    /// to 0 when the reuse knob is off.
+    overlap: usize,
+}
+
 /// Executor for one fused group (e.g. "lenet", "alexnet", "vgg").
 pub struct FusionExecutor<'rt> {
     source: Source<'rt>,
@@ -89,6 +195,8 @@ pub struct FusionExecutor<'rt> {
     /// The resolved fusion pyramid (Algorithms 3 + 4).
     pub plan: PyramidPlan,
     geom: GeometryMeta,
+    /// §3.4 inter-tile reuse knob (native source; on by default).
+    reuse: bool,
 }
 
 impl<'rt> FusionExecutor<'rt> {
@@ -119,6 +227,7 @@ impl<'rt> FusionExecutor<'rt> {
             group: group.to_string(),
             plan,
             geom,
+            reuse: true,
         })
     }
 
@@ -130,7 +239,8 @@ impl<'rt> FusionExecutor<'rt> {
     /// `run`, `run_parallel` and `verify` all work unchanged; with
     /// [`EngineKind::Sop`] the executor additionally accumulates live
     /// per-level END statistics, readable via
-    /// [`FusionExecutor::end_counters`].
+    /// [`FusionExecutor::end_counters`]. Inter-tile reuse (§3.4) is on
+    /// by default — see [`FusionExecutor::with_reuse`].
     pub fn native(
         group: &str,
         specs: &[FusedConvSpec],
@@ -184,7 +294,30 @@ impl<'rt> FusionExecutor<'rt> {
             group: group.to_string(),
             plan,
             geom,
+            reuse: true,
         })
+    }
+
+    /// Set the §3.4 inter-tile reuse knob (native source; on by
+    /// default). With reuse off every movement recomputes its full
+    /// tile at every level — the differential baseline for the
+    /// `fused_native` bench and the equivalence tests. Output is
+    /// **bit-identical** either way; only the amount of engine work
+    /// (and with it the SOP/END counters) changes.
+    pub fn with_reuse(mut self, on: bool) -> Self {
+        self.set_reuse(on);
+        self
+    }
+
+    /// In-place form of [`FusionExecutor::with_reuse`] (pipeline
+    /// construction flips the knob on already-built executors).
+    pub fn set_reuse(&mut self, on: bool) {
+        self.reuse = on;
+    }
+
+    /// Whether §3.4 inter-tile reuse is enabled.
+    pub fn reuse_enabled(&self) -> bool {
+        self.reuse
     }
 
     /// The engine kind of a native executor (`None` for the registry
@@ -267,13 +400,43 @@ impl<'rt> FusionExecutor<'rt> {
         Ok(outs.swap_remove(0))
     }
 
-    /// Execute one pyramid movement natively: the engine evaluates every
-    /// level over the tile, and the executor re-applies the geometry —
-    /// after each non-final level, tile cells whose global coordinates
-    /// fall outside the next level's real feature map are zeroed (they
-    /// are convolution padding / boundary halo in the reference
-    /// computation, not values a conv over a zero-filled halo would
-    /// produce).
+    /// Fresh per-level working state for the native schedule.
+    /// `row_reuse` allocates the row ring buffers of the serial
+    /// (2-D-reuse) sweep.
+    fn level_states(&self, row_reuse: bool) -> Vec<LevelState> {
+        let a = self.plan.alpha();
+        (0..self.plan.depth())
+            .map(|j| {
+                let side = self.plan.out_side(j);
+                let overlap = if self.reuse {
+                    self.plan.out_overlap(j)
+                } else {
+                    0
+                };
+                let m = self.plan.specs[j].m_out;
+                LevelState {
+                    out_tile: Tensor::zeros(vec![side, side, m]),
+                    row_band: (row_reuse && overlap > 0)
+                        .then(|| Tensor::zeros(vec![a * overlap, side, m])),
+                    side,
+                    overlap,
+                }
+            })
+            .collect()
+    }
+
+    /// Execute one native pyramid movement with §3.4 reuse: every
+    /// level's output tile is stitched from the left stripe (in-place
+    /// column shift), the row ring buffer (serial schedule), and the
+    /// engine's region-restricted evaluation of the fresh rectangle.
+    /// After the final level this leaves `levels.last().out_tile`
+    /// holding the movement's full output region.
+    ///
+    /// Reused cells are bit-identical to recomputation: engine values
+    /// are producer-independent, and the inter-level halo mask depends
+    /// only on global coordinates (masking the stitched tile again is
+    /// idempotent on the copied cells).
+    #[allow(clippy::too_many_arguments)]
     fn movement_native(
         &self,
         nf: &NativeFusion,
@@ -282,35 +445,100 @@ impl<'rt> FusionExecutor<'rt> {
         ix: usize,
         input: &Tensor,
         tile: &mut Tensor,
-    ) -> Result<Tensor> {
+        levels: &mut [LevelState],
+        stats: &mut ExecStats,
+        row_reuse: bool,
+    ) -> Result<()> {
         self.extract_tile(iy, ix, input, tile)?;
-        let mut cur: Option<Tensor> = None;
-        for (j, spec) in self.plan.specs.iter().enumerate() {
-            let inp: &Tensor = cur.as_ref().unwrap_or(tile);
-            let mut out = engine.run_level(j, spec, inp, &nf.weights[j], &nf.biases[j])?;
+        // Level-0 fetch accounting: with reuse on, overlap pixels come
+        // from on-chip stripe buffers; only the fresh band is off-chip
+        // traffic.
+        let h0 = self.plan.tiles[0];
+        let in_ov = if self.reuse { self.plan.overlap(0) } else { 0 };
+        let ly0 = if row_reuse && iy > 0 { in_ov } else { 0 };
+        let lx0 = if ix > 0 { in_ov } else { 0 };
+        stats.record_input_tile(h0, self.plan.specs[0].n_in, (h0 - ly0) * (h0 - lx0));
+
+        for j in 0..self.plan.depth() {
+            let (prev, rest) = levels.split_at_mut(j);
+            let lv = &mut rest[0];
+            let inp: &Tensor = if j == 0 { &*tile } else { &prev[j - 1].out_tile };
+            let spec = &self.plan.specs[j];
+            let (side, vo) = (lv.side, lv.overlap);
+            // One definition of the fresh rectangle: the plan's §3.4
+            // math (property-tested to telescope). Row-independent
+            // schedules have no up-neighbour (iy = 0); reuse-off plans
+            // are all-fresh.
+            let fr = if self.reuse {
+                self.plan
+                    .fresh_region(j, if row_reuse { iy } else { 0 }, ix)
+            } else {
+                FreshRegion { y0: 0, x0: 0, side }
+            };
+            debug_assert_eq!(fr.side, side);
+            let (fy0, fx0) = (fr.y0, fr.x0);
+            if fx0 > 0 {
+                // Left overlap: the previous movement's columns
+                // [out_step, side) are this movement's [0, overlap).
+                lv.out_tile.shift_cols_left(side - vo)?;
+            }
+            if fy0 > 0 {
+                // Top overlap: the row above's bottom band at this ix.
+                let band = lv.row_band.as_ref().expect("row reuse allocates bands");
+                lv.out_tile
+                    .copy_region_from(band, ix * vo, 0, vo, side, 0, 0)?;
+            }
+            engine.run_level_region(
+                j,
+                spec,
+                inp,
+                &nf.weights[j],
+                &nf.biases[j],
+                &mut lv.out_tile,
+                OutRegion {
+                    y0: fy0,
+                    y1: side,
+                    x0: fx0,
+                    x1: side,
+                },
+            )?;
             if j + 1 < self.plan.depth() {
                 // Level j's output region is exactly level j+1's input
-                // tile, in level-(j+1) padded coordinates.
+                // tile, in level-(j+1) padded coordinates; cells beyond
+                // the next level's real feature map are zero padding in
+                // the reference computation. The mask is a function of
+                // global coordinates, so re-masking stitched cells is a
+                // no-op.
                 let next = &self.plan.specs[j + 1];
-                debug_assert_eq!(out.shape[0], self.plan.tiles[j + 1]);
                 let r = self.plan.tile_rect(j + 1, iy, ix);
-                out.mask_outside(r.y0, r.x0, next.pad as i64, next.ifm)?;
+                lv.out_tile
+                    .mask_outside(r.y0, r.x0, next.pad as i64, next.ifm)?;
             }
-            cur = Some(out);
+            if let Some(band) = lv.row_band.as_mut() {
+                // Save this movement's bottom band for the next sweep
+                // row (ring slot ix is consumed above before being
+                // overwritten here).
+                band.copy_region_from(&lv.out_tile, side - vo, 0, vo, side, ix * vo, 0)?;
+            }
+            stats.record_level_pixels(fr.pixels(), fr.total());
         }
-        Ok(cur.expect("plan has at least one level"))
-    }
-
-    /// Output-map stride between adjacent movements at the final level.
-    /// Exact by construction: [`PyramidPlan::build`] rejects plans whose
-    /// final stride is not a multiple of the chain factor.
-    fn out_stride(&self) -> usize {
-        self.plan.out_pitch()
+        Ok(())
     }
 
     /// Run the fused stack tile-by-tile, assembling the output
     /// (serial reference path; see [`FusionExecutor::run_parallel`]).
+    /// The native source runs the full 2-D reuse schedule (column +
+    /// row overlap served from the stripe buffers).
     pub fn run(&self, input: &Tensor) -> Result<(Tensor, ExecStats)> {
+        match &self.source {
+            Source::Programs { rt } => self.run_programs(rt, input),
+            Source::Native(nf) => self.run_native(nf, input),
+        }
+    }
+
+    /// Serial movement loop over the runtime registry (PJRT or host
+    /// closures): tile programs always compute full tiles.
+    fn run_programs(&self, rt: &Runtime, input: &Tensor) -> Result<(Tensor, ExecStats)> {
         self.check_input(input)?;
         let t0 = std::time::Instant::now();
         let a = self.plan.alpha();
@@ -318,53 +546,101 @@ impl<'rt> FusionExecutor<'rt> {
         let q = self.plan.depth();
         let spec0 = &self.plan.specs[0];
         let program = format!("{}_tile", self.group);
-        let p_out = self.out_stride();
+        let p_out = self.plan.out_pitch();
 
-        let mut engine: Option<Box<dyn ComputeEngine>> = match &self.source {
-            Source::Native(nf) => Some(nf.kind.build()),
-            Source::Programs { .. } => None,
-        };
         let mut out = Tensor::zeros(self.output_shape());
         let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
         let mut stats = ExecStats::default();
         let mut scalars = vec![0i32; 2 * q];
         for iy in 0..a {
             for ix in 0..a {
-                let region = match (&self.source, engine.as_deref_mut()) {
-                    (Source::Programs { rt }, _) => self.movement_programs(
-                        rt, &program, iy, ix, input, &mut tile, &mut scalars,
-                    )?,
-                    (Source::Native(nf), Some(e)) => {
-                        self.movement_native(nf, e, iy, ix, input, &mut tile)?
-                    }
-                    _ => unreachable!("native source always builds an engine"),
-                };
+                let region =
+                    self.movement_programs(rt, &program, iy, ix, input, &mut tile, &mut scalars)?;
                 out.place_window(&region, (iy * p_out) as i64, (ix * p_out) as i64)?;
                 stats.tiles_executed += 1;
-                stats.input_bytes += tile.len() * 4;
+                stats.record_input_tile(h0, spec0.n_in, h0 * h0);
             }
-        }
-        if let (Source::Native(nf), Some(mut e)) = (&self.source, engine) {
-            nf.absorb(e.take_end_counters());
         }
         stats.output_bytes = out.len() * 4;
         stats.wall = t0.elapsed();
         Ok((out, stats))
     }
 
-    /// Like [`FusionExecutor::run`], but executes the α² independent
-    /// `(iy, ix)` tile movements across a scoped thread pool of up to
-    /// `threads` workers, each with its own tile buffer (and, for the
-    /// native source, its own engine instance — END counters are merged
-    /// after the join). Output is assembled after the join and is
-    /// **bit-identical** to the serial path (the movements are
-    /// data-independent; overlapping output pixels receive identical
-    /// values from either producer).
+    /// Serial native movement loop: the row-sweep schedule with full
+    /// 2-D §3.4 reuse (when enabled).
+    fn run_native(&self, nf: &NativeFusion, input: &Tensor) -> Result<(Tensor, ExecStats)> {
+        self.check_input(input)?;
+        let t0 = std::time::Instant::now();
+        let a = self.plan.alpha();
+        let h0 = self.plan.tiles[0];
+        let spec0 = &self.plan.specs[0];
+        let p_out = self.plan.out_pitch();
+
+        let mut engine = nf.kind.build();
+        let mut out = Tensor::zeros(self.output_shape());
+        let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
+        let mut levels = self.level_states(true);
+        let mut stats = ExecStats::default();
+        for iy in 0..a {
+            for ix in 0..a {
+                self.movement_native(
+                    nf,
+                    engine.as_mut(),
+                    iy,
+                    ix,
+                    input,
+                    &mut tile,
+                    &mut levels,
+                    &mut stats,
+                    true,
+                )?;
+                let region = &levels.last().expect("plan has levels").out_tile;
+                out.place_window(region, (iy * p_out) as i64, (ix * p_out) as i64)?;
+                stats.tiles_executed += 1;
+            }
+        }
+        nf.absorb(engine.take_end_counters());
+        stats.output_bytes = out.len() * 4;
+        stats.wall = t0.elapsed();
+        Ok((out, stats))
+    }
+
+    /// Like [`FusionExecutor::run`], but across a scoped thread pool of
+    /// up to `threads` workers, each with its own tile buffer. The
+    /// registry sources chunk all α² independent movements; the native
+    /// source chunks the α sweep **rows** (each worker gets its own
+    /// engine instance and reuse stripe buffers — END counters are
+    /// merged after the join): rows are data-independent, and columns
+    /// within a row chain through the reuse stripe, so the native
+    /// source still reuses the column overlap (row overlap is what the
+    /// serial path additionally exploits — `reused_pixels` is
+    /// accordingly smaller here). Output is assembled after the join
+    /// and is **bit-identical** to the serial path: engine pixel values
+    /// are producer-independent, so every placement writes the same
+    /// bits regardless of which movement produced them.
     ///
     /// Under the `pjrt` feature the PJRT handles are not `Sync`, so this
     /// falls back to the serial path; the host backends parallelize.
     #[cfg(not(feature = "pjrt"))]
     pub fn run_parallel(&self, input: &Tensor, threads: usize) -> Result<(Tensor, ExecStats)> {
+        match &self.source {
+            // Tile programs always compute full tiles, so every one of
+            // the α² movements is independent — chunk them all (row
+            // granularity would cap the parallelism at α for nothing).
+            Source::Programs { rt } => self.run_parallel_programs(rt, input, threads),
+            Source::Native(nf) => self.run_parallel_native(nf, input, threads),
+        }
+    }
+
+    /// Parallel movement loop over the runtime registry: all α²
+    /// movements chunked contiguously across the thread pool.
+    #[cfg(not(feature = "pjrt"))]
+    fn run_parallel_programs(
+        &self,
+        rt: &Runtime,
+        input: &Tensor,
+        threads: usize,
+    ) -> Result<(Tensor, ExecStats)> {
         self.check_input(input)?;
         let t0 = std::time::Instant::now();
         let a = self.plan.alpha();
@@ -372,44 +648,33 @@ impl<'rt> FusionExecutor<'rt> {
         let q = self.plan.depth();
         let spec0 = &self.plan.specs[0];
         let program = format!("{}_tile", self.group);
-        let p_out = self.out_stride();
+        let p_out = self.plan.out_pitch();
 
-        // Movement schedule, chunked contiguously per thread.
         let moves: Vec<(usize, usize)> =
             (0..a).flat_map(|iy| (0..a).map(move |ix| (iy, ix))).collect();
         let n_threads = threads.clamp(1, moves.len().max(1));
         let chunk = moves.len().div_ceil(n_threads);
 
-        type ChunkResult = (Vec<(usize, usize, Tensor)>, Vec<EndCounters>);
-        let regions: Result<Vec<ChunkResult>> = std::thread::scope(|s| {
+        type ChunkResult = (Vec<(usize, usize, Tensor)>, ExecStats);
+        let results: Result<Vec<ChunkResult>> = std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(n_threads);
             for piece in moves.chunks(chunk) {
                 let program = &program;
                 handles.push(s.spawn(move || {
-                    // Per-thread reusable tile/offset buffers + engine.
+                    // Per-thread reusable tile/offset buffers.
                     let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
                     let mut scalars = vec![0i32; 2 * q];
-                    let mut engine: Option<Box<dyn ComputeEngine>> = match &self.source {
-                        Source::Native(nf) => Some(nf.kind.build()),
-                        Source::Programs { .. } => None,
-                    };
+                    let mut stats = ExecStats::default();
                     let mut done = Vec::with_capacity(piece.len());
                     for &(iy, ix) in piece {
-                        let region = match (&self.source, engine.as_deref_mut()) {
-                            (Source::Programs { rt }, _) => self.movement_programs(
-                                rt, program, iy, ix, input, &mut tile, &mut scalars,
-                            )?,
-                            (Source::Native(nf), Some(e)) => {
-                                self.movement_native(nf, e, iy, ix, input, &mut tile)?
-                            }
-                            _ => unreachable!("native source always builds an engine"),
-                        };
+                        let region = self.movement_programs(
+                            rt, program, iy, ix, input, &mut tile, &mut scalars,
+                        )?;
+                        stats.tiles_executed += 1;
+                        stats.record_input_tile(h0, spec0.n_in, h0 * h0);
                         done.push((iy, ix, region));
                     }
-                    let counters = engine
-                        .map(|mut e| e.take_end_counters())
-                        .unwrap_or_default();
-                    Ok((done, counters))
+                    Ok((done, stats))
                 }));
             }
             handles
@@ -420,14 +685,85 @@ impl<'rt> FusionExecutor<'rt> {
 
         let mut out = Tensor::zeros(self.output_shape());
         let mut stats = ExecStats::default();
-        for (chunk_regions, counters) in regions? {
-            if let Source::Native(nf) = &self.source {
-                nf.absorb(counters);
-            }
+        for (chunk_regions, chunk_stats) in results? {
+            stats.merge(&chunk_stats);
             for (iy, ix, region) in chunk_regions {
                 out.place_window(&region, (iy * p_out) as i64, (ix * p_out) as i64)?;
-                stats.tiles_executed += 1;
-                stats.input_bytes += h0 * h0 * spec0.n_in * 4;
+            }
+        }
+        stats.output_bytes = out.len() * 4;
+        stats.wall = t0.elapsed();
+        Ok((out, stats))
+    }
+
+    /// Parallel native movement loop: sweep **rows** chunked across the
+    /// thread pool — rows are what the reuse stripe keeps independent;
+    /// columns within a row chain through each thread's own buffers.
+    #[cfg(not(feature = "pjrt"))]
+    fn run_parallel_native(
+        &self,
+        nf: &NativeFusion,
+        input: &Tensor,
+        threads: usize,
+    ) -> Result<(Tensor, ExecStats)> {
+        self.check_input(input)?;
+        let t0 = std::time::Instant::now();
+        let a = self.plan.alpha();
+        let h0 = self.plan.tiles[0];
+        let spec0 = &self.plan.specs[0];
+        let p_out = self.plan.out_pitch();
+
+        let rows: Vec<usize> = (0..a).collect();
+        let n_threads = threads.clamp(1, a.max(1));
+        let chunk = a.div_ceil(n_threads);
+
+        type ChunkResult = (Vec<(usize, usize, Tensor)>, Vec<EndCounters>, ExecStats);
+        let results: Result<Vec<ChunkResult>> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_threads);
+            for piece in rows.chunks(chunk) {
+                handles.push(s.spawn(move || {
+                    // Per-thread reusable tile buffer + engine + stripe
+                    // buffers (column chaining only: no row bands).
+                    let mut tile = Tensor::zeros(vec![h0, h0, spec0.n_in]);
+                    let mut engine = nf.kind.build();
+                    let mut levels = self.level_states(false);
+                    let mut stats = ExecStats::default();
+                    let mut done = Vec::with_capacity(piece.len() * a);
+                    for &iy in piece {
+                        for ix in 0..a {
+                            self.movement_native(
+                                nf,
+                                engine.as_mut(),
+                                iy,
+                                ix,
+                                input,
+                                &mut tile,
+                                &mut levels,
+                                &mut stats,
+                                false,
+                            )?;
+                            stats.tiles_executed += 1;
+                            let region =
+                                levels.last().expect("plan has levels").out_tile.clone();
+                            done.push((iy, ix, region));
+                        }
+                    }
+                    Ok((done, engine.take_end_counters(), stats))
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tile worker panicked"))
+                .collect()
+        });
+
+        let mut out = Tensor::zeros(self.output_shape());
+        let mut stats = ExecStats::default();
+        for (chunk_regions, counters, chunk_stats) in results? {
+            nf.absorb(counters);
+            stats.merge(&chunk_stats);
+            for (iy, ix, region) in chunk_regions {
+                out.place_window(&region, (iy * p_out) as i64, (ix * p_out) as i64)?;
             }
         }
         stats.output_bytes = out.len() * 4;

@@ -183,6 +183,8 @@ impl Metrics {
                 })
                 .collect(),
             end_levels: Vec::new(),
+            fresh_pixels: 0,
+            reused_pixels: 0,
             uptime,
         }
     }
@@ -238,8 +240,24 @@ pub struct MetricsSnapshot {
     /// [`native_factory`](super::pool::native_factory)); empty for the
     /// artifact backends and the f32 engine.
     pub end_levels: Vec<EndCounters>,
+    /// Output pixels the native engines computed across every served
+    /// inference — populated only when the pool has a
+    /// [`reuse_source`](super::pool::PoolConfig::reuse_source) (native
+    /// serving); 0 otherwise.
+    pub fresh_pixels: u64,
+    /// Output pixels served from the §3.4 inter-tile reuse buffers
+    /// instead of being recomputed (same population rule).
+    pub reused_pixels: u64,
     /// Time since the registry was created.
     pub uptime: Duration,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of all output pixels served from §3.4 reuse buffers
+    /// instead of recomputed (0 when no native inference ran).
+    pub fn reuse_fraction(&self) -> f64 {
+        crate::util::ratio(self.reused_pixels, self.fresh_pixels + self.reused_pixels)
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -283,6 +301,16 @@ impl std::fmt::Display for MetricsSnapshot {
                 w.requests,
                 w.batches,
                 100.0 * w.utilization
+            )?;
+        }
+        if self.fresh_pixels + self.reused_pixels > 0 {
+            writeln!(
+                f,
+                "output-pixel reuse: {:.1}% served from §3.4 stripe buffers \
+                 ({} fresh, {} reused)",
+                100.0 * self.reuse_fraction(),
+                self.fresh_pixels,
+                self.reused_pixels
             )?;
         }
         for (j, c) in self.end_levels.iter().enumerate() {
@@ -417,6 +445,20 @@ mod tests {
         let text = format!("{s}");
         assert!(text.contains("END level 0"), "{text}");
         assert!(text.contains("60.0% detected"), "{text}");
+    }
+
+    #[test]
+    fn reuse_stats_render_in_display() {
+        let m = Metrics::new(1, 16);
+        let mut s = m.snapshot();
+        assert_eq!(s.reuse_fraction(), 0.0);
+        assert!(!format!("{s}").contains("output-pixel reuse"));
+        s.fresh_pixels = 300;
+        s.reused_pixels = 700;
+        assert!((s.reuse_fraction() - 0.7).abs() < 1e-12);
+        let text = format!("{s}");
+        assert!(text.contains("output-pixel reuse: 70.0%"), "{text}");
+        assert!(text.contains("300 fresh, 700 reused"), "{text}");
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub use executor::{ExecStats, FusionExecutor};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
 pub use pipeline::{Inference, NativePipeline, PipelineParams};
 pub use pool::{
-    native_factory, pipeline_end_source, EndCounterSource, ModelGroup, PoolConfig,
-    RuntimeFactory, WorkerPool,
+    native_factory, pipeline_end_source, pipeline_reuse_source, EndCounterSource, ModelGroup,
+    PoolConfig, ReuseStatSource, RuntimeFactory, WorkerPool,
 };
 pub use service::{InferenceService, Response, ServiceBackend, ServiceConfig};

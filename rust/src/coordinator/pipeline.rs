@@ -20,6 +20,8 @@
 //!
 //! [`Network::pipeline_stages`]: crate::nets::Network::pipeline_stages
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{anyhow, bail, Result};
 
 use super::executor::FusionExecutor;
@@ -119,6 +121,12 @@ pub struct NativePipeline {
     stages: Vec<Stage>,
     head: ClassifierHead,
     threads: usize,
+    /// Output pixels computed by the engines across every inference
+    /// (the `fresh_pixels` sum of every [`ExecStats`](super::ExecStats)).
+    fresh_pixels: AtomicU64,
+    /// Output pixels served from §3.4 reuse buffers across every
+    /// inference.
+    reused_pixels: AtomicU64,
 }
 
 /// Pick the output-region size R_Q for a stage: the smallest feasible
@@ -279,6 +287,8 @@ impl NativePipeline {
             stages,
             head: params.head,
             threads: 1,
+            fresh_pixels: AtomicU64::new(0),
+            reused_pixels: AtomicU64::new(0),
         })
     }
 
@@ -294,6 +304,30 @@ impl NativePipeline {
     pub fn with_threads(mut self, threads: usize) -> NativePipeline {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Set the §3.4 inter-tile reuse knob on every stage executor (on
+    /// by default). Inference output is **bit-identical** either way;
+    /// reuse changes only how much engine work (and SOP/END counting)
+    /// each pyramid performs — see [`FusionExecutor::with_reuse`].
+    pub fn with_reuse(mut self, on: bool) -> NativePipeline {
+        for stage in &mut self.stages {
+            for exec in &mut stage.execs {
+                exec.set_reuse(on);
+            }
+        }
+        self
+    }
+
+    /// Total `(fresh, reused)` output pixels across every inference on
+    /// this pipeline — the live §3.4 reuse statistic the serving
+    /// metrics surface. The reuse fraction is
+    /// `reused / (fresh + reused)`.
+    pub fn reuse_totals(&self) -> (u64, u64) {
+        (
+            self.fresh_pixels.load(Ordering::Relaxed),
+            self.reused_pixels.load(Ordering::Relaxed),
+        )
     }
 
     /// The network this pipeline serves.
@@ -347,11 +381,15 @@ impl NativePipeline {
                 None
             };
             for exec in &stage.execs {
-                let (out, _) = if self.threads > 1 {
+                let (out, stats) = if self.threads > 1 {
                     exec.run_parallel(&x, self.threads)?
                 } else {
                     exec.run(&x)?
                 };
+                self.fresh_pixels
+                    .fetch_add(stats.fresh_pixels, Ordering::Relaxed);
+                self.reused_pixels
+                    .fetch_add(stats.reused_pixels, Ordering::Relaxed);
                 x = out;
             }
             if let (Some(shortcut), Some(saved)) = (&stage.shortcut, saved) {

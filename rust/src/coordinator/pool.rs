@@ -38,6 +38,12 @@ pub type RuntimeFactory = Arc<dyn Fn() -> Result<Runtime> + Send + Sync>;
 /// [`MetricsSnapshot::end_levels`] by [`WorkerPool::metrics`].
 pub type EndCounterSource = Arc<dyn Fn() -> Vec<EndCounters> + Send + Sync>;
 
+/// Reads the live §3.4 reuse totals `(fresh, reused)` output pixels a
+/// serving backend accumulates — wired into
+/// [`MetricsSnapshot::fresh_pixels`] /
+/// [`MetricsSnapshot::reused_pixels`] by [`WorkerPool::metrics`].
+pub type ReuseStatSource = Arc<dyn Fn() -> (u64, u64) + Send + Sync>;
+
 /// One servable model group: the router key clients address, and the
 /// program every worker executes for it.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -68,6 +74,9 @@ pub struct PoolConfig {
     /// Optional live END statistics source, merged into every
     /// [`MetricsSnapshot`] (native SOP serving; `None` otherwise).
     pub end_source: Option<EndCounterSource>,
+    /// Optional live §3.4 reuse-statistics source, surfaced in every
+    /// [`MetricsSnapshot`] (native serving; `None` otherwise).
+    pub reuse_source: Option<ReuseStatSource>,
 }
 
 impl PoolConfig {
@@ -82,6 +91,7 @@ impl PoolConfig {
             groups,
             factory,
             end_source: None,
+            reuse_source: None,
         }
     }
 }
@@ -162,6 +172,14 @@ pub fn pipeline_end_source(pipeline: &Arc<NativePipeline>) -> EndCounterSource {
     Arc::new(move || pipeline.end_counters())
 }
 
+/// A [`ReuseStatSource`] reading the live §3.4 reuse totals of a shared
+/// native pipeline. Hand it to [`PoolConfig::reuse_source`] next to
+/// [`native_factory`].
+pub fn pipeline_reuse_source(pipeline: &Arc<NativePipeline>) -> ReuseStatSource {
+    let pipeline = Arc::clone(pipeline);
+    Arc::new(move || pipeline.reuse_totals())
+}
+
 /// Classification response with serving metadata.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -205,6 +223,7 @@ struct Shared {
     max_batch: usize,
     queue_cap: usize,
     end_source: Option<EndCounterSource>,
+    reuse_source: Option<ReuseStatSource>,
 }
 
 impl Shared {
@@ -249,6 +268,7 @@ impl WorkerPool {
             max_batch: cfg.max_batch,
             queue_cap: cfg.queue_cap.max(1),
             end_source: cfg.end_source.clone(),
+            reuse_source: cfg.reuse_source.clone(),
         });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -346,6 +366,9 @@ impl WorkerPool {
         let mut snap = self.shared.metrics.snapshot();
         if let Some(src) = &self.shared.end_source {
             snap.end_levels = src();
+        }
+        if let Some(src) = &self.shared.reuse_source {
+            (snap.fresh_pixels, snap.reused_pixels) = src();
         }
         snap
     }

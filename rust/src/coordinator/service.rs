@@ -28,7 +28,8 @@ use anyhow::{anyhow, Result};
 
 use super::pipeline::NativePipeline;
 use super::pool::{
-    artifacts_factory, native_factory, pipeline_end_source, ModelGroup, PoolConfig, WorkerPool,
+    artifacts_factory, native_factory, pipeline_end_source, pipeline_reuse_source, ModelGroup,
+    PoolConfig, WorkerPool,
 };
 pub use super::pool::Response;
 use crate::coordinator::metrics::MetricsSnapshot;
@@ -69,6 +70,10 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Computation backend (artifacts by default).
     pub backend: ServiceBackend,
+    /// §3.4 inter-tile reuse knob for the native backend (on by
+    /// default; ignored by the artifact backend). Output is
+    /// bit-identical either way — off exists for differentials.
+    pub native_reuse: bool,
 }
 
 impl Default for ServiceConfig {
@@ -80,6 +85,7 @@ impl Default for ServiceConfig {
             queue_cap: 256,
             workers: 2,
             backend: ServiceBackend::Artifacts,
+            native_reuse: true,
         }
     }
 }
@@ -122,6 +128,7 @@ impl InferenceService {
                         std::slice::from_ref(&cfg.program),
                     ),
                     end_source: None,
+                    reuse_source: None,
                 })?;
                 Ok(InferenceService { pool, group })
             }
@@ -152,7 +159,9 @@ impl InferenceService {
         seed: u64,
         cfg: &ServiceConfig,
     ) -> Result<InferenceService> {
-        let pipeline = Arc::new(NativePipeline::synthetic(net, kind, seed)?);
+        let pipeline = Arc::new(
+            NativePipeline::synthetic(net, kind, seed)?.with_reuse(cfg.native_reuse),
+        );
         let group = net.name.to_string();
         let program = format!("{group}_infer");
         let pool = WorkerPool::start(PoolConfig {
@@ -166,6 +175,7 @@ impl InferenceService {
             }],
             factory: native_factory(&pipeline),
             end_source: Some(pipeline_end_source(&pipeline)),
+            reuse_source: Some(pipeline_reuse_source(&pipeline)),
         })?;
         Ok(InferenceService { pool, group })
     }

@@ -13,5 +13,5 @@ pub mod spec;
 
 pub use alg3::{tile_size_matrix, tile_sizes, TileConfig};
 pub use alg4::{max_coverage_stride, stride_candidates, uniform_stride, UniformStride};
-pub use plan::{PyramidPlan, StridePolicy, TileRect};
+pub use plan::{FreshRegion, PyramidPlan, Redundancy, StridePolicy, TileRect};
 pub use spec::{FusedConvSpec, PoolSpec};

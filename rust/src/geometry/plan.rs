@@ -59,6 +59,65 @@ pub struct TileRect {
     pub side: usize,
 }
 
+/// The **fresh** sub-rectangle of one level's output region for one
+/// movement (§3.4): the pixels *not* already produced by the row-above
+/// `(iy−1, ix)` and left `(iy, ix−1)` movements. Fresh pixels are rows
+/// `[y0, side)` × cols `[x0, side)` of the `side × side` output region;
+/// everything above/left of them is overlap a reuse buffer can supply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FreshRegion {
+    /// First fresh output row (`out_overlap` when the row above already
+    /// produced rows `[0, y0)`; 0 on the first movement row).
+    pub y0: usize,
+    /// First fresh output column (analogous, for the left neighbour).
+    pub x0: usize,
+    /// Side of the full output region ([`PyramidPlan::out_side`]).
+    pub side: usize,
+}
+
+impl FreshRegion {
+    /// Number of fresh pixels: `(side − y0) · (side − x0)`.
+    pub fn pixels(&self) -> usize {
+        (self.side - self.y0) * (self.side - self.x0)
+    }
+
+    /// Pixels of the full output region.
+    pub fn total(&self) -> usize {
+        self.side * self.side
+    }
+
+    /// Whether nothing can be reused (first movement, or no overlap).
+    pub fn is_full(&self) -> bool {
+        self.y0 == 0 && self.x0 == 0
+    }
+}
+
+/// Plan-level accounting of recomputed output pixels
+/// ([`PyramidPlan::redundancy`]): how many feature-map pixels the
+/// movement schedule computes in total, versus how many distinct
+/// pixels exist — the paper's "redundant computations" a §3.4 reuse
+/// buffer eliminates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Redundancy {
+    /// Output pixels computed across all movements and levels (each
+    /// weighted by its level's output-map count M).
+    pub computed: u64,
+    /// Distinct output pixels produced (union over movements).
+    pub unique: u64,
+}
+
+impl Redundancy {
+    /// Recomputed (redundant) pixel evaluations.
+    pub fn reused(&self) -> u64 {
+        self.computed - self.unique
+    }
+
+    /// Fraction of all computed pixels that are redundant recompute.
+    pub fn fraction(&self) -> f64 {
+        crate::util::ratio(self.reused(), self.computed)
+    }
+}
+
 impl PyramidPlan {
     /// Build a plan for `specs` with final output region `r_out`.
     ///
@@ -270,6 +329,105 @@ impl PyramidPlan {
         self.tiles[level].saturating_sub(self.strides[level])
     }
 
+    /// Side of `level`'s **output region** per movement: the next
+    /// level's input tile (`H_{level+1}`), or `R_Q` at the final level.
+    pub fn out_side(&self, level: usize) -> usize {
+        if level + 1 < self.depth() {
+            self.tiles[level + 1]
+        } else {
+            self.r_out
+        }
+    }
+
+    /// Advance of `level`'s output region between adjacent movements,
+    /// in output-region pixels: `S^T_{level+1}` for inner levels, the
+    /// output pitch at the final level. Exact for uniform plans
+    /// ([`PyramidPlan::build`] guarantees the final division); the
+    /// conv-stride baselines get a conservative ceiling (they are
+    /// accounting-only and cannot be assembled anyway).
+    pub fn out_step(&self, level: usize) -> usize {
+        if level + 1 < self.depth() {
+            self.strides[level + 1]
+        } else {
+            let q = self.depth() - 1;
+            self.strides[q].div_ceil(self.specs[q].chain_factor())
+        }
+    }
+
+    /// Overlap between adjacent movements of `level`'s output region,
+    /// in output pixels per edge: `out_side − out_step` — the §3.4
+    /// output-pixel reuse quantity the executor's stripe buffers hold.
+    pub fn out_overlap(&self, level: usize) -> usize {
+        self.out_side(level).saturating_sub(self.out_step(level))
+    }
+
+    /// The fresh sub-rectangle of `level`'s output region for movement
+    /// `(iy, ix)`: output pixels not already produced by the `(iy−1,
+    /// ix)` and `(iy, ix−1)` movements. The row above covers output
+    /// rows `[0, out_overlap)` (every column); the left neighbour
+    /// covers columns `[0, out_overlap)` (every row) — so the fresh
+    /// set is the rectangle `[y0, side) × [x0, side)`. Row-sweep
+    /// executors that keep rows independent (the row-parallel path)
+    /// reuse only the column overlap: pass `iy = 0`.
+    pub fn fresh_region(&self, level: usize, iy: usize, ix: usize) -> FreshRegion {
+        let vo = self.out_overlap(level);
+        FreshRegion {
+            y0: if iy > 0 { vo } else { 0 },
+            x0: if ix > 0 { vo } else { 0 },
+            side: self.out_side(level),
+        }
+    }
+
+    /// Pixels of `level`'s §3.4 reuse stripe buffer: one movement's
+    /// output-overlap band, `out_overlap × out_side` pixels for each of
+    /// the level's M output maps. This is the quantity the resource
+    /// model sizes BRAM with and the executor's column-chaining stripe
+    /// actually holds — one definition, so model and executor cannot
+    /// drift.
+    pub fn reuse_buffer_pixels(&self, level: usize) -> usize {
+        self.out_overlap(level) * self.out_side(level) * self.specs[level].m_out
+    }
+
+    /// Plan-level accounting of recomputed output pixels: for every
+    /// level, the exact 1-D output ranges of its movements
+    /// ([`FusedConvSpec::output_range_for_tile`], so conv-stride
+    /// baselines with misaligned movements are counted exactly too) —
+    /// the 2-D computed total per map is `(Σ_i |R_i|)²` and the unique
+    /// total `|∪_i R_i|²` (movement regions are translates, so the 2-D
+    /// union is the product of the 1-D unions). The difference is the
+    /// §3.4 redundant recompute a reuse buffer eliminates.
+    pub fn redundancy(&self) -> Redundancy {
+        let mut red = Redundancy {
+            computed: 0,
+            unique: 0,
+        };
+        for (j, spec) in self.specs.iter().enumerate() {
+            let out_dim = spec.level_out() as i64;
+            let mut total_1d: u64 = 0;
+            let mut union_1d: u64 = 0;
+            let mut covered_hi: Option<i64> = None;
+            for i in 0..self.alphas[j] {
+                let y0 = self.starts[j] + (i * self.strides[j]) as i64;
+                let (start, count) = spec.output_range_for_tile(y0, self.tiles[j]);
+                // Clip to the real output map (overhang tiles extend past).
+                let lo = start.max(0);
+                let hi = (start + count as i64).min(out_dim);
+                if hi <= lo {
+                    continue;
+                }
+                total_1d += (hi - lo) as u64;
+                // Movement starts are monotone: union grows at the top end.
+                let prev = covered_hi.unwrap_or(lo);
+                union_1d += (hi - prev.max(lo)).max(0) as u64;
+                covered_hi = Some(prev.max(hi));
+            }
+            let m = spec.m_out as u64;
+            red.computed += total_1d * total_1d * m;
+            red.unique += union_1d * union_1d * m;
+        }
+        red
+    }
+
     /// Total operations of the fused stack (paper Eq. (2) convention).
     pub fn total_operations(&self) -> u64 {
         self.specs.iter().map(|s| s.num_operations()).sum()
@@ -409,6 +567,69 @@ mod tests {
         assert!(p.covers_output());
     }
 
+    /// §3.4 fresh-region math on the paper's worked LeNet example:
+    /// level 0's output region is the 6×6 CL2 tile advancing by 2, so
+    /// 4 of its 6 columns/rows per edge are reusable overlap; the final
+    /// 1×1 region advances by 1 and has none.
+    #[test]
+    fn lenet_fresh_region_math() {
+        let p = PyramidPlan::build(&lenet(), 1, StridePolicy::Uniform).unwrap();
+        assert_eq!((p.out_side(0), p.out_step(0), p.out_overlap(0)), (6, 2, 4));
+        assert_eq!((p.out_side(1), p.out_step(1), p.out_overlap(1)), (1, 1, 0));
+        // Corner movement: everything is fresh.
+        assert!(p.fresh_region(0, 0, 0).is_full());
+        assert_eq!(p.fresh_region(0, 0, 0).pixels(), 36);
+        // Interior movement: only the 2×2 bottom-right block is fresh.
+        let interior = p.fresh_region(0, 2, 3);
+        assert_eq!((interior.y0, interior.x0, interior.side), (4, 4, 6));
+        assert_eq!(interior.pixels(), 4);
+        assert_eq!(interior.total(), 36);
+        // First row, interior column: a 6×2 fresh stripe.
+        assert_eq!(p.fresh_region(0, 0, 1).pixels(), 12);
+        // Stripe buffer: 4 × 6 pixels × 6 maps at level 0, none at level 1.
+        assert_eq!(p.reuse_buffer_pixels(0), 4 * 6 * 6);
+        assert_eq!(p.reuse_buffer_pixels(1), 0);
+    }
+
+    /// The fresh regions of the full 2-D reuse schedule tile the swept
+    /// region exactly: per level, Σ fresh pixels over all α² movements
+    /// telescopes to `(out_side + (α−1)·out_step)²`.
+    #[test]
+    fn fresh_regions_telescope_per_level() {
+        let p = PyramidPlan::build(&lenet(), 1, StridePolicy::Uniform).unwrap();
+        let a = p.alpha();
+        for level in 0..p.depth() {
+            let sum: usize = (0..a)
+                .flat_map(|iy| (0..a).map(move |ix| (iy, ix)))
+                .map(|(iy, ix)| p.fresh_region(level, iy, ix).pixels())
+                .sum();
+            let span = p.out_side(level) + (a - 1) * p.out_step(level);
+            assert_eq!(sum, span * span, "level {level}");
+        }
+    }
+
+    /// Redundancy accounting: the uniform LeNet plan recomputes ~73% of
+    /// its output-pixel evaluations (the issue's "roughly three
+    /// quarters"), and the conv-stride baseline recomputes strictly
+    /// more — the §3.3.2 asymmetric-movement penalty, quantified.
+    #[test]
+    fn redundancy_uniform_vs_conv_stride() {
+        let uni = PyramidPlan::build(&lenet(), 1, StridePolicy::Uniform).unwrap();
+        let r = uni.redundancy();
+        // Level 0: 5 movements × 6 output rows = 30 of 14 distinct rows
+        // → per map 900 computed / 196 unique; level 1: no recompute.
+        assert_eq!(r.computed, 900 * 6 + 25 * 16);
+        assert_eq!(r.unique, 196 * 6 + 25 * 16);
+        assert!((r.fraction() - 0.728).abs() < 0.01, "{}", r.fraction());
+        let naive = PyramidPlan::build(&lenet(), 1, StridePolicy::ConvStride).unwrap();
+        assert!(
+            naive.redundancy().fraction() > r.fraction(),
+            "conv-stride {} !> uniform {}",
+            naive.redundancy().fraction(),
+            r.fraction()
+        );
+    }
+
     /// Property: for random feasible fused stacks, the uniform plan covers
     /// every output pixel and respects the coverage stride bound.
     #[test]
@@ -467,6 +688,27 @@ mod tests {
             prop_assert!(
                 p.out_pitch() * p.specs[q].chain_factor() == p.strides[q],
                 "out_pitch inconsistent: {p:?}"
+            );
+            // §3.4 fresh-region invariants on every feasible plan: the
+            // fresh rectangles tile the swept span exactly, and the
+            // redundancy accounting is conserved.
+            let a = p.alpha();
+            for level in 0..p.depth() {
+                let sum: usize = (0..a)
+                    .flat_map(|iy| (0..a).map(move |ix| (iy, ix)))
+                    .map(|(iy, ix)| p.fresh_region(level, iy, ix).pixels())
+                    .sum();
+                let span = p.out_side(level) + (a - 1) * p.out_step(level);
+                prop_assert!(
+                    sum == span * span,
+                    "fresh regions don't telescope at level {level}: {p:?}"
+                );
+            }
+            let r = p.redundancy();
+            prop_assert!(r.unique <= r.computed, "redundancy inverted: {p:?}");
+            prop_assert!(
+                (0.0..=1.0).contains(&r.fraction()),
+                "redundancy fraction out of range: {p:?}"
             );
             Ok(())
         });

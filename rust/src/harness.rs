@@ -47,11 +47,15 @@ fn fmt_dur(d: Duration) -> String {
 }
 
 /// Bench runner. Honors `USEFUSE_BENCH_FAST=1` to cut sample counts
-/// (useful in CI) and `USEFUSE_BENCH_FILTER=substr` to select benchmarks.
+/// (useful in CI), `USEFUSE_BENCH_FILTER=substr` to select benchmarks,
+/// and a `--json` binary argument (or `USEFUSE_BENCH_JSON=1`) to dump a
+/// machine-readable `BENCH_{group}.json` next to the human output —
+/// the cross-PR perf trajectory format documented in EXPERIMENTS.md.
 pub struct Bench {
     group: String,
     samples: usize,
     max_time: Duration,
+    json: bool,
     results: Vec<Measurement>,
 }
 
@@ -59,6 +63,8 @@ impl Bench {
     /// Runner for a benchmark group (honors the env vars above).
     pub fn new(group: impl Into<String>) -> Self {
         let fast = std::env::var("USEFUSE_BENCH_FAST").ok().as_deref() == Some("1");
+        let json = std::env::args().any(|a| a == "--json")
+            || std::env::var("USEFUSE_BENCH_JSON").ok().as_deref() == Some("1");
         Bench {
             group: group.into(),
             samples: if fast { 10 } else { 30 },
@@ -67,6 +73,7 @@ impl Bench {
             } else {
                 Duration::from_secs(3)
             },
+            json,
             results: Vec::new(),
         }
     }
@@ -133,6 +140,57 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Whether `--json` / `USEFUSE_BENCH_JSON=1` requested a
+    /// machine-readable dump ([`Bench::maybe_write_json`]).
+    pub fn json_enabled(&self) -> bool {
+        self.json
+    }
+
+    /// Render every measurement (+ the bench's own scalar `extras`,
+    /// e.g. reuse fractions and speedups) as the `BENCH_{group}.json`
+    /// document: `{"group", "benches": {name: {median_us, min_us,
+    /// max_us, samples}}, "extra": {key: value}}`.
+    pub fn to_json(&self, extras: &[(&str, f64)]) -> String {
+        use crate::util::json::{num, obj, s, Json};
+        let benches: Vec<(&str, Json)> = self
+            .results
+            .iter()
+            .map(|m| {
+                (
+                    m.name.as_str(),
+                    obj(vec![
+                        ("median_us", num(m.median.as_secs_f64() * 1e6)),
+                        ("min_us", num(m.min.as_secs_f64() * 1e6)),
+                        ("max_us", num(m.max.as_secs_f64() * 1e6)),
+                        ("samples", num(m.samples as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        let extra: Vec<(&str, Json)> = extras.iter().map(|(k, v)| (*k, num(*v))).collect();
+        crate::util::json::write(&obj(vec![
+            ("group", s(self.group.clone())),
+            ("benches", obj(benches)),
+            ("extra", obj(extra)),
+        ]))
+    }
+
+    /// Write `BENCH_{group}.json` into the working directory when json
+    /// mode is on; returns the written path (None when off). Benches
+    /// call this once at the end with their headline extras.
+    pub fn maybe_write_json(
+        &self,
+        extras: &[(&str, f64)],
+    ) -> std::io::Result<Option<std::path::PathBuf>> {
+        if !self.json {
+            return Ok(None);
+        }
+        let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.group));
+        std::fs::write(&path, self.to_json(extras))?;
+        println!("wrote {}", path.display());
+        Ok(Some(path))
+    }
 }
 
 /// Prevent the optimizer from eliding a computed value.
@@ -158,6 +216,44 @@ mod tests {
             .clone();
         assert!(m.samples > 0 && m.iters_per_sample > 0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    /// The `--json` dump is valid JSON carrying group, per-bench
+    /// timings and the caller's extras (the CI smoke step parses it).
+    /// The measurement is injected directly instead of going through
+    /// `bench()`: sibling tests mutate the process-wide
+    /// `USEFUSE_BENCH_FILTER` concurrently, and this test is about the
+    /// JSON shape, not the timing loop.
+    #[test]
+    fn json_dump_parses_back() {
+        let mut b = Bench::new("jsontest").samples(3);
+        b.results.push(Measurement {
+            name: "jsontest/sum".into(),
+            median: Duration::from_micros(12),
+            min: Duration::from_micros(10),
+            max: Duration::from_micros(15),
+            samples: 3,
+            iters_per_sample: 7,
+        });
+        let text = b.to_json(&[("reuse_fraction", 0.75)]);
+        let parsed = crate::util::json::parse(&text).expect("valid JSON");
+        assert_eq!(
+            parsed.get("group").and_then(|g| g.as_str()),
+            Some("jsontest")
+        );
+        let m = parsed
+            .get("benches")
+            .and_then(|bs| bs.get("jsontest/sum"))
+            .expect("bench entry");
+        assert!(m.get("median_us").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert!(m.get("samples").and_then(|v| v.as_usize()).unwrap() > 0);
+        assert_eq!(
+            parsed
+                .get("extra")
+                .and_then(|e| e.get("reuse_fraction"))
+                .and_then(|v| v.as_f64()),
+            Some(0.75)
+        );
     }
 
     #[test]

@@ -66,6 +66,15 @@ fn print_help() {
     );
 }
 
+/// Parse a `--reuse on|off` value.
+fn parse_reuse(v: &str) -> Result<bool> {
+    match v {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => bail!("--reuse takes 'on' or 'off', got '{other}'"),
+    }
+}
+
 fn cmd_plan(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "net", help: "lenet5/alexnet/vgg16/resnet18", takes_value: true, default: Some("lenet5") },
@@ -134,10 +143,12 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "what", help: "table1..table5, fig10..fig14, zoo, engines, all", takes_value: true, default: Some("all") },
         OptSpec { name: "samples", help: "END samples per filter (figs 12-14)", takes_value: true, default: Some("150") },
+        OptSpec { name: "reuse", help: "§3.4 inter-tile reuse for native runs: on or off", takes_value: true, default: Some("on") },
     ];
     let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     let what = args.get("what").unwrap().to_string();
     let samples = args.get_usize("samples").map_err(|e| anyhow!(e))?.unwrap();
+    let reuse = parse_reuse(args.get("reuse").unwrap())?;
     let m = CycleModel::default();
     let all = what == "all";
     let want = |k: &str| all || what == k;
@@ -162,8 +173,9 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         println!("{}", report::figures::table_zoo_native(8, 0x200)?.1.render());
     }
     if want("engines") {
-        // Three-way f32 / sop / sop-sliced fused-pyramid throughput.
-        println!("{}", report::figures::table_engines_native(8, 0xE6E)?.1.render());
+        // Three-way f32 / sop / sop-sliced fused-pyramid throughput,
+        // including the live §3.4 reuse fraction.
+        println!("{}", report::figures::table_engines_native(8, 0xE6E, reuse)?.1.render());
     }
     if want("fig10") {
         println!("{}", report::figures::fig10(&m).1.render());
@@ -266,6 +278,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "program", help: "artifact program (when not --native)", takes_value: true, default: Some("lenet_infer") },
         OptSpec { name: "engine", help: "native engine: f32, sop or sop-sliced", takes_value: true, default: Some("f32") },
         OptSpec { name: "bits", help: "SOP operand precision", takes_value: true, default: Some("8") },
+        OptSpec { name: "reuse", help: "§3.4 inter-tile reuse buffers: on or off (native only)", takes_value: true, default: Some("on") },
         OptSpec { name: "requests", help: "demo requests to push", takes_value: true, default: Some("16") },
         OptSpec { name: "workers", help: "worker threads", takes_value: true, default: Some("2") },
         OptSpec { name: "batch", help: "max dynamic batch", takes_value: true, default: Some("8") },
@@ -278,9 +291,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let requests = args.get_usize("requests").map_err(|e| anyhow!(e))?.unwrap();
     let workers = args.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap();
     let max_batch = args.get_usize("batch").map_err(|e| anyhow!(e))?.unwrap();
+    let reuse = parse_reuse(args.get("reuse").unwrap())?;
     let cfg = ServiceConfig {
         workers,
         max_batch,
+        native_reuse: reuse,
         ..Default::default()
     };
 
@@ -308,13 +323,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             };
             let seed = args.get_usize("seed").map_err(|e| anyhow!(e))?.unwrap() as u64;
             println!(
-                "serving {} natively ({} engine, {} conv levels, input {}×{}×{}, no artifacts)",
+                "serving {} natively ({} engine, {} conv levels, input {}×{}×{}, \
+                 §3.4 reuse {}, no artifacts)",
                 net.name,
                 kind.label(),
                 net.convs.len(),
                 net.input_dim,
                 net.input_dim,
-                net.input_ch
+                net.input_ch,
+                if reuse { "on" } else { "off" }
             );
             let svc = InferenceService::start_native(&net, kind, seed, &cfg)?;
             // Seeded demo traffic.

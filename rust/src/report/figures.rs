@@ -443,19 +443,26 @@ pub struct EngineThroughputRow {
     pub detection: f64,
     /// Total SOPs executed (0 for f32).
     pub sops: u64,
+    /// Fraction of output pixels served from §3.4 reuse buffers
+    /// instead of recomputed (0 with `--reuse off`).
+    pub reuse_fraction: f64,
 }
 
 /// **Three-way native engine throughput**: the fused LeNet pyramid
 /// executed end-to-end through every native engine — vectorized f32,
 /// scalar digit-serial SOP and the bit-sliced 64-lane SOP — with one
 /// timed run each, the verify residual against the exact f32 golden,
-/// and the live END statistics of the digit-serial engines. The last
-/// table column reports each engine's speedup over the scalar SOP
-/// engine — the bit-slicing lever `benches/fused_native.rs` measures
-/// with proper repetition (this table is a single-run snapshot).
+/// the live END statistics of the digit-serial engines, and the §3.4
+/// reuse fraction (`reuse` toggles the inter-tile reuse buffers; the
+/// output is bit-identical either way). The last table column reports
+/// each engine's speedup over the scalar SOP engine — the bit-slicing
+/// lever `benches/fused_native.rs` measures with proper repetition
+/// (this table is a single-run snapshot; the bench also measures the
+/// reuse-on vs reuse-off speedup).
 pub fn table_engines_native(
     n_bits: u32,
     seed: u64,
+    reuse: bool,
 ) -> Result<(Vec<EngineThroughputRow>, Table)> {
     let net = by_name("lenet5").expect("zoo has lenet5");
     let specs = net.paper_fusion()[0].clone();
@@ -467,7 +474,8 @@ pub fn table_engines_native(
         EngineKind::SopSliced { n_bits },
     ] {
         let (weights, biases) = random_weights(&specs, seed);
-        let exec = FusionExecutor::native("lenet5", &specs, 1, weights, biases, kind)?;
+        let exec = FusionExecutor::native("lenet5", &specs, 1, weights, biases, kind)?
+            .with_reuse(reuse);
         let (_, stats) = exec.run(&input)?;
         let rel_err = exec.verify(&input)?;
         let counters = exec.end_counters();
@@ -482,6 +490,7 @@ pub fn table_engines_native(
             rel_err,
             detection: total.detection_rate(),
             sops: total.sops,
+            reuse_fraction: stats.reuse_fraction(),
         });
     }
     let sop_us = rows
@@ -489,10 +498,11 @@ pub fn table_engines_native(
         .find(|r| r.engine == "sop")
         .map(|r| r.us_per_tile)
         .unwrap_or(0.0);
-    let mut t = Table::new(
+    let mut t = Table::new(format!(
         "Native engines — fused LeNet pyramid, f32 vs scalar SOP vs bit-sliced SOP \
-         (synthetic weights)",
-    )
+         (synthetic weights, reuse {})",
+        if reuse { "on" } else { "off" }
+    ))
     .header(&[
         "Engine",
         "Tiles",
@@ -500,6 +510,7 @@ pub fn table_engines_native(
         "Verify rel err",
         "SOPs",
         "Negative %",
+        "Reuse %",
         "Speedup vs sop",
     ]);
     for r in &rows {
@@ -510,6 +521,7 @@ pub fn table_engines_native(
             format!("{:.2e}", r.rel_err),
             r.sops.to_string(),
             format!("{:.1}", 100.0 * r.detection),
+            format!("{:.1}", 100.0 * r.reuse_fraction),
             format!("{:.2}×", sop_us / r.us_per_tile.max(1e-9)),
         ]);
     }

@@ -25,6 +25,27 @@
 //! they are handed. Tile scheduling, halo masking between levels, and
 //! output assembly stay in the coordinator's
 //! [`FusionExecutor`](crate::coordinator::FusionExecutor).
+//!
+//! ## Region-restricted evaluation and producer independence (§3.4)
+//!
+//! Every engine implements [`ComputeEngine::run_level_region`]: evaluate
+//! only a post-pool output sub-rectangle ([`OutRegion`]) of the level,
+//! writing those pixels into a caller-managed output tile. This is the
+//! compute half of the executor's inter-tile reuse: overlap pixels come
+//! from the reuse buffers, and the engine spends SOP/END work on the
+//! *fresh* pixels only.
+//!
+//! Reuse is sound only if a pixel's value does not depend on which tile
+//! computed it. The f32 path has that property for free (a conv output
+//! depends only on its own window, accumulated in a fixed order). The
+//! SOP engines earn it by quantizing **per window**: each output pixel's
+//! activation scale is the max |value| of its own K×K×N window (floored
+//! by the bias range), so the quantized operands — and therefore every
+//! digit, END decision and dequantized value — are a function of the
+//! window contents alone. A per-*tile* scale would make the same pixel
+//! quantize differently in adjacent movements, breaking the
+//! bit-identity between reuse-on and reuse-off execution that
+//! `tests/engine_equivalence.rs` pins down.
 
 use anyhow::{bail, Result};
 
@@ -151,6 +172,43 @@ impl EndCounters {
     }
 }
 
+/// A post-pool output sub-rectangle for region-restricted level
+/// evaluation: rows `[y0, y1)` × cols `[x0, x1)` of the level's
+/// `(H', W', M)` output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutRegion {
+    /// First output row (inclusive).
+    pub y0: usize,
+    /// Past-the-end output row.
+    pub y1: usize,
+    /// First output column (inclusive).
+    pub x0: usize,
+    /// Past-the-end output column.
+    pub x1: usize,
+}
+
+impl OutRegion {
+    /// The whole `h × w` output.
+    pub fn full(h: usize, w: usize) -> OutRegion {
+        OutRegion {
+            y0: 0,
+            y1: h,
+            x0: 0,
+            x1: w,
+        }
+    }
+
+    /// Whether the region contains no pixels.
+    pub fn is_empty(&self) -> bool {
+        self.y1 <= self.y0 || self.x1 <= self.x0
+    }
+
+    /// Number of output pixels in the region.
+    pub fn pixels(&self) -> usize {
+        (self.y1 - self.y0) * (self.x1 - self.x0)
+    }
+}
+
 /// A pluggable per-level tile engine: executes one fused level
 /// (convolution + bias + ReLU + optional max-pool) over a host tensor
 /// tile. Implementations are stateful (they cache per-level compiled
@@ -162,12 +220,19 @@ pub trait ComputeEngine: Send {
 
     /// Evaluate one fused level over `input` (an `(H, H, N)` tile in
     /// padded coordinates): convolution at `spec.s` with `weights`
-    /// (`(K, K, N, M)`) and `bias` (`M`), then ReLU, then the optional
-    /// pooling stage. Returns the `(H', H', M)` level output.
+    /// (`(K, K, N, M)`), then ReLU, then the optional pooling stage.
+    /// Returns the `(H', H', M)` level output.
     ///
     /// `level` identifies the pyramid level for per-level state reuse
     /// and statistics; callers must pass the same `spec`/`weights` for
     /// the same `level` across calls.
+    ///
+    /// Provided in terms of [`ComputeEngine::run_level_region`] over
+    /// the full output — the two can never drift. Engines evaluate
+    /// only conv pixels some pool window consumes (a hardware array
+    /// would too), so when the pool does not tile the conv map exactly
+    /// the trailing never-pooled conv row/column is skipped — output
+    /// values are unaffected.
     fn run_level(
         &mut self,
         level: usize,
@@ -175,7 +240,40 @@ pub trait ComputeEngine: Send {
         input: &Tensor,
         weights: &Tensor,
         bias: &[f32],
-    ) -> Result<Tensor>;
+    ) -> Result<Tensor> {
+        let (h, w) = check_level_args(spec, input, weights, bias)?;
+        let (oh, ow) = level_out_dims(spec, h, w)?;
+        let mut out = Tensor::zeros(vec![oh, ow, spec.m_out]);
+        self.run_level_region(
+            level,
+            spec,
+            input,
+            weights,
+            bias,
+            &mut out,
+            OutRegion::full(oh, ow),
+        )?;
+        Ok(out)
+    }
+
+    /// Evaluate only the `region` pixels of the level's post-pool
+    /// output, writing them into `out` (the full `(H', W', M)` output
+    /// tile, caller-managed) and leaving every other cell untouched —
+    /// the §3.4 fresh-region path. Pixel-for-pixel **bit-identical** to
+    /// a full [`ComputeEngine::run_level`]: engines only skip work, they
+    /// never change what a pixel computes. Statistics (END counters)
+    /// accumulate for the computed pixels only.
+    #[allow(clippy::too_many_arguments)]
+    fn run_level_region(
+        &mut self,
+        level: usize,
+        spec: &FusedConvSpec,
+        input: &Tensor,
+        weights: &Tensor,
+        bias: &[f32],
+        out: &mut Tensor,
+        region: OutRegion,
+    ) -> Result<()>;
 
     /// Drain the per-level END counters accumulated so far (index =
     /// pyramid level). Engines without an END unit return an empty vec.
@@ -216,6 +314,121 @@ fn check_level_args(
     Ok((h, w))
 }
 
+/// Post-pool output dimensions of one level over an `h × w` tile,
+/// failing (rather than underflowing) when the pool window exceeds the
+/// conv map.
+fn level_out_dims(spec: &FusedConvSpec, h: usize, w: usize) -> Result<(usize, usize)> {
+    let ch = (h - spec.k) / spec.s + 1;
+    let cw = (w - spec.k) / spec.s + 1;
+    match spec.pool {
+        None => Ok((ch, cw)),
+        Some(p) => {
+            if p.k == 0 || p.s == 0 {
+                bail!("{}: pool window {} / stride {} must be positive", spec.name, p.k, p.s);
+            }
+            if p.k > ch || p.k > cw {
+                bail!("{}: pool window {} exceeds conv map {ch}×{cw}", spec.name, p.k);
+            }
+            Ok(((ch - p.k) / p.s + 1, (cw - p.k) / p.s + 1))
+        }
+    }
+}
+
+/// Validate the region-restricted call: level args, output-tile shape,
+/// and region bounds. Returns the input dims.
+fn check_region_args(
+    spec: &FusedConvSpec,
+    input: &Tensor,
+    weights: &Tensor,
+    bias: &[f32],
+    out: &Tensor,
+    region: OutRegion,
+) -> Result<(usize, usize)> {
+    let (h, w) = check_level_args(spec, input, weights, bias)?;
+    let (oh, ow) = level_out_dims(spec, h, w)?;
+    if out.shape != [oh, ow, spec.m_out] {
+        bail!(
+            "{}: region output tile {:?}, want {:?}",
+            spec.name,
+            out.shape,
+            [oh, ow, spec.m_out]
+        );
+    }
+    if region.y0 > region.y1 || region.x0 > region.x1 || region.y1 > oh || region.x1 > ow {
+        bail!(
+            "{}: region {region:?} outside the {oh}×{ow} output",
+            spec.name
+        );
+    }
+    Ok((h, w))
+}
+
+/// The conv-coordinate sub-rectangle `(cy0, cy1, cx0, cx1)` needed to
+/// produce the post-pool `region`: a pooled row `py` consumes conv rows
+/// `[py·ps, py·ps + pk)`. The region must be non-empty. For a valid
+/// region the result stays inside the conv map (`(y1−1)·ps + pk ≤ ch`
+/// follows from `y1 ≤ (ch − pk)/ps + 1`).
+fn conv_rect(spec: &FusedConvSpec, region: OutRegion) -> (usize, usize, usize, usize) {
+    debug_assert!(!region.is_empty());
+    match spec.pool {
+        None => (region.y0, region.y1, region.x0, region.x1),
+        Some(p) => (
+            region.y0 * p.s,
+            (region.y1 - 1) * p.s + p.k,
+            region.x0 * p.s,
+            (region.x1 - 1) * p.s + p.k,
+        ),
+    }
+}
+
+/// Write the post-pool `region` pixels into `out` from `pre` — the
+/// ReLU'd conv values of the `conv_rect` sub-rectangle, laid out
+/// row-major as `(cy1−cy0, cx1−cx0, M)` with origin `(cy0, cx0)`. The
+/// pooling max mirrors [`Tensor::maxpool`]'s accumulation order, so
+/// restricted and full evaluations produce identical bits. Shared by
+/// all three engines — one pooling semantics.
+fn write_pooled_region(
+    spec: &FusedConvSpec,
+    pre: &[f32],
+    cy0: usize,
+    cx0: usize,
+    rw: usize,
+    out: &mut Tensor,
+    region: OutRegion,
+) {
+    let m = spec.m_out;
+    let ow = out.shape[1];
+    match spec.pool {
+        None => {
+            for py in region.y0..region.y1 {
+                for px in region.x0..region.x1 {
+                    let src = ((py - cy0) * rw + (px - cx0)) * m;
+                    let dst = (py * ow + px) * m;
+                    out.data[dst..dst + m].copy_from_slice(&pre[src..src + m]);
+                }
+            }
+        }
+        Some(p) => {
+            for py in region.y0..region.y1 {
+                for px in region.x0..region.x1 {
+                    let dst = (py * ow + px) * m;
+                    for c in 0..m {
+                        let mut mx = f32::NEG_INFINITY;
+                        for dy in 0..p.k {
+                            for dx in 0..p.k {
+                                let cy = py * p.s + dy - cy0;
+                                let cx = px * p.s + dx - cx0;
+                                mx = mx.max(pre[(cy * rw + cx) * m + c]);
+                            }
+                        }
+                        out.data[dst + c] = mx;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Valid convolution + bias of an `(H, W, N)` input with `(K, K, N, M)`
 /// weights at stride `spec.s` — the **pre-activation** map. The input is
 /// taken as already padded (executor tiles and the golden path's
@@ -227,13 +440,35 @@ pub fn conv2d(
     bias: &[f32],
 ) -> Result<Tensor> {
     let (h, w) = check_level_args(spec, input, weights, bias)?;
+    let ch = (h - spec.k) / spec.s + 1;
+    let cw = (w - spec.k) / spec.s + 1;
+    conv2d_region(spec, input, weights, bias, 0, ch, 0, cw)
+}
+
+/// The conv-coordinate sub-rectangle `[cy0, cy1) × [cx0, cx1)` of
+/// [`conv2d`], as a `(cy1−cy0, cx1−cx0, M)` tensor. One accumulation
+/// path for full and restricted evaluation: each output pixel reads
+/// only its own window in a fixed `(dy, dx, c)` order, so a pixel's f32
+/// value is independent of the rectangle (and the tile) it was computed
+/// in — the §3.4 producer-independence the reuse path relies on.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_region(
+    spec: &FusedConvSpec,
+    input: &Tensor,
+    weights: &Tensor,
+    bias: &[f32],
+    cy0: usize,
+    cy1: usize,
+    cx0: usize,
+    cx1: usize,
+) -> Result<Tensor> {
+    let (_, w) = check_level_args(spec, input, weights, bias)?;
     let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
-    let out_h = (h - k) / s + 1;
-    let out_w = (w - k) / s + 1;
-    let mut out = Tensor::zeros(vec![out_h, out_w, m]);
-    for oy in 0..out_h {
-        for ox in 0..out_w {
-            let base = (oy * out_w + ox) * m;
+    let (rh, rw) = (cy1 - cy0, cx1 - cx0);
+    let mut out = Tensor::zeros(vec![rh, rw, m]);
+    for oy in cy0..cy1 {
+        for ox in cx0..cx1 {
+            let base = ((oy - cy0) * rw + (ox - cx0)) * m;
             out.data[base..base + m].copy_from_slice(bias);
             for dy in 0..k {
                 for dx in 0..k {
@@ -266,22 +501,27 @@ impl ComputeEngine for F32Engine {
         "f32"
     }
 
-    fn run_level(
+    fn run_level_region(
         &mut self,
         _level: usize,
         spec: &FusedConvSpec,
         input: &Tensor,
         weights: &Tensor,
         bias: &[f32],
-    ) -> Result<Tensor> {
-        let mut act = conv2d(spec, input, weights, bias)?;
-        for v in act.data.iter_mut() {
+        out: &mut Tensor,
+        region: OutRegion,
+    ) -> Result<()> {
+        check_region_args(spec, input, weights, bias, out, region)?;
+        if region.is_empty() {
+            return Ok(());
+        }
+        let (cy0, cy1, cx0, cx1) = conv_rect(spec, region);
+        let mut pre = conv2d_region(spec, input, weights, bias, cy0, cy1, cx0, cx1)?;
+        for v in pre.data.iter_mut() {
             *v = v.max(0.0);
         }
-        match spec.pool {
-            Some(p) => act.maxpool(p.k, p.s),
-            None => Ok(act),
-        }
+        write_pooled_region(spec, &pre.data, cy0, cx0, cx1 - cx0, out, region);
+        Ok(())
     }
 }
 
@@ -343,11 +583,13 @@ struct SopLevel {
 
 /// The digit-serial MSDF engine: every output pixel is a bank-of-online-
 /// multipliers + adder-tree SOP with the END unit gating it, exactly the
-/// paper's WPU. Values are quantized per tile (activations share one
-/// scale; weights were scaled once per level), evaluated digit-serially,
-/// and de-quantized back to f32 — so outputs match [`F32Engine`] within
-/// the quantization bound, while per-level [`EndCounters`] record the
-/// live termination behaviour.
+/// paper's WPU. Activations are quantized **per window** (each output
+/// pixel by its own window's max; weights were scaled once per level),
+/// evaluated digit-serially, and de-quantized back to f32 — so outputs
+/// match [`F32Engine`] within the quantization bound, every pixel's
+/// value is independent of the tile that computed it (the §3.4 reuse
+/// soundness condition), and per-level [`EndCounters`] record the live
+/// termination behaviour.
 pub struct SopEngine {
     n_bits: u32,
     n_out_digits: usize,
@@ -355,6 +597,12 @@ pub struct SopEngine {
     counters: Vec<EndCounters>,
     /// Reusable quantized-window buffer.
     window: Vec<Fixed>,
+    /// Reusable raw f32 window values (gathered once per pixel while
+    /// computing the window max, then quantized from contiguous
+    /// memory — one strided input traversal instead of two).
+    raw_window: Vec<f32>,
+    /// Reusable ReLU'd conv values of the restricted sub-rectangle.
+    scratch: Vec<f32>,
 }
 
 impl SopEngine {
@@ -370,6 +618,8 @@ impl SopEngine {
             levels: Vec::new(),
             counters: Vec::new(),
             window: Vec::new(),
+            raw_window: Vec::new(),
+            scratch: Vec::new(),
         }
     }
 
@@ -398,7 +648,7 @@ impl SopEngine {
         for f in 0..m {
             quantize_filter(&mut wq, weights, spec, f, inv, self.n_bits);
             // Bias operand present from the start; its value is set per
-            // tile (the activation scale changes tile to tile).
+            // window (the activation scale changes pixel to pixel).
             pipes.push(SopPipeline::new(
                 &wq,
                 Some(Fixed::zero(self.n_bits - 1)),
@@ -414,65 +664,76 @@ impl ComputeEngine for SopEngine {
         "sop"
     }
 
-    fn run_level(
+    fn run_level_region(
         &mut self,
         level: usize,
         spec: &FusedConvSpec,
         input: &Tensor,
         weights: &Tensor,
         bias: &[f32],
-    ) -> Result<Tensor> {
-        let (h, w) = check_level_args(spec, input, weights, bias)?;
+        out: &mut Tensor,
+        region: OutRegion,
+    ) -> Result<()> {
+        let (_, w) = check_region_args(spec, input, weights, bias, out, region)?;
+        if region.is_empty() {
+            return Ok(());
+        }
         self.compile_level(level, spec, weights);
         let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
         let nb = self.n_bits;
         let st = self.levels[level].as_mut().expect("compiled above");
         let ctr = &mut self.counters[level];
 
-        // Per-tile quantization scales: activations share one scale; the
-        // bias enters each SOP as b / (act_scale · w_scale), so the
-        // activation scale is raised when needed to keep it inside the
-        // (-1, 1) operand range.
+        // Per-window quantization: each output pixel's activation scale
+        // is the max |value| of its own window, floored so the bias
+        // operand b / (act_scale · w_scale) stays inside (-1, 1). The
+        // scale — and with it every digit and the dequantized value —
+        // is a function of the window alone, never of the tile, which
+        // is what makes §3.4 overlap reuse bit-sound.
         let max_b = bias.iter().fold(0.0f32, |mb, b| mb.max(b.abs()));
-        let act_scale = input.max_abs().max(max_b / st.w_scale).max(1e-12);
-        let dequant = act_scale as f64 * st.w_scale as f64;
-        let inv_a = 1.0 / act_scale;
-        for (pipe, &b) in st.pipes.iter_mut().zip(bias) {
-            pipe.set_bias(Fixed::quantize(
-                (b / (act_scale * st.w_scale)) as f64 * 0.999,
-                nb,
-            ));
-        }
+        let bias_floor = max_b / st.w_scale;
 
-        let out_h = (h - k) / s + 1;
-        let out_w = (w - k) / s + 1;
-        let mut act = Tensor::zeros(vec![out_h, out_w, m]);
+        let (cy0, cy1, cx0, cx1) = conv_rect(spec, region);
+        let rw = cx1 - cx0;
+        self.scratch.clear();
+        self.scratch.resize((cy1 - cy0) * rw * m, 0.0);
         self.window.resize(k * k * n, Fixed::zero(nb - 1));
-        for oy in 0..out_h {
-            for ox in 0..out_w {
-                // Quantize the window once; all M filters share it.
+        self.raw_window.resize(k * k * n, 0.0);
+        for oy in cy0..cy1 {
+            for ox in cx0..cx1 {
+                // Gather the window and its own activation scale in one
+                // strided traversal.
+                let mut wmax = 0.0f32;
                 for dy in 0..k {
                     for dx in 0..k {
                         let src = ((oy * s + dy) * w + (ox * s + dx)) * n;
                         for c in 0..n {
-                            self.window[(dy * k + dx) * n + c] = Fixed::quantize(
-                                (input.data[src + c] * inv_a) as f64 * 0.999,
-                                nb,
-                            );
+                            let v = input.data[src + c];
+                            self.raw_window[(dy * k + dx) * n + c] = v;
+                            wmax = wmax.max(v.abs());
                         }
                     }
                 }
-                let base = (oy * out_w + ox) * m;
+                let act_scale = wmax.max(bias_floor).max(1e-12);
+                let dequant = act_scale as f64 * st.w_scale as f64;
+                let inv_a = 1.0 / act_scale;
+                // Quantize the window once; all M filters share it.
+                for (q, &v) in self.window.iter_mut().zip(&self.raw_window) {
+                    *q = Fixed::quantize((v * inv_a) as f64 * 0.999, nb);
+                }
+                let base = ((oy - cy0) * rw + (ox - cx0)) * m;
                 for (f, pipe) in st.pipes.iter_mut().enumerate() {
+                    pipe.set_bias(Fixed::quantize(
+                        (bias[f] / (act_scale * st.w_scale)) as f64 * 0.999,
+                        nb,
+                    ));
                     let r = pipe.run(&self.window);
-                    record_sop(ctr, &mut act.data[base + f], &r, dequant);
+                    record_sop(ctr, &mut self.scratch[base + f], &r, dequant);
                 }
             }
         }
-        match spec.pool {
-            Some(p) => act.maxpool(p.k, p.s),
-            None => Ok(act),
-        }
+        write_pooled_region(spec, &self.scratch, cy0, cx0, rw, out, region);
+        Ok(())
     }
 
     fn take_end_counters(&mut self) -> Vec<EndCounters> {
@@ -521,6 +782,14 @@ pub struct SopSlicedEngine {
     /// Reusable per-filter results of the current lane group (buffered
     /// so counters accumulate in the scalar engine's order).
     results: Vec<SlicedSopResult>,
+    /// Reusable raw f32 window values of one lane (gathered once
+    /// while computing its window max, quantized from contiguous
+    /// memory — mirrors the scalar engine's single traversal).
+    raw_window: Vec<f32>,
+    /// Reusable ReLU'd conv values of the restricted sub-rectangle.
+    scratch: Vec<f32>,
+    /// Reusable per-lane quantized bias operands of one filter.
+    lane_biases: Vec<Fixed>,
 }
 
 impl SopSlicedEngine {
@@ -537,6 +806,9 @@ impl SopSlicedEngine {
             lane_windows: Vec::new(),
             planes: Vec::new(),
             results: Vec::new(),
+            raw_window: Vec::new(),
+            scratch: Vec::new(),
+            lane_biases: Vec::new(),
         }
     }
 
@@ -575,15 +847,20 @@ impl ComputeEngine for SopSlicedEngine {
         "sop-sliced"
     }
 
-    fn run_level(
+    fn run_level_region(
         &mut self,
         level: usize,
         spec: &FusedConvSpec,
         input: &Tensor,
         weights: &Tensor,
         bias: &[f32],
-    ) -> Result<Tensor> {
-        let (h, w) = check_level_args(spec, input, weights, bias)?;
+        out: &mut Tensor,
+        region: OutRegion,
+    ) -> Result<()> {
+        let (_, w) = check_region_args(spec, input, weights, bias, out, region)?;
+        if region.is_empty() {
+            return Ok(());
+        }
         self.compile_level(level, spec, weights);
         let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
         let nb = self.n_bits;
@@ -591,32 +868,31 @@ impl ComputeEngine for SopSlicedEngine {
         let st = self.levels[level].as_mut().expect("compiled above");
         let ctr = &mut self.counters[level];
 
-        // Per-tile quantization scales — expression-identical to the
-        // scalar engine (same floats in, same Fixed operands out).
+        // Per-window quantization, expression-identical to the scalar
+        // engine: every lane (= output pixel) carries its own
+        // activation scale, dequant factor and bias operand.
         let max_b = bias.iter().fold(0.0f32, |mb, b| mb.max(b.abs()));
-        let act_scale = input.max_abs().max(max_b / st.w_scale).max(1e-12);
-        let dequant = act_scale as f64 * st.w_scale as f64;
-        let inv_a = 1.0 / act_scale;
-        for (pipe, &b) in st.pipes.iter_mut().zip(bias) {
-            pipe.set_bias(Fixed::quantize(
-                (b / (act_scale * st.w_scale)) as f64 * 0.999,
-                nb,
-            ));
-        }
+        let bias_floor = max_b / st.w_scale;
 
-        let out_h = (h - k) / s + 1;
-        let out_w = (w - k) / s + 1;
-        let pixels = out_h * out_w;
+        let (cy0, cy1, cx0, cx1) = conv_rect(spec, region);
+        let rw = cx1 - cx0;
+        let pixels = (cy1 - cy0) * rw;
         let win = k * k * n;
-        let mut act = Tensor::zeros(vec![out_h, out_w, m]);
+        self.scratch.clear();
+        self.scratch.resize(pixels * m, 0.0);
         self.lane_windows.resize(win * LANES, Fixed::zero(nb - 1));
         self.planes.resize(win * frac, DigitPlane::ZERO);
         self.results.resize_with(m, SlicedSopResult::empty);
+        self.raw_window.resize(win, 0.0);
+        self.lane_biases.resize(LANES, Fixed::zero(nb - 1));
+        let mut lane_scale = [0.0f32; LANES];
+        let mut lane_dequant = [0.0f64; LANES];
 
         let mut start = 0usize;
         while start < pixels {
-            // Gather the next ≤64 output pixels (row-major, the scalar
-            // engine's pixel order) into the lane-group buffers.
+            // Gather the next ≤64 fresh pixels of the conv sub-rect
+            // (row-major, the scalar engine's pixel order) into the
+            // lane-group buffers, each quantized by its own window max.
             let lanes_n = LANES.min(pixels - start);
             let active = if lanes_n == LANES {
                 u64::MAX
@@ -625,18 +901,25 @@ impl ComputeEngine for SopSlicedEngine {
             };
             for lane in 0..lanes_n {
                 let p = start + lane;
-                let (oy, ox) = (p / out_w, p % out_w);
+                let (oy, ox) = (cy0 + p / rw, cx0 + p % rw);
+                let mut wmax = 0.0f32;
                 for dy in 0..k {
                     for dx in 0..k {
                         let src = ((oy * s + dy) * w + (ox * s + dx)) * n;
                         for c in 0..n {
-                            self.lane_windows[((dy * k + dx) * n + c) * LANES + lane] =
-                                Fixed::quantize(
-                                    (input.data[src + c] * inv_a) as f64 * 0.999,
-                                    nb,
-                                );
+                            let v = input.data[src + c];
+                            self.raw_window[(dy * k + dx) * n + c] = v;
+                            wmax = wmax.max(v.abs());
                         }
                     }
+                }
+                let act_scale = wmax.max(bias_floor).max(1e-12);
+                lane_scale[lane] = act_scale;
+                lane_dequant[lane] = act_scale as f64 * st.w_scale as f64;
+                let inv_a = 1.0 / act_scale;
+                for (i, &v) in self.raw_window.iter().enumerate() {
+                    self.lane_windows[i * LANES + lane] =
+                        Fixed::quantize((v * inv_a) as f64 * 0.999, nb);
                 }
             }
             for i in 0..win {
@@ -647,8 +930,16 @@ impl ComputeEngine for SopSlicedEngine {
                 );
             }
             // One 64-wide run per filter; all filters share the group's
-            // transposed windows.
+            // transposed windows, each filter re-steers the per-lane
+            // bias operands for the lanes' own scales.
             for (f, pipe) in st.pipes.iter_mut().enumerate() {
+                for lane in 0..lanes_n {
+                    self.lane_biases[lane] = Fixed::quantize(
+                        (bias[f] / (lane_scale[lane] * st.w_scale)) as f64 * 0.999,
+                        nb,
+                    );
+                }
+                pipe.set_lane_biases(&self.lane_biases[..lanes_n]);
                 self.results[f] = pipe.run(&self.planes, frac as u32, active);
             }
             // Replay the accounting in the scalar engine's order
@@ -658,15 +949,13 @@ impl ComputeEngine for SopSlicedEngine {
                 let base = (start + lane) * m;
                 for (f, res) in self.results.iter().enumerate() {
                     let r = res.lane(lane);
-                    record_sop(ctr, &mut act.data[base + f], &r, dequant);
+                    record_sop(ctr, &mut self.scratch[base + f], &r, lane_dequant[lane]);
                 }
             }
             start += lanes_n;
         }
-        match spec.pool {
-            Some(p) => act.maxpool(p.k, p.s),
-            None => Ok(act),
-        }
+        write_pooled_region(spec, &self.scratch, cy0, cx0, rw, out, region);
+        Ok(())
     }
 
     fn take_end_counters(&mut self) -> Vec<EndCounters> {
@@ -851,6 +1140,114 @@ mod tests {
                 "dim {dim} n_bits {n_bits}"
             );
         }
+    }
+
+    /// Region-restricted evaluation is pixel-for-pixel bit-identical to
+    /// the full run for all three engines (with and without pooling),
+    /// touches nothing outside the region, and the SOP engine's
+    /// counters cover exactly the restricted conv pixels.
+    #[test]
+    fn region_restricted_matches_full_run() {
+        let mut rng = Rng::new(31);
+        for pool in [None, Some((2usize, 2usize))] {
+            let sp = spec(3, 1, 2, 3, pool);
+            let input = random_tensor(vec![9, 9, 2], &mut rng, 1.0).relu();
+            let weights = random_tensor(vec![3, 3, 2, 3], &mut rng, 0.3);
+            let bias = vec![0.04, -0.06, 0.02];
+            for kind in [
+                EngineKind::F32,
+                EngineKind::Sop { n_bits: 8 },
+                EngineKind::SopSliced { n_bits: 8 },
+            ] {
+                let mut full_e = kind.build();
+                let full = full_e
+                    .run_level(0, &sp, &input, &weights, &bias)
+                    .expect("full run");
+                let (oh, ow) = (full.shape[0], full.shape[1]);
+                let region = OutRegion {
+                    y0: 1,
+                    y1: oh,
+                    x0: 2,
+                    x1: ow,
+                };
+                let mut part_e = kind.build();
+                let mut got = Tensor::zeros(full.shape.clone());
+                part_e
+                    .run_level_region(0, &sp, &input, &weights, &bias, &mut got, region)
+                    .expect("region run");
+                for y in 0..oh {
+                    for x in 0..ow {
+                        for c in 0..3 {
+                            let want = if y >= 1 && x >= 2 { full.at3(y, x, c) } else { 0.0 };
+                            assert_eq!(
+                                got.at3(y, x, c).to_bits(),
+                                want.to_bits(),
+                                "{} pool {pool:?} at ({y},{x},{c})",
+                                kind.label()
+                            );
+                        }
+                    }
+                }
+                // Counter accounting covers only the restricted conv
+                // pixels (× filters).
+                let counters = part_e.take_end_counters();
+                if kind != EngineKind::F32 {
+                    let (pk, ps) = pool.unwrap_or((1, 1));
+                    let ch = 9 - 3 + 1;
+                    let (cy0, cx0) = (region.y0 * ps, region.x0 * ps);
+                    let (cy1, cx1) = if pool.is_some() {
+                        ((region.y1 - 1) * ps + pk, (region.x1 - 1) * ps + pk)
+                    } else {
+                        (region.y1, region.x1)
+                    };
+                    assert!(cy1 <= ch && cx1 <= ch);
+                    let want = ((cy1 - cy0) * (cx1 - cx0) * 3) as u64;
+                    assert_eq!(counters[0].sops, want, "{} pool {pool:?}", kind.label());
+                }
+                // An empty region is a no-op.
+                let mut untouched = Tensor::zeros(full.shape.clone());
+                kind.build()
+                    .run_level_region(
+                        0,
+                        &sp,
+                        &input,
+                        &weights,
+                        &bias,
+                        &mut untouched,
+                        OutRegion {
+                            y0: 1,
+                            y1: 1,
+                            x0: 0,
+                            x1: ow,
+                        },
+                    )
+                    .expect("empty region");
+                assert!(untouched.data.iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    /// Region calls validate the output tile and region bounds.
+    #[test]
+    fn region_rejects_bad_out_and_bounds() {
+        let sp = spec(3, 1, 1, 2, None);
+        let input = Tensor::zeros(vec![6, 6, 1]);
+        let weights = Tensor::zeros(vec![3, 3, 1, 2]);
+        let mut wrong = Tensor::zeros(vec![3, 3, 2]); // want 4×4×2
+        let mut f32e = F32Engine;
+        assert!(f32e
+            .run_level_region(0, &sp, &input, &weights, &[0.0; 2], &mut wrong, OutRegion::full(3, 3))
+            .is_err());
+        let mut ok = Tensor::zeros(vec![4, 4, 2]);
+        let bad = OutRegion {
+            y0: 0,
+            y1: 5,
+            x0: 0,
+            x1: 4,
+        };
+        assert!(f32e
+            .run_level_region(0, &sp, &input, &weights, &[0.0; 2], &mut ok, bad)
+            .is_err());
     }
 
     /// All-negative pre-activations terminate (and produce exact zeros).

@@ -14,6 +14,8 @@ pub mod manifest;
 pub mod tensor;
 
 pub use client::{batched_suffix, HostFn, Program, Runtime, StackedRun};
-pub use engine::{ComputeEngine, EndCounters, EngineKind, F32Engine, SopEngine, SopSlicedEngine};
+pub use engine::{
+    ComputeEngine, EndCounters, EngineKind, F32Engine, OutRegion, SopEngine, SopSlicedEngine,
+};
 pub use manifest::{BlobMeta, DType, GeometryMeta, Manifest, ProgramMeta, TensorMeta};
 pub use tensor::Tensor;

@@ -186,6 +186,77 @@ impl Tensor {
         Ok(())
     }
 
+    /// Copy a `h × w` spatial sub-rectangle (all channels) from `src`
+    /// at `(sy, sx)` into `self` at `(dy, dx)` — the executor's
+    /// reuse-stripe stitching primitive. Both tensors must be (H, W, C)
+    /// with equal channel counts, and the rectangles must lie fully in
+    /// bounds (stitching coordinates are exact by construction; a silent
+    /// clip would hide a schedule bug).
+    #[allow(clippy::too_many_arguments)]
+    pub fn copy_region_from(
+        &mut self,
+        src: &Tensor,
+        sy: usize,
+        sx: usize,
+        h: usize,
+        w: usize,
+        dy: usize,
+        dx: usize,
+    ) -> Result<()> {
+        if self.shape.len() != 3 || src.shape.len() != 3 || self.shape[2] != src.shape[2] {
+            bail!(
+                "copy_region_from shape mismatch {:?} <- {:?}",
+                self.shape,
+                src.shape
+            );
+        }
+        let c = self.shape[2];
+        if sy + h > src.shape[0] || sx + w > src.shape[1] {
+            bail!(
+                "copy_region_from: src rect ({sy},{sx})+{h}×{w} outside {:?}",
+                src.shape
+            );
+        }
+        if dy + h > self.shape[0] || dx + w > self.shape[1] {
+            bail!(
+                "copy_region_from: dst rect ({dy},{dx})+{h}×{w} outside {:?}",
+                self.shape
+            );
+        }
+        let (sw, dw) = (src.shape[1], self.shape[1]);
+        for y in 0..h {
+            let s0 = ((sy + y) * sw + sx) * c;
+            let d0 = ((dy + y) * dw + dx) * c;
+            self.data[d0..d0 + w * c].copy_from_slice(&src.data[s0..s0 + w * c]);
+        }
+        Ok(())
+    }
+
+    /// Shift an (H, W, C) tensor `cols` columns to the left in place:
+    /// column `x` receives the old column `x + cols` for
+    /// `x < W − cols`; the rightmost `cols` columns keep their stale
+    /// values (the caller overwrites them — this is the executor's
+    /// reuse-stripe advance between adjacent movements).
+    pub fn shift_cols_left(&mut self, cols: usize) -> Result<()> {
+        if self.shape.len() != 3 {
+            bail!("shift_cols_left wants (H, W, C), got {:?}", self.shape);
+        }
+        let (h, w, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        if cols > w {
+            bail!("shift_cols_left: shift {cols} exceeds width {w}");
+        }
+        if cols == 0 || cols == w {
+            return Ok(());
+        }
+        for y in 0..h {
+            let row = y * w * c;
+            // Forward overlapping copy: the destination starts before
+            // the source, which copy_within handles (memmove).
+            self.data.copy_within(row + cols * c..row + w * c, row);
+        }
+        Ok(())
+    }
+
     /// Elementwise ReLU.
     pub fn relu(&self) -> Tensor {
         Tensor {
@@ -457,6 +528,48 @@ mod tests {
         assert_eq!(dst.at3(2, 2, 0), 0.0); // src[0,0]
         dst.place_window(&src, -1, -1).unwrap();
         assert_eq!(dst.at3(0, 0, 0), 3.0); // src[1,1]
+    }
+
+    #[test]
+    fn copy_region_roundtrips_and_checks_bounds() {
+        let src = seq(vec![4, 5, 2]);
+        let mut dst = Tensor::zeros(vec![3, 3, 2]);
+        // Copy src rows [1,3) × cols [2,4) into dst at (0, 1).
+        dst.copy_region_from(&src, 1, 2, 2, 2, 0, 1).unwrap();
+        for y in 0..2 {
+            for x in 0..2 {
+                for c in 0..2 {
+                    assert_eq!(dst.at3(y, 1 + x, c), src.at3(1 + y, 2 + x, c));
+                }
+            }
+        }
+        // Untouched cells stay zero.
+        assert_eq!(dst.at3(2, 2, 0), 0.0);
+        // Out-of-bounds rectangles fail loudly instead of clipping.
+        assert!(dst.copy_region_from(&src, 3, 0, 2, 2, 0, 0).is_err());
+        assert!(dst.copy_region_from(&src, 0, 0, 2, 2, 2, 0).is_err());
+        // Channel mismatch is a shape error.
+        let other = seq(vec![4, 4, 1]);
+        assert!(dst.copy_region_from(&other, 0, 0, 1, 1, 0, 0).is_err());
+    }
+
+    #[test]
+    fn shift_cols_left_moves_the_kept_columns() {
+        let mut t = seq(vec![2, 4, 1]);
+        let orig = t.clone();
+        t.shift_cols_left(3).unwrap();
+        // Column x now holds old column x + 3 for x < 1.
+        for y in 0..2 {
+            assert_eq!(t.at3(y, 0, 0), orig.at3(y, 3, 0));
+        }
+        // Shift by 0 and by the full width are identities.
+        let mut u = seq(vec![2, 3, 2]);
+        let keep = u.clone();
+        u.shift_cols_left(0).unwrap();
+        assert_eq!(u, keep);
+        u.shift_cols_left(3).unwrap();
+        assert_eq!(u, keep);
+        assert!(u.shift_cols_left(4).is_err());
     }
 
     #[test]

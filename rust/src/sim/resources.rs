@@ -145,19 +145,21 @@ impl ResourceModel {
             let input = 2.0 * (h * h * spec.n_in) as f64 * bytes_per;
             let filters = (spec.k * spec.k * spec.n_in * spec.m_out) as f64 * bytes_per;
             bram_bytes += input + filters;
-            let conv_region = ((h - spec.k) / spec.s + 1) as f64;
             match arith {
                 // Conventional: full-precision intermediate tile buffer
                 // per level (the next level cannot consume digits early).
                 Arith::Conventional => {
+                    let conv_region = ((h - spec.k) / spec.s + 1) as f64;
                     bram_bytes +=
                         conv_region * conv_region * spec.m_out as f64 * (2.0 * nf / 8.0);
                 }
-                // Online: only the overlap-reuse pixels are buffered
-                // (output pixel reuse instead of recompute, §3.4).
+                // Online: only the §3.4 output-pixel reuse stripe is
+                // buffered (out_overlap × out_side × M per level) —
+                // the *same* quantity the executor's stripe buffers
+                // hold ([`PyramidPlan::reuse_buffer_pixels`]), so the
+                // resource model and the executor cannot drift.
                 Arith::Online => {
-                    let overlap = plan.overlap(q) as f64;
-                    bram_bytes += overlap * conv_region * spec.m_out as f64 * bytes_per;
+                    bram_bytes += plan.reuse_buffer_pixels(q) as f64 * bytes_per;
                 }
             }
         }
@@ -218,6 +220,26 @@ mod tests {
         let cv = m.resources(&p, Arith::Conventional, Pattern::Spatial, 8);
         // Small net: within a few blocks of each other (paper: 3 vs 2).
         assert!((on.bram36 - cv.bram36).abs() <= 4.0, "{on:?} vs {cv:?}");
+    }
+
+    /// The online design's reuse-buffer BRAM is tied to the plan's
+    /// §3.4 stripe math (`reuse_buffer_pixels`), not an independent
+    /// in-module estimate: shrinking the stripe (a plan with zero
+    /// overlap) must shrink the model's BRAM bytes accordingly.
+    #[test]
+    fn online_reuse_buffers_follow_the_plan_stripe() {
+        let p = plan(&lenet5());
+        // LeNet stripe: level 0 is 4 × 6 px × 6 maps, level 1 has no
+        // overlap — the exact buffers the executor allocates.
+        assert_eq!(p.reuse_buffer_pixels(0), 144);
+        assert_eq!(p.reuse_buffer_pixels(1), 0);
+        let m = ResourceModel::default();
+        let on = m.resources(&p, Arith::Online, Pattern::Spatial, 8);
+        let cv = m.resources(&p, Arith::Conventional, Pattern::Spatial, 8);
+        // Online buffers strictly less than the conventional
+        // full-precision intermediate tiles on LeNet too (the blocks
+        // round to within a few of each other, but the bytes do not).
+        assert!(on.bram36 <= cv.bram36, "{on:?} vs {cv:?}");
     }
 
     #[test]

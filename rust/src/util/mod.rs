@@ -11,3 +11,15 @@ pub mod prop;
 pub mod rng;
 /// Monospace table rendering for reports.
 pub mod table;
+
+/// Zero-guarded ratio `part / total` (0.0 when `total` is 0) — the one
+/// definition behind every reuse/redundancy fraction in the crate
+/// (exec stats, serving metrics, plan accounting), so the empty-case
+/// convention cannot drift between them.
+pub fn ratio(part: u64, total: u64) -> f64 {
+    if total == 0 {
+        0.0
+    } else {
+        part as f64 / total as f64
+    }
+}

@@ -11,12 +11,21 @@
 //! - whole fused pyramids (serial and parallel movement execution);
 //! - whole networks end-to-end through `NativePipeline` (chained
 //!   pyramids, shortcuts, classifier head).
+//!
+//! It is also the acceptance gate of the §3.4 **inter-tile reuse**
+//! path: for random feasible stacks and all three engines, reuse-on
+//! execution must be *bit-identical* to reuse-off (serial full-2-D
+//! reuse and row-parallel column reuse alike), END counters must
+//! conserve, and the fresh/reused output-pixel accounting must balance
+//! — plus a fixed reuse differential over every zoo-miniature pipeline.
 
 use usefuse::coordinator::{FusionExecutor, NativePipeline};
-use usefuse::geometry::FusedConvSpec;
+use usefuse::geometry::{FusedConvSpec, PoolSpec, PyramidPlan, StridePolicy};
 use usefuse::nets;
+use usefuse::prop_assert;
 use usefuse::runtime::engine::{ComputeEngine, EndCounters, EngineKind};
 use usefuse::runtime::{SopEngine, SopSlicedEngine, Tensor};
+use usefuse::util::prop::prop_check;
 use usefuse::util::rng::Rng;
 
 /// Random non-negative activation tile of the given shape (post-ReLU
@@ -193,6 +202,162 @@ fn zoo_pipelines_are_bit_identical_end_to_end() {
             "{name}: counter accounting"
         );
     }
+}
+
+/// §3.4 reuse-equivalence property — the `random_stacks_cover_output`
+/// generator extended into execution: for random feasible fused stacks
+/// and **all three engines**, reuse-on output is bit-identical to
+/// reuse-off, both for the serial (full 2-D reuse) and the
+/// row-parallel (column reuse) schedules; END counters conserve
+/// (`terminated + undetermined ≤ total`); and
+/// `fresh + reused == total` output pixels, with `reused > 0` on every
+/// multi-movement plan that has overlap.
+#[test]
+fn reuse_equivalence_on_random_stacks() {
+    prop_check("reuse-on ≡ reuse-off on random fused stacks", 6, |g| {
+        let q = g.usize(1, 2);
+        let mut specs = Vec::new();
+        let mut ifm = g.usize(8, 12);
+        let mut n_in = g.usize(1, 2);
+        for j in 0..q {
+            let k = *g.pick(&[1usize, 3]);
+            let pad = if k == 3 && g.bool() { 1 } else { 0 };
+            let spec = FusedConvSpec {
+                name: format!("L{j}"),
+                k,
+                s: 1,
+                pad,
+                pool: g.bool().then_some(PoolSpec { k: 2, s: 2 }),
+                n_in,
+                m_out: g.usize(1, 2),
+                ifm,
+            };
+            if spec.ifm_padded() < spec.k {
+                return Ok(());
+            }
+            if let Some(p) = spec.pool {
+                if spec.conv_out() < p.k {
+                    return Ok(());
+                }
+            }
+            if spec.level_out() < 2 {
+                return Ok(());
+            }
+            ifm = spec.level_out();
+            n_in = spec.m_out;
+            specs.push(spec);
+        }
+        if PyramidPlan::build(&specs, 1, StridePolicy::Uniform).is_none() {
+            return Ok(()); // infeasible geometry: nothing to compare
+        }
+        let seed = g.usize(0, 1 << 20) as u64;
+        let input = nets::random_input(&specs[0], seed ^ 0xA5A5);
+        for kind in [
+            EngineKind::F32,
+            EngineKind::Sop { n_bits: 8 },
+            EngineKind::SopSliced { n_bits: 8 },
+        ] {
+            let build = |reuse: bool| {
+                let (weights, biases) = nets::random_weights(&specs, seed);
+                FusionExecutor::native("prop", &specs, 1, weights, biases, kind)
+                    .expect("plan exists")
+                    .with_reuse(reuse)
+            };
+            let on = build(true);
+            let off = build(false);
+            let (a, sa) = on.run(&input).expect("reuse-on run");
+            let (b, sb) = off.run(&input).expect("reuse-off run");
+            prop_assert!(
+                a.data == b.data,
+                "{}: reuse-on != reuse-off (serial) on {specs:?}",
+                kind.label()
+            );
+            let (ap, sap) = on.run_parallel(&input, 3).expect("reuse-on parallel");
+            prop_assert!(
+                ap.data == a.data,
+                "{}: parallel reuse != serial on {specs:?}",
+                kind.label()
+            );
+            // Pixel accounting balances in every mode.
+            let plan = &on.plan;
+            let a2 = (plan.alpha() * plan.alpha()) as u64;
+            let total: u64 = (0..plan.depth())
+                .map(|j| (plan.out_side(j) * plan.out_side(j)) as u64)
+                .sum::<u64>()
+                * a2;
+            prop_assert!(
+                sa.fresh_pixels + sa.reused_pixels == total,
+                "{}: serial accounting {} + {} != {total}",
+                kind.label(),
+                sa.fresh_pixels,
+                sa.reused_pixels
+            );
+            prop_assert!(
+                sap.fresh_pixels + sap.reused_pixels == total,
+                "{}: parallel accounting broken",
+                kind.label()
+            );
+            prop_assert!(
+                sb.fresh_pixels == total && sb.reused_pixels == 0,
+                "{}: reuse-off accounting broken",
+                kind.label()
+            );
+            let has_overlap = (0..plan.depth()).any(|j| plan.out_overlap(j) > 0);
+            if plan.alpha() > 1 && has_overlap {
+                prop_assert!(
+                    sa.reused_pixels > 0,
+                    "{}: multi-movement plan with overlap reused nothing",
+                    kind.label()
+                );
+            }
+            // END counters conserve under reuse.
+            for (j, c) in on.end_counters().iter().enumerate() {
+                prop_assert!(
+                    c.terminated + c.undetermined <= c.sops,
+                    "{} level {j}: counter conservation",
+                    kind.label()
+                );
+                prop_assert!(
+                    c.terminated + c.positive + c.undetermined == c.sops,
+                    "{} level {j}: counter partition",
+                    kind.label()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Fixed zoo-miniature reuse differential: every tiny network through
+/// `NativePipeline` with §3.4 reuse on vs off (SOP engine) produces
+/// bit-identical features and logits; the output-pixel accounting is
+/// conserved across the knob, and the reuse path actually reuses.
+#[test]
+fn zoo_pipelines_reuse_on_matches_reuse_off() {
+    let mut any_reused = false;
+    for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
+        let net = nets::tiny(name).expect("tiny preset");
+        let kind = EngineKind::Sop { n_bits: 8 };
+        let on = NativePipeline::synthetic(&net, kind, 0x51).expect("reuse-on pipeline");
+        let off = NativePipeline::synthetic(&net, kind, 0x51)
+            .expect("reuse-off pipeline")
+            .with_reuse(false);
+        let img = nets::random_input(&net.convs[0], 0x1A);
+        let a = on.infer(&img).expect("reuse-on infer");
+        let b = off.infer(&img).expect("reuse-off infer");
+        assert_eq!(a.features.data, b.features.data, "{name}: features differ");
+        assert_eq!(a.logits.data, b.logits.data, "{name}: logits differ");
+        assert_eq!(a.class, b.class, "{name}: class differs");
+        let (f_on, r_on) = on.reuse_totals();
+        let (f_off, r_off) = off.reuse_totals();
+        assert_eq!(r_off, 0, "{name}: reuse-off reused pixels");
+        assert_eq!(f_on + r_on, f_off, "{name}: pixel accounting drifted");
+        any_reused |= r_on > 0;
+    }
+    assert!(
+        any_reused,
+        "no zoo miniature reused a single pixel — reuse is dead"
+    );
 }
 
 /// The sliced engine is still an engine: its output obeys the same

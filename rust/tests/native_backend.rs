@@ -7,6 +7,9 @@
 //!   for both the f32 and the digit-serial SOP engine;
 //! - the SOP engine's live END counters are consistent;
 //! - parallel execution is identical to serial for both engines;
+//! - §3.4 inter-tile reuse shrinks the SOP/END counters and the
+//!   off-chip input traffic by exactly the reused amounts while the
+//!   output stays bit-identical (the paper's LeNet numbers, pinned);
 //! - property: SOP ≈ F32 on random small fused stacks within the
 //!   quantization bound.
 
@@ -18,14 +21,18 @@ use usefuse::runtime::EngineKind;
 use usefuse::util::prop::prop_check;
 
 /// The paper's fused LeNet stack (CONV1+POOL1, CONV2+POOL2) with seeded
-/// synthetic parameters and input.
+/// synthetic parameters and input. `reuse` sets the §3.4 inter-tile
+/// reuse knob (output is bit-identical either way; only the amount of
+/// engine work differs).
 fn lenet_native(
     kind: EngineKind,
+    reuse: bool,
 ) -> (FusionExecutor<'static>, usefuse::runtime::Tensor) {
     let specs = nets::lenet5().paper_fusion()[0].clone();
     let (weights, biases) = nets::random_weights(&specs, 41);
     let exec = FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
-        .expect("uniform LeNet plan");
+        .expect("uniform LeNet plan")
+        .with_reuse(reuse);
     let input = nets::random_input(&specs[0], 42);
     (exec, input)
 }
@@ -35,7 +42,7 @@ fn lenet_native(
 /// full-map golden (same summation order, same windows).
 #[test]
 fn lenet_f32_engine_verifies_without_artifacts() {
-    let (exec, input) = lenet_native(EngineKind::F32);
+    let (exec, input) = lenet_native(EngineKind::F32, true);
     assert_eq!(exec.engine_kind(), Some(EngineKind::F32));
     assert_eq!(exec.output_shape(), vec![5, 5, 16]);
     let rel = exec.verify(&input).expect("verify");
@@ -50,7 +57,7 @@ fn lenet_f32_engine_verifies_without_artifacts() {
 /// for every SOP of every tile movement.
 #[test]
 fn lenet_sop_engine_verifies_without_artifacts() {
-    let (exec, input) = lenet_native(EngineKind::Sop { n_bits: 12 });
+    let (exec, input) = lenet_native(EngineKind::Sop { n_bits: 12 }, false);
     let rel = exec.verify(&input).expect("verify");
     assert!(rel < 0.05, "SOP engine outside quantization bound: {rel}");
 
@@ -85,7 +92,7 @@ fn lenet_sop_engine_verifies_without_artifacts() {
 #[test]
 fn native_parallel_matches_serial() {
     for kind in [EngineKind::F32, EngineKind::Sop { n_bits: 8 }] {
-        let (exec, input) = lenet_native(kind);
+        let (exec, input) = lenet_native(kind, true);
         let (serial, s_stats) = exec.run(&input).expect("serial");
         let (parallel, p_stats) = exec.run_parallel(&input, 4).expect("parallel");
         assert_eq!(serial.data, parallel.data, "engine {:?}", kind);
@@ -97,7 +104,7 @@ fn native_parallel_matches_serial() {
 /// parallel worker: two runs double every count.
 #[test]
 fn end_counters_accumulate_across_runs() {
-    let (exec, input) = lenet_native(EngineKind::Sop { n_bits: 8 });
+    let (exec, input) = lenet_native(EngineKind::Sop { n_bits: 8 }, false);
     exec.run(&input).expect("run 1");
     let after_one = exec.end_counters();
     exec.run_parallel(&input, 3).expect("run 2");
@@ -107,6 +114,71 @@ fn end_counters_accumulate_across_runs() {
         assert_eq!(2 * a.terminated, b.terminated);
         assert_eq!(2 * a.executed_digits, b.executed_digits);
     }
+}
+
+/// §3.4 reuse on the fused LeNet pyramid, serial schedule: the exact
+/// movement arithmetic of the paper's worked example. Level 0's 6×6
+/// output regions advance by 2, so a full-2-D-reuse sweep computes
+/// only 784 of the 3600 level-0 conv pixels (the issue's "roughly
+/// three quarters redundant"); level 1 (1×1 regions at pitch 1) has no
+/// overlap. Output bits, fresh/reused pixel accounting, SOP counters
+/// and off-chip input bytes are all pinned.
+#[test]
+fn reuse_shrinks_work_by_exactly_the_overlap() {
+    let (exec_on, input) = lenet_native(EngineKind::Sop { n_bits: 8 }, true);
+    let (exec_off, _) = lenet_native(EngineKind::Sop { n_bits: 8 }, false);
+    assert!(exec_on.reuse_enabled() && !exec_off.reuse_enabled());
+
+    let (a, s_on) = exec_on.run(&input).expect("reuse-on run");
+    let (b, s_off) = exec_off.run(&input).expect("reuse-off run");
+    assert_eq!(a.data, b.data, "reuse-on output is not bit-identical");
+
+    // Output-pixel accounting: 25 movements × (36 + 1) output pixels.
+    // Full 2-D reuse leaves (6 + 4·2)² = 196 fresh level-0 pixels plus
+    // 25 fresh level-1 pixels.
+    assert_eq!(s_off.fresh_pixels, 925);
+    assert_eq!(s_off.reused_pixels, 0);
+    assert_eq!(s_on.fresh_pixels, 196 + 25);
+    assert_eq!(s_on.reused_pixels, 925 - 221);
+    assert!((s_on.reuse_fraction() - 704.0 / 925.0).abs() < 1e-12);
+
+    // SOP counters shrink by exactly the reused conv pixels: level 0
+    // computes (12 + 4·4)² = 784 of 25·144 conv pixels, level 1 is
+    // all-fresh.
+    let (c_on, c_off) = (exec_on.end_counters(), exec_off.end_counters());
+    assert_eq!(c_off[0].sops, 25 * 12 * 12 * 6);
+    assert_eq!(c_on[0].sops, 784 * 6);
+    assert_eq!(c_on[1].sops, 25 * 2 * 2 * 16);
+    assert_eq!(c_on[1].sops, c_off[1].sops);
+
+    // Off-chip input traffic: only (16 + 4·4)² = 1024 of the 25·256
+    // fetched tile pixels are fresh under reuse.
+    assert_eq!(s_off.input_fresh_bytes, 25 * 256 * 4);
+    assert_eq!(s_off.input_halo_bytes, 0);
+    assert_eq!(s_on.input_fresh_bytes, 1024 * 4);
+    assert_eq!(s_on.input_halo_bytes, (25 * 256 - 1024) * 4);
+    assert_eq!(s_on.input_bytes, s_off.input_bytes);
+}
+
+/// The row-parallel schedule keeps rows independent, so it reuses the
+/// column overlap only: still bit-identical, with a smaller (but
+/// exactly accounted) reused-pixel count.
+#[test]
+fn parallel_reuse_is_column_only_and_bit_identical() {
+    let (exec_on, input) = lenet_native(EngineKind::Sop { n_bits: 8 }, true);
+    let (exec_off, _) = lenet_native(EngineKind::Sop { n_bits: 8 }, false);
+    let (serial, _) = exec_on.run(&input).expect("serial");
+    let (par, s_par) = exec_on.run_parallel(&input, 4).expect("parallel");
+    let (off, s_off) = exec_off.run_parallel(&input, 4).expect("parallel off");
+    assert_eq!(serial.data, par.data, "parallel reuse diverged from serial");
+    assert_eq!(par.data, off.data, "parallel reuse diverged from reuse-off");
+    // Per sweep row: one full 6×6 region + 4 fresh 6×2 stripes at
+    // level 0, everything fresh at level 1.
+    assert_eq!(s_par.fresh_pixels, 5 * (36 + 4 * 12) + 25);
+    assert_eq!(s_par.fresh_pixels + s_par.reused_pixels, 925);
+    assert_eq!(s_off.fresh_pixels, 925);
+    // Input traffic: the column halo is reused, the row halo refetched.
+    assert_eq!(s_par.input_fresh_bytes, 5 * (256 + 4 * 16 * 4) * 4);
 }
 
 /// Native constructors validate their inputs.

@@ -18,7 +18,8 @@ use std::time::{Duration, Instant};
 
 use usefuse::coordinator::pipeline::NativePipeline;
 use usefuse::coordinator::pool::{
-    native_factory, pipeline_end_source, ModelGroup, PoolConfig, RuntimeFactory, WorkerPool,
+    native_factory, pipeline_end_source, pipeline_reuse_source, ModelGroup, PoolConfig,
+    RuntimeFactory, WorkerPool,
 };
 use usefuse::nets;
 use usefuse::runtime::{DType, EngineKind, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
@@ -128,6 +129,7 @@ fn sixteen_clients_hammer_the_pool() {
             groups: groups(),
             factory: toy_factory(),
             end_source: None,
+            reuse_source: None,
         })
         .expect("pool"),
     );
@@ -175,6 +177,7 @@ fn queued_requests_drain_as_one_stacked_call() {
         groups: groups(),
         factory: toy_factory(),
         end_source: None,
+        reuse_source: None,
     })
     .expect("pool");
 
@@ -243,6 +246,7 @@ fn native_pool(kind: EngineKind, workers: usize, queue_cap: usize) -> (Arc<Nativ
         }],
         factory: native_factory(&pipeline),
         end_source: Some(pipeline_end_source(&pipeline)),
+        reuse_source: Some(pipeline_reuse_source(&pipeline)),
     })
     .expect("native pool");
     (pipeline, pool)
@@ -349,6 +353,7 @@ fn shutdown_drains_queue_then_rejects_new_requests() {
         groups: groups(),
         factory: toy_factory(),
         end_source: None,
+        reuse_source: None,
     })
     .expect("pool");
 
@@ -396,6 +401,7 @@ fn router_isolates_model_groups() {
             groups: groups(),
             factory: toy_factory(),
             end_source: None,
+            reuse_source: None,
         })
         .expect("pool"),
     );
