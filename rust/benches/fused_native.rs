@@ -14,7 +14,7 @@
 use usefuse::coordinator::FusionExecutor;
 use usefuse::harness::{black_box, Bench};
 use usefuse::nets;
-use usefuse::runtime::{EndCounters, EngineKind};
+use usefuse::runtime::{EndCounters, EngineKind, Tensor};
 
 fn main() {
     let mut b = Bench::new("fused_native");
@@ -136,6 +136,59 @@ fn main() {
             "scalar and sliced SOP engines disagree on END counters"
         );
         println!("END counters: scalar and sliced SOP engines identical");
+    }
+
+    // Cross-request lane packing: the batched series. One sliced
+    // executor runs whole image batches through `run_batch`, whose lane
+    // groups pack output pixels across images — at batch 1 most of each
+    // 64-wide digit plane idles on this tiny pyramid; growing the batch
+    // backfills those dead lanes with other images' pixels, so
+    // images/sec should scale near-linearly until lanes saturate
+    // (EXPERIMENTS.md expects ≥ 2× throughput at batch 8; CI asserts
+    // it from the JSON dump).
+    {
+        let kind = EngineKind::SopSliced { n_bits: 8 };
+        let (weights, biases) = nets::random_weights(&specs, 42);
+        let exec = FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
+            .expect("uniform LeNet plan");
+        let images: Vec<Tensor> = (0..8)
+            .map(|i| nets::random_input(&specs[0], 7 + i as u64))
+            .collect();
+        // Differential sanity: the batched sweep is bit-identical to
+        // solo runs, image for image (the full matrix lives in
+        // tests/batched_equivalence.rs).
+        let (outs, stats, per_image) = exec.run_batch(&images).expect("batched run");
+        for (i, (out, img)) in outs.iter().zip(&images).enumerate() {
+            let (solo, _) = exec.run(img).expect("solo run");
+            assert_eq!(out.data, solo.data, "image {i}: batched output drifted");
+        }
+        assert_eq!(per_image.len(), images.len());
+        println!(
+            "batched sweep (batch 8): lane occupancy {:.1}% ({} used / {} offered slots)",
+            100.0 * stats.lane_occupancy(),
+            stats.lane_slots_used,
+            stats.lane_slots_total
+        );
+        for bsz in [1usize, 2, 4, 8] {
+            let batch = &images[..bsz];
+            let m = b.bench(&format!("lenet_pyramid_sop-sliced_b{bsz}"), || {
+                black_box(exec.run_batch(batch).expect("batched run").1.tiles_executed)
+            });
+            if let Some(m) = m {
+                let ips = bsz as f64 / m.median.as_secs_f64();
+                let occ = exec
+                    .run_batch(batch)
+                    .expect("occupancy probe")
+                    .1
+                    .lane_occupancy();
+                println!(
+                    "  batch {bsz}: {ips:.1} images/sec, {:.1}% lane occupancy",
+                    100.0 * occ
+                );
+                extras.push((format!("batched_images_per_sec_b{bsz}"), ips));
+                extras.push((format!("batched_lane_occupancy_b{bsz}"), occ));
+            }
+        }
     }
 
     let extra_refs: Vec<(&str, f64)> = extras.iter().map(|(k, v)| (k.as_str(), *v)).collect();

@@ -1094,6 +1094,89 @@ mod tests {
         });
     }
 
+    /// **Cross-image lane packing soundness**: windows drawn from two
+    /// different "images" (distinct activation/bias populations) packed
+    /// into ONE group with `set_lane_biases` reproduce, lane for lane,
+    /// (a) the per-lane scalar `SopPipeline` and (b) the same lanes run
+    /// in single-image groups — states, END decision cycles, and value
+    /// bits all identical. Per-lane results are independent of group
+    /// composition, which is exactly what makes backfilling a ragged
+    /// tail from image *i* with pixels from image *i+1* bit-sound.
+    #[test]
+    fn cross_image_packing_is_group_composition_independent() {
+        prop_check("cross-image packed group == solo groups == scalar", 30, |g| {
+            let n = *g.pick(&[4u32, 8, 12]);
+            let frac = n - 1;
+            let m = g.usize(1, 8);
+            let n_out = (n + 4) as usize;
+            // Shared weight digit planes — the whole batch runs one net.
+            let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            // Image A fills a ragged tail; image B backfills the rest.
+            let a_n = g.usize(1, 40);
+            let b_n = g.usize(1, LANES - a_n);
+            let windows: Vec<Vec<Fixed>> = (0..a_n + b_n)
+                .map(|_| (0..m).map(|_| rand_fixed(g, n)).collect())
+                .collect();
+            let lane_biases: Vec<Fixed> =
+                (0..a_n + b_n).map(|_| rand_fixed(g, n)).collect();
+            let run_group = |range: std::ops::Range<usize>| {
+                let wins = &windows[range.clone()];
+                let mut acts = vec![DigitPlane::ZERO; m * frac as usize];
+                for i in 0..m {
+                    let ops: Vec<Fixed> = wins.iter().map(|w| w[i]).collect();
+                    transpose_lanes(
+                        &ops,
+                        frac,
+                        &mut acts[i * frac as usize..(i + 1) * frac as usize],
+                    );
+                }
+                let active = if wins.len() == LANES {
+                    u64::MAX
+                } else {
+                    (1u64 << wins.len()) - 1
+                };
+                let mut p = SopSlicedPipeline::new(&weights, Some(Fixed::zero(frac)), n_out);
+                p.set_lane_biases(&lane_biases[range]);
+                p.run(&acts, frac, active)
+            };
+            let packed = run_group(0..a_n + b_n);
+            let solo_a = run_group(0..a_n);
+            let solo_b = run_group(a_n..a_n + b_n);
+            let mut scalar = SopPipeline::new(&weights, Some(Fixed::zero(frac)), n_out);
+            for (lane, win) in windows.iter().enumerate() {
+                scalar.set_bias(lane_biases[lane]);
+                let want = scalar.run(win);
+                let solo = if lane < a_n {
+                    solo_a.lane(lane)
+                } else {
+                    solo_b.lane(lane - a_n)
+                };
+                let got = packed.lane(lane);
+                for (label, r) in [("packed", &got), ("solo", &solo)] {
+                    prop_assert!(
+                        r.state == want.state && r.decided_at == want.decided_at,
+                        "{label} lane {lane}: {:?}@{} vs scalar {:?}@{}",
+                        r.state,
+                        r.decided_at,
+                        want.state,
+                        want.decided_at
+                    );
+                    prop_assert!(
+                        r.value.to_bits() == want.value.to_bits(),
+                        "{label} lane {lane}: value {} vs {}",
+                        r.value,
+                        want.value
+                    );
+                    prop_assert!(
+                        r.total_digits == want.total_digits,
+                        "{label} lane {lane}: digit totals differ"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// set_bias re-steers the broadcast bias lane exactly like a fresh
     /// pipeline (the executor swaps the bias every tile).
     #[test]

@@ -58,7 +58,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Result};
 
 use crate::geometry::{FreshRegion, FusedConvSpec, PyramidPlan, StridePolicy};
-use crate::runtime::engine::{conv2d, ComputeEngine, EndCounters, EngineKind, OutRegion};
+use crate::runtime::engine::{conv2d, BatchSlot, ComputeEngine, EndCounters, EngineKind, OutRegion};
 use crate::runtime::{GeometryMeta, Runtime, Tensor};
 
 /// Execution statistics of one fused evaluation.
@@ -89,6 +89,13 @@ pub struct ExecStats {
     /// recomputed — the paper's redundant-computation reduction.
     /// `fresh_pixels + reused_pixels` is invariant in the reuse knob.
     pub reused_pixels: u64,
+    /// Lane slots of the bit-sliced engine that actually carried an
+    /// output pixel, over every lane group formed (0 for the other
+    /// engines). Batched runs pack pixels across images, so this rises
+    /// toward `lane_slots_total` as the batch grows.
+    pub lane_slots_used: u64,
+    /// Lane slots offered by those groups (64 per group formed).
+    pub lane_slots_total: u64,
     /// Wall-clock time of the tile loop.
     pub wall: std::time::Duration,
 }
@@ -122,12 +129,21 @@ impl ExecStats {
         self.input_halo_bytes += o.input_halo_bytes;
         self.fresh_pixels += o.fresh_pixels;
         self.reused_pixels += o.reused_pixels;
+        self.lane_slots_used += o.lane_slots_used;
+        self.lane_slots_total += o.lane_slots_total;
     }
 
     /// Fraction of all output pixels served from reuse buffers instead
     /// of recomputed (0 when nothing ran or reuse is off).
     pub fn reuse_fraction(&self) -> f64 {
         crate::util::ratio(self.reused_pixels, self.fresh_pixels + self.reused_pixels)
+    }
+
+    /// Mean lane occupancy of the sliced engine's groups: the fraction
+    /// of offered lane slots that carried a pixel (0 when no group was
+    /// formed — the scalar engines).
+    pub fn lane_occupancy(&self) -> f64 {
+        crate::util::ratio(self.lane_slots_used, self.lane_slots_total)
     }
 }
 
@@ -525,6 +541,106 @@ impl<'rt> FusionExecutor<'rt> {
         Ok(())
     }
 
+    /// The batched twin of [`movement_native`](Self::movement_native):
+    /// one movement of the row-sweep for a whole image batch. Reuse
+    /// stitching (column shift, row band) runs per image — geometry is
+    /// shared by the batch, so every image stitches identically — and
+    /// the fresh rectangle of all images executes as **one** batched
+    /// engine call, which the sliced engine packs into shared lane
+    /// groups across images. Per-image results are bit-identical to a
+    /// per-image [`movement_native`](Self::movement_native) loop.
+    #[allow(clippy::too_many_arguments)]
+    fn movement_native_batched(
+        &self,
+        nf: &NativeFusion,
+        engine: &mut dyn ComputeEngine,
+        iy: usize,
+        ix: usize,
+        inputs: &[Tensor],
+        tiles: &mut [Tensor],
+        levels: &mut [Vec<LevelState>],
+        stats: &mut ExecStats,
+        row_reuse: bool,
+    ) -> Result<()> {
+        let h0 = self.plan.tiles[0];
+        let in_ov = if self.reuse { self.plan.overlap(0) } else { 0 };
+        let ly0 = if row_reuse && iy > 0 { in_ov } else { 0 };
+        let lx0 = if ix > 0 { in_ov } else { 0 };
+        for (input, tile) in inputs.iter().zip(tiles.iter_mut()) {
+            self.extract_tile(iy, ix, input, tile)?;
+            stats.record_input_tile(h0, self.plan.specs[0].n_in, (h0 - ly0) * (h0 - lx0));
+        }
+
+        for j in 0..self.plan.depth() {
+            let spec = &self.plan.specs[j];
+            let (side, vo) = {
+                let lv = &levels[0][j];
+                (lv.side, lv.overlap)
+            };
+            let fr = if self.reuse {
+                self.plan
+                    .fresh_region(j, if row_reuse { iy } else { 0 }, ix)
+            } else {
+                FreshRegion { y0: 0, x0: 0, side }
+            };
+            debug_assert_eq!(fr.side, side);
+            let (fy0, fx0) = (fr.y0, fr.x0);
+            // Stitch every image's working tile exactly like the solo
+            // movement does.
+            for lvls in levels.iter_mut() {
+                let lv = &mut lvls[j];
+                if fx0 > 0 {
+                    lv.out_tile.shift_cols_left(side - vo)?;
+                }
+                if fy0 > 0 {
+                    let band = lv.row_band.as_ref().expect("row reuse allocates bands");
+                    lv.out_tile
+                        .copy_region_from(band, ix * vo, 0, vo, side, 0, 0)?;
+                }
+            }
+            // One batched engine call over every image's fresh region.
+            let mut slots: Vec<BatchSlot> = Vec::with_capacity(inputs.len());
+            for (b, lvls) in levels.iter_mut().enumerate() {
+                let (prev, rest) = lvls.split_at_mut(j);
+                let inp: &Tensor = if j == 0 { &tiles[b] } else { &prev[j - 1].out_tile };
+                slots.push(BatchSlot {
+                    input: inp,
+                    out: &mut rest[0].out_tile,
+                });
+            }
+            engine.run_level_region_batched(
+                j,
+                spec,
+                &mut slots,
+                &nf.weights[j],
+                &nf.biases[j],
+                OutRegion {
+                    y0: fy0,
+                    y1: side,
+                    x0: fx0,
+                    x1: side,
+                },
+            )?;
+            drop(slots);
+            // Per-image post-pass: halo mask, then row-band save (the
+            // band must hold masked values, like the solo movement).
+            for lvls in levels.iter_mut() {
+                let lv = &mut lvls[j];
+                if j + 1 < self.plan.depth() {
+                    let next = &self.plan.specs[j + 1];
+                    let r = self.plan.tile_rect(j + 1, iy, ix);
+                    lv.out_tile
+                        .mask_outside(r.y0, r.x0, next.pad as i64, next.ifm)?;
+                }
+                if let Some(band) = lv.row_band.as_mut() {
+                    band.copy_region_from(&lv.out_tile, side - vo, 0, vo, side, ix * vo, 0)?;
+                }
+            }
+            stats.record_level_pixels(fr.pixels() * inputs.len(), fr.total() * inputs.len());
+        }
+        Ok(())
+    }
+
     /// Run the fused stack tile-by-tile, assembling the output
     /// (serial reference path; see [`FusionExecutor::run_parallel`]).
     /// The native source runs the full 2-D reuse schedule (column +
@@ -600,9 +716,96 @@ impl<'rt> FusionExecutor<'rt> {
             }
         }
         nf.absorb(engine.take_end_counters());
+        let (lu, lt) = engine.take_lane_slots();
+        stats.lane_slots_used += lu;
+        stats.lane_slots_total += lt;
         stats.output_bytes = out.len() * 4;
         stats.wall = t0.elapsed();
         Ok((out, stats))
+    }
+
+    /// Run a whole image batch through one serial row-sweep: every
+    /// movement executes all images' fresh regions as a single batched
+    /// engine call, so the sliced engine packs output pixels from
+    /// different images into shared lane groups (ragged tails of image
+    /// *i* backfilled by image *i+1*). Returns per-image outputs, merged
+    /// stats, and **per-image** END counters (one `Vec<EndCounters>`
+    /// per input, level-major) — each bit-identical to a solo
+    /// [`run`](Self::run) of that image. The registry source has no
+    /// packed path; it falls back to a sequential per-image loop with
+    /// empty per-image counters.
+    pub fn run_batch(
+        &self,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, ExecStats, Vec<Vec<EndCounters>>)> {
+        let nf = match &self.source {
+            Source::Native(nf) => nf,
+            Source::Programs { .. } => {
+                let mut outs = Vec::with_capacity(inputs.len());
+                let mut stats = ExecStats::default();
+                for input in inputs {
+                    let (out, s) = self.run(input)?;
+                    stats.merge(&s);
+                    stats.output_bytes += s.output_bytes;
+                    stats.wall += s.wall;
+                    outs.push(out);
+                }
+                return Ok((outs, stats, vec![Vec::new(); inputs.len()]));
+            }
+        };
+        for input in inputs {
+            self.check_input(input)?;
+        }
+        let bsz = inputs.len();
+        if bsz == 0 {
+            return Ok((Vec::new(), ExecStats::default(), Vec::new()));
+        }
+        let t0 = std::time::Instant::now();
+        let a = self.plan.alpha();
+        let h0 = self.plan.tiles[0];
+        let spec0 = &self.plan.specs[0];
+        let p_out = self.plan.out_pitch();
+
+        let mut engine = nf.kind.build();
+        let mut outs: Vec<Tensor> =
+            (0..bsz).map(|_| Tensor::zeros(self.output_shape())).collect();
+        let mut tiles: Vec<Tensor> = (0..bsz)
+            .map(|_| Tensor::zeros(vec![h0, h0, spec0.n_in]))
+            .collect();
+        let mut levels: Vec<Vec<LevelState>> =
+            (0..bsz).map(|_| self.level_states(true)).collect();
+        let mut stats = ExecStats::default();
+        for iy in 0..a {
+            for ix in 0..a {
+                self.movement_native_batched(
+                    nf,
+                    engine.as_mut(),
+                    iy,
+                    ix,
+                    inputs,
+                    &mut tiles,
+                    &mut levels,
+                    &mut stats,
+                    true,
+                )?;
+                for (out, lvls) in outs.iter_mut().zip(levels.iter()) {
+                    let region = &lvls.last().expect("plan has levels").out_tile;
+                    out.place_window(region, (iy * p_out) as i64, (ix * p_out) as i64)?;
+                }
+                stats.tiles_executed += bsz;
+            }
+        }
+        let mut per_image = engine.take_end_counters_batched();
+        per_image.resize(bsz, Vec::new());
+        for c in &per_image {
+            nf.absorb(c.clone());
+        }
+        let (lu, lt) = engine.take_lane_slots();
+        stats.lane_slots_used += lu;
+        stats.lane_slots_total += lt;
+        stats.output_bytes = outs.iter().map(|o| o.len() * 4).sum();
+        stats.wall = t0.elapsed();
+        Ok((outs, stats, per_image))
     }
 
     /// Like [`FusionExecutor::run`], but across a scoped thread pool of
@@ -748,6 +951,9 @@ impl<'rt> FusionExecutor<'rt> {
                             done.push((iy, ix, region));
                         }
                     }
+                    let (lu, lt) = engine.take_lane_slots();
+                    stats.lane_slots_used += lu;
+                    stats.lane_slots_total += lt;
                     Ok((done, engine.take_end_counters(), stats))
                 }));
             }
@@ -771,6 +977,124 @@ impl<'rt> FusionExecutor<'rt> {
         Ok((out, stats))
     }
 
+    /// The parallel twin of [`run_batch`](Self::run_batch): sweep rows
+    /// chunked across a thread pool, each worker running the **whole
+    /// batch** through its rows with its own engine, so lane packing
+    /// across images happens inside every worker. Per-image counters
+    /// are merged across workers per image; like the solo parallel
+    /// path this is the column-only reuse schedule, so per-image
+    /// counters match a solo [`run_parallel`](Self::run_parallel) of
+    /// that image (not the serial 2-D-reuse sweep). The registry source
+    /// falls back to [`run_batch`](Self::run_batch).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_batch_parallel(
+        &self,
+        inputs: &[Tensor],
+        threads: usize,
+    ) -> Result<(Vec<Tensor>, ExecStats, Vec<Vec<EndCounters>>)> {
+        let nf = match &self.source {
+            Source::Native(nf) => nf,
+            Source::Programs { .. } => return self.run_batch(inputs),
+        };
+        for input in inputs {
+            self.check_input(input)?;
+        }
+        let bsz = inputs.len();
+        if bsz == 0 {
+            return Ok((Vec::new(), ExecStats::default(), Vec::new()));
+        }
+        let t0 = std::time::Instant::now();
+        let a = self.plan.alpha();
+        let h0 = self.plan.tiles[0];
+        let spec0 = &self.plan.specs[0];
+        let p_out = self.plan.out_pitch();
+
+        let rows: Vec<usize> = (0..a).collect();
+        let n_threads = threads.clamp(1, a.max(1));
+        let chunk = a.div_ceil(n_threads);
+
+        type ChunkResult = (
+            Vec<(usize, usize, Vec<Tensor>)>,
+            Vec<Vec<EndCounters>>,
+            ExecStats,
+        );
+        let results: Result<Vec<ChunkResult>> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_threads);
+            for piece in rows.chunks(chunk) {
+                handles.push(s.spawn(move || {
+                    let mut tiles: Vec<Tensor> = (0..bsz)
+                        .map(|_| Tensor::zeros(vec![h0, h0, spec0.n_in]))
+                        .collect();
+                    let mut engine = nf.kind.build();
+                    let mut levels: Vec<Vec<LevelState>> =
+                        (0..bsz).map(|_| self.level_states(false)).collect();
+                    let mut stats = ExecStats::default();
+                    let mut done = Vec::with_capacity(piece.len() * a);
+                    for &iy in piece {
+                        for ix in 0..a {
+                            self.movement_native_batched(
+                                nf,
+                                engine.as_mut(),
+                                iy,
+                                ix,
+                                inputs,
+                                &mut tiles,
+                                &mut levels,
+                                &mut stats,
+                                false,
+                            )?;
+                            stats.tiles_executed += bsz;
+                            let regions: Vec<Tensor> = levels
+                                .iter()
+                                .map(|lvls| {
+                                    lvls.last().expect("plan has levels").out_tile.clone()
+                                })
+                                .collect();
+                            done.push((iy, ix, regions));
+                        }
+                    }
+                    let (lu, lt) = engine.take_lane_slots();
+                    stats.lane_slots_used += lu;
+                    stats.lane_slots_total += lt;
+                    let mut per_image = engine.take_end_counters_batched();
+                    per_image.resize(bsz, Vec::new());
+                    Ok((done, per_image, stats))
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tile worker panicked"))
+                .collect()
+        });
+
+        let mut outs: Vec<Tensor> =
+            (0..bsz).map(|_| Tensor::zeros(self.output_shape())).collect();
+        let mut stats = ExecStats::default();
+        let mut per_image: Vec<Vec<EndCounters>> = vec![Vec::new(); bsz];
+        for (chunk_regions, chunk_counters, chunk_stats) in results? {
+            stats.merge(&chunk_stats);
+            for (agg, img) in per_image.iter_mut().zip(chunk_counters) {
+                if agg.len() < img.len() {
+                    agg.resize(img.len(), EndCounters::default());
+                }
+                for (x, c) in agg.iter_mut().zip(&img) {
+                    x.merge(c);
+                }
+            }
+            for (iy, ix, regions) in chunk_regions {
+                for (out, region) in outs.iter_mut().zip(&regions) {
+                    out.place_window(region, (iy * p_out) as i64, (ix * p_out) as i64)?;
+                }
+            }
+        }
+        for c in &per_image {
+            nf.absorb(c.clone());
+        }
+        stats.output_bytes = outs.iter().map(|o| o.len() * 4).sum();
+        stats.wall = t0.elapsed();
+        Ok((outs, stats, per_image))
+    }
+
     /// Serial fallback: PJRT handles are not `Sync`, so the `pjrt` build
     /// cannot share the runtime across a thread scope. See the
     /// non-`pjrt` implementation for the parallel path.
@@ -778,6 +1102,18 @@ impl<'rt> FusionExecutor<'rt> {
     pub fn run_parallel(&self, input: &Tensor, threads: usize) -> Result<(Tensor, ExecStats)> {
         let _ = threads;
         self.run(input)
+    }
+
+    /// Serial fallback for the `pjrt` build (see
+    /// [`run_parallel`](Self::run_parallel)).
+    #[cfg(feature = "pjrt")]
+    pub fn run_batch_parallel(
+        &self,
+        inputs: &[Tensor],
+        threads: usize,
+    ) -> Result<(Vec<Tensor>, ExecStats, Vec<Vec<EndCounters>>)> {
+        let _ = threads;
+        self.run_batch(inputs)
     }
 
     /// Run the golden full-map reference; returns per-level

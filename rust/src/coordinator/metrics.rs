@@ -185,6 +185,8 @@ impl Metrics {
             end_levels: Vec::new(),
             fresh_pixels: 0,
             reused_pixels: 0,
+            lane_slots_used: 0,
+            lane_slots_total: 0,
             uptime,
         }
     }
@@ -248,6 +250,15 @@ pub struct MetricsSnapshot {
     /// Output pixels served from the §3.4 inter-tile reuse buffers
     /// instead of being recomputed (same population rule).
     pub reused_pixels: u64,
+    /// Sliced-engine lane slots that carried an output pixel across
+    /// every served inference — populated only when the pool has a
+    /// [`lane_source`](super::pool::PoolConfig::lane_source) (native
+    /// sliced-engine serving); 0 otherwise. Cross-request batching
+    /// drives this toward `lane_slots_total`.
+    pub lane_slots_used: u64,
+    /// Lane slots offered by every sliced group formed (64 per group;
+    /// same population rule).
+    pub lane_slots_total: u64,
     /// Time since the registry was created.
     pub uptime: Duration,
 }
@@ -257,6 +268,12 @@ impl MetricsSnapshot {
     /// instead of recomputed (0 when no native inference ran).
     pub fn reuse_fraction(&self) -> f64 {
         crate::util::ratio(self.reused_pixels, self.fresh_pixels + self.reused_pixels)
+    }
+
+    /// Fraction of offered sliced-engine lane slots that carried an
+    /// output pixel (0 when no sliced group was formed).
+    pub fn lane_occupancy(&self) -> f64 {
+        crate::util::ratio(self.lane_slots_used, self.lane_slots_total)
     }
 }
 
@@ -311,6 +328,16 @@ impl std::fmt::Display for MetricsSnapshot {
                 100.0 * self.reuse_fraction(),
                 self.fresh_pixels,
                 self.reused_pixels
+            )?;
+        }
+        if self.lane_slots_total > 0 {
+            writeln!(
+                f,
+                "lane occupancy: {:.1}% of sliced digit-plane slots carried a pixel \
+                 ({} used / {} offered)",
+                100.0 * self.lane_occupancy(),
+                self.lane_slots_used,
+                self.lane_slots_total
             )?;
         }
         for (j, c) in self.end_levels.iter().enumerate() {
@@ -459,6 +486,20 @@ mod tests {
         let text = format!("{s}");
         assert!(text.contains("output-pixel reuse: 70.0%"), "{text}");
         assert!(text.contains("300 fresh, 700 reused"), "{text}");
+    }
+
+    #[test]
+    fn lane_stats_render_in_display() {
+        let m = Metrics::new(1, 16);
+        let mut s = m.snapshot();
+        assert_eq!(s.lane_occupancy(), 0.0);
+        assert!(!format!("{s}").contains("lane occupancy"));
+        s.lane_slots_used = 96;
+        s.lane_slots_total = 128;
+        assert!((s.lane_occupancy() - 0.75).abs() < 1e-12);
+        let text = format!("{s}");
+        assert!(text.contains("lane occupancy: 75.0%"), "{text}");
+        assert!(text.contains("96 used / 128 offered"), "{text}");
     }
 
     #[test]

@@ -23,7 +23,8 @@ pub use executor::{ExecStats, FusionExecutor};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
 pub use pipeline::{Inference, NativePipeline, PipelineParams};
 pub use pool::{
-    native_factory, pipeline_end_source, pipeline_reuse_source, EndCounterSource, ModelGroup,
-    PoolConfig, ReuseStatSource, RuntimeFactory, WorkerPool,
+    native_factory, pipeline_end_source, pipeline_lane_source, pipeline_reuse_source,
+    EndCounterSource, LaneStatSource, ModelGroup, PoolConfig, ReuseStatSource, RuntimeFactory,
+    WorkerPool, MAX_NATIVE_BATCH,
 };
 pub use service::{InferenceService, Response, ServiceBackend, ServiceConfig};

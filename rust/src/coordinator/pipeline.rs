@@ -24,7 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::executor::FusionExecutor;
+use super::executor::{ExecStats, FusionExecutor};
 use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
 use crate::nets::{ClassifierHead, Network};
 use crate::runtime::engine::{conv2d, EndCounters, EngineKind};
@@ -127,6 +127,11 @@ pub struct NativePipeline {
     /// Output pixels served from §3.4 reuse buffers across every
     /// inference.
     reused_pixels: AtomicU64,
+    /// Sliced-engine lane slots that carried an output pixel, across
+    /// every inference (0 for the scalar engines).
+    lane_slots_used: AtomicU64,
+    /// Lane slots offered by every sliced group formed (64 per group).
+    lane_slots_total: AtomicU64,
 }
 
 /// Pick the output-region size R_Q for a stage: the smallest feasible
@@ -289,6 +294,8 @@ impl NativePipeline {
             threads: 1,
             fresh_pixels: AtomicU64::new(0),
             reused_pixels: AtomicU64::new(0),
+            lane_slots_used: AtomicU64::new(0),
+            lane_slots_total: AtomicU64::new(0),
         })
     }
 
@@ -327,6 +334,17 @@ impl NativePipeline {
         (
             self.fresh_pixels.load(Ordering::Relaxed),
             self.reused_pixels.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Total `(used, offered)` sliced-engine lane slots across every
+    /// inference on this pipeline — the live lane-occupancy statistic
+    /// the serving metrics surface. Both stay 0 for the scalar engines;
+    /// batched inference drives `used / offered` toward 1.
+    pub fn lane_totals(&self) -> (u64, u64) {
+        (
+            self.lane_slots_used.load(Ordering::Relaxed),
+            self.lane_slots_total.load(Ordering::Relaxed),
         )
     }
 
@@ -386,10 +404,7 @@ impl NativePipeline {
                 } else {
                     exec.run(&x)?
                 };
-                self.fresh_pixels
-                    .fetch_add(stats.fresh_pixels, Ordering::Relaxed);
-                self.reused_pixels
-                    .fetch_add(stats.reused_pixels, Ordering::Relaxed);
+                self.record_stats(&stats);
                 x = out;
             }
             if let (Some(shortcut), Some(saved)) = (&stage.shortcut, saved) {
@@ -407,6 +422,80 @@ impl NativePipeline {
                 x = x.add(&skip)?.relu();
             }
         }
+        self.finish(x)
+    }
+
+    /// Run the full network over a whole image batch through the packed
+    /// native path: every stage executor runs **one** batched row-sweep
+    /// ([`FusionExecutor::run_batch`]) whose lane groups pack output
+    /// pixels across the batch's images, shortcuts and the classifier
+    /// head run per image afterwards. Returns the per-image inferences
+    /// plus each image's END counters in conv order (the per-image
+    /// split of [`end_counters`](Self::end_counters) — empty vectors
+    /// for the f32 engine), each **bit-identical** to a solo
+    /// [`infer`](Self::infer) of that image.
+    pub fn infer_batch(&self, images: &[Tensor]) -> Result<(Vec<Inference>, Vec<Vec<EndCounters>>)> {
+        let want = self.input_shape();
+        for image in images {
+            if image.shape != want {
+                bail!(
+                    "{}: input shape {:?}, expected {:?}",
+                    self.net.name,
+                    image.shape,
+                    want
+                );
+            }
+        }
+        let bsz = images.len();
+        let mut per_image: Vec<Vec<EndCounters>> = vec![Vec::new(); bsz];
+        if bsz == 0 {
+            return Ok((Vec::new(), per_image));
+        }
+        let mut xs: Vec<Tensor> = images.to_vec();
+        for stage in &self.stages {
+            let saved = if stage.shortcut.is_some() {
+                Some(xs.clone())
+            } else {
+                None
+            };
+            for exec in &stage.execs {
+                let (outs, stats, counters) = if self.threads > 1 {
+                    exec.run_batch_parallel(&xs, self.threads)?
+                } else {
+                    exec.run_batch(&xs)?
+                };
+                self.record_stats(&stats);
+                // Concatenate in exec order — the same order
+                // `end_counters` flattens, so per-image counters line
+                // up level-for-level with the pipeline aggregate.
+                for (agg, c) in per_image.iter_mut().zip(counters) {
+                    agg.extend(c);
+                }
+                xs = outs;
+            }
+            if let (Some(shortcut), Some(saved)) = (&stage.shortcut, saved) {
+                for (x, saved) in xs.iter_mut().zip(saved) {
+                    let skip = match shortcut {
+                        Shortcut::Identity => saved,
+                        Shortcut::Downsample {
+                            spec,
+                            weights,
+                            bias,
+                        } => conv2d(spec, &saved, weights, bias)?,
+                    };
+                    *x = x.add(&skip)?.relu();
+                }
+            }
+        }
+        let results = xs
+            .into_iter()
+            .map(|x| self.finish(x))
+            .collect::<Result<Vec<Inference>>>()?;
+        Ok((results, per_image))
+    }
+
+    /// Classifier head + softmax + argmax over a final feature map.
+    fn finish(&self, x: Tensor) -> Result<Inference> {
         let logits = self.head.forward(&x)?;
         let probs = logits.softmax().data;
         let class = logits
@@ -422,6 +511,19 @@ impl NativePipeline {
             probs,
             class,
         })
+    }
+
+    /// Fold one executor run's statistics into the pipeline's live
+    /// totals.
+    fn record_stats(&self, stats: &ExecStats) {
+        self.fresh_pixels
+            .fetch_add(stats.fresh_pixels, Ordering::Relaxed);
+        self.reused_pixels
+            .fetch_add(stats.reused_pixels, Ordering::Relaxed);
+        self.lane_slots_used
+            .fetch_add(stats.lane_slots_used, Ordering::Relaxed);
+        self.lane_slots_total
+            .fetch_add(stats.lane_slots_total, Ordering::Relaxed);
     }
 
     /// Live per-conv-level END statistics accumulated across every
@@ -498,6 +600,49 @@ mod tests {
         let parallel = threaded.infer(&img).expect("parallel");
         assert_eq!(serial.logits.data, parallel.logits.data);
         assert_eq!(serial.features.data, parallel.features.data);
+    }
+
+    #[test]
+    fn batched_inference_matches_solo_per_image() {
+        let net = nets::lenet5();
+        let kind = EngineKind::SopSliced { n_bits: 8 };
+        let pipe = NativePipeline::synthetic(&net, kind, 21).expect("pipeline");
+        let imgs: Vec<Tensor> = (0..3)
+            .map(|i| nets::random_input(&net.convs[0], 100 + i))
+            .collect();
+        let solo: Vec<Inference> = imgs
+            .iter()
+            .map(|im| {
+                NativePipeline::synthetic(&net, kind, 21)
+                    .expect("solo pipeline")
+                    .infer(im)
+                    .expect("solo infer")
+            })
+            .collect();
+        let (batched, per_image) = pipe.infer_batch(&imgs).expect("batched infer");
+        assert_eq!(batched.len(), 3);
+        for (a, b) in solo.iter().zip(&batched) {
+            assert_eq!(a.logits.data, b.logits.data, "batched logits drifted");
+            assert_eq!(a.features.data, b.features.data);
+            assert_eq!(a.class, b.class);
+        }
+        // Per-image counters are the exact split of the aggregate.
+        let agg = pipe.end_counters();
+        assert_eq!(agg.len(), net.convs.len());
+        assert_eq!(per_image.len(), 3);
+        for (j, a) in agg.iter().enumerate() {
+            let sops: u64 = per_image.iter().map(|c| c[j].sops).sum();
+            let digits: u64 = per_image.iter().map(|c| c[j].executed_digits).sum();
+            assert_eq!(a.sops, sops, "level {j} per-image sops split");
+            assert_eq!(a.executed_digits, digits, "level {j} digit split");
+        }
+        // The lane-occupancy statistic is live and sane.
+        let (used, total) = pipe.lane_totals();
+        assert!(used > 0, "no lane slots recorded");
+        assert!(total >= used && total % 64 == 0);
+        // Empty batches are a clean no-op.
+        let (none, ctrs) = pipe.infer_batch(&[]).expect("empty batch");
+        assert!(none.is_empty() && ctrs.is_empty());
     }
 
     #[test]

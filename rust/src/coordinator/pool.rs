@@ -44,6 +44,12 @@ pub type EndCounterSource = Arc<dyn Fn() -> Vec<EndCounters> + Send + Sync>;
 /// [`MetricsSnapshot::reused_pixels`] by [`WorkerPool::metrics`].
 pub type ReuseStatSource = Arc<dyn Fn() -> (u64, u64) + Send + Sync>;
 
+/// Reads the live sliced-engine lane-slot totals `(used, offered)` a
+/// serving backend accumulates — wired into
+/// [`MetricsSnapshot::lane_slots_used`] /
+/// [`MetricsSnapshot::lane_slots_total`] by [`WorkerPool::metrics`].
+pub type LaneStatSource = Arc<dyn Fn() -> (u64, u64) + Send + Sync>;
+
 /// One servable model group: the router key clients address, and the
 /// program every worker executes for it.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -77,6 +83,10 @@ pub struct PoolConfig {
     /// Optional live §3.4 reuse-statistics source, surfaced in every
     /// [`MetricsSnapshot`] (native serving; `None` otherwise).
     pub reuse_source: Option<ReuseStatSource>,
+    /// Optional live lane-occupancy source, surfaced in every
+    /// [`MetricsSnapshot`] (native sliced-engine serving; `None`
+    /// otherwise).
+    pub lane_source: Option<LaneStatSource>,
 }
 
 impl PoolConfig {
@@ -92,6 +102,7 @@ impl PoolConfig {
             factory,
             end_source: None,
             reuse_source: None,
+            lane_source: None,
         }
     }
 }
@@ -128,40 +139,71 @@ pub fn artifacts_factory(dir: &str, programs: &[String]) -> RuntimeFactory {
 /// [`MetricsSnapshot::end_levels`].
 ///
 /// The router key is the network name (e.g. `"lenet5"`); the program is
-/// `"{net}_infer"`. Deliberately **no** stacked `_b{N}` variants: a
-/// host closure has no per-call dispatch overhead to amortize (a
-/// stacked call would just be this loop behind one padded tensor), and
-/// evaluating zero-padded batch slots would waste full digit-serial
-/// inferences *and* pollute the live END statistics with synthetic
-/// all-zero images. Drained batches execute per request; the dynamic
-/// batcher still amortizes queue wake-ups.
+/// `"{net}_infer"`, plus a stacked `_b{N}` variant for **every** batch
+/// capacity `N` in `2..=MAX_NATIVE_BATCH`. Dense capacities mean
+/// [`Runtime::execute_stacked`]'s smallest-fitting-variant lookup always
+/// dispatches at the batch's *exact* size — no zero-padded slots to
+/// waste digit-serial work on or to pollute the live END statistics
+/// with — and every drained batch runs through
+/// [`NativePipeline::infer_batch`], whose sliced-engine lane groups
+/// pack output pixels **across the batch's images** (ragged tails of
+/// one image backfilled by the next). That cross-request packing is
+/// what a stacked host call amortizes; per-request results stay
+/// bit-identical to solo inference.
 pub fn native_factory(pipeline: &Arc<NativePipeline>) -> RuntimeFactory {
     let pipeline = Arc::clone(pipeline);
     Arc::new(move || {
         let mut rt = Runtime::host(Manifest::empty("."));
         let name = format!("{}_infer", pipeline.network().name);
-        let meta = ProgramMeta {
-            file: std::path::PathBuf::new(),
-            inputs: vec![TensorMeta {
-                shape: pipeline.input_shape(),
-                dtype: DType::F32,
-            }],
-            outputs: vec![TensorMeta {
-                shape: vec![pipeline.num_classes()],
-                dtype: DType::F32,
-            }],
-            n_runtime_inputs: 1,
-            weights: vec![],
+        let meta = |n: Option<usize>| {
+            let mut in_shape = pipeline.input_shape();
+            let mut out_shape = vec![pipeline.num_classes()];
+            if let Some(n) = n {
+                in_shape.insert(0, n);
+                out_shape.insert(0, n);
+            }
+            ProgramMeta {
+                file: std::path::PathBuf::new(),
+                inputs: vec![TensorMeta {
+                    shape: in_shape,
+                    dtype: DType::F32,
+                }],
+                outputs: vec![TensorMeta {
+                    shape: out_shape,
+                    dtype: DType::F32,
+                }],
+                n_runtime_inputs: 1,
+                weights: vec![],
+            }
         };
         let p = Arc::clone(&pipeline);
         rt.register_host(
             &name,
-            meta,
+            meta(None),
             Box::new(move |ts, _| p.infer(ts[0]).map(|inf| vec![inf.logits])),
         );
+        for n in 2..=MAX_NATIVE_BATCH {
+            let p = Arc::clone(&pipeline);
+            rt.register_host(
+                &format!("{name}_b{n}"),
+                meta(Some(n)),
+                Box::new(move |ts, _| {
+                    let images = ts[0].unstack()?;
+                    let (infs, _) = p.infer_batch(&images)?;
+                    let logits: Vec<Tensor> = infs.into_iter().map(|inf| inf.logits).collect();
+                    let refs: Vec<&Tensor> = logits.iter().collect();
+                    Tensor::stack(&refs, n).map(|t| vec![t])
+                }),
+            );
+        }
         Ok(rt)
     })
 }
+
+/// Largest stacked batch capacity [`native_factory`] registers. Pool
+/// batches above this split into chunks of this capacity
+/// (see [`Runtime::execute_stacked`]).
+pub const MAX_NATIVE_BATCH: usize = 64;
 
 /// An [`EndCounterSource`] reading the live END statistics of a shared
 /// native pipeline (non-empty only for the SOP engine, after at least
@@ -178,6 +220,14 @@ pub fn pipeline_end_source(pipeline: &Arc<NativePipeline>) -> EndCounterSource {
 pub fn pipeline_reuse_source(pipeline: &Arc<NativePipeline>) -> ReuseStatSource {
     let pipeline = Arc::clone(pipeline);
     Arc::new(move || pipeline.reuse_totals())
+}
+
+/// A [`LaneStatSource`] reading the live sliced-engine lane-slot totals
+/// of a shared native pipeline (both 0 for the scalar engines). Hand it
+/// to [`PoolConfig::lane_source`] next to [`native_factory`].
+pub fn pipeline_lane_source(pipeline: &Arc<NativePipeline>) -> LaneStatSource {
+    let pipeline = Arc::clone(pipeline);
+    Arc::new(move || pipeline.lane_totals())
 }
 
 /// Classification response with serving metadata.
@@ -224,6 +274,7 @@ struct Shared {
     queue_cap: usize,
     end_source: Option<EndCounterSource>,
     reuse_source: Option<ReuseStatSource>,
+    lane_source: Option<LaneStatSource>,
 }
 
 impl Shared {
@@ -269,6 +320,7 @@ impl WorkerPool {
             queue_cap: cfg.queue_cap.max(1),
             end_source: cfg.end_source.clone(),
             reuse_source: cfg.reuse_source.clone(),
+            lane_source: cfg.lane_source.clone(),
         });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -369,6 +421,9 @@ impl WorkerPool {
         }
         if let Some(src) = &self.shared.reuse_source {
             (snap.fresh_pixels, snap.reused_pixels) = src();
+        }
+        if let Some(src) = &self.shared.lane_source {
+            (snap.lane_slots_used, snap.lane_slots_total) = src();
         }
         snap
     }

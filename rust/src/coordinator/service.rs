@@ -28,8 +28,8 @@ use anyhow::{anyhow, Result};
 
 use super::pipeline::NativePipeline;
 use super::pool::{
-    artifacts_factory, native_factory, pipeline_end_source, pipeline_reuse_source, ModelGroup,
-    PoolConfig, WorkerPool,
+    artifacts_factory, native_factory, pipeline_end_source, pipeline_lane_source,
+    pipeline_reuse_source, ModelGroup, PoolConfig, WorkerPool,
 };
 pub use super::pool::Response;
 use crate::coordinator::metrics::MetricsSnapshot;
@@ -129,6 +129,7 @@ impl InferenceService {
                     ),
                     end_source: None,
                     reuse_source: None,
+                    lane_source: None,
                 })?;
                 Ok(InferenceService { pool, group })
             }
@@ -176,6 +177,7 @@ impl InferenceService {
             factory: native_factory(&pipeline),
             end_source: Some(pipeline_end_source(&pipeline)),
             reuse_source: Some(pipeline_reuse_source(&pipeline)),
+            lane_source: Some(pipeline_lane_source(&pipeline)),
         })?;
         Ok(InferenceService { pool, group })
     }

@@ -179,6 +179,13 @@ impl Bench {
     /// Write `BENCH_{group}.json` into the working directory when json
     /// mode is on; returns the written path (None when off). Benches
     /// call this once at the end with their headline extras.
+    ///
+    /// An existing file is **deep-merged**, not overwritten: a filtered
+    /// run (`USEFUSE_BENCH_FILTER`) or a second bench series writing to
+    /// the same group file adds/updates its keyed entries under
+    /// `benches`/`extra` while every sibling series written by earlier
+    /// runs survives. An unparseable existing file is replaced wholesale
+    /// (it never holds the only copy of anything — benches regenerate).
     pub fn maybe_write_json(
         &self,
         extras: &[(&str, f64)],
@@ -186,8 +193,17 @@ impl Bench {
         if !self.json {
             return Ok(None);
         }
+        use crate::util::json;
         let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.group));
-        std::fs::write(&path, self.to_json(extras))?;
+        let fresh = json::parse(&self.to_json(extras)).expect("to_json emits valid JSON");
+        let merged = match std::fs::read_to_string(&path) {
+            Ok(old) => match json::parse(&old) {
+                Ok(existing) => json::merge(existing, fresh),
+                Err(_) => fresh,
+            },
+            Err(_) => fresh,
+        };
+        std::fs::write(&path, json::write(&merged))?;
         println!("wrote {}", path.display());
         Ok(Some(path))
     }

@@ -46,6 +46,25 @@
 //! quantize differently in adjacent movements, breaking the
 //! bit-identity between reuse-on and reuse-off execution that
 //! `tests/engine_equivalence.rs` pins down.
+//!
+//! ## Cross-image lane packing (batching)
+//!
+//! [`ComputeEngine::run_level_region_batched`] evaluates the same
+//! region of the same level for several images at once
+//! ([`BatchSlot`]s). The sliced engine implements it natively: the
+//! regions' output pixels are laid out image-major in one flat pixel
+//! list and cut into lane groups of 64, so a ragged tail of image *i*
+//! is backfilled with the leading pixels of image *i+1* instead of
+//! running as a mostly-dead group. This is sound for the same reason
+//! §3.4 reuse is: per-window scaling makes every lane's digits, END
+//! decision and value a function of its own window (and per-lane bias
+//! planes carry each image's own bias operands), so lanes from
+//! different images never interact. Per-image END accounting is kept
+//! exact by replaying the group's buffered results image-major,
+//! pixel-major, filter-inner — each image's counters accumulate in
+//! precisely its solo-run order ([`ComputeEngine::take_end_counters_batched`]).
+//! The scalar engines fall back to a per-image loop with the same
+//! per-image counter attribution.
 
 use anyhow::{bail, Result};
 
@@ -209,6 +228,18 @@ impl OutRegion {
     }
 }
 
+/// One image's tensors in a batched region call: its input tile and the
+/// output tile the region pixels are written into. All slots of one
+/// call share the level spec, weights, bias and region — the batch is
+/// "the same place in N different images".
+pub struct BatchSlot<'a> {
+    /// The image's input tile (padded coordinates, like
+    /// [`ComputeEngine::run_level_region`]).
+    pub input: &'a Tensor,
+    /// The image's full `(H', W', M)` output tile.
+    pub out: &'a mut Tensor,
+}
+
 /// A pluggable per-level tile engine: executes one fused level
 /// (convolution + bias + ReLU + optional max-pool) over a host tensor
 /// tile. Implementations are stateful (they cache per-level compiled
@@ -275,11 +306,87 @@ pub trait ComputeEngine: Send {
         region: OutRegion,
     ) -> Result<()>;
 
+    /// Evaluate the same `region` pixels of the same level for every
+    /// image in `slots` — the cross-request batching entry point.
+    /// Per-image outputs are **bit-identical** to calling
+    /// [`ComputeEngine::run_level_region`] once per image, and per-image
+    /// END accounting lands in the batched counter store
+    /// ([`ComputeEngine::take_end_counters_batched`]) in each image's
+    /// solo accumulation order.
+    ///
+    /// Provided as a per-image loop (exact for any engine); the sliced
+    /// engine overrides it with true cross-image lane packing.
+    #[allow(clippy::too_many_arguments)]
+    fn run_level_region_batched(
+        &mut self,
+        level: usize,
+        spec: &FusedConvSpec,
+        slots: &mut [BatchSlot],
+        weights: &Tensor,
+        bias: &[f32],
+        region: OutRegion,
+    ) -> Result<()> {
+        for (i, slot) in slots.iter_mut().enumerate() {
+            self.select_counter_slot(Some(i));
+            let r = self.run_level_region(level, spec, slot.input, weights, bias, slot.out, region);
+            if r.is_err() {
+                self.select_counter_slot(None);
+                return r;
+            }
+        }
+        self.select_counter_slot(None);
+        Ok(())
+    }
+
+    /// Redirect END accounting to per-image batch slot `i`
+    /// (`Some(i)`), or back to the engine-wide per-level counters
+    /// (`None`). Engines without counters ignore this.
+    fn select_counter_slot(&mut self, _slot: Option<usize>) {}
+
     /// Drain the per-level END counters accumulated so far (index =
     /// pyramid level). Engines without an END unit return an empty vec.
     fn take_end_counters(&mut self) -> Vec<EndCounters> {
         Vec::new()
     }
+
+    /// Drain the per-image END counters of batched runs: outer index =
+    /// batch slot, inner = pyramid level. Empty for engines without an
+    /// END unit (or when nothing ran batched).
+    fn take_end_counters_batched(&mut self) -> Vec<Vec<EndCounters>> {
+        Vec::new()
+    }
+
+    /// Drain the lane-occupancy accumulator: `(used, total)` lane slots
+    /// over every lane group the engine formed since the last drain.
+    /// `(0, 0)` for engines without a lane dimension.
+    fn take_lane_slots(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+/// Pick the END accumulator for `level`: the per-image slot of a
+/// batched run when one is selected, the engine-wide per-level store
+/// otherwise — growing either store on demand. Shared by the two SOP
+/// engines so slot redirection has one semantics.
+fn counter_slot<'a>(
+    counters: &'a mut Vec<EndCounters>,
+    batch: &'a mut Vec<Vec<EndCounters>>,
+    slot: Option<usize>,
+    level: usize,
+) -> &'a mut EndCounters {
+    let store = match slot {
+        Some(i) => {
+            if batch.len() <= i {
+                batch.resize_with(i + 1, Vec::new);
+            }
+            &mut batch[i]
+        }
+        None => counters,
+    };
+    if store.len() <= level {
+        store.resize(level + 1, EndCounters::default());
+    }
+    &mut store[level]
 }
 
 /// Shape-check the level inputs shared by every engine.
@@ -595,6 +702,10 @@ pub struct SopEngine {
     n_out_digits: usize,
     levels: Vec<Option<SopLevel>>,
     counters: Vec<EndCounters>,
+    /// Per-image counters of batched runs (outer = batch slot).
+    batch_counters: Vec<Vec<EndCounters>>,
+    /// Active batch slot for END accounting (None = solo counters).
+    cur_slot: Option<usize>,
     /// Reusable quantized-window buffer.
     window: Vec<Fixed>,
     /// Reusable raw f32 window values (gathered once per pixel while
@@ -617,6 +728,8 @@ impl SopEngine {
             n_out_digits: (n_bits + 4) as usize,
             levels: Vec::new(),
             counters: Vec::new(),
+            batch_counters: Vec::new(),
+            cur_slot: None,
             window: Vec::new(),
             raw_window: Vec::new(),
             scratch: Vec::new(),
@@ -682,7 +795,7 @@ impl ComputeEngine for SopEngine {
         let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
         let nb = self.n_bits;
         let st = self.levels[level].as_mut().expect("compiled above");
-        let ctr = &mut self.counters[level];
+        let ctr = counter_slot(&mut self.counters, &mut self.batch_counters, self.cur_slot, level);
 
         // Per-window quantization: each output pixel's activation scale
         // is the max |value| of its own window, floored so the bias
@@ -736,8 +849,16 @@ impl ComputeEngine for SopEngine {
         Ok(())
     }
 
+    fn select_counter_slot(&mut self, slot: Option<usize>) {
+        self.cur_slot = slot;
+    }
+
     fn take_end_counters(&mut self) -> Vec<EndCounters> {
         std::mem::take(&mut self.counters)
+    }
+
+    fn take_end_counters_batched(&mut self) -> Vec<Vec<EndCounters>> {
+        std::mem::take(&mut self.batch_counters)
     }
 }
 
@@ -747,6 +868,46 @@ impl ComputeEngine for SopEngine {
 struct SopSlicedLevel {
     w_scale: f32,
     pipes: Vec<SopSlicedPipeline>,
+}
+
+/// Gather one output pixel's `K×K×N` window from `input` into lane
+/// `lane` of the group buffers, quantized by its own window max — the
+/// per-window scaling path, expression-identical to the scalar engine's
+/// single strided traversal. Returns the pixel's activation scale.
+/// Shared by the sliced engine's solo and cross-image batched paths so
+/// a lane's operands never depend on which path (or which lane group)
+/// carried it.
+#[allow(clippy::too_many_arguments)]
+fn gather_lane_window(
+    spec: &FusedConvSpec,
+    input: &Tensor,
+    w: usize,
+    oy: usize,
+    ox: usize,
+    bias_floor: f32,
+    nb: u32,
+    raw_window: &mut [f32],
+    lane_windows: &mut [Fixed],
+    lane: usize,
+) -> f32 {
+    let (k, s, n) = (spec.k, spec.s, spec.n_in);
+    let mut wmax = 0.0f32;
+    for dy in 0..k {
+        for dx in 0..k {
+            let src = ((oy * s + dy) * w + (ox * s + dx)) * n;
+            for c in 0..n {
+                let v = input.data[src + c];
+                raw_window[(dy * k + dx) * n + c] = v;
+                wmax = wmax.max(v.abs());
+            }
+        }
+    }
+    let act_scale = wmax.max(bias_floor).max(1e-12);
+    let inv_a = 1.0 / act_scale;
+    for (i, &v) in raw_window.iter().enumerate() {
+        lane_windows[i * LANES + lane] = Fixed::quantize((v * inv_a) as f64 * 0.999, nb);
+    }
+    act_scale
 }
 
 /// The bit-sliced 64-lane MSDF engine: the same quantization, the same
@@ -773,6 +934,14 @@ pub struct SopSlicedEngine {
     n_out_digits: usize,
     levels: Vec<Option<SopSlicedLevel>>,
     counters: Vec<EndCounters>,
+    /// Per-image counters of batched runs (outer = batch slot).
+    batch_counters: Vec<Vec<EndCounters>>,
+    /// Active batch slot for END accounting (None = solo counters).
+    cur_slot: Option<usize>,
+    /// Lane slots actually carrying a pixel, over every group formed.
+    lane_slots_used: u64,
+    /// Lane slots offered (`LANES` per group formed).
+    lane_slots_total: u64,
     /// Reusable quantized windows of one lane group: window element `i`
     /// of lane `l` at `[i * LANES + l]`.
     lane_windows: Vec<Fixed>,
@@ -803,6 +972,10 @@ impl SopSlicedEngine {
             n_out_digits: (n_bits + 4) as usize,
             levels: Vec::new(),
             counters: Vec::new(),
+            batch_counters: Vec::new(),
+            cur_slot: None,
+            lane_slots_used: 0,
+            lane_slots_total: 0,
             lane_windows: Vec::new(),
             planes: Vec::new(),
             results: Vec::new(),
@@ -862,11 +1035,11 @@ impl ComputeEngine for SopSlicedEngine {
             return Ok(());
         }
         self.compile_level(level, spec, weights);
-        let (k, s, n, m) = (spec.k, spec.s, spec.n_in, spec.m_out);
+        let (k, n, m) = (spec.k, spec.n_in, spec.m_out);
         let nb = self.n_bits;
         let frac = (nb - 1) as usize;
         let st = self.levels[level].as_mut().expect("compiled above");
-        let ctr = &mut self.counters[level];
+        let ctr = counter_slot(&mut self.counters, &mut self.batch_counters, self.cur_slot, level);
 
         // Per-window quantization, expression-identical to the scalar
         // engine: every lane (= output pixel) carries its own
@@ -899,28 +1072,25 @@ impl ComputeEngine for SopSlicedEngine {
             } else {
                 (1u64 << lanes_n) - 1
             };
+            self.lane_slots_used += lanes_n as u64;
+            self.lane_slots_total += LANES as u64;
             for lane in 0..lanes_n {
                 let p = start + lane;
                 let (oy, ox) = (cy0 + p / rw, cx0 + p % rw);
-                let mut wmax = 0.0f32;
-                for dy in 0..k {
-                    for dx in 0..k {
-                        let src = ((oy * s + dy) * w + (ox * s + dx)) * n;
-                        for c in 0..n {
-                            let v = input.data[src + c];
-                            self.raw_window[(dy * k + dx) * n + c] = v;
-                            wmax = wmax.max(v.abs());
-                        }
-                    }
-                }
-                let act_scale = wmax.max(bias_floor).max(1e-12);
+                let act_scale = gather_lane_window(
+                    spec,
+                    input,
+                    w,
+                    oy,
+                    ox,
+                    bias_floor,
+                    nb,
+                    &mut self.raw_window,
+                    &mut self.lane_windows,
+                    lane,
+                );
                 lane_scale[lane] = act_scale;
                 lane_dequant[lane] = act_scale as f64 * st.w_scale as f64;
-                let inv_a = 1.0 / act_scale;
-                for (i, &v) in self.raw_window.iter().enumerate() {
-                    self.lane_windows[i * LANES + lane] =
-                        Fixed::quantize((v * inv_a) as f64 * 0.999, nb);
-                }
             }
             for i in 0..win {
                 transpose_lanes(
@@ -958,8 +1128,170 @@ impl ComputeEngine for SopSlicedEngine {
         Ok(())
     }
 
+    /// True cross-image lane packing: the region's output pixels of all
+    /// images are laid out **image-major** in one flat list and cut
+    /// into lane groups of 64, so image *i*'s ragged tail is backfilled
+    /// by image *i+1*'s leading pixels. Lanes never interact — weights
+    /// broadcast, biases/scales are per lane, per-window scaling makes
+    /// each lane's digits a function of its own window — so per-image
+    /// outputs are bit-identical to solo runs; replaying the buffered
+    /// group results in flat order keeps each image's END accounting in
+    /// its exact solo accumulation order.
+    fn run_level_region_batched(
+        &mut self,
+        level: usize,
+        spec: &FusedConvSpec,
+        slots: &mut [BatchSlot],
+        weights: &Tensor,
+        bias: &[f32],
+        region: OutRegion,
+    ) -> Result<()> {
+        let Some(first) = slots.first() else {
+            return Ok(());
+        };
+        let in_shape = first.input.shape.clone();
+        let mut w = 0usize;
+        for (i, slot) in slots.iter().enumerate() {
+            if slot.input.shape != in_shape {
+                bail!(
+                    "{}: batch slot {i} input {:?} != slot 0 input {:?}",
+                    spec.name,
+                    slot.input.shape,
+                    in_shape
+                );
+            }
+            let (_, sw) = check_region_args(spec, slot.input, weights, bias, slot.out, region)?;
+            w = sw;
+        }
+        if region.is_empty() {
+            return Ok(());
+        }
+        self.compile_level(level, spec, weights);
+        let (k, n, m) = (spec.k, spec.n_in, spec.m_out);
+        let nb = self.n_bits;
+        let frac = (nb - 1) as usize;
+        if self.batch_counters.len() < slots.len() {
+            self.batch_counters.resize_with(slots.len(), Vec::new);
+        }
+        let st = self.levels[level].as_mut().expect("compiled above");
+
+        let max_b = bias.iter().fold(0.0f32, |mb, b| mb.max(b.abs()));
+        let bias_floor = max_b / st.w_scale;
+
+        let (cy0, cy1, cx0, cx1) = conv_rect(spec, region);
+        let rw = cx1 - cx0;
+        // Pixels per image, then the flat image-major pixel space the
+        // lane groups are cut from.
+        let ppi = (cy1 - cy0) * rw;
+        let pixels = ppi * slots.len();
+        let win = k * k * n;
+        self.scratch.clear();
+        self.scratch.resize(pixels * m, 0.0);
+        self.lane_windows.resize(win * LANES, Fixed::zero(nb - 1));
+        self.planes.resize(win * frac, DigitPlane::ZERO);
+        self.results.resize_with(m, SlicedSopResult::empty);
+        self.raw_window.resize(win, 0.0);
+        self.lane_biases.resize(LANES, Fixed::zero(nb - 1));
+        let mut lane_scale = [0.0f32; LANES];
+        let mut lane_dequant = [0.0f64; LANES];
+
+        let mut start = 0usize;
+        while start < pixels {
+            let lanes_n = LANES.min(pixels - start);
+            let active = if lanes_n == LANES {
+                u64::MAX
+            } else {
+                (1u64 << lanes_n) - 1
+            };
+            self.lane_slots_used += lanes_n as u64;
+            self.lane_slots_total += LANES as u64;
+            for lane in 0..lanes_n {
+                let p = start + lane;
+                let (b, q) = (p / ppi, p % ppi);
+                let (oy, ox) = (cy0 + q / rw, cx0 + q % rw);
+                let act_scale = gather_lane_window(
+                    spec,
+                    slots[b].input,
+                    w,
+                    oy,
+                    ox,
+                    bias_floor,
+                    nb,
+                    &mut self.raw_window,
+                    &mut self.lane_windows,
+                    lane,
+                );
+                lane_scale[lane] = act_scale;
+                lane_dequant[lane] = act_scale as f64 * st.w_scale as f64;
+            }
+            for i in 0..win {
+                transpose_lanes(
+                    &self.lane_windows[i * LANES..i * LANES + lanes_n],
+                    frac as u32,
+                    &mut self.planes[i * frac..(i + 1) * frac],
+                );
+            }
+            for (f, pipe) in st.pipes.iter_mut().enumerate() {
+                for lane in 0..lanes_n {
+                    self.lane_biases[lane] = Fixed::quantize(
+                        (bias[f] / (lane_scale[lane] * st.w_scale)) as f64 * 0.999,
+                        nb,
+                    );
+                }
+                pipe.set_lane_biases(&self.lane_biases[..lanes_n]);
+                self.results[f] = pipe.run(&self.planes, frac as u32, active);
+            }
+            // Replay in flat (image-major, pixel-major, filter-inner)
+            // order: each image's counters see its record_sop calls in
+            // exactly its solo-run sequence.
+            for lane in 0..lanes_n {
+                let p = start + lane;
+                let b = p / ppi;
+                let ctr = counter_slot(
+                    &mut self.counters,
+                    &mut self.batch_counters,
+                    Some(b),
+                    level,
+                );
+                let base = p * m;
+                for (f, res) in self.results.iter().enumerate() {
+                    let r = res.lane(lane);
+                    record_sop(ctr, &mut self.scratch[base + f], &r, lane_dequant[lane]);
+                }
+            }
+            start += lanes_n;
+        }
+        for (b, slot) in slots.iter_mut().enumerate() {
+            write_pooled_region(
+                spec,
+                &self.scratch[b * ppi * m..(b + 1) * ppi * m],
+                cy0,
+                cx0,
+                rw,
+                slot.out,
+                region,
+            );
+        }
+        Ok(())
+    }
+
+    fn select_counter_slot(&mut self, slot: Option<usize>) {
+        self.cur_slot = slot;
+    }
+
     fn take_end_counters(&mut self) -> Vec<EndCounters> {
         std::mem::take(&mut self.counters)
+    }
+
+    fn take_end_counters_batched(&mut self) -> Vec<Vec<EndCounters>> {
+        std::mem::take(&mut self.batch_counters)
+    }
+
+    fn take_lane_slots(&mut self) -> (u64, u64) {
+        (
+            std::mem::take(&mut self.lane_slots_used),
+            std::mem::take(&mut self.lane_slots_total),
+        )
     }
 }
 
@@ -1223,6 +1555,76 @@ mod tests {
                     )
                     .expect("empty region");
                 assert!(untouched.data.iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    /// Batched region evaluation — the scalar engines' loop fallback
+    /// and the sliced engine's cross-image lane packing alike — is
+    /// bit-identical, per image, to solo runs: outputs AND per-image
+    /// END counters; the sliced engine's lane-occupancy accounting
+    /// reflects the packed (image-major) grouping.
+    #[test]
+    fn batched_region_matches_per_image_solo_runs() {
+        let mut rng = Rng::new(41);
+        let sp = spec(3, 1, 2, 3, Some((2, 2)));
+        let weights = random_tensor(vec![3, 3, 2, 3], &mut rng, 0.3);
+        let bias = vec![0.03, -0.07, 0.01];
+        let inputs: Vec<Tensor> = (0..3)
+            .map(|_| random_tensor(vec![9, 9, 2], &mut rng, 1.0).relu())
+            .collect();
+        for kind in [
+            EngineKind::F32,
+            EngineKind::Sop { n_bits: 8 },
+            EngineKind::SopSliced { n_bits: 8 },
+        ] {
+            let mut solo_out = Vec::new();
+            let mut solo_ctr = Vec::new();
+            for input in &inputs {
+                let mut e = kind.build();
+                solo_out.push(e.run_level(0, &sp, input, &weights, &bias).unwrap());
+                solo_ctr.push(e.take_end_counters());
+            }
+            let mut batched = kind.build();
+            let mut outs: Vec<Tensor> = solo_out
+                .iter()
+                .map(|o| Tensor::zeros(o.shape.clone()))
+                .collect();
+            let (oh, ow) = (solo_out[0].shape[0], solo_out[0].shape[1]);
+            let mut slots: Vec<BatchSlot> = inputs
+                .iter()
+                .zip(outs.iter_mut())
+                .map(|(input, out)| BatchSlot { input, out })
+                .collect();
+            batched
+                .run_level_region_batched(
+                    0,
+                    &sp,
+                    &mut slots,
+                    &weights,
+                    &bias,
+                    OutRegion::full(oh, ow),
+                )
+                .unwrap();
+            drop(slots);
+            for (i, (got, want)) in outs.iter().zip(&solo_out).enumerate() {
+                assert_eq!(got.data, want.data, "{} image {i}", kind.label());
+            }
+            let per_image = batched.take_end_counters_batched();
+            if kind == EngineKind::F32 {
+                assert!(per_image.is_empty());
+            } else {
+                assert_eq!(per_image.len(), inputs.len(), "{}", kind.label());
+                for (i, (got, want)) in per_image.iter().zip(&solo_ctr).enumerate() {
+                    assert_eq!(got, want, "{} image {i} counters", kind.label());
+                }
+                // Batched work never leaks into the solo counters.
+                assert!(batched.take_end_counters().iter().all(|c| c.sops == 0));
+            }
+            if matches!(kind, EngineKind::SopSliced { .. }) {
+                // 3 images × 6×6 fresh conv pixels = 108 lanes over
+                // ⌈108/64⌉ = 2 groups of 64 offered slots.
+                assert_eq!(batched.take_lane_slots(), (108, 128));
             }
         }
     }

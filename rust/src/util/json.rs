@@ -391,6 +391,27 @@ fn write_into(out: &mut String, v: &Json) {
     }
 }
 
+/// Deep-merge `new` into `base` and return the result. Two objects
+/// merge key-by-key recursively; for any other combination (scalars,
+/// arrays, type mismatches) `new` wins wholesale. This is what lets a
+/// benchmark dump **add** keyed series to an existing JSON file instead
+/// of overwriting the siblings written by earlier runs.
+pub fn merge(base: Json, new: Json) -> Json {
+    match (base, new) {
+        (Json::Obj(mut b), Json::Obj(n)) => {
+            for (k, v) in n {
+                let merged = match b.remove(&k) {
+                    Some(old) => merge(old, v),
+                    None => v,
+                };
+                b.insert(k, merged);
+            }
+            Json::Obj(b)
+        }
+        (_, new) => new,
+    }
+}
+
 /// Builder helpers for writing metric dumps.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -460,6 +481,47 @@ mod tests {
         let v = parse("[3, 4, 5]").unwrap();
         assert_eq!(v.as_usize_vec(), Some(vec![3, 4, 5]));
         assert_eq!(parse("[1.5]").unwrap().as_usize_vec(), None);
+    }
+
+    #[test]
+    fn merge_is_recursive_and_new_wins() {
+        let base = parse(r#"{"benches":{"a":{"x":1},"b":{"y":2}},"extra":{"k":1},"v":1}"#).unwrap();
+        let new = parse(r#"{"benches":{"b":{"y":9},"c":{"z":3}},"extra":{"m":2},"v":2}"#).unwrap();
+        let got = merge(base, new);
+        // Sibling keys from both sides survive…
+        assert_eq!(got.get("benches").unwrap().get("a").unwrap().get("x").unwrap().as_i64(), Some(1));
+        assert_eq!(got.get("benches").unwrap().get("c").unwrap().get("z").unwrap().as_i64(), Some(3));
+        // …colliding leaves take the new value…
+        assert_eq!(got.get("benches").unwrap().get("b").unwrap().get("y").unwrap().as_i64(), Some(9));
+        assert_eq!(got.get("v").unwrap().as_i64(), Some(2));
+        // …and objects union recursively.
+        assert_eq!(got.get("extra").unwrap().get("k").unwrap().as_i64(), Some(1));
+        assert_eq!(got.get("extra").unwrap().get("m").unwrap().as_i64(), Some(2));
+        // Non-object collisions (arrays, scalars, type mismatch): new wins.
+        let got = merge(parse("[1,2]").unwrap(), parse("[3]").unwrap());
+        assert_eq!(got, parse("[3]").unwrap());
+        let got = merge(parse(r#"{"a":1}"#).unwrap(), parse("7").unwrap());
+        assert_eq!(got, Json::Num(7.0));
+    }
+
+    #[test]
+    fn merge_round_trips_through_text() {
+        // The harness path: parse an existing dump, merge a fresh dump,
+        // write, re-parse — nothing lost, nothing mangled.
+        let old = r#"{"group":"g","benches":{"reuse":{"med_ms":1.5}}}"#;
+        let fresh = r#"{"group":"g","benches":{"batched":{"med_ms":0.8}}}"#;
+        let merged = merge(parse(old).unwrap(), parse(fresh).unwrap());
+        let text = write(&merged);
+        let back = parse(&text).unwrap();
+        assert_eq!(back, merged);
+        assert_eq!(
+            back.get("benches").unwrap().get("reuse").unwrap().get("med_ms").unwrap().as_f64(),
+            Some(1.5)
+        );
+        assert_eq!(
+            back.get("benches").unwrap().get("batched").unwrap().get("med_ms").unwrap().as_f64(),
+            Some(0.8)
+        );
     }
 
     #[test]

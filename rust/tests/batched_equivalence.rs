@@ -1,0 +1,330 @@
+//! **Batched differential harness**: the cross-request lane-packing
+//! path must be *bit-identical* — per-image outputs and per-image
+//! END/reuse counters alike — to running the same images one at a
+//! time. This is the acceptance gate of the batch dimension:
+//!
+//! - all four zoo miniatures × batch ∈ {1, 2, 3, 5, 8} × all three
+//!   engines, end-to-end through `NativePipeline::infer_batch`
+//!   (chained pyramids, shortcuts, classifier head), with per-image
+//!   END counters and reuse attribution checked against fresh solo
+//!   pipelines;
+//! - adversarial ragged tails at the engine level: per-image output
+//!   regions of 1, 63, 64 and 65 pixels, so the 64-wide lane groups
+//!   straddle image boundaries at every masking edge;
+//! - serial vs parallel batched executor parity (`run_batch` vs
+//!   `run_batch_parallel`), including per-image counter equality with
+//!   the corresponding solo schedules.
+
+use usefuse::coordinator::{FusionExecutor, NativePipeline};
+use usefuse::geometry::FusedConvSpec;
+use usefuse::nets;
+use usefuse::runtime::engine::{BatchSlot, ComputeEngine, EndCounters, EngineKind, OutRegion};
+use usefuse::runtime::Tensor;
+use usefuse::util::rng::Rng;
+
+const BATCHES: [usize; 5] = [1, 2, 3, 5, 8];
+const MAX_BATCH: usize = 8;
+
+/// Random non-negative activation tile (post-ReLU statistics).
+fn random_tile(shape: Vec<usize>, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| (rng.normal() as f32).max(0.0)).collect())
+        .expect("shape matches data")
+}
+
+/// Full matrix for one engine kind: every zoo miniature, every batch
+/// size, `infer_batch` vs fresh solo pipelines — outputs, per-image END
+/// counters, and per-image reuse attribution all bit-identical.
+fn check_zoo_batched(kind: EngineKind) {
+    for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
+        let net = nets::tiny(name).expect("tiny preset");
+        let images: Vec<Tensor> = (0..MAX_BATCH)
+            .map(|i| nets::random_input(&net.convs[0], 0x1A + i as u64))
+            .collect();
+        // Solo baselines: one fresh pipeline per image, so its
+        // aggregate counters/reuse totals are exactly that image's.
+        let mut solo_infs = Vec::with_capacity(MAX_BATCH);
+        let mut solo_counters: Vec<Vec<EndCounters>> = Vec::with_capacity(MAX_BATCH);
+        let mut solo_reuse = Vec::with_capacity(MAX_BATCH);
+        for img in &images {
+            let p = NativePipeline::synthetic(&net, kind, 0x51).expect("solo pipeline");
+            solo_infs.push(p.infer(img).expect("solo infer"));
+            solo_counters.push(p.end_counters());
+            solo_reuse.push(p.reuse_totals());
+        }
+        for &bsz in &BATCHES {
+            let batch = &images[..bsz];
+            let pipe = NativePipeline::synthetic(&net, kind, 0x51).expect("batched pipeline");
+            let (infs, per_image) = pipe.infer_batch(batch).expect("batched infer");
+            assert_eq!(infs.len(), bsz, "{name} b{bsz} ({}): result count", kind.label());
+            assert_eq!(per_image.len(), bsz);
+            let mut reuse = (0u64, 0u64);
+            for (i, inf) in infs.iter().enumerate() {
+                let tag = format!("{name} b{bsz} image {i} ({})", kind.label());
+                assert_eq!(
+                    inf.logits.data, solo_infs[i].logits.data,
+                    "{tag}: logits not bit-identical"
+                );
+                assert_eq!(
+                    inf.features.data, solo_infs[i].features.data,
+                    "{tag}: features not bit-identical"
+                );
+                assert_eq!(inf.class, solo_infs[i].class, "{tag}: class differs");
+                assert_eq!(
+                    per_image[i], solo_counters[i],
+                    "{tag}: per-image END counters differ from a solo run"
+                );
+                reuse.0 += solo_reuse[i].0;
+                reuse.1 += solo_reuse[i].1;
+            }
+            // Per-image reuse attribution: the batch's totals are the
+            // exact sum of each image's solo totals (geometry is shared,
+            // so each image reuses exactly what it would alone).
+            assert_eq!(
+                pipe.reuse_totals(),
+                reuse,
+                "{name} b{bsz} ({}): reuse totals are not the per-image sum",
+                kind.label()
+            );
+            // The batch's aggregate counters are the per-image sum too.
+            let agg = pipe.end_counters();
+            if !agg.is_empty() {
+                for (j, a) in agg.iter().enumerate() {
+                    let mut sum = EndCounters::default();
+                    for c in &per_image {
+                        sum.merge(&c[j]);
+                    }
+                    assert_eq!(
+                        *a, sum,
+                        "{name} b{bsz} level {j} ({}): aggregate != per-image sum",
+                        kind.label()
+                    );
+                }
+            } else {
+                assert!(
+                    per_image.iter().all(|c| c.is_empty()),
+                    "{name} ({}): f32 per-image counters must be empty",
+                    kind.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zoo_batched_matches_solo_f32() {
+    check_zoo_batched(EngineKind::F32);
+}
+
+#[test]
+fn zoo_batched_matches_solo_sop() {
+    check_zoo_batched(EngineKind::Sop { n_bits: 8 });
+}
+
+#[test]
+fn zoo_batched_matches_solo_sop_sliced() {
+    check_zoo_batched(EngineKind::SopSliced { n_bits: 8 });
+}
+
+/// Adversarial ragged tails at the engine level: per-image regions of
+/// 1, 63, 64 and 65 output pixels, batch 3, all three engines. With
+/// 64-wide groups over the flat image-major pixel order, every one of
+/// these straddles image boundaries somewhere — the exact masking /
+/// backfill edges of cross-image packing.
+#[test]
+fn ragged_batched_tails_are_bit_identical() {
+    let spec = FusedConvSpec {
+        name: "ragged".into(),
+        k: 3,
+        s: 1,
+        pad: 0,
+        pool: None,
+        n_in: 2,
+        m_out: 3,
+        ifm: 16,
+    };
+    for &(out_h, out_w) in &[(1usize, 1usize), (7, 9), (8, 8), (5, 13)] {
+        let h = (out_h - 1) * spec.s + spec.k;
+        let w = (out_w - 1) * spec.s + spec.k;
+        let inputs: Vec<Tensor> = (0..3)
+            .map(|i| random_tile(vec![h, w, spec.n_in], (out_h * 100 + out_w + i) as u64))
+            .collect();
+        let mut rng = Rng::new(0xF11 ^ (out_h * 31 + out_w) as u64);
+        let nw = spec.k * spec.k * spec.n_in * spec.m_out;
+        let scale = 1.0 / ((spec.k * spec.k * spec.n_in) as f32).sqrt();
+        let weights = Tensor::new(
+            vec![spec.k, spec.k, spec.n_in, spec.m_out],
+            (0..nw).map(|_| rng.normal() as f32 * scale).collect(),
+        )
+        .expect("weight shape");
+        let bias: Vec<f32> = (0..spec.m_out).map(|_| (rng.f32() - 0.5) * 0.1).collect();
+        let region = OutRegion::full(out_h, out_w);
+        for kind in [
+            EngineKind::F32,
+            EngineKind::Sop { n_bits: 8 },
+            EngineKind::SopSliced { n_bits: 8 },
+        ] {
+            let tag = format!("ragged {out_h}×{out_w} ({})", kind.label());
+            // Solo baselines with a fresh engine per image.
+            let mut solo_outs = Vec::new();
+            let mut solo_ctrs = Vec::new();
+            for input in &inputs {
+                let mut eng = kind.build();
+                let mut out = Tensor::zeros(vec![out_h, out_w, spec.m_out]);
+                eng.run_level_region(0, &spec, input, &weights, &bias, &mut out, region)
+                    .expect("solo region");
+                solo_outs.push(out);
+                solo_ctrs.push(eng.take_end_counters());
+            }
+            // One batched call over all three images.
+            let mut eng = kind.build();
+            let mut outs: Vec<Tensor> = (0..3)
+                .map(|_| Tensor::zeros(vec![out_h, out_w, spec.m_out]))
+                .collect();
+            let mut slots: Vec<BatchSlot> = inputs
+                .iter()
+                .zip(outs.iter_mut())
+                .map(|(input, out)| BatchSlot { input, out })
+                .collect();
+            eng.run_level_region_batched(0, &spec, &mut slots, &weights, &bias, region)
+                .expect("batched region");
+            drop(slots);
+            let mut per_image = eng.take_end_counters_batched();
+            per_image.resize(3, Vec::new());
+            for i in 0..3 {
+                assert_eq!(
+                    outs[i].data, solo_outs[i].data,
+                    "{tag} image {i}: outputs not bit-identical"
+                );
+                assert_eq!(
+                    per_image[i], solo_ctrs[i],
+                    "{tag} image {i}: END counters differ"
+                );
+            }
+            assert!(
+                eng.take_end_counters().iter().all(|c| c.sops == 0),
+                "{tag}: batched work leaked into the solo counters"
+            );
+        }
+    }
+}
+
+/// Serial vs parallel batched executor parity on the fused LeNet
+/// pyramid: identical per-image outputs; `run_batch` per-image counters
+/// match solo `run`, `run_batch_parallel` per-image counters match solo
+/// `run_parallel` (the column-only reuse schedule); reuse stats are the
+/// per-image sum in both modes.
+#[test]
+fn serial_and_parallel_batched_executors_agree() {
+    let specs = nets::lenet5().paper_fusion()[0].clone();
+    let kind = EngineKind::SopSliced { n_bits: 8 };
+    let build = || {
+        let (weights, biases) = nets::random_weights(&specs, 41);
+        FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
+            .expect("uniform LeNet plan")
+    };
+    let images: Vec<Tensor> = (0..3)
+        .map(|i| nets::random_input(&specs[0], 77 + i as u64))
+        .collect();
+
+    // Solo baselines, one fresh executor per image per schedule.
+    let mut solo_serial = Vec::new();
+    let mut solo_serial_ctrs = Vec::new();
+    let mut solo_serial_fresh = 0u64;
+    let mut solo_par_ctrs = Vec::new();
+    for img in &images {
+        let e = build();
+        let (out, stats) = e.run(img).expect("solo serial");
+        solo_serial.push(out);
+        solo_serial_ctrs.push(e.end_counters());
+        solo_serial_fresh += stats.fresh_pixels;
+        let ep = build();
+        ep.run_parallel(img, 3).expect("solo parallel");
+        solo_par_ctrs.push(ep.end_counters());
+    }
+
+    let serial = build();
+    let (outs, stats, per_image) = serial.run_batch(&images).expect("batched serial");
+    assert_eq!(
+        stats.fresh_pixels, solo_serial_fresh,
+        "batched fresh pixels != per-image sum"
+    );
+    assert!(stats.lane_slots_total > 0, "sliced batch formed no groups");
+    for i in 0..3 {
+        assert_eq!(outs[i].data, solo_serial[i].data, "image {i}: serial batch");
+        assert_eq!(
+            per_image[i], solo_serial_ctrs[i],
+            "image {i}: serial batched counters != solo"
+        );
+    }
+
+    let par = build();
+    let (pouts, pstats, pper) = par.run_batch_parallel(&images, 3).expect("batched parallel");
+    for i in 0..3 {
+        assert_eq!(
+            pouts[i].data, outs[i].data,
+            "image {i}: parallel batch output != serial batch"
+        );
+        assert_eq!(
+            pper[i], solo_par_ctrs[i],
+            "image {i}: parallel batched counters != solo parallel"
+        );
+    }
+    assert!(
+        pstats.lane_slots_total > 0,
+        "parallel sliced batch formed no groups"
+    );
+
+    // The pipeline-level twin: threaded infer_batch is bit-identical to
+    // the serial one.
+    let net = nets::lenet5();
+    let a = NativePipeline::synthetic(&net, kind, 9).expect("pipeline");
+    let b = NativePipeline::synthetic(&net, kind, 9)
+        .expect("pipeline")
+        .with_threads(3);
+    let imgs: Vec<Tensor> = (0..2)
+        .map(|i| nets::random_input(&net.convs[0], 5 + i as u64))
+        .collect();
+    let (sa, _) = a.infer_batch(&imgs).expect("serial batch");
+    let (sb, _) = b.infer_batch(&imgs).expect("threaded batch");
+    for (x, y) in sa.iter().zip(&sb) {
+        assert_eq!(x.logits.data, y.logits.data, "threaded batch logits differ");
+    }
+}
+
+/// Batch-of-zero and batch-of-one degenerate cases stay clean at the
+/// executor level: empty in, empty out; a 1-batch is exactly a solo run.
+#[test]
+fn degenerate_batches_are_clean() {
+    let specs = nets::lenet5().paper_fusion()[0].clone();
+    let (weights, biases) = nets::random_weights(&specs, 13);
+    let exec = FusionExecutor::native(
+        "lenet",
+        &specs,
+        1,
+        weights,
+        biases,
+        EngineKind::SopSliced { n_bits: 8 },
+    )
+    .expect("plan");
+    let (outs, stats, ctrs) = exec.run_batch(&[]).expect("empty batch");
+    assert!(outs.is_empty() && ctrs.is_empty());
+    assert_eq!(stats.fresh_pixels, 0);
+    let img = nets::random_input(&specs[0], 3);
+    let (b1, _, _) = exec.run_batch(std::slice::from_ref(&img)).expect("batch of 1");
+    let solo = {
+        let (weights, biases) = nets::random_weights(&specs, 13);
+        let e = FusionExecutor::native(
+            "lenet",
+            &specs,
+            1,
+            weights,
+            biases,
+            EngineKind::SopSliced { n_bits: 8 },
+        )
+        .expect("plan");
+        e.run(&img).expect("solo").0
+    };
+    assert_eq!(b1[0].data, solo.data, "1-batch differs from solo run");
+}

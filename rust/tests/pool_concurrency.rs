@@ -18,8 +18,8 @@ use std::time::{Duration, Instant};
 
 use usefuse::coordinator::pipeline::NativePipeline;
 use usefuse::coordinator::pool::{
-    native_factory, pipeline_end_source, pipeline_reuse_source, ModelGroup, PoolConfig,
-    RuntimeFactory, WorkerPool,
+    native_factory, pipeline_end_source, pipeline_lane_source, pipeline_reuse_source, ModelGroup,
+    PoolConfig, RuntimeFactory, WorkerPool,
 };
 use usefuse::nets;
 use usefuse::runtime::{DType, EngineKind, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
@@ -130,6 +130,7 @@ fn sixteen_clients_hammer_the_pool() {
             factory: toy_factory(),
             end_source: None,
             reuse_source: None,
+            lane_source: None,
         })
         .expect("pool"),
     );
@@ -178,6 +179,7 @@ fn queued_requests_drain_as_one_stacked_call() {
         factory: toy_factory(),
         end_source: None,
         reuse_source: None,
+        lane_source: None,
     })
     .expect("pool");
 
@@ -247,6 +249,7 @@ fn native_pool(kind: EngineKind, workers: usize, queue_cap: usize) -> (Arc<Nativ
         factory: native_factory(&pipeline),
         end_source: Some(pipeline_end_source(&pipeline)),
         reuse_source: Some(pipeline_reuse_source(&pipeline)),
+        lane_source: Some(pipeline_lane_source(&pipeline)),
     })
     .expect("native pool");
     (pipeline, pool)
@@ -354,6 +357,7 @@ fn shutdown_drains_queue_then_rejects_new_requests() {
         factory: toy_factory(),
         end_source: None,
         reuse_source: None,
+        lane_source: None,
     })
     .expect("pool");
 
@@ -402,6 +406,7 @@ fn router_isolates_model_groups() {
             factory: toy_factory(),
             end_source: None,
             reuse_source: None,
+            lane_source: None,
         })
         .expect("pool"),
     );
@@ -427,4 +432,73 @@ fn router_isolates_model_groups() {
         }
     });
     assert_eq!(pool.metrics().total_requests, 8 * 16);
+}
+
+/// **Native cross-request batching**: a single sliced-engine worker
+/// flooded with async requests must form real multi-image batches
+/// (batch histogram gains a key > 1, responses marked `stacked`), every
+/// per-request result must be bit-identical to a fresh single-shot
+/// pipeline on the same image, the lane-occupancy stat must surface in
+/// the metrics snapshot, and shutting down with a batch still queued
+/// must drain every pending request cleanly.
+#[test]
+fn native_pool_forms_real_batches_with_exact_results() {
+    const REQS: usize = 8;
+    let kind = EngineKind::SopSliced { n_bits: 8 };
+    let (_pipeline, pool) = native_pool(kind, 1, 64);
+    let net = nets::lenet5();
+    // Fresh reference pipeline, same seed: the single-shot oracle.
+    let oracle = NativePipeline::synthetic(&net, kind, 0xFACE).expect("oracle");
+
+    let images: Vec<Tensor> = (0..REQS)
+        .map(|i| nets::random_input(&net.convs[0], 0xBA7C + i as u64))
+        .collect();
+    // Flood the single worker: it dequeues the first request almost
+    // immediately, and while it grinds through that sliced pyramid the
+    // remaining submissions pile up, so later drains pack multi-image
+    // batches through the `_b{N}` stacked programs.
+    let pending: Vec<_> = images
+        .iter()
+        .map(|img| pool.classify_async("lenet5", img.clone()).expect("submit"))
+        .collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let r = rx.recv().expect("recv").expect("resp");
+        let want = oracle.infer(&images[i]).expect("oracle infer");
+        assert_eq!(r.class, want.class, "request {i}: class drifted");
+        assert_eq!(
+            r.logits, want.logits.data,
+            "request {i}: batched logits not bit-identical to single-shot"
+        );
+        if r.batch_size > 1 {
+            assert!(r.stacked, "request {i}: multi-image batch not stacked");
+        }
+    }
+    let snap = pool.metrics();
+    assert_eq!(snap.total_requests, REQS as u64);
+    assert_eq!(snap.error_requests, 0);
+    assert!(
+        snap.batch_hist.keys().any(|&k| k > 1),
+        "batcher never packed two requests into one native call: {:?}",
+        snap.batch_hist
+    );
+    assert!(
+        snap.lane_slots_total > 0 && snap.lane_slots_used <= snap.lane_slots_total,
+        "lane occupancy stat missing from the snapshot"
+    );
+    assert!(snap.lane_occupancy() > 0.0);
+
+    // Shutdown mid-batch: park more work in the queue, then shut down —
+    // everything already submitted must still be answered correctly.
+    let tail: Vec<_> = images
+        .iter()
+        .take(3)
+        .map(|img| pool.classify_async("lenet5", img.clone()).expect("tail submit"))
+        .collect();
+    pool.shutdown();
+    for (i, rx) in tail.into_iter().enumerate() {
+        let r = rx.recv().expect("tail recv").expect("tail resp");
+        let want = oracle.infer(&images[i]).expect("oracle infer");
+        assert_eq!(r.logits, want.logits.data, "tail request {i} lost in shutdown");
+    }
+    assert!(pool.classify("lenet5", images[0].clone()).is_err());
 }
