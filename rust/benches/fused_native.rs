@@ -1,20 +1,24 @@
 //! `fused_native` — tile throughput of the artifact-free native fusion
 //! backend: the fused LeNet pyramid executed end-to-end through the
 //! vectorized `F32Engine`, the digit-serial `SopEngine` (SOP + END) and
-//! the bit-sliced 64-lane `SopSlicedEngine`, serial and across the
+//! the bit-sliced `64·W`-lane `SopSlicedEngine`, serial and across the
 //! thread pool, **with and without §3.4 inter-tile reuse**. Prints each
 //! engine's verify residual, the live END statistics and reuse
 //! fraction of the timed runs, the headline **sliced-vs-scalar SOP
 //! speedup** (EXPERIMENTS.md expects ≥ 4×) and the **reuse-on vs
 //! reuse-off speedup** per engine (EXPERIMENTS.md expects ≥ 2× for the
 //! scalar SOP engine; reuse-on output is asserted bit-identical to
-//! reuse-off). With `--json` (or `USEFUSE_BENCH_JSON=1`) it also
-//! writes `BENCH_fused_native.json` — the machine-readable perf
-//! trajectory documented in EXPERIMENTS.md.
+//! reuse-off). A **width series** then sweeps the sliced engine's
+//! digit-plane width over W ∈ {1, 2, 4, 8} (64..512 lanes) on batched
+//! 8-image runs — the lane-pressure regime where wider planes pay —
+//! and prints each width's throughput next to W=1. With `--json` (or
+//! `USEFUSE_BENCH_JSON=1`) it also writes `BENCH_fused_native.json` —
+//! the machine-readable perf trajectory documented in EXPERIMENTS.md
+//! and gated by `usefuse bench --compare` against BENCH_baseline.json.
 use usefuse::coordinator::FusionExecutor;
 use usefuse::harness::{black_box, Bench};
 use usefuse::nets;
-use usefuse::runtime::{EndCounters, EngineKind, Tensor};
+use usefuse::runtime::{EndCounters, EngineKind, LaneWidth, Tensor};
 
 fn main() {
     let mut b = Bench::new("fused_native");
@@ -27,7 +31,7 @@ fn main() {
     for kind in [
         EngineKind::F32,
         EngineKind::Sop { n_bits: 8 },
-        EngineKind::SopSliced { n_bits: 8 },
+        EngineKind::sliced(8),
     ] {
         let build = |reuse: bool| {
             let (weights, biases) = nets::random_weights(&specs, 42);
@@ -147,7 +151,7 @@ fn main() {
     // (EXPERIMENTS.md expects ≥ 2× throughput at batch 8; CI asserts
     // it from the JSON dump).
     {
-        let kind = EngineKind::SopSliced { n_bits: 8 };
+        let kind = EngineKind::sliced(8);
         let (weights, biases) = nets::random_weights(&specs, 42);
         let exec = FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
             .expect("uniform LeNet plan");
@@ -187,6 +191,61 @@ fn main() {
                 );
                 extras.push((format!("batched_images_per_sec_b{bsz}"), ips));
                 extras.push((format!("batched_lane_occupancy_b{bsz}"), occ));
+            }
+        }
+    }
+
+    // Width series: the sliced engine at W ∈ {1, 2, 4, 8} machine words
+    // per digit plane (64..512 lanes), each on batched 8-image runs so
+    // the wider planes actually fill (a solo LeNet pyramid can't feed
+    // 512 lanes). Every width is first checked bit-identical to the
+    // scalar engine on one batch, then timed; the W-vs-W1 ratio is the
+    // autovectorization lever CI gates (W=4 ≥ 1.5× W=1 on this series)
+    // and `usefuse bench --compare` holds across PRs.
+    {
+        let images: Vec<Tensor> = (0..8)
+            .map(|i| nets::random_input(&specs[0], 7 + i as u64))
+            .collect();
+        let (weights, biases) = nets::random_weights(&specs, 42);
+        let scalar = FusionExecutor::native(
+            "lenet",
+            &specs,
+            1,
+            weights,
+            biases,
+            EngineKind::Sop { n_bits: 8 },
+        )
+        .expect("uniform LeNet plan");
+        let (scalar_outs, _, _) = scalar.run_batch(&images).expect("scalar batch");
+        let mut w1_ips = None;
+        for width in LaneWidth::ALL {
+            let kind = EngineKind::SopSliced { n_bits: 8, width };
+            let (weights, biases) = nets::random_weights(&specs, 42);
+            let exec = FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
+                .expect("uniform LeNet plan");
+            let (outs, stats, _) = exec.run_batch(&images).expect("width batch");
+            for (i, (out, want)) in outs.iter().zip(&scalar_outs).enumerate() {
+                assert_eq!(
+                    out.data, want.data,
+                    "width {width} image {i}: sliced output differs from scalar"
+                );
+            }
+            let w = width.words();
+            let m = b.bench(&format!("lenet_pyramid_sop-sliced_w{w}"), || {
+                black_box(exec.run_batch(&images).expect("width run").1.tiles_executed)
+            });
+            if let Some(m) = m {
+                let ips = images.len() as f64 / m.median.as_secs_f64();
+                if width == LaneWidth::W1 {
+                    w1_ips = Some(ips);
+                }
+                let vs_w1 = w1_ips.map(|base| ips / base.max(1e-9)).unwrap_or(1.0);
+                println!(
+                    "  width {width} (w{w}): {ips:.1} images/sec ({vs_w1:.2}× W=1),                      {:.1}% lane occupancy",
+                    100.0 * stats.lane_occupancy()
+                );
+                extras.push((format!("width_images_per_sec_w{w}"), ips));
+                extras.push((format!("width_lane_occupancy_w{w}"), stats.lane_occupancy()));
             }
         }
     }

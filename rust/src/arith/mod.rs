@@ -7,9 +7,9 @@
 //! - [`online_add`] — radix-2 online adder.
 //! - [`sop`] — digit-pipelined sum-of-products unit (the WPU core).
 //! - [`end_unit`] — early negative detection (Algorithm 2).
-//! - [`sliced`] — bit-sliced 64-lane twins of the online units: one
-//!   digit step advances 64 SOPs at once, bit-identical to the scalar
-//!   datapath.
+//! - [`sliced`] — bit-sliced width-generic twins of the online units:
+//!   one digit step advances `64·W` SOPs at once (`W ∈ {1,2,4,8}`
+//!   machine words per plane), bit-identical to the scalar datapath.
 //! - [`conventional`] — LSB-first bit-serial baseline units (UNPU-style).
 
 /// Conventional LSB-first bit-serial baseline units.
@@ -22,7 +22,7 @@ pub mod end_unit;
 pub mod online_add;
 /// MSDF online multiplier.
 pub mod online_mul;
-/// Bit-sliced 64-lane online units and SOP pipeline.
+/// Bit-sliced width-generic online units and SOP pipeline.
 pub mod sliced;
 /// Digit-pipelined sum-of-products units.
 pub mod sop;
@@ -32,7 +32,7 @@ pub use end_unit::{EndState, EndUnit};
 pub use online_add::{OnlineAdd, DELTA_OLA};
 pub use online_mul::{OnlineMul, DELTA_OLM};
 pub use sliced::{
-    transpose_lanes, DigitPlane, SlicedEnd, SlicedOnlineAdd, SlicedOnlineMul, SlicedSopResult,
-    SopSlicedPipeline, LANES,
+    transpose_lanes, DigitPlane, LaneMask, LaneWidth, SlicedEnd, SlicedOnlineAdd,
+    SlicedOnlineMul, SlicedSopResult, SopSlicedPipeline, LANES,
 };
 pub use sop::{sop_exact, sop_stream, sop_with_end, SopEndResult};

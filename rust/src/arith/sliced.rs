@@ -1,86 +1,302 @@
-//! **Bit-sliced 64-lane MSDF datapath** — the word-parallel twin of the
-//! scalar online units (paper §3.1–§3.2), advancing 64 independent
-//! sums-of-products per digit step.
+//! **Bit-sliced wide MSDF datapath** — the word-parallel twin of the
+//! scalar online units (paper §3.1–§3.2), advancing `64·W` independent
+//! sums-of-products per digit step, where `W` is the compile-time
+//! **plane width** in machine words (`W ∈ {1, 2, 4, 8}` → 64, 128, 256
+//! or 512 lanes).
 //!
 //! ## Digit-plane layout
 //!
-//! A radix-2 signed digit d ∈ {-1, 0, 1} of 64 concurrent lanes is held
-//! as one [`DigitPlane`] — a `(pos, neg)` bitmask pair where bit `l` of
-//! `pos` means lane `l`'s digit is +1 and bit `l` of `neg` means it is
-//! −1 (`pos & neg == 0` always). A full digit *stream* is a sequence of
-//! planes, one per MSDF position:
+//! A radix-2 signed digit d ∈ {-1, 0, 1} of `64·W` concurrent lanes is
+//! held as one [`DigitPlane`] — a `(pos, neg)` pair of [`LaneMask`]
+//! blocks (`[u64; W]`) where bit `l` of `pos` means lane `l`'s digit is
+//! +1 and bit `l` of `neg` means it is −1 (`pos & neg == 0` always).
+//! Lane `l` lives in word `l / 64`, bit `l % 64`; all plane operations
+//! are plain boolean ops over the `W` words, which the compiler
+//! autovectorizes to 128/256/512-bit SIMD. A full digit *stream* is a
+//! sequence of planes, one per MSDF position:
 //!
 //! ```text
-//!            lane:  63 ........ 2 1 0
-//! position 1 pos:    0 ........ 0 1 0     lane 0: digits  0,+1,-1,…
-//!            neg:    1 ........ 0 0 0     lane 1: digits +1, 0, 0,…
-//! position 2 pos:    0 ........ 1 0 0     lane 63: digits -1,+1, …
-//!            neg:    0 ........ 0 0 1     …
+//!            lane:  64·W-1 ... 2 1 0
+//! position 1 pos:    0 ....... 0 1 0     lane 0: digits  0,+1,-1,…
+//!            neg:    1 ....... 0 0 0     lane 1: digits +1, 0, 0,…
+//! position 2 pos:    0 ....... 1 0 0     lane 64·W-1: digits -1,+1,…
+//!            neg:    0 ....... 0 0 1     …
 //! ```
 //!
-//! [`transpose_lanes`] converts up to 64 [`Fixed`] operands into this
-//! transposed form; **lane-tail masking** handles ragged groups: lanes
-//! beyond the active count are simply fed all-zero digit streams and
-//! excluded from every result via the caller's `active` mask — the
-//! datapath computes them, the results are never read.
+//! [`transpose_lanes`] converts up to `64·W` [`Fixed`] operands into
+//! this transposed form; **lane-tail masking** handles ragged groups:
+//! lanes beyond the active count — including every dead lane of a
+//! partially-filled **last block word** — are simply fed all-zero digit
+//! streams and excluded from every result via the caller's `active`
+//! mask ([`LaneMask::first_n`]) — the datapath computes them, the
+//! results are never read.
 //!
 //! ## Word-parallel recurrences
 //!
 //! - [`SlicedOnlineAdd`] re-expresses the scalar adder's two bounded
 //!   transfer decompositions (`split_t1`/`split_t2` in
-//!   [`online_add`](super::online_add)) as ~15 boolean operations on
-//!   planes; the two inter-digit state values (`u ∈ {-1,0}`,
-//!   `s ∈ {0,1}`) become one bitmask each.
-//! - [`SlicedOnlineMul`] keeps the Algorithm-1 residual `w` of all 64
-//!   lanes as `f+4` bit planes of its two's-complement representation
-//!   and implements `v = 2w + x·Y` as a plane shift plus a ripple-carry
-//!   add of the per-lane selected addend (Y, −Y or 0 — the serial digit
-//!   only *selects*, so the shared parallel operand broadcasts for
-//!   free). The SELM selection and the `w ← v − z·2^(f+2)` update are a
-//!   handful of sign/range tests on the high planes.
+//!   [`online_add`](super::online_add)) as ~15 boolean block operations
+//!   on planes; the two inter-digit state values (`u ∈ {-1,0}`,
+//!   `s ∈ {0,1}`) become one lane mask each.
+//! - [`SlicedOnlineMul`] keeps the Algorithm-1 residual `w` of all
+//!   `64·W` lanes as `f+4` bit planes of its two's-complement
+//!   representation and implements `v = 2w + x·Y` as a plane shift plus
+//!   a ripple-carry add of the per-lane selected addend (Y, −Y or 0 —
+//!   the serial digit only *selects*, so the shared parallel operand
+//!   broadcasts for free). The SELM selection and the
+//!   `w ← v − z·2^(f+2)` update are a handful of sign/range tests on
+//!   the high planes.
 //! - [`SlicedEnd`] exploits that the scalar END recurrence
 //!   (`acc ← 2·acc + z`, decide on `|acc| ≥ 1`) decides exactly at the
-//!   **first non-zero output digit**, so the whole unit is three
-//!   bitmasks plus a per-lane decision-cycle record.
+//!   **first non-zero output digit**, so the whole unit is three lane
+//!   masks plus a per-lane decision-cycle record.
 //!
-//! All three are **bit-identical** to their scalar twins — digit for
-//! digit, residual for residual, decision cycle for decision cycle —
-//! which the property tests below and `tests/engine_equivalence.rs`
-//! pin down.
+//! All three are **bit-identical** to their scalar twins at every width
+//! — digit for digit, residual for residual, decision cycle for
+//! decision cycle — which the property tests below and
+//! `tests/engine_equivalence.rs` pin down. [`LaneWidth`] is the
+//! value-level width selector the engine/CLI layers thread through
+//! (`--lanes {64|128|256|512}`).
 
 use super::digit::{is_valid_digit, to_sd_digits, Digit, Fixed};
 use super::end_unit::EndState;
 use super::online_mul::DELTA_OLM;
 use super::sop::{tree_levels, SopEndResult};
 
-/// Number of lanes a digit plane carries (one per bit of a machine word).
+/// Lanes per block **word** of a digit plane (one per bit of a `u64`).
+/// A width-`W` plane carries `64 * W` lanes.
 pub const LANES: usize = 64;
 
 /// Maximum residual bit-planes of a [`SlicedOnlineMul`]: `f + 4` for the
 /// largest supported operand precision (`frac_bits ≤ 24`).
 const MAX_PLANES: usize = 28;
 
-/// One signed digit of 64 lanes: bit `l` of `pos`/`neg` set means lane
-/// `l`'s digit is +1/−1 (never both). Lanes with neither bit are 0.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct DigitPlane {
-    /// Lanes whose digit is +1.
-    pub pos: u64,
-    /// Lanes whose digit is −1.
-    pub neg: u64,
+/// Value-level plane-width selector: how many `u64` words (`W`) each
+/// [`LaneMask`] block spans, i.e. `64·W` lanes per digit plane. The
+/// engine layers carry this (e.g. `EngineKind::SopSliced`) and
+/// dispatch to the matching monomorphized datapath.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum LaneWidth {
+    /// 1 word — 64 lanes (the PR-4 datapath).
+    #[default]
+    W1,
+    /// 2 words — 128 lanes (128-bit SIMD blocks).
+    W2,
+    /// 4 words — 256 lanes (256-bit SIMD blocks).
+    W4,
+    /// 8 words — 512 lanes (512-bit SIMD blocks).
+    W8,
 }
 
-impl DigitPlane {
+impl LaneWidth {
+    /// Every supported width, narrowest first.
+    pub const ALL: [LaneWidth; 4] = [LaneWidth::W1, LaneWidth::W2, LaneWidth::W4, LaneWidth::W8];
+
+    /// Block width in `u64` words (`W`).
+    pub const fn words(self) -> usize {
+        match self {
+            LaneWidth::W1 => 1,
+            LaneWidth::W2 => 2,
+            LaneWidth::W4 => 4,
+            LaneWidth::W8 => 8,
+        }
+    }
+
+    /// Lanes per digit plane (`64 · W`).
+    pub const fn lanes(self) -> usize {
+        64 * self.words()
+    }
+
+    /// Parse a lane count (the `--lanes {64|128|256|512}` knob).
+    pub fn from_lanes(lanes: usize) -> Option<LaneWidth> {
+        match lanes {
+            64 => Some(LaneWidth::W1),
+            128 => Some(LaneWidth::W2),
+            256 => Some(LaneWidth::W4),
+            512 => Some(LaneWidth::W8),
+            _ => None,
+        }
+    }
+
+    /// Width override from the `USEFUSE_LANES` environment variable
+    /// (a lane count, e.g. `256`) — the hook CI's non-default-width
+    /// test leg uses. `None` when unset or unparsable.
+    pub fn from_env() -> Option<LaneWidth> {
+        std::env::var("USEFUSE_LANES")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .and_then(LaneWidth::from_lanes)
+    }
+}
+
+impl std::fmt::Display for LaneWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.lanes())
+    }
+}
+
+/// One bit per lane across a `W`-word block: the mask type every sliced
+/// unit carries its per-lane state in. Lane `l` is bit `l % 64` of word
+/// `l / 64`. All boolean ops are word-wise loops over the `W` words —
+/// straight-line code the compiler turns into SIMD blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneMask<const W: usize>(pub [u64; W]);
+
+impl<const W: usize> LaneMask<W> {
+    /// Lanes carried by this mask (`64 · W`).
+    pub const LANES: usize = 64 * W;
+
+    /// No lane set.
+    pub const ZERO: LaneMask<W> = LaneMask([0; W]);
+
+    /// Every lane set.
+    pub const FULL: LaneMask<W> = LaneMask([u64::MAX; W]);
+
+    /// Mask of the first `n` lanes — the ragged-tail `active` mask
+    /// (every lane of a full group, the leading lanes otherwise; dead
+    /// lanes of a partially-filled last word stay clear).
+    #[inline]
+    pub fn first_n(n: usize) -> LaneMask<W> {
+        debug_assert!(n <= Self::LANES, "mask of {n} lanes exceeds {}", Self::LANES);
+        let mut m = [0u64; W];
+        for (wi, word) in m.iter_mut().enumerate() {
+            let lo = wi * 64;
+            *word = if n >= lo + 64 {
+                u64::MAX
+            } else if n > lo {
+                (1u64 << (n - lo)) - 1
+            } else {
+                0
+            };
+        }
+        LaneMask(m)
+    }
+
+    /// Read one lane's bit.
+    #[inline]
+    pub fn get(self, lane: usize) -> bool {
+        debug_assert!(lane < Self::LANES);
+        (self.0[lane >> 6] >> (lane & 63)) & 1 == 1
+    }
+
+    /// Set one lane's bit.
+    #[inline]
+    pub fn set(&mut self, lane: usize) {
+        debug_assert!(lane < Self::LANES);
+        self.0[lane >> 6] |= 1u64 << (lane & 63);
+    }
+
+    /// Clear one lane's bit.
+    #[inline]
+    pub fn clear(&mut self, lane: usize) {
+        debug_assert!(lane < Self::LANES);
+        self.0[lane >> 6] &= !(1u64 << (lane & 63));
+    }
+
+    /// True iff no lane is set.
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        let mut or = 0u64;
+        for w in self.0 {
+            or |= w;
+        }
+        or == 0
+    }
+
+    /// Number of set lanes.
+    #[inline]
+    pub fn count_ones(self) -> u32 {
+        let mut n = 0u32;
+        for w in self.0 {
+            n += w.count_ones();
+        }
+        n
+    }
+}
+
+impl<const W: usize> Default for LaneMask<W> {
+    fn default() -> Self {
+        LaneMask::ZERO
+    }
+}
+
+impl<const W: usize> std::ops::BitAnd for LaneMask<W> {
+    type Output = LaneMask<W>;
+    #[inline(always)]
+    fn bitand(mut self, rhs: LaneMask<W>) -> LaneMask<W> {
+        for i in 0..W {
+            self.0[i] &= rhs.0[i];
+        }
+        self
+    }
+}
+
+impl<const W: usize> std::ops::BitOr for LaneMask<W> {
+    type Output = LaneMask<W>;
+    #[inline(always)]
+    fn bitor(mut self, rhs: LaneMask<W>) -> LaneMask<W> {
+        for i in 0..W {
+            self.0[i] |= rhs.0[i];
+        }
+        self
+    }
+}
+
+impl<const W: usize> std::ops::BitXor for LaneMask<W> {
+    type Output = LaneMask<W>;
+    #[inline(always)]
+    fn bitxor(mut self, rhs: LaneMask<W>) -> LaneMask<W> {
+        for i in 0..W {
+            self.0[i] ^= rhs.0[i];
+        }
+        self
+    }
+}
+
+impl<const W: usize> std::ops::Not for LaneMask<W> {
+    type Output = LaneMask<W>;
+    #[inline(always)]
+    fn not(mut self) -> LaneMask<W> {
+        for i in 0..W {
+            self.0[i] = !self.0[i];
+        }
+        self
+    }
+}
+
+/// One signed digit of `64·W` lanes: bit `l` of `pos`/`neg` set means
+/// lane `l`'s digit is +1/−1 (never both). Lanes with neither bit are 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DigitPlane<const W: usize = 1> {
+    /// Lanes whose digit is +1.
+    pub pos: LaneMask<W>,
+    /// Lanes whose digit is −1.
+    pub neg: LaneMask<W>,
+}
+
+impl<const W: usize> DigitPlane<W> {
+    /// Lanes carried by this plane (`64 · W`).
+    pub const LANES: usize = 64 * W;
+
     /// The all-zero digit plane.
-    pub const ZERO: DigitPlane = DigitPlane { pos: 0, neg: 0 };
+    pub const ZERO: DigitPlane<W> = DigitPlane {
+        pos: LaneMask::ZERO,
+        neg: LaneMask::ZERO,
+    };
 
     /// Plane with the same digit in every lane.
     #[inline]
-    pub fn broadcast(d: Digit) -> DigitPlane {
+    pub fn broadcast(d: Digit) -> DigitPlane<W> {
         debug_assert!(is_valid_digit(d));
         match d {
-            1 => DigitPlane { pos: u64::MAX, neg: 0 },
-            -1 => DigitPlane { pos: 0, neg: u64::MAX },
+            1 => DigitPlane {
+                pos: LaneMask::FULL,
+                neg: LaneMask::ZERO,
+            },
+            -1 => DigitPlane {
+                pos: LaneMask::ZERO,
+                neg: LaneMask::FULL,
+            },
             _ => DigitPlane::ZERO,
         }
     }
@@ -88,20 +304,19 @@ impl DigitPlane {
     /// Read one lane's digit.
     #[inline]
     pub fn get(self, lane: usize) -> Digit {
-        debug_assert!(lane < LANES);
-        ((self.pos >> lane) & 1) as i8 - ((self.neg >> lane) & 1) as i8
+        debug_assert!(lane < Self::LANES);
+        self.pos.get(lane) as i8 - self.neg.get(lane) as i8
     }
 
     /// Set one lane's digit.
     #[inline]
     pub fn set(&mut self, lane: usize, d: Digit) {
-        debug_assert!(lane < LANES && is_valid_digit(d));
-        let bit = 1u64 << lane;
-        self.pos &= !bit;
-        self.neg &= !bit;
+        debug_assert!(lane < Self::LANES && is_valid_digit(d));
+        self.pos.clear(lane);
+        self.neg.clear(lane);
         match d {
-            1 => self.pos |= bit,
-            -1 => self.neg |= bit,
+            1 => self.pos.set(lane),
+            -1 => self.neg.set(lane),
             _ => {}
         }
     }
@@ -109,16 +324,20 @@ impl DigitPlane {
     /// The representation invariant: no lane is both +1 and −1.
     #[inline]
     pub fn is_valid(self) -> bool {
-        self.pos & self.neg == 0
+        (self.pos & self.neg).is_zero()
     }
 }
 
-/// Transpose up to 64 [`Fixed`] operands (all with `frac` fraction bits)
-/// into their MSDF digit planes: `out[j]` holds digit position `j + 1`
-/// of every lane. Lanes beyond `lanes.len()` are zero — the lane-tail
-/// masking rule for ragged groups.
-pub fn transpose_lanes(lanes: &[Fixed], frac: u32, out: &mut [DigitPlane]) {
-    assert!(lanes.len() <= LANES, "more than {LANES} lanes");
+/// Transpose up to `64·W` [`Fixed`] operands (all with `frac` fraction
+/// bits) into their MSDF digit planes: `out[j]` holds digit position
+/// `j + 1` of every lane. Lanes beyond `lanes.len()` are zero — the
+/// lane-tail masking rule for ragged groups.
+pub fn transpose_lanes<const W: usize>(lanes: &[Fixed], frac: u32, out: &mut [DigitPlane<W>]) {
+    assert!(
+        lanes.len() <= DigitPlane::<W>::LANES,
+        "more than {} lanes",
+        DigitPlane::<W>::LANES
+    );
     assert_eq!(out.len(), frac as usize, "plane buffer != frac digits");
     out.fill(DigitPlane::ZERO);
     for (lane, x) in lanes.iter().enumerate() {
@@ -127,46 +346,46 @@ pub fn transpose_lanes(lanes: &[Fixed], frac: u32, out: &mut [DigitPlane]) {
             continue;
         }
         let mag = x.q.unsigned_abs();
-        let bit = 1u64 << lane;
         for (j, plane) in out.iter_mut().enumerate() {
             if (mag >> (frac as usize - 1 - j)) & 1 == 1 {
                 if x.q < 0 {
-                    plane.neg |= bit;
+                    plane.neg.set(lane);
                 } else {
-                    plane.pos |= bit;
+                    plane.pos.set(lane);
                 }
             }
         }
     }
 }
 
-/// 64-lane radix-2 online adder — the word-parallel twin of
+/// `64·W`-lane radix-2 online adder — the word-parallel twin of
 /// [`OnlineAdd`](super::online_add::OnlineAdd). One `push` advances all
-/// 64 independent additions by one digit position with ~15 boolean ops.
+/// lanes' independent additions by one digit position with ~15 boolean
+/// block ops.
 #[derive(Clone, Debug, Default)]
-pub struct SlicedOnlineAdd {
+pub struct SlicedOnlineAdd<const W: usize = 1> {
     /// Lanes whose pending transfer digit `u` is −1 (`u ∈ {-1, 0}`).
-    un: u64,
+    un: LaneMask<W>,
     /// Lanes whose pending sum digit `s` is 1 (`s ∈ {0, 1}`).
-    sp: u64,
+    sp: LaneMask<W>,
 }
 
-impl SlicedOnlineAdd {
+impl<const W: usize> SlicedOnlineAdd<W> {
     /// Fresh adder with cleared residual state in every lane.
-    pub fn new() -> SlicedOnlineAdd {
+    pub fn new() -> SlicedOnlineAdd<W> {
         SlicedOnlineAdd::default()
     }
 
-    /// Clear all lane state (equivalent to 64 fresh scalar adders).
+    /// Clear all lane state (equivalent to `64·W` fresh scalar adders).
     pub fn reset(&mut self) {
-        self.un = 0;
-        self.sp = 0;
+        self.un = LaneMask::ZERO;
+        self.sp = LaneMask::ZERO;
     }
 
     /// Feed one digit plane pair, producing one output plane — the
     /// plane-wise form of the scalar `split_t1`/`split_t2` cascade.
     #[inline]
-    pub fn push(&mut self, x: DigitPlane, y: DigitPlane) -> DigitPlane {
+    pub fn push(&mut self, x: DigitPlane<W>, y: DigitPlane<W>) -> DigitPlane<W> {
         debug_assert!(x.is_valid() && y.is_valid());
         // g = x + y ∈ [-2, 2]: P = x⁺+y⁺ and N = x⁻+y⁻ as 2-bit tallies;
         // P = 2 (p1) excludes N > 0 per-lane (valid digits), so g
@@ -196,12 +415,13 @@ impl SlicedOnlineAdd {
     }
 }
 
-/// 64-lane serial–parallel online multiplier — the word-parallel twin of
-/// [`OnlineMul`](super::online_mul::OnlineMul) for one shared parallel
-/// operand `Y` and 64 independent serial operands. The Algorithm-1
-/// residual of every lane lives in `f + 4` two's-complement bit planes.
+/// `64·W`-lane serial–parallel online multiplier — the word-parallel
+/// twin of [`OnlineMul`](super::online_mul::OnlineMul) for one shared
+/// parallel operand `Y` and `64·W` independent serial operands. The
+/// Algorithm-1 residual of every lane lives in `f + 4` two's-complement
+/// bit planes.
 #[derive(Clone, Debug)]
-pub struct SlicedOnlineMul {
+pub struct SlicedOnlineMul<const W: usize = 1> {
     /// Shared parallel operand, raw integer (value = `y_q · 2^-f`).
     y_q: i64,
     /// Fractional bits of the parallel operand.
@@ -210,14 +430,14 @@ pub struct SlicedOnlineMul {
     bits: u32,
     /// Residual bit planes: `w[j]` holds bit `j` of every lane's
     /// two's-complement residual (in units of `2^-(f+2)`).
-    w: [u64; MAX_PLANES],
+    w: [LaneMask<W>; MAX_PLANES],
     /// Steps taken (consumed input digit planes).
     step: u32,
 }
 
-impl SlicedOnlineMul {
-    /// Create a 64-lane multiplier for shared parallel operand `y`.
-    pub fn new(y: Fixed) -> SlicedOnlineMul {
+impl<const W: usize> SlicedOnlineMul<W> {
+    /// Create a `64·W`-lane multiplier for shared parallel operand `y`.
+    pub fn new(y: Fixed) -> SlicedOnlineMul<W> {
         assert!(
             (y.frac_bits as usize) + 4 <= MAX_PLANES,
             "frac_bits {} too large for the sliced multiplier",
@@ -227,22 +447,22 @@ impl SlicedOnlineMul {
             y_q: y.q,
             f: y.frac_bits,
             bits: y.frac_bits + 4,
-            w: [0; MAX_PLANES],
+            w: [LaneMask::ZERO; MAX_PLANES],
             step: 0,
         }
     }
 
-    /// Clear all lane residuals (equivalent to 64 fresh scalar units).
+    /// Clear all lane residuals (equivalent to `64·W` fresh scalar units).
     pub fn reset(&mut self) {
-        self.w = [0; MAX_PLANES];
+        self.w = [LaneMask::ZERO; MAX_PLANES];
         self.step = 0;
     }
 
     /// Feed the next serial digit plane (MSDF); emits the next output
     /// plane once past the online delay — plane-for-plane identical to
-    /// 64 scalar [`OnlineMul`](super::online_mul::OnlineMul)s.
+    /// `64·W` scalar [`OnlineMul`](super::online_mul::OnlineMul)s.
     #[inline]
-    pub fn step(&mut self, x: DigitPlane) -> Option<DigitPlane> {
+    pub fn step(&mut self, x: DigitPlane<W>) -> Option<DigitPlane<W>> {
         debug_assert!(x.is_valid());
         self.step += 1;
         let b = self.bits as usize;
@@ -252,7 +472,7 @@ impl SlicedOnlineMul {
         // the addend per lane: Y (x = +1), ~Y with carry-in 1 (x = −1,
         // two's-complement negation) or 0, then one ripple-carry add
         // over the planes.
-        let mut v = [0u64; MAX_PLANES];
+        let mut v = [LaneMask::<W>::ZERO; MAX_PLANES];
         v[1..b].copy_from_slice(&self.w[..b - 1]);
         let mut carry = x.neg;
         for (j, vj) in v.iter_mut().enumerate().take(b) {
@@ -271,13 +491,13 @@ impl SlicedOnlineMul {
         // z = −1 iff v̂ ≤ −2 — sign set and bits f..b-2 not all set
         // (the only sign-set value above −2 is −1 = all ones).
         let sign = v[b - 1];
-        let mut mid_or = 0u64;
+        let mut mid_or = LaneMask::<W>::ZERO;
         for vj in &v[f + 1..b - 1] {
-            mid_or |= vj;
+            mid_or = mid_or | *vj;
         }
-        let mut mid_and = u64::MAX;
+        let mut mid_and = LaneMask::<W>::FULL;
         for vj in &v[f..b - 1] {
-            mid_and &= vj;
+            mid_and = mid_and & *vj;
         }
         let z = DigitPlane {
             pos: !sign & mid_or,
@@ -286,9 +506,9 @@ impl SlicedOnlineMul {
         // w = v − z·2^(f+2): subtracting 2^(f+2) adds all-ones from
         // plane f+2 up (two's complement), adding it sets plane f+2 —
         // a short ripple over the top planes only.
-        let mut carry = 0u64;
+        let mut carry = LaneMask::<W>::ZERO;
         for (j, vj) in v.iter_mut().enumerate().take(b).skip(f + 2) {
-            let a = z.pos | if j == f + 2 { z.neg } else { 0 };
+            let a = z.pos | if j == f + 2 { z.neg } else { LaneMask::ZERO };
             let s = *vj ^ a ^ carry;
             carry = (*vj & a) | (carry & (*vj ^ a));
             *vj = s;
@@ -303,10 +523,10 @@ impl SlicedOnlineMul {
     ///
     /// [`OnlineMul`]: super::online_mul::OnlineMul
     pub fn lane_residual(&self, lane: usize) -> i64 {
-        assert!(lane < LANES);
+        assert!(lane < LaneMask::<W>::LANES);
         let mut val: i64 = 0;
         for j in 0..self.bits as usize {
-            val |= (((self.w[j] >> lane) & 1) as i64) << j;
+            val |= (self.w[j].get(lane) as i64) << j;
         }
         if val >= 1 << (self.bits - 1) {
             val -= 1 << self.bits;
@@ -315,43 +535,44 @@ impl SlicedOnlineMul {
     }
 }
 
-/// 64-lane early-negative-detection unit — the word-parallel twin of
-/// [`EndUnit`](super::end_unit::EndUnit).
+/// `64·W`-lane early-negative-detection unit — the word-parallel twin
+/// of [`EndUnit`](super::end_unit::EndUnit).
 ///
 /// The scalar recurrence (`acc ← 2·acc + z`, decide once `|acc| ≥ 1`)
 /// keeps `acc = 0` through every leading zero and leaves the
 /// undetermined band at the **first non-zero digit** — so per lane the
 /// whole unit reduces to "which sign was the first non-zero digit, and
-/// at which position": three bitmasks and a decision-cycle record.
+/// at which position": three lane masks and a decision-cycle record.
 #[derive(Clone, Debug)]
-pub struct SlicedEnd {
+pub struct SlicedEnd<const W: usize = 1> {
     /// Lanes still in the undetermined band (no non-zero digit yet).
-    undecided: u64,
+    undecided: LaneMask<W>,
     /// Lanes decided surely-negative (terminate).
-    term: u64,
+    term: LaneMask<W>,
     /// Lanes decided surely-positive.
-    positive: u64,
+    positive: LaneMask<W>,
     /// Digit planes observed so far.
     step: u32,
-    /// Per-lane decision position (1-based digit index; 0 = undecided).
-    decided_at: [u32; LANES],
+    /// Per-lane decision position (1-based digit index; 0 = undecided),
+    /// word-major: `decided_at[lane / 64][lane % 64]`.
+    decided_at: [[u32; LANES]; W],
 }
 
-impl Default for SlicedEnd {
+impl<const W: usize> Default for SlicedEnd<W> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl SlicedEnd {
+impl<const W: usize> SlicedEnd<W> {
     /// Fresh unit: every lane undetermined.
-    pub fn new() -> SlicedEnd {
+    pub fn new() -> SlicedEnd<W> {
         SlicedEnd {
-            undecided: u64::MAX,
-            term: 0,
-            positive: 0,
+            undecided: LaneMask::FULL,
+            term: LaneMask::ZERO,
+            positive: LaneMask::ZERO,
             step: 0,
-            decided_at: [0; LANES],
+            decided_at: [[0; LANES]; W],
         }
     }
 
@@ -361,41 +582,42 @@ impl SlicedEnd {
     }
 
     /// Observe the next output digit plane. Decisions saturate exactly
-    /// like 64 scalar units: a decided lane ignores later digits.
+    /// like `64·W` scalar units: a decided lane ignores later digits.
     #[inline]
-    pub fn observe(&mut self, z: DigitPlane) {
+    pub fn observe(&mut self, z: DigitPlane<W>) {
         debug_assert!(z.is_valid());
         self.step += 1;
         let newly_term = self.undecided & z.neg;
         let newly_pos = self.undecided & z.pos;
-        let mut newly = newly_term | newly_pos;
-        while newly != 0 {
-            let lane = newly.trailing_zeros() as usize;
-            self.decided_at[lane] = self.step;
-            newly &= newly - 1;
+        let newly = newly_term | newly_pos;
+        for (wi, mut word) in newly.0.iter().copied().enumerate() {
+            while word != 0 {
+                let l = word.trailing_zeros() as usize;
+                self.decided_at[wi][l] = self.step;
+                word &= word - 1;
+            }
         }
-        self.term |= newly_term;
-        self.positive |= newly_pos;
-        self.undecided &= !(newly_term | newly_pos);
+        self.term = self.term | newly_term;
+        self.positive = self.positive | newly_pos;
+        self.undecided = self.undecided & !newly;
     }
 
     /// Lanes decided surely-negative (ReLU output provably 0).
-    pub fn terminated(&self) -> u64 {
+    pub fn terminated(&self) -> LaneMask<W> {
         self.term
     }
 
     /// Lanes decided surely-positive.
-    pub fn positive(&self) -> u64 {
+    pub fn positive(&self) -> LaneMask<W> {
         self.positive
     }
 
     /// One lane's decision state.
     pub fn state(&self, lane: usize) -> EndState {
-        assert!(lane < LANES);
-        let bit = 1u64 << lane;
-        if self.term & bit != 0 {
+        assert!(lane < LaneMask::<W>::LANES);
+        if self.term.get(lane) {
             EndState::Terminate
-        } else if self.positive & bit != 0 {
+        } else if self.positive.get(lane) {
             EndState::SurelyPositive
         } else {
             EndState::Undetermined
@@ -404,42 +626,44 @@ impl SlicedEnd {
 
     /// One lane's decision position (None while undetermined).
     pub fn decided_at(&self, lane: usize) -> Option<u32> {
-        assert!(lane < LANES);
-        (self.decided_at[lane] != 0).then_some(self.decided_at[lane])
+        assert!(lane < LaneMask::<W>::LANES);
+        let at = self.decided_at[lane >> 6][lane & 63];
+        (at != 0).then_some(at)
     }
 }
 
-/// Result of one 64-lane SOP evaluation: per-lane END state, decision
-/// position and reconstructed value, in the same terms as the scalar
-/// [`SopEndResult`] (use [`SlicedSopResult::lane`] to extract one).
+/// Result of one `64·W`-lane SOP evaluation: per-lane END state,
+/// decision position and reconstructed value, in the same terms as the
+/// scalar [`SopEndResult`] (use [`SlicedSopResult::lane`] to extract
+/// one). Per-lane arrays are word-major: index `[lane / 64][lane % 64]`.
 #[derive(Clone, Copy, Debug)]
-pub struct SlicedSopResult {
+pub struct SlicedSopResult<const W: usize = 1> {
     /// Adder-tree depth (shared by all lanes).
     pub levels: u32,
     /// Total digits of the full stream (shared by all lanes).
     pub total_digits: u32,
     /// Lanes whose END unit terminated early (surely negative).
-    pub terminated: u64,
+    pub terminated: LaneMask<W>,
     /// Lanes proven surely positive.
-    pub positive: u64,
+    pub positive: LaneMask<W>,
     /// Per-lane decision position (total_digits where undecided).
-    pub decided_at: [u32; LANES],
+    pub decided_at: [[u32; LANES]; W],
     /// Per-lane SOP value reconstructed from the output stream
     /// (post-scaling, prefix value for terminated lanes) — identical
     /// arithmetic to the scalar pipeline's accumulator.
-    pub value: [f64; LANES],
+    pub value: [[f64; LANES]; W],
 }
 
-impl SlicedSopResult {
+impl<const W: usize> SlicedSopResult<W> {
     /// An all-zero result (scratch-buffer initializer).
-    pub fn empty() -> SlicedSopResult {
+    pub fn empty() -> SlicedSopResult<W> {
         SlicedSopResult {
             levels: 0,
             total_digits: 0,
-            terminated: 0,
-            positive: 0,
-            decided_at: [0; LANES],
-            value: [0.0; LANES],
+            terminated: LaneMask::ZERO,
+            positive: LaneMask::ZERO,
+            decided_at: [[0; LANES]; W],
+            value: [[0.0; LANES]; W],
         }
     }
 
@@ -447,21 +671,20 @@ impl SlicedSopResult {
     /// what [`SopPipeline::run`](super::sop::SopPipeline::run) returns
     /// for that lane's window.
     pub fn lane(&self, lane: usize) -> SopEndResult {
-        assert!(lane < LANES);
-        let bit = 1u64 << lane;
-        let state = if self.terminated & bit != 0 {
+        assert!(lane < LaneMask::<W>::LANES);
+        let state = if self.terminated.get(lane) {
             EndState::Terminate
-        } else if self.positive & bit != 0 {
+        } else if self.positive.get(lane) {
             EndState::SurelyPositive
         } else {
             EndState::Undetermined
         };
         SopEndResult {
             state,
-            decided_at: self.decided_at[lane],
+            decided_at: self.decided_at[lane >> 6][lane & 63],
             total_digits: self.total_digits,
             levels: self.levels,
-            value: self.value[lane],
+            value: self.value[lane >> 6][lane & 63],
         }
     }
 }
@@ -470,16 +693,16 @@ impl SlicedSopResult {
 /// of [`to_sd_digits`]`(bias)` in every lane, zero-padded to the result
 /// length — plane-for-plane what the scalar pipeline's resized
 /// `bias_digits` feed.
-fn broadcast_bias_planes(bias: Fixed, n_out: usize) -> Vec<DigitPlane> {
+fn broadcast_bias_planes<const W: usize>(bias: Fixed, n_out: usize) -> Vec<DigitPlane<W>> {
     let mut digits = to_sd_digits(bias);
     digits.resize(n_out, 0);
     digits.into_iter().map(DigitPlane::broadcast).collect()
 }
 
-/// Reusable 64-lane columnar SOP pipeline — the bit-sliced twin of
+/// Reusable `64·W`-lane columnar SOP pipeline — the bit-sliced twin of
 /// [`SopPipeline`](super::sop::SopPipeline): the same bank-of-
 /// multipliers + adder-tree + END structure, stepped in the same
-/// lockstep order, but every step advances 64 windows at once. One
+/// lockstep order, but every step advances `64·W` windows at once. One
 /// instance per filter; weights are the shared parallel operands.
 ///
 /// Per-lane digits, END decisions and values are **bit-identical** to
@@ -488,7 +711,7 @@ fn broadcast_bias_planes(bias: Fixed, n_out: usize) -> Vec<DigitPlane> {
 /// window's termination, the sliced pipeline halts once *every* active
 /// lane has terminated (per-lane accounting still uses each lane's own
 /// decision position, so `EndCounters` match exactly).
-pub struct SopSlicedPipeline {
+pub struct SopSlicedPipeline<const W: usize = 1> {
     weights: Vec<Fixed>,
     has_bias: bool,
     /// Bias operand digit planes, one per result digit position. A
@@ -497,25 +720,28 @@ pub struct SopSlicedPipeline {
     /// lane's own digit stream ([`SopSlicedPipeline::set_lane_biases`] —
     /// the per-window quantization path, where each output pixel's
     /// bias operand is scaled by its own window).
-    bias_planes: Vec<DigitPlane>,
+    bias_planes: Vec<DigitPlane<W>>,
     n_out: usize,
     levels: u32,
     width: usize,
     // Reused unit state.
-    muls: Vec<SlicedOnlineMul>,
-    adders: Vec<SlicedOnlineAdd>,
+    muls: Vec<SlicedOnlineMul<W>>,
+    adders: Vec<SlicedOnlineAdd<W>>,
     adder_row_off: Vec<usize>,
-    end: SlicedEnd,
-    cur: Vec<DigitPlane>,
-    next: Vec<DigitPlane>,
-    out_planes: Vec<DigitPlane>,
+    end: SlicedEnd<W>,
+    cur: Vec<DigitPlane<W>>,
+    next: Vec<DigitPlane<W>>,
+    out_planes: Vec<DigitPlane<W>>,
 }
 
-impl SopSlicedPipeline {
+impl<const W: usize> SopSlicedPipeline<W> {
+    /// Lanes each run advances (`64 · W`).
+    pub const LANES: usize = 64 * W;
+
     /// Build a pipeline for `weights` (+ optional `bias`) producing
     /// `n_out` result digits — same tree shape as the scalar
     /// [`SopPipeline::new`](super::sop::SopPipeline::new).
-    pub fn new(weights: &[Fixed], bias: Option<Fixed>, n_out: usize) -> SopSlicedPipeline {
+    pub fn new(weights: &[Fixed], bias: Option<Fixed>, n_out: usize) -> SopSlicedPipeline<W> {
         assert!(!weights.is_empty());
         let m = weights.len() + bias.is_some() as usize;
         let levels = tree_levels(m.max(2));
@@ -579,7 +805,7 @@ impl SopSlicedPipeline {
             self.has_bias,
             "set_lane_biases on a pipeline built without a bias operand"
         );
-        assert!(!biases.is_empty() && biases.len() <= LANES);
+        assert!(!biases.is_empty() && biases.len() <= Self::LANES);
         let frac = biases[0].frac_bits;
         debug_assert!((frac as usize) <= self.n_out, "bias digits exceed n_out");
         self.bias_planes.resize(self.n_out, DigitPlane::ZERO);
@@ -587,14 +813,19 @@ impl SopSlicedPipeline {
         self.bias_planes[frac as usize..].fill(DigitPlane::ZERO);
     }
 
-    /// Evaluate up to 64 windows at once. `acts` holds the transposed
-    /// activation digit planes, `acts[i * act_frac + j]` = digit
-    /// position `j + 1` of operand `i` across lanes (see
+    /// Evaluate up to `64·W` windows at once. `acts` holds the
+    /// transposed activation digit planes, `acts[i * act_frac + j]` =
+    /// digit position `j + 1` of operand `i` across lanes (see
     /// [`transpose_lanes`]); `active` masks the live lanes (ragged
     /// tails feed zero streams in the dead lanes and are never read).
     ///
     /// Resets all unit state in place; allocation-free after warm-up.
-    pub fn run(&mut self, acts: &[DigitPlane], act_frac: u32, active: u64) -> SlicedSopResult {
+    pub fn run(
+        &mut self,
+        acts: &[DigitPlane<W>],
+        act_frac: u32,
+        active: LaneMask<W>,
+    ) -> SlicedSopResult<W> {
         let frac = act_frac as usize;
         assert_eq!(
             acts.len(),
@@ -621,7 +852,7 @@ impl SopSlicedPipeline {
         let width = self.width;
         // Serial input digit plane `j` (0-based) of operand `i`,
         // zero-padded past the stream end like the scalar `input_digit`.
-        let in_plane = |acts: &[DigitPlane], i: usize, j: usize| -> DigitPlane {
+        let in_plane = |acts: &[DigitPlane<W>], i: usize, j: usize| -> DigitPlane<W> {
             if j < frac {
                 acts[i * frac + j]
             } else {
@@ -692,7 +923,7 @@ impl SopSlicedPipeline {
             self.end.observe(z);
             // Hardware termination, lane-wise: stop only once every
             // active lane's END unit has fired.
-            if active & !self.end.terminated() == 0 {
+            if (active & !self.end.terminated()).is_zero() {
                 break;
             }
         }
@@ -704,22 +935,22 @@ impl SopSlicedPipeline {
             total_digits: total_positions as u32,
             terminated: self.end.terminated() & active,
             positive: self.end.positive() & active,
-            decided_at: [total_positions as u32; LANES],
-            value: [0.0; LANES],
+            decided_at: [[total_positions as u32; LANES]; W],
+            value: [[0.0; LANES]; W],
         };
-        for lane in 0..LANES {
-            if (active >> lane) & 1 == 0 {
+        for lane in 0..Self::LANES {
+            if !active.get(lane) {
                 continue;
             }
             if let Some(at) = self.end.decided_at(lane) {
-                res.decided_at[lane] = at;
+                res.decided_at[lane >> 6][lane & 63] = at;
             }
             // Terminated lanes accumulate up to the deciding digit
             // (where the scalar pipeline broke); the rest see the full
             // stream, which exists because the loop above only stops
             // early once every active lane has terminated.
-            let plen = if res.terminated & (1u64 << lane) != 0 {
-                res.decided_at[lane] as usize
+            let plen = if res.terminated.get(lane) {
+                res.decided_at[lane >> 6][lane & 63] as usize
             } else {
                 total_positions
             };
@@ -727,7 +958,7 @@ impl SopSlicedPipeline {
             for p in &self.out_planes[..plen] {
                 acc = acc * 2 + p.get(lane) as i64;
             }
-            res.value[lane] =
+            res.value[lane >> 6][lane & 63] =
                 acc as f64 / 2f64.powi(plen as i32) * 2f64.powi(2 * self.levels as i32);
         }
         res
@@ -754,31 +985,101 @@ mod tests {
     }
 
     #[test]
-    fn digit_plane_roundtrip_and_broadcast() {
-        let mut p = DigitPlane::ZERO;
-        for lane in 0..LANES {
+    fn lane_width_selector_round_trips() {
+        for w in LaneWidth::ALL {
+            assert_eq!(w.lanes(), 64 * w.words());
+            assert_eq!(LaneWidth::from_lanes(w.lanes()), Some(w));
+            assert_eq!(format!("{w}"), format!("{}", w.lanes()));
+        }
+        assert_eq!(LaneWidth::from_lanes(96), None);
+        assert_eq!(LaneWidth::from_lanes(0), None);
+        assert_eq!(LaneWidth::default(), LaneWidth::W1);
+    }
+
+    fn check_lane_mask<const W: usize>() {
+        let lanes = LaneMask::<W>::LANES;
+        assert!(LaneMask::<W>::ZERO.is_zero());
+        assert_eq!(LaneMask::<W>::FULL.count_ones() as usize, lanes);
+        assert_eq!(LaneMask::<W>::first_n(0), LaneMask::ZERO);
+        assert_eq!(LaneMask::<W>::first_n(lanes), LaneMask::FULL);
+        // first_n across every word boundary, vs a bit-by-bit build.
+        for n in [1, 63, 64, 65, lanes - 1, lanes] {
+            if n > lanes {
+                continue;
+            }
+            let mut want = LaneMask::<W>::ZERO;
+            for lane in 0..n {
+                want.set(lane);
+            }
+            let got = LaneMask::<W>::first_n(n);
+            assert_eq!(got, want, "first_n({n}) at W={W}");
+            assert_eq!(got.count_ones() as usize, n);
+            for lane in 0..lanes {
+                assert_eq!(got.get(lane), lane < n);
+            }
+        }
+        // Boolean ops agree with per-word reference on a sparse pattern.
+        let mut a = LaneMask::<W>::ZERO;
+        let mut b = LaneMask::<W>::ZERO;
+        for lane in (0..lanes).step_by(3) {
+            a.set(lane);
+        }
+        for lane in (0..lanes).step_by(5) {
+            b.set(lane);
+        }
+        for lane in 0..lanes {
+            assert_eq!((a & b).get(lane), a.get(lane) && b.get(lane));
+            assert_eq!((a | b).get(lane), a.get(lane) || b.get(lane));
+            assert_eq!((a ^ b).get(lane), a.get(lane) != b.get(lane));
+            assert_eq!((!a).get(lane), !a.get(lane));
+        }
+        a.clear(0);
+        assert!(!a.get(0));
+    }
+
+    #[test]
+    fn lane_mask_ops_all_widths() {
+        check_lane_mask::<1>();
+        check_lane_mask::<2>();
+        check_lane_mask::<4>();
+        check_lane_mask::<8>();
+    }
+
+    fn check_digit_plane<const W: usize>() {
+        let lanes = DigitPlane::<W>::LANES;
+        let mut p = DigitPlane::<W>::ZERO;
+        for lane in 0..lanes {
             let d = (lane % 3) as i8 - 1; // cycles through -1, 0, +1
             p.set(lane, d);
             assert_eq!(p.get(lane), d);
             assert!(p.is_valid());
         }
         for d in [-1i8, 0, 1] {
-            let b = DigitPlane::broadcast(d);
+            let b = DigitPlane::<W>::broadcast(d);
             assert!(b.is_valid());
-            for lane in [0, 31, 63] {
+            for lane in [0, 31, 63, lanes - 1] {
                 assert_eq!(b.get(lane), d);
             }
         }
     }
 
     #[test]
-    fn transpose_matches_to_sd_digits() {
-        prop_check("transpose_lanes == per-lane to_sd_digits", 200, |g| {
+    fn digit_plane_roundtrip_and_broadcast() {
+        check_digit_plane::<1>();
+        check_digit_plane::<2>();
+        check_digit_plane::<4>();
+        check_digit_plane::<8>();
+    }
+
+    fn check_transpose<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("transpose_lanes == per-lane to_sd_digits", cases, |g| {
             let n = g.usize(2, 16) as u32;
             let frac = n - 1;
-            let lanes_n = *g.pick(&[1usize, 2, 17, 63, 64]);
+            let lanes_n = *g.pick(&[1usize, 2, 17, 63, 64, lanes_max - 1, lanes_max]);
+            let lanes_n = lanes_n.min(lanes_max);
             let lanes: Vec<Fixed> = (0..lanes_n).map(|_| rand_fixed(g, n)).collect();
-            let mut planes = vec![DigitPlane::ZERO; frac as usize];
+            let mut planes = vec![DigitPlane::<W>::ZERO; frac as usize];
             transpose_lanes(&lanes, frac, &mut planes);
             for (lane, x) in lanes.iter().enumerate() {
                 let ds = to_sd_digits(*x);
@@ -792,7 +1093,7 @@ mod tests {
             }
             // Dead lanes are zero streams.
             for p in &planes {
-                for lane in lanes_n..LANES {
+                for lane in lanes_n..lanes_max {
                     prop_assert!(p.get(lane) == 0, "dead lane {lane} non-zero");
                 }
             }
@@ -800,22 +1101,31 @@ mod tests {
         });
     }
 
-    /// The sliced adder is digit-for-digit identical to 64 scalar
-    /// adders on arbitrary (fully redundant) SD streams.
     #[test]
-    fn sliced_add_matches_scalar_digit_for_digit() {
-        prop_check("sliced online add == 64 scalar adders", 300, |g| {
+    fn transpose_matches_to_sd_digits() {
+        check_transpose::<1>(200);
+        check_transpose::<2>(80);
+        check_transpose::<4>(40);
+    }
+
+    /// The sliced adder is digit-for-digit identical to `64·W` scalar
+    /// adders on arbitrary (fully redundant) SD streams.
+    fn check_sliced_add<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("sliced online add == scalar adders", cases, |g| {
             let len = g.usize(1, 30);
-            let xs: Vec<Vec<Digit>> =
-                (0..LANES).map(|_| (0..len).map(|_| rand_digit(g)).collect()).collect();
-            let ys: Vec<Vec<Digit>> =
-                (0..LANES).map(|_| (0..len).map(|_| rand_digit(g)).collect()).collect();
-            let mut scal: Vec<OnlineAdd> = (0..LANES).map(|_| OnlineAdd::new()).collect();
-            let mut sliced = SlicedOnlineAdd::new();
+            let xs: Vec<Vec<Digit>> = (0..lanes_max)
+                .map(|_| (0..len).map(|_| rand_digit(g)).collect())
+                .collect();
+            let ys: Vec<Vec<Digit>> = (0..lanes_max)
+                .map(|_| (0..len).map(|_| rand_digit(g)).collect())
+                .collect();
+            let mut scal: Vec<OnlineAdd> = (0..lanes_max).map(|_| OnlineAdd::new()).collect();
+            let mut sliced = SlicedOnlineAdd::<W>::new();
             for j in 0..len {
-                let mut xp = DigitPlane::ZERO;
-                let mut yp = DigitPlane::ZERO;
-                for lane in 0..LANES {
+                let mut xp = DigitPlane::<W>::ZERO;
+                let mut yp = DigitPlane::<W>::ZERO;
+                for lane in 0..lanes_max {
                     xp.set(lane, xs[lane][j]);
                     yp.set(lane, ys[lane][j]);
                 }
@@ -833,27 +1143,34 @@ mod tests {
         });
     }
 
+    #[test]
+    fn sliced_add_matches_scalar_digit_for_digit() {
+        check_sliced_add::<1>(300);
+        check_sliced_add::<2>(100);
+        check_sliced_add::<4>(40);
+    }
+
     /// The sliced multiplier is digit-for-digit AND residual-for-
-    /// residual identical to 64 scalar units, for shared parallel
+    /// residual identical to `64·W` scalar units, for shared parallel
     /// operands of every supported precision — including all-zero and
     /// sign-boundary (±max) serial operands.
-    #[test]
-    fn sliced_mul_matches_scalar_digit_for_digit() {
-        prop_check("sliced online mul == 64 scalar muls", 120, |g| {
+    fn check_sliced_mul<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("sliced online mul == scalar muls", cases, |g| {
             let n = g.usize(2, 16) as u32;
             let frac = n - 1;
             let max = (1i64 << frac) - 1;
             let y = rand_fixed(g, n);
-            let mut xs: Vec<Fixed> = (0..LANES).map(|_| rand_fixed(g, n)).collect();
+            let mut xs: Vec<Fixed> = (0..lanes_max).map(|_| rand_fixed(g, n)).collect();
             xs[0] = Fixed::zero(frac); // all-zero operand
             xs[1] = Fixed::new(max, frac); // sign boundaries
             xs[2] = Fixed::new(-max, frac);
             let n_steps = frac as usize + g.usize(2, 8);
             let mut scal: Vec<OnlineMul> = xs.iter().map(|_| OnlineMul::new(y)).collect();
-            let mut sliced = SlicedOnlineMul::new(y);
+            let mut sliced = SlicedOnlineMul::<W>::new(y);
             for j in 0..n_steps {
-                let mut xplane = DigitPlane::ZERO;
-                let ds: Vec<Digit> = (0..LANES)
+                let mut xplane = DigitPlane::<W>::ZERO;
+                let ds: Vec<Digit> = (0..lanes_max)
                     .map(|lane| {
                         let d = to_sd_digits(xs[lane]).get(j).copied().unwrap_or(0);
                         xplane.set(lane, d);
@@ -881,22 +1198,29 @@ mod tests {
         });
     }
 
+    #[test]
+    fn sliced_mul_matches_scalar_digit_for_digit() {
+        check_sliced_mul::<1>(120);
+        check_sliced_mul::<2>(40);
+        check_sliced_mul::<4>(20);
+    }
+
     /// Cross-check the bit-plane residual against an exact integer
     /// replay of the scalar recurrence (the multiplier's entire state).
-    #[test]
-    fn sliced_mul_residual_tracks_scalar_recurrence() {
-        prop_check("sliced residual == scalar recurrence", 120, |g| {
+    fn check_mul_residual<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("sliced residual == scalar recurrence", cases, |g| {
             let n = g.usize(2, 16) as u32;
             let frac = n - 1;
             let y = rand_fixed(g, n);
-            let xs: Vec<Vec<Digit>> = (0..LANES)
+            let xs: Vec<Vec<Digit>> = (0..lanes_max)
                 .map(|_| (0..frac as usize + 4).map(|_| rand_digit(g)).collect())
                 .collect();
-            let mut sliced = SlicedOnlineMul::new(y);
+            let mut sliced = SlicedOnlineMul::<W>::new(y);
             // Scalar replay of Algorithm 1 in plain integers.
-            let mut w_ref = [0i64; LANES];
+            let mut w_ref = vec![0i64; lanes_max];
             for j in 0..frac as usize + 4 {
-                let mut xplane = DigitPlane::ZERO;
+                let mut xplane = DigitPlane::<W>::ZERO;
                 for (lane, s) in xs.iter().enumerate() {
                     xplane.set(lane, s[j]);
                 }
@@ -917,7 +1241,7 @@ mod tests {
                         v - (z << (frac + 2))
                     };
                 }
-                for lane in [0usize, 7, 31, 63] {
+                for lane in [0usize, 7, 31, 63, lanes_max - 1] {
                     prop_assert!(
                         sliced.lane_residual(lane) == w_ref[lane],
                         "lane {lane} step {j}: residual {} vs {}",
@@ -930,14 +1254,21 @@ mod tests {
         });
     }
 
-    /// The sliced END unit decides on exactly the same cycle as 64
+    #[test]
+    fn sliced_mul_residual_tracks_scalar_recurrence() {
+        check_mul_residual::<1>(120);
+        check_mul_residual::<2>(40);
+        check_mul_residual::<4>(20);
+    }
+
+    /// The sliced END unit decides on exactly the same cycle as `64·W`
     /// scalar units — including all-zero streams (never decides) and
     /// sign-boundary streams (decides on the last digit).
-    #[test]
-    fn sliced_end_matches_scalar_cycles() {
-        prop_check("sliced END == 64 EndUnits", 300, |g| {
+    fn check_sliced_end<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("sliced END == scalar EndUnits", cases, |g| {
             let len = g.usize(1, 24);
-            let mut streams: Vec<Vec<Digit>> = (0..LANES)
+            let mut streams: Vec<Vec<Digit>> = (0..lanes_max)
                 .map(|_| (0..len).map(|_| *g.pick(&[-1i8, 0, 0, 1])).collect())
                 .collect();
             streams[0] = vec![0; len]; // all-zero: stays undetermined
@@ -945,10 +1276,14 @@ mod tests {
             streams[1][len - 1] = 1;
             streams[2] = vec![0; len];
             streams[2][len - 1] = -1;
-            let mut scal: Vec<EndUnit> = (0..LANES).map(|_| EndUnit::new()).collect();
-            let mut sliced = SlicedEnd::new();
+            // Same boundary cases in the *last* block word.
+            let last = lanes_max - 1;
+            streams[last] = vec![0; len];
+            streams[last][len - 1] = 1;
+            let mut scal: Vec<EndUnit> = (0..lanes_max).map(|_| EndUnit::new()).collect();
+            let mut sliced = SlicedEnd::<W>::new();
             for j in 0..len {
-                let mut z = DigitPlane::ZERO;
+                let mut z = DigitPlane::<W>::ZERO;
                 for (lane, s) in streams.iter().enumerate() {
                     z.set(lane, s[j]);
                 }
@@ -975,37 +1310,42 @@ mod tests {
         });
     }
 
+    #[test]
+    fn sliced_end_matches_scalar_cycles() {
+        check_sliced_end::<1>(300);
+        check_sliced_end::<2>(100);
+        check_sliced_end::<4>(40);
+    }
+
     /// End-to-end: the sliced SOP pipeline reproduces the scalar
     /// pipeline's END state, decision position, totals and value on
     /// every lane — for full, ragged and single-lane groups, with and
     /// without bias.
-    #[test]
-    fn sliced_pipeline_matches_scalar_per_lane() {
-        prop_check("sliced SOP pipeline == 64 scalar pipelines", 40, |g| {
+    fn check_pipeline<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("sliced SOP pipeline == scalar pipelines", cases, |g| {
             let n = *g.pick(&[4u32, 8, 12]);
             let frac = n - 1;
             let m = g.usize(1, 10);
             let n_out = (n + 4) as usize;
             let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
             let bias = if g.bool() { Some(rand_fixed(g, n)) } else { None };
-            let lanes_n = *g.pick(&[1usize, 17, 63, 64]);
-            let active = if lanes_n == LANES {
-                u64::MAX
-            } else {
-                (1u64 << lanes_n) - 1
-            };
+            // Ragged tails straddling every word boundary of the block.
+            let lanes_n =
+                (*g.pick(&[1usize, 17, 63, 64, 65, lanes_max - 1, lanes_max])).min(lanes_max);
+            let active = LaneMask::<W>::first_n(lanes_n);
             let windows: Vec<Vec<Fixed>> = (0..lanes_n)
                 .map(|_| (0..m).map(|_| rand_fixed(g, n)).collect())
                 .collect();
 
             // Transpose [lane][operand] into per-operand digit planes.
-            let mut acts = vec![DigitPlane::ZERO; m * frac as usize];
+            let mut acts = vec![DigitPlane::<W>::ZERO; m * frac as usize];
             for i in 0..m {
                 let ops: Vec<Fixed> = windows.iter().map(|w| w[i]).collect();
                 transpose_lanes(&ops, frac, &mut acts[i * frac as usize..(i + 1) * frac as usize]);
             }
 
-            let mut sliced = SopSlicedPipeline::new(&weights, bias, n_out);
+            let mut sliced = SopSlicedPipeline::<W>::new(&weights, bias, n_out);
             let res = sliced.run(&acts, frac, active);
             let mut scalar = SopPipeline::new(&weights, bias, n_out);
             for (lane, win) in windows.iter().enumerate() {
@@ -1036,29 +1376,34 @@ mod tests {
         });
     }
 
+    #[test]
+    fn sliced_pipeline_matches_scalar_per_lane() {
+        check_pipeline::<1>(40);
+        check_pipeline::<2>(15);
+        check_pipeline::<4>(8);
+        check_pipeline::<8>(4);
+    }
+
     /// Per-lane biases are digit-exact with running each lane through a
     /// scalar pipeline carrying that lane's own bias — the per-window
     /// quantization path, where adjacent output pixels quantize the
     /// shared bias with different activation scales.
-    #[test]
-    fn per_lane_biases_match_scalar_pipelines() {
-        prop_check("set_lane_biases == per-lane scalar set_bias", 30, |g| {
+    fn check_lane_biases<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("set_lane_biases == per-lane scalar set_bias", cases, |g| {
             let n = *g.pick(&[4u32, 8, 12]);
             let frac = n - 1;
             let m = g.usize(1, 8);
             let n_out = (n + 4) as usize;
             let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
-            let lanes_n = *g.pick(&[1usize, 5, 63, 64]);
-            let active = if lanes_n == LANES {
-                u64::MAX
-            } else {
-                (1u64 << lanes_n) - 1
-            };
+            let lanes_n =
+                (*g.pick(&[1usize, 5, 63, 64, 65, lanes_max - 1, lanes_max])).min(lanes_max);
+            let active = LaneMask::<W>::first_n(lanes_n);
             let windows: Vec<Vec<Fixed>> = (0..lanes_n)
                 .map(|_| (0..m).map(|_| rand_fixed(g, n)).collect())
                 .collect();
             let lane_biases: Vec<Fixed> = (0..lanes_n).map(|_| rand_fixed(g, n)).collect();
-            let mut acts = vec![DigitPlane::ZERO; m * frac as usize];
+            let mut acts = vec![DigitPlane::<W>::ZERO; m * frac as usize];
             for i in 0..m {
                 let ops: Vec<Fixed> = windows.iter().map(|w| w[i]).collect();
                 transpose_lanes(
@@ -1067,7 +1412,7 @@ mod tests {
                     &mut acts[i * frac as usize..(i + 1) * frac as usize],
                 );
             }
-            let mut sliced = SopSlicedPipeline::new(&weights, Some(Fixed::zero(frac)), n_out);
+            let mut sliced = SopSlicedPipeline::<W>::new(&weights, Some(Fixed::zero(frac)), n_out);
             sliced.set_lane_biases(&lane_biases);
             let res = sliced.run(&acts, frac, active);
             let mut scalar = SopPipeline::new(&weights, Some(Fixed::zero(frac)), n_out);
@@ -1094,6 +1439,13 @@ mod tests {
         });
     }
 
+    #[test]
+    fn per_lane_biases_match_scalar_pipelines() {
+        check_lane_biases::<1>(30);
+        check_lane_biases::<2>(10);
+        check_lane_biases::<4>(5);
+    }
+
     /// **Cross-image lane packing soundness**: windows drawn from two
     /// different "images" (distinct activation/bias populations) packed
     /// into ONE group with `set_lane_biases` reproduce, lane for lane,
@@ -1101,10 +1453,11 @@ mod tests {
     /// in single-image groups — states, END decision cycles, and value
     /// bits all identical. Per-lane results are independent of group
     /// composition, which is exactly what makes backfilling a ragged
-    /// tail from image *i* with pixels from image *i+1* bit-sound.
-    #[test]
-    fn cross_image_packing_is_group_composition_independent() {
-        prop_check("cross-image packed group == solo groups == scalar", 30, |g| {
+    /// tail from image *i* with pixels from image *i+1* bit-sound — at
+    /// every plane width.
+    fn check_cross_image<const W: usize>(cases: usize) {
+        let lanes_max = DigitPlane::<W>::LANES;
+        prop_check("cross-image packed group == solo groups == scalar", cases, |g| {
             let n = *g.pick(&[4u32, 8, 12]);
             let frac = n - 1;
             let m = g.usize(1, 8);
@@ -1112,8 +1465,8 @@ mod tests {
             // Shared weight digit planes — the whole batch runs one net.
             let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
             // Image A fills a ragged tail; image B backfills the rest.
-            let a_n = g.usize(1, 40);
-            let b_n = g.usize(1, LANES - a_n);
+            let a_n = g.usize(1, lanes_max - 24);
+            let b_n = g.usize(1, lanes_max - a_n);
             let windows: Vec<Vec<Fixed>> = (0..a_n + b_n)
                 .map(|_| (0..m).map(|_| rand_fixed(g, n)).collect())
                 .collect();
@@ -1121,7 +1474,7 @@ mod tests {
                 (0..a_n + b_n).map(|_| rand_fixed(g, n)).collect();
             let run_group = |range: std::ops::Range<usize>| {
                 let wins = &windows[range.clone()];
-                let mut acts = vec![DigitPlane::ZERO; m * frac as usize];
+                let mut acts = vec![DigitPlane::<W>::ZERO; m * frac as usize];
                 for i in 0..m {
                     let ops: Vec<Fixed> = wins.iter().map(|w| w[i]).collect();
                     transpose_lanes(
@@ -1130,12 +1483,9 @@ mod tests {
                         &mut acts[i * frac as usize..(i + 1) * frac as usize],
                     );
                 }
-                let active = if wins.len() == LANES {
-                    u64::MAX
-                } else {
-                    (1u64 << wins.len()) - 1
-                };
-                let mut p = SopSlicedPipeline::new(&weights, Some(Fixed::zero(frac)), n_out);
+                let active = LaneMask::<W>::first_n(wins.len());
+                let mut p =
+                    SopSlicedPipeline::<W>::new(&weights, Some(Fixed::zero(frac)), n_out);
                 p.set_lane_biases(&lane_biases[range]);
                 p.run(&acts, frac, active)
             };
@@ -1177,10 +1527,16 @@ mod tests {
         });
     }
 
+    #[test]
+    fn cross_image_packing_is_group_composition_independent() {
+        check_cross_image::<1>(30);
+        check_cross_image::<2>(10);
+        check_cross_image::<4>(5);
+    }
+
     /// set_bias re-steers the broadcast bias lane exactly like a fresh
     /// pipeline (the executor swaps the bias every tile).
-    #[test]
-    fn set_bias_matches_fresh_pipeline() {
+    fn check_set_bias<const W: usize>() {
         let n = 8u32;
         let frac = n - 1;
         let w: Vec<Fixed> = (0..9)
@@ -1193,24 +1549,83 @@ mod tests {
                     .collect()
             })
             .collect();
-        let mut acts = vec![DigitPlane::ZERO; 9 * frac as usize];
+        let mut acts = vec![DigitPlane::<W>::ZERO; 9 * frac as usize];
         for i in 0..9 {
             let ops: Vec<Fixed> = windows.iter().map(|w| w[i]).collect();
             transpose_lanes(&ops, frac, &mut acts[i * frac as usize..(i + 1) * frac as usize]);
         }
-        let active = (1u64 << windows.len()) - 1;
+        let active = LaneMask::<W>::first_n(windows.len());
         let b1 = Fixed::quantize(0.25, n);
         let b2 = Fixed::quantize(-0.375, n);
-        let mut reused = SopSlicedPipeline::new(&w, Some(b1), 12);
+        let mut reused = SopSlicedPipeline::<W>::new(&w, Some(b1), 12);
         let _ = reused.run(&acts, frac, active);
         reused.set_bias(b2);
         let got = reused.run(&acts, frac, active);
-        let fresh = SopSlicedPipeline::new(&w, Some(b2), 12).run(&acts, frac, active);
+        let fresh = SopSlicedPipeline::<W>::new(&w, Some(b2), 12).run(&acts, frac, active);
         for lane in 0..windows.len() {
             let (a, b) = (got.lane(lane), fresh.lane(lane));
             assert_eq!(a.state, b.state);
             assert_eq!(a.decided_at, b.decided_at);
             assert_eq!(a.value.to_bits(), b.value.to_bits());
         }
+    }
+
+    #[test]
+    fn set_bias_matches_fresh_pipeline() {
+        check_set_bias::<1>();
+        check_set_bias::<2>();
+        check_set_bias::<4>();
+        check_set_bias::<8>();
+    }
+
+    /// Identical lane populations produce bit-identical results at
+    /// every width: the same 64 windows run at W=1 and as the leading
+    /// lanes of W∈{2,4,8} groups — plane width never leaks into lane
+    /// results (the width-independence invariant the engine relies on).
+    #[test]
+    fn widths_agree_on_identical_lanes() {
+        fn run_at<const W: usize>(
+            weights: &[Fixed],
+            windows: &[Vec<Fixed>],
+            frac: u32,
+            n_out: usize,
+        ) -> Vec<SopEndResult> {
+            let m = weights.len();
+            let mut acts = vec![DigitPlane::<W>::ZERO; m * frac as usize];
+            for i in 0..m {
+                let ops: Vec<Fixed> = windows.iter().map(|w| w[i]).collect();
+                transpose_lanes(&ops, frac, &mut acts[i * frac as usize..(i + 1) * frac as usize]);
+            }
+            let mut p = SopSlicedPipeline::<W>::new(weights, None, n_out);
+            let res = p.run(&acts, frac, LaneMask::<W>::first_n(windows.len()));
+            (0..windows.len()).map(|l| res.lane(l)).collect()
+        }
+        prop_check("lane results are plane-width independent", 5, |g| {
+            let n = 8u32;
+            let frac = n - 1;
+            let m = 9usize;
+            let n_out = (n + 4) as usize;
+            let weights: Vec<Fixed> = (0..m).map(|_| rand_fixed(g, n)).collect();
+            let windows: Vec<Vec<Fixed>> = (0..64)
+                .map(|_| (0..m).map(|_| rand_fixed(g, n)).collect())
+                .collect();
+            let r1 = run_at::<1>(&weights, &windows, frac, n_out);
+            let r2 = run_at::<2>(&weights, &windows, frac, n_out);
+            let r4 = run_at::<4>(&weights, &windows, frac, n_out);
+            let r8 = run_at::<8>(&weights, &windows, frac, n_out);
+            for (lane, a) in r1.iter().enumerate() {
+                for b in [&r2[lane], &r4[lane], &r8[lane]] {
+                    prop_assert!(a.state == b.state, "lane {lane} state");
+                    prop_assert!(a.decided_at == b.decided_at, "lane {lane} decided_at");
+                    prop_assert!(
+                        a.value.to_bits() == b.value.to_bits(),
+                        "lane {lane} value {} vs {}",
+                        a.value,
+                        b.value
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 }

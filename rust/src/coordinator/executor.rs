@@ -16,7 +16,7 @@
 //!    directly over host tensors through a pluggable
 //!    [`ComputeEngine`](crate::runtime::ComputeEngine) — the vectorized
 //!    [`EngineKind::F32`] reference, the digit-serial
-//!    [`EngineKind::Sop`] SOP+END datapath, or its bit-sliced 64-lane
+//!    [`EngineKind::Sop`] SOP+END datapath, or its bit-sliced `64·W`-lane
 //!    twin [`EngineKind::SopSliced`]; the SOP engines record live
 //!    per-level END statistics while the fused stack runs.
 //!
@@ -94,7 +94,8 @@ pub struct ExecStats {
     /// engines). Batched runs pack pixels across images, so this rises
     /// toward `lane_slots_total` as the batch grows.
     pub lane_slots_used: u64,
-    /// Lane slots offered by those groups (64 per group formed).
+    /// Lane slots offered by those groups (the engine's lane width
+    /// `64·W` per group formed).
     pub lane_slots_total: u64,
     /// Wall-clock time of the tile loop.
     pub wall: std::time::Duration,

@@ -187,6 +187,7 @@ impl Metrics {
             reused_pixels: 0,
             lane_slots_used: 0,
             lane_slots_total: 0,
+            lane_width: None,
             uptime,
         }
     }
@@ -256,9 +257,14 @@ pub struct MetricsSnapshot {
     /// sliced-engine serving); 0 otherwise. Cross-request batching
     /// drives this toward `lane_slots_total`.
     pub lane_slots_used: u64,
-    /// Lane slots offered by every sliced group formed (64 per group;
-    /// same population rule).
+    /// Lane slots offered by every sliced group formed (the engine's
+    /// lane width `64·W` per group; same population rule).
     pub lane_slots_total: u64,
+    /// Digit-plane lanes per step of the serving engine (`Some(64·W)`
+    /// for the sliced engine, `None` for the scalar engines and the
+    /// artifact backends) — set from
+    /// [`lane_width`](super::pool::PoolConfig::lane_width).
+    pub lane_width: Option<usize>,
     /// Time since the registry was created.
     pub uptime: Duration,
 }
@@ -329,6 +335,9 @@ impl std::fmt::Display for MetricsSnapshot {
                 self.fresh_pixels,
                 self.reused_pixels
             )?;
+        }
+        if let Some(lanes) = self.lane_width {
+            writeln!(f, "lane width: {lanes} digit-plane lanes per step")?;
         }
         if self.lane_slots_total > 0 {
             writeln!(
@@ -494,11 +503,14 @@ mod tests {
         let mut s = m.snapshot();
         assert_eq!(s.lane_occupancy(), 0.0);
         assert!(!format!("{s}").contains("lane occupancy"));
+        assert!(!format!("{s}").contains("lane width"));
         s.lane_slots_used = 96;
         s.lane_slots_total = 128;
+        s.lane_width = Some(128);
         assert!((s.lane_occupancy() - 0.75).abs() < 1e-12);
         let text = format!("{s}");
         assert!(text.contains("lane occupancy: 75.0%"), "{text}");
+        assert!(text.contains("lane width: 128 digit-plane lanes"), "{text}");
         assert!(text.contains("96 used / 128 offered"), "{text}");
     }
 

@@ -130,7 +130,8 @@ pub struct NativePipeline {
     /// Sliced-engine lane slots that carried an output pixel, across
     /// every inference (0 for the scalar engines).
     lane_slots_used: AtomicU64,
-    /// Lane slots offered by every sliced group formed (64 per group).
+    /// Lane slots offered by every sliced group formed (the engine's
+    /// lane width `64·W` per group).
     lane_slots_total: AtomicU64,
 }
 
@@ -167,7 +168,7 @@ impl NativePipeline {
         if net.convs.is_empty() {
             bail!("{}: network has no conv levels", net.name);
         }
-        if let EngineKind::Sop { n_bits } | EngineKind::SopSliced { n_bits } = kind {
+        if let EngineKind::Sop { n_bits } | EngineKind::SopSliced { n_bits, .. } = kind {
             // The SOP engines assert this range at construction;
             // catching it here turns a per-request worker panic into a
             // construction error.
@@ -605,7 +606,7 @@ mod tests {
     #[test]
     fn batched_inference_matches_solo_per_image() {
         let net = nets::lenet5();
-        let kind = EngineKind::SopSliced { n_bits: 8 };
+        let kind = EngineKind::sliced(8);
         let pipe = NativePipeline::synthetic(&net, kind, 21).expect("pipeline");
         let imgs: Vec<Tensor> = (0..3)
             .map(|i| nets::random_input(&net.convs[0], 100 + i))
@@ -636,10 +637,12 @@ mod tests {
             assert_eq!(a.sops, sops, "level {j} per-image sops split");
             assert_eq!(a.executed_digits, digits, "level {j} digit split");
         }
-        // The lane-occupancy statistic is live and sane.
+        // The lane-occupancy statistic is live and sane; offered slots
+        // come in whole groups of the engine-reported lane width.
+        let lanes = kind.lanes().expect("sliced kind") as u64;
         let (used, total) = pipe.lane_totals();
         assert!(used > 0, "no lane slots recorded");
-        assert!(total >= used && total % 64 == 0);
+        assert!(total >= used && total % lanes == 0);
         // Empty batches are a clean no-op.
         let (none, ctrs) = pipe.infer_batch(&[]).expect("empty batch");
         assert!(none.is_empty() && ctrs.is_empty());

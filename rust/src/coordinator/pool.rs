@@ -87,6 +87,12 @@ pub struct PoolConfig {
     /// [`MetricsSnapshot`] (native sliced-engine serving; `None`
     /// otherwise).
     pub lane_source: Option<LaneStatSource>,
+    /// Digit-plane lanes per step of the serving engine, surfaced as
+    /// [`MetricsSnapshot::lane_width`] (`Some(64·W)` for native
+    /// sliced-engine serving; `None` otherwise). Distinct from
+    /// [`MAX_NATIVE_BATCH`], which caps *images* per stacked batch —
+    /// this is *output pixels* per digit step inside one engine run.
+    pub lane_width: Option<usize>,
 }
 
 impl PoolConfig {
@@ -103,6 +109,7 @@ impl PoolConfig {
             end_source: None,
             reuse_source: None,
             lane_source: None,
+            lane_width: None,
         }
     }
 }
@@ -275,6 +282,7 @@ struct Shared {
     end_source: Option<EndCounterSource>,
     reuse_source: Option<ReuseStatSource>,
     lane_source: Option<LaneStatSource>,
+    lane_width: Option<usize>,
 }
 
 impl Shared {
@@ -321,6 +329,7 @@ impl WorkerPool {
             end_source: cfg.end_source.clone(),
             reuse_source: cfg.reuse_source.clone(),
             lane_source: cfg.lane_source.clone(),
+            lane_width: cfg.lane_width,
         });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -425,6 +434,7 @@ impl WorkerPool {
         if let Some(src) = &self.shared.lane_source {
             (snap.lane_slots_used, snap.lane_slots_total) = src();
         }
+        snap.lane_width = self.shared.lane_width;
         snap
     }
 

@@ -130,6 +130,7 @@ impl InferenceService {
                     end_source: None,
                     reuse_source: None,
                     lane_source: None,
+                    lane_width: None,
                 })?;
                 Ok(InferenceService { pool, group })
             }
@@ -178,6 +179,7 @@ impl InferenceService {
             end_source: Some(pipeline_end_source(&pipeline)),
             reuse_source: Some(pipeline_reuse_source(&pipeline)),
             lane_source: Some(pipeline_lane_source(&pipeline)),
+            lane_width: kind.lanes(),
         })?;
         Ok(InferenceService { pool, group })
     }

@@ -8,6 +8,7 @@
 //! usefuse serve  --native lenet5      (artifact-free serving demo)
 //! usefuse end    --group alexnet --samples 200
 //! usefuse info                        (artifact manifest summary)
+//! usefuse bench  --compare            (perf gate vs BENCH_baseline.json)
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -16,7 +17,7 @@ use usefuse::coordinator::{layer_end_stats, EndConfig, FusionExecutor, Inference
 use usefuse::geometry::{PyramidPlan, StridePolicy};
 use usefuse::nets;
 use usefuse::report;
-use usefuse::runtime::{EngineKind, Manifest, Runtime, Tensor};
+use usefuse::runtime::{EngineKind, LaneWidth, Manifest, Runtime, Tensor};
 use usefuse::sim::{CycleModel, DesignPoint, Pattern, TrafficModel};
 use usefuse::util::cli::{usage, Args, OptSpec};
 
@@ -45,6 +46,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "end" => cmd_end(rest),
         "info" => cmd_info(rest),
+        "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -62,7 +64,8 @@ fn print_help() {
          \x20 verify  run tile-by-tile fusion via PJRT and check vs golden\n\
          \x20 serve   run the batched serving demo (--native <net> needs no artifacts)\n\
          \x20 end     END statistics for a fused group's first conv layer\n\
-         \x20 info    summarize the artifact bundle\n"
+         \x20 info    summarize the artifact bundle\n\
+         \x20 bench   compare a fresh bench JSON dump against the baseline\n"
     );
 }
 
@@ -73,6 +76,16 @@ fn parse_reuse(v: &str) -> Result<bool> {
         "off" => Ok(false),
         other => bail!("--reuse takes 'on' or 'off', got '{other}'"),
     }
+}
+
+/// Parse a `--lanes 64|128|256|512` value into the sliced engine's
+/// digit-plane width.
+fn parse_lanes(v: &str) -> Result<LaneWidth> {
+    let n: usize = v
+        .parse()
+        .map_err(|_| anyhow!("--lanes takes a lane count, got '{v}'"))?;
+    LaneWidth::from_lanes(n)
+        .ok_or_else(|| anyhow!("--lanes must be one of 64, 128, 256 or 512, got {n}"))
 }
 
 fn cmd_plan(argv: &[String]) -> Result<()> {
@@ -144,11 +157,13 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         OptSpec { name: "what", help: "table1..table5, fig10..fig14, zoo, engines, all", takes_value: true, default: Some("all") },
         OptSpec { name: "samples", help: "END samples per filter (figs 12-14)", takes_value: true, default: Some("150") },
         OptSpec { name: "reuse", help: "§3.4 inter-tile reuse for native runs: on or off", takes_value: true, default: Some("on") },
+        OptSpec { name: "lanes", help: "sliced-engine digit-plane lanes: 64, 128, 256 or 512", takes_value: true, default: Some("64") },
     ];
     let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     let what = args.get("what").unwrap().to_string();
     let samples = args.get_usize("samples").map_err(|e| anyhow!(e))?.unwrap();
     let reuse = parse_reuse(args.get("reuse").unwrap())?;
+    let lanes = parse_lanes(args.get("lanes").unwrap())?;
     let m = CycleModel::default();
     let all = what == "all";
     let want = |k: &str| all || what == k;
@@ -173,9 +188,13 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         println!("{}", report::figures::table_zoo_native(8, 0x200)?.1.render());
     }
     if want("engines") {
-        // Three-way f32 / sop / sop-sliced fused-pyramid throughput,
-        // including the live §3.4 reuse fraction.
-        println!("{}", report::figures::table_engines_native(8, 0xE6E, reuse)?.1.render());
+        // Three-way f32 / sop / sop-sliced fused-pyramid throughput at
+        // the requested sliced lane width, including the live §3.4
+        // reuse fraction.
+        println!(
+            "{}",
+            report::figures::table_engines_native(8, 0xE6E, reuse, lanes)?.1.render()
+        );
     }
     if want("fig10") {
         println!("{}", report::figures::fig10(&m).1.render());
@@ -278,6 +297,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "program", help: "artifact program (when not --native)", takes_value: true, default: Some("lenet_infer") },
         OptSpec { name: "engine", help: "native engine: f32, sop or sop-sliced", takes_value: true, default: Some("f32") },
         OptSpec { name: "bits", help: "SOP operand precision", takes_value: true, default: Some("8") },
+        OptSpec { name: "lanes", help: "sop-sliced digit-plane lanes: 64, 128, 256 or 512", takes_value: true, default: Some("64") },
         OptSpec { name: "reuse", help: "§3.4 inter-tile reuse buffers: on or off (native only)", takes_value: true, default: Some("on") },
         OptSpec { name: "requests", help: "demo requests to push", takes_value: true, default: Some("16") },
         OptSpec { name: "workers", help: "worker threads", takes_value: true, default: Some("2") },
@@ -318,15 +338,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 },
                 "sop-sliced" => EngineKind::SopSliced {
                     n_bits: args.get_usize("bits").map_err(|e| anyhow!(e))?.unwrap() as u32,
+                    width: parse_lanes(args.get("lanes").unwrap())?,
                 },
                 other => bail!("unknown engine '{other}' (f32, sop or sop-sliced)"),
             };
             let seed = args.get_usize("seed").map_err(|e| anyhow!(e))?.unwrap() as u64;
             println!(
-                "serving {} natively ({} engine, {} conv levels, input {}×{}×{}, \
+                "serving {} natively ({} engine{}, {} conv levels, input {}×{}×{}, \
                  §3.4 reuse {}, no artifacts)",
                 net.name,
                 kind.label(),
+                kind.lanes().map_or(String::new(), |l| format!(", {l} lanes")),
                 net.convs.len(),
                 net.input_dim,
                 net.input_dim,
@@ -374,6 +396,34 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     println!("\n{}", svc.metrics());
     Ok(())
+}
+
+/// `usefuse bench --compare`: the cross-PR perf-trajectory gate. CI
+/// regenerates `rust/BENCH_fused_native.json` and compares it against
+/// the committed `BENCH_baseline.json`; any existing series slower by
+/// more than `--tolerance` percent (or missing) fails with a non-zero
+/// exit.
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "compare", help: "run the baseline comparison gate", takes_value: false, default: None },
+        OptSpec { name: "baseline", help: "committed baseline JSON", takes_value: true, default: Some("BENCH_baseline.json") },
+        OptSpec { name: "current", help: "fresh bench JSON dump", takes_value: true, default: Some("rust/BENCH_fused_native.json") },
+        OptSpec { name: "tolerance", help: "allowed slowdown of any series, percent", takes_value: true, default: Some("25") },
+    ];
+    let args = Args::parse(argv, &specs)
+        .map_err(|e| anyhow!("{e}\n{}", usage("bench", "compare bench dumps", &specs)))?;
+    if !args.flag("compare") {
+        bail!(
+            "nothing to do (pass --compare)\n{}",
+            usage("bench", "compare bench dumps", &specs)
+        );
+    }
+    let tolerance = args.get_f64("tolerance").map_err(|e| anyhow!(e))?.unwrap();
+    report::bench_compare::compare_files(
+        args.get("baseline").unwrap(),
+        args.get("current").unwrap(),
+        tolerance,
+    )
 }
 
 fn cmd_end(argv: &[String]) -> Result<()> {

@@ -1,0 +1,231 @@
+//! Cross-PR perf-trajectory gate: compare a fresh benchmark JSON dump
+//! against a committed baseline and fail on regressions.
+//!
+//! The workflow follows the BENCHMARKS.md baseline pattern: a
+//! `BENCH_baseline.json` snapshot of `harness::Bench::to_json` output
+//! is committed at the repo root, CI regenerates
+//! `rust/BENCH_fused_native.json` on every run and then executes
+//! `usefuse bench --compare` — any **existing** baseline series whose
+//! fresh `median_us` is more than `tolerance` percent slower (or that
+//! vanished from the fresh dump) fails the gate. New series in the
+//! fresh dump pass with a notice; they become gated once the baseline
+//! is re-snapshotted.
+//!
+//! A baseline with an empty `benches` object (or a `"bootstrap": true`
+//! marker) is the bootstrap state: the comparator reports every fresh
+//! series as new and passes, so the gate can be committed before any
+//! machine-specific numbers exist. Refresh the baseline by copying the
+//! fresh dump over it when a deliberate perf change lands.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Json};
+
+/// Outcome of one series comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SeriesVerdict {
+    /// Present in both dumps and within tolerance (ratio = fresh/base).
+    Ok {
+        /// `fresh_median / baseline_median`.
+        ratio: f64,
+    },
+    /// Present in both dumps but slower than the tolerance allows.
+    Regressed {
+        /// `fresh_median / baseline_median`.
+        ratio: f64,
+    },
+    /// In the baseline but missing from the fresh dump — a silently
+    /// dropped benchmark is treated as a regression.
+    Missing,
+    /// Only in the fresh dump: passes, gated after the next snapshot.
+    New,
+}
+
+/// Result of comparing one fresh dump against the baseline.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Per-series verdicts, keyed by bench name (union of both dumps).
+    pub series: BTreeMap<String, SeriesVerdict>,
+    /// True when the baseline carried no series to gate against
+    /// (empty `benches` or an explicit `"bootstrap": true`).
+    pub bootstrap: bool,
+}
+
+impl Comparison {
+    /// Names of the regressed or missing series (gate failures).
+    pub fn failures(&self) -> Vec<&str> {
+        self.series
+            .iter()
+            .filter(|(_, v)| matches!(v, SeriesVerdict::Regressed { .. } | SeriesVerdict::Missing))
+            .map(|(k, _)| k.as_str())
+            .collect()
+    }
+
+    /// True when no existing series regressed or vanished.
+    pub fn passed(&self) -> bool {
+        self.failures().is_empty()
+    }
+}
+
+/// Extract `benches.{name}.median_us` medians from a harness dump.
+fn medians(doc: &Json, which: &str) -> Result<BTreeMap<String, f64>> {
+    let benches = doc
+        .get("benches")
+        .and_then(|b| b.as_obj())
+        .ok_or_else(|| anyhow!("{which}: no 'benches' object"))?;
+    let mut out = BTreeMap::new();
+    for (name, m) in benches {
+        let med = m
+            .get("median_us")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("{which}: series '{name}' has no median_us"))?;
+        if med <= 0.0 {
+            bail!("{which}: series '{name}' has non-positive median_us {med}");
+        }
+        out.insert(name.clone(), med);
+    }
+    Ok(out)
+}
+
+/// Compare two parsed harness dumps. `tolerance_pct` is the allowed
+/// slowdown of any baseline series, in percent (the issue's gate uses
+/// 25.0: fresh ≤ 1.25 × baseline).
+pub fn compare(baseline: &Json, fresh: &Json, tolerance_pct: f64) -> Result<Comparison> {
+    if !(0.0..1000.0).contains(&tolerance_pct) {
+        bail!("tolerance {tolerance_pct}% out of range");
+    }
+    let base = medians(baseline, "baseline")?;
+    let new = medians(fresh, "fresh")?;
+    let bootstrap = base.is_empty()
+        || baseline
+            .get("bootstrap")
+            .and_then(|b| b.as_bool())
+            .unwrap_or(false);
+    let limit = 1.0 + tolerance_pct / 100.0;
+    let mut series = BTreeMap::new();
+    for (name, b) in &base {
+        let verdict = match new.get(name) {
+            None => SeriesVerdict::Missing,
+            Some(f) => {
+                let ratio = f / b;
+                if ratio > limit {
+                    SeriesVerdict::Regressed { ratio }
+                } else {
+                    SeriesVerdict::Ok { ratio }
+                }
+            }
+        };
+        series.insert(name.clone(), verdict);
+    }
+    for name in new.keys() {
+        if !base.contains_key(name) {
+            series.insert(name.clone(), SeriesVerdict::New);
+        }
+    }
+    Ok(Comparison { series, bootstrap })
+}
+
+/// File-level driver for `usefuse bench --compare`: parse both JSON
+/// files, compare, print one line per series, and error out on any
+/// regression (the CI gate relies on the non-zero exit).
+pub fn compare_files(baseline_path: &str, fresh_path: &str, tolerance_pct: f64) -> Result<()> {
+    let read = |p: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(p).map_err(|e| anyhow!("read {p}: {e}"))?;
+        json::parse(&text).map_err(|e| anyhow!("parse {p}: {e}"))
+    };
+    let cmp = compare(&read(baseline_path)?, &read(fresh_path)?, tolerance_pct)?;
+    if cmp.bootstrap {
+        println!("baseline {baseline_path} is a bootstrap snapshot (no gated series yet)");
+    }
+    for (name, v) in &cmp.series {
+        match v {
+            SeriesVerdict::Ok { ratio } => println!("  ok        {name}  {ratio:.3}x"),
+            SeriesVerdict::New => println!("  new       {name}  (ungated until re-snapshot)"),
+            SeriesVerdict::Regressed { ratio } => {
+                println!("  REGRESSED {name}  {ratio:.3}x > {:.3}x", 1.0 + tolerance_pct / 100.0)
+            }
+            SeriesVerdict::Missing => println!("  MISSING   {name}  (in baseline, not in fresh)"),
+        }
+    }
+    if !cmp.passed() {
+        bail!(
+            "perf gate failed (> {tolerance_pct}% regression): {}",
+            cmp.failures().join(", ")
+        );
+    }
+    println!("perf gate OK ({} series checked)", cmp.series.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(pairs: &[(&str, f64)]) -> Json {
+        let inner: Vec<(&str, Json)> = pairs
+            .iter()
+            .map(|(k, v)| (*k, json::obj(vec![("median_us", json::num(*v))])))
+            .collect();
+        json::obj(vec![
+            ("group", json::s("fused_native")),
+            ("benches", json::obj(inner)),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = doc(&[("a", 100.0), ("b", 50.0)]);
+        let fresh = doc(&[("a", 120.0), ("b", 40.0)]);
+        let cmp = compare(&base, &fresh, 25.0).unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.series);
+        assert!(!cmp.bootstrap);
+        assert!(matches!(cmp.series["a"], SeriesVerdict::Ok { ratio } if (ratio - 1.2).abs() < 1e-9));
+    }
+
+    #[test]
+    fn regression_and_missing_fail() {
+        let base = doc(&[("a", 100.0), ("gone", 10.0)]);
+        let fresh = doc(&[("a", 126.0)]);
+        let cmp = compare(&base, &fresh, 25.0).unwrap();
+        assert_eq!(cmp.failures(), vec!["a", "gone"]);
+        assert!(matches!(cmp.series["a"], SeriesVerdict::Regressed { .. }));
+        assert_eq!(cmp.series["gone"], SeriesVerdict::Missing);
+    }
+
+    #[test]
+    fn new_series_pass_until_snapshotted() {
+        let base = doc(&[("a", 100.0)]);
+        let fresh = doc(&[("a", 100.0), ("fresh_w4", 25.0)]);
+        let cmp = compare(&base, &fresh, 25.0).unwrap();
+        assert!(cmp.passed());
+        assert_eq!(cmp.series["fresh_w4"], SeriesVerdict::New);
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_everything() {
+        let base = json::obj(vec![
+            ("group", json::s("fused_native")),
+            ("bootstrap", Json::Bool(true)),
+            ("benches", json::obj(vec![])),
+        ]);
+        let fresh = doc(&[("a", 1.0), ("b", 2.0)]);
+        let cmp = compare(&base, &fresh, 25.0).unwrap();
+        assert!(cmp.bootstrap && cmp.passed());
+        assert_eq!(cmp.series.len(), 2);
+    }
+
+    #[test]
+    fn malformed_dumps_are_rejected() {
+        let ok = doc(&[("a", 1.0)]);
+        let no_benches = json::obj(vec![("group", json::s("g"))]);
+        assert!(compare(&no_benches, &ok, 25.0).is_err());
+        let bad_median = json::obj(vec![(
+            "benches",
+            json::obj(vec![("a", json::obj(vec![("median_us", json::num(0.0))]))]),
+        )]);
+        assert!(compare(&bad_median, &ok, 25.0).is_err());
+        assert!(compare(&ok, &ok, -1.0).is_err());
+    }
+}

@@ -10,7 +10,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::{activity_from_counters, layer_end_stats, EndConfig, FusionExecutor, LayerEndStats};
 use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
 use crate::nets::{by_name, random_input, random_weights};
-use crate::runtime::{EndCounters, EngineKind, Runtime, Tensor};
+use crate::runtime::{EndCounters, EngineKind, LaneWidth, Runtime, Tensor};
 use crate::sim::{
     roofline, CycleModel, DesignPoint, EnergyModel, Pattern, RooflinePoint, TrafficModel,
 };
@@ -432,6 +432,8 @@ pub fn fig14_native(n_bits: u32, seed: u64) -> Result<(Vec<Fig14Row>, Table)> {
 pub struct EngineThroughputRow {
     /// Engine label ("f32" / "sop" / "sop-sliced").
     pub engine: String,
+    /// Digit-plane lanes per step (`None` for the scalar engines).
+    pub lanes: Option<usize>,
     /// Pyramid movements executed by one fused run.
     pub tiles: usize,
     /// Mean wall-clock microseconds per tile movement.
@@ -450,19 +452,21 @@ pub struct EngineThroughputRow {
 
 /// **Three-way native engine throughput**: the fused LeNet pyramid
 /// executed end-to-end through every native engine — vectorized f32,
-/// scalar digit-serial SOP and the bit-sliced 64-lane SOP — with one
-/// timed run each, the verify residual against the exact f32 golden,
-/// the live END statistics of the digit-serial engines, and the §3.4
-/// reuse fraction (`reuse` toggles the inter-tile reuse buffers; the
-/// output is bit-identical either way). The last table column reports
-/// each engine's speedup over the scalar SOP engine — the bit-slicing
-/// lever `benches/fused_native.rs` measures with proper repetition
-/// (this table is a single-run snapshot; the bench also measures the
-/// reuse-on vs reuse-off speedup).
+/// scalar digit-serial SOP and the bit-sliced `64·W`-lane SOP at the
+/// requested plane `width` — with one timed run each, the verify
+/// residual against the exact f32 golden, the live END statistics of
+/// the digit-serial engines, and the §3.4 reuse fraction (`reuse`
+/// toggles the inter-tile reuse buffers; the output is bit-identical
+/// either way). The Lanes column distinguishes sliced widths; the last
+/// column reports each engine's speedup over the scalar SOP engine —
+/// the bit-slicing lever `benches/fused_native.rs` measures with
+/// proper repetition (this table is a single-run snapshot; the bench
+/// also measures the reuse-on vs reuse-off speedup).
 pub fn table_engines_native(
     n_bits: u32,
     seed: u64,
     reuse: bool,
+    width: LaneWidth,
 ) -> Result<(Vec<EngineThroughputRow>, Table)> {
     let net = by_name("lenet5").expect("zoo has lenet5");
     let specs = net.paper_fusion()[0].clone();
@@ -471,7 +475,7 @@ pub fn table_engines_native(
     for kind in [
         EngineKind::F32,
         EngineKind::Sop { n_bits },
-        EngineKind::SopSliced { n_bits },
+        EngineKind::SopSliced { n_bits, width },
     ] {
         let (weights, biases) = random_weights(&specs, seed);
         let exec = FusionExecutor::native("lenet5", &specs, 1, weights, biases, kind)?
@@ -485,6 +489,7 @@ pub fn table_engines_native(
         }
         rows.push(EngineThroughputRow {
             engine: kind.label().to_string(),
+            lanes: kind.lanes(),
             tiles: stats.tiles_executed,
             us_per_tile: stats.wall.as_secs_f64() * 1e6 / stats.tiles_executed.max(1) as f64,
             rel_err,
@@ -505,6 +510,7 @@ pub fn table_engines_native(
     ))
     .header(&[
         "Engine",
+        "Lanes",
         "Tiles",
         "µs/tile",
         "Verify rel err",
@@ -516,6 +522,7 @@ pub fn table_engines_native(
     for r in &rows {
         t.row(vec![
             r.engine.clone(),
+            r.lanes.map_or_else(|| "-".into(), |l| l.to_string()),
             r.tiles.to_string(),
             format!("{:.1}", r.us_per_tile),
             format!("{:.2e}", r.rel_err),

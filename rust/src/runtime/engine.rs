@@ -15,11 +15,13 @@
 //!   the fused stack executes — the measurement the paper's Figs. 12–14
 //!   are built from — instead of re-sampling windows from activation
 //!   dumps after the fact.
-//! - [`SopSlicedEngine`] — the same datapath **bit-sliced 64 wide**
-//!   ([`crate::arith::sliced`]): output pixels are gathered into lane
-//!   groups of 64 per filter and one pass of the digit loop advances
-//!   all of them, with bit-identical outputs and [`EndCounters`] to the
-//!   scalar engine (pinned by `tests/engine_equivalence.rs`).
+//! - [`SopSlicedEngine`] — the same datapath **bit-sliced `64·W` wide**
+//!   ([`crate::arith::sliced`]; the plane width `W ∈ {1,2,4,8}` words
+//!   is selected by [`EngineKind::SopSliced`]'s [`LaneWidth`]): output
+//!   pixels are gathered into lane groups of `64·W` per filter and one
+//!   pass of the digit loop advances all of them, with bit-identical
+//!   outputs and [`EndCounters`] to the scalar engine at every width
+//!   (pinned by `tests/engine_equivalence.rs`).
 //!
 //! Engines are deliberately geometry-blind: they evaluate whatever tile
 //! they are handed. Tile scheduling, halo masking between levels, and
@@ -53,7 +55,8 @@
 //! region of the same level for several images at once
 //! ([`BatchSlot`]s). The sliced engine implements it natively: the
 //! regions' output pixels are laid out image-major in one flat pixel
-//! list and cut into lane groups of 64, so a ragged tail of image *i*
+//! list and cut into groups of the engine's lane width
+//! ([`ComputeEngine::lanes`]), so a ragged tail of image *i*
 //! is backfilled with the leading pixels of image *i+1* instead of
 //! running as a mostly-dead group. This is sound for the same reason
 //! §3.4 reuse is: per-window scaling makes every lane's digits, END
@@ -71,9 +74,8 @@ use anyhow::{bail, Result};
 use super::tensor::Tensor;
 use crate::arith::digit::Fixed;
 use crate::arith::end_unit::EndState;
-use crate::arith::sliced::{
-    transpose_lanes, DigitPlane, SlicedSopResult, SopSlicedPipeline, LANES,
-};
+use crate::arith::sliced::{transpose_lanes, DigitPlane, LaneMask, SlicedSopResult, SopSlicedPipeline};
+pub use crate::arith::sliced::LaneWidth;
 use crate::arith::sop::{SopEndResult, SopPipeline};
 use crate::geometry::FusedConvSpec;
 
@@ -88,12 +90,15 @@ pub enum EngineKind {
         /// Operand precision in bits (1 sign + `n_bits - 1` fraction).
         n_bits: u32,
     },
-    /// Bit-sliced 64-lane SOP + END engine at `n_bits` operand
-    /// precision — bit-identical to [`EngineKind::Sop`], one digit step
-    /// advances 64 output pixels.
+    /// Bit-sliced SOP + END engine at `n_bits` operand precision —
+    /// bit-identical to [`EngineKind::Sop`] at every plane width, one
+    /// digit step advances `width.lanes()` (= 64·W) output pixels.
     SopSliced {
         /// Operand precision in bits (1 sign + `n_bits - 1` fraction).
         n_bits: u32,
+        /// Digit-plane width: lanes advanced per digit step
+        /// (64/128/256/512; `LaneWidth::W1` is the default datapath).
+        width: LaneWidth,
     },
 }
 
@@ -104,7 +109,21 @@ impl EngineKind {
         match self {
             EngineKind::F32 => Box::new(F32Engine),
             EngineKind::Sop { n_bits } => Box::new(SopEngine::new(n_bits)),
-            EngineKind::SopSliced { n_bits } => Box::new(SopSlicedEngine::new(n_bits)),
+            EngineKind::SopSliced { n_bits, width } => match width {
+                LaneWidth::W1 => Box::new(SopSlicedEngine::<1>::new(n_bits)),
+                LaneWidth::W2 => Box::new(SopSlicedEngine::<2>::new(n_bits)),
+                LaneWidth::W4 => Box::new(SopSlicedEngine::<4>::new(n_bits)),
+                LaneWidth::W8 => Box::new(SopSlicedEngine::<8>::new(n_bits)),
+            },
+        }
+    }
+
+    /// Convenience constructor for the bit-sliced kind at the default
+    /// 64-lane width (`W = 1`).
+    pub fn sliced(n_bits: u32) -> EngineKind {
+        EngineKind::SopSliced {
+            n_bits,
+            width: LaneWidth::W1,
         }
     }
 
@@ -114,6 +133,17 @@ impl EngineKind {
             EngineKind::F32 => "f32",
             EngineKind::Sop { .. } => "sop",
             EngineKind::SopSliced { .. } => "sop-sliced",
+        }
+    }
+
+    /// Lanes one digit step advances: `Some(64·W)` for the bit-sliced
+    /// engine, `None` for the scalar engines. Display/occupancy layers
+    /// must derive lane math from this (or [`ComputeEngine::lanes`]),
+    /// never from a literal 64.
+    pub fn lanes(self) -> Option<usize> {
+        match self {
+            EngineKind::SopSliced { width, .. } => Some(width.lanes()),
+            _ => None,
         }
     }
 }
@@ -248,6 +278,13 @@ pub struct BatchSlot<'a> {
 pub trait ComputeEngine: Send {
     /// Engine name for logs and benches ("f32", "sop", …).
     fn name(&self) -> &'static str;
+
+    /// Lane-group capacity of the engine's datapath: output pixels one
+    /// digit step advances (`64·W` for the sliced engine, 1 for the
+    /// scalar engines). Occupancy accounting derives from this.
+    fn lanes(&self) -> usize {
+        1
+    }
 
     /// Evaluate one fused level over `input` (an `(H, H, N)` tile in
     /// padded coordinates): convolution at `spec.s` with `weights`
@@ -864,19 +901,20 @@ impl ComputeEngine for SopEngine {
 
 /// Per-level compiled state of the [`SopSlicedEngine`]: weights
 /// quantized once (identically to the scalar engine), one reusable
-/// 64-lane [`SopSlicedPipeline`] per output filter.
-struct SopSlicedLevel {
+/// `64·W`-lane [`SopSlicedPipeline`] per output filter.
+struct SopSlicedLevel<const W: usize> {
     w_scale: f32,
-    pipes: Vec<SopSlicedPipeline>,
+    pipes: Vec<SopSlicedPipeline<W>>,
 }
 
 /// Gather one output pixel's `K×K×N` window from `input` into lane
-/// `lane` of the group buffers, quantized by its own window max — the
-/// per-window scaling path, expression-identical to the scalar engine's
-/// single strided traversal. Returns the pixel's activation scale.
-/// Shared by the sliced engine's solo and cross-image batched paths so
-/// a lane's operands never depend on which path (or which lane group)
-/// carried it.
+/// `lane` of the group buffers (`lanes` = the engine's lane-group
+/// capacity, the stride of `lane_windows`), quantized by its own
+/// window max — the per-window scaling path, expression-identical to
+/// the scalar engine's single strided traversal. Returns the pixel's
+/// activation scale. Shared by the sliced engine's solo and
+/// cross-image batched paths so a lane's operands never depend on
+/// which path (or which lane group) carried it.
 #[allow(clippy::too_many_arguments)]
 fn gather_lane_window(
     spec: &FusedConvSpec,
@@ -888,6 +926,7 @@ fn gather_lane_window(
     nb: u32,
     raw_window: &mut [f32],
     lane_windows: &mut [Fixed],
+    lanes: usize,
     lane: usize,
 ) -> f32 {
     let (k, s, n) = (spec.k, spec.s, spec.n_in);
@@ -905,17 +944,18 @@ fn gather_lane_window(
     let act_scale = wmax.max(bias_floor).max(1e-12);
     let inv_a = 1.0 / act_scale;
     for (i, &v) in raw_window.iter().enumerate() {
-        lane_windows[i * LANES + lane] = Fixed::quantize((v * inv_a) as f64 * 0.999, nb);
+        lane_windows[i * lanes + lane] = Fixed::quantize((v * inv_a) as f64 * 0.999, nb);
     }
     act_scale
 }
 
-/// The bit-sliced 64-lane MSDF engine: the same quantization, the same
-/// online-multiplier/adder-tree/END recurrences and the same per-SOP
-/// accounting as [`SopEngine`], but output pixels are gathered into
-/// lane groups of up to 64 per filter and every digit step advances
-/// the whole group as word-parallel boolean operations over
-/// [`DigitPlane`]s ([`crate::arith::sliced`]).
+/// The bit-sliced `64·W`-lane MSDF engine: the same quantization, the
+/// same online-multiplier/adder-tree/END recurrences and the same
+/// per-SOP accounting as [`SopEngine`], but output pixels are gathered
+/// into lane groups of up to `64·W` per filter (the const parameter
+/// `W ∈ {1,2,4,8}` is the digit-plane width in machine words) and
+/// every digit step advances the whole group as word-parallel boolean
+/// block operations over [`DigitPlane`]s ([`crate::arith::sliced`]).
 ///
 /// Outputs and [`EndCounters`] are **bit-identical** to the scalar
 /// engine: identical operand quantization (shared `quantize_filter`
@@ -927,12 +967,12 @@ fn gather_lane_window(
 /// this down.
 ///
 /// Ragged lane tails (a level whose pixel count is not a multiple of
-/// 64) run with the dead lanes fed all-zero digit streams and masked
-/// out of every result.
-pub struct SopSlicedEngine {
+/// the lane width) run with the dead lanes fed all-zero digit streams
+/// and masked out of every result.
+pub struct SopSlicedEngine<const W: usize = 1> {
     n_bits: u32,
     n_out_digits: usize,
-    levels: Vec<Option<SopSlicedLevel>>,
+    levels: Vec<Option<SopSlicedLevel<W>>>,
     counters: Vec<EndCounters>,
     /// Per-image counters of batched runs (outer = batch slot).
     batch_counters: Vec<Vec<EndCounters>>,
@@ -940,17 +980,17 @@ pub struct SopSlicedEngine {
     cur_slot: Option<usize>,
     /// Lane slots actually carrying a pixel, over every group formed.
     lane_slots_used: u64,
-    /// Lane slots offered (`LANES` per group formed).
+    /// Lane slots offered ([`Self::LANES`] per group formed).
     lane_slots_total: u64,
     /// Reusable quantized windows of one lane group: window element `i`
-    /// of lane `l` at `[i * LANES + l]`.
+    /// of lane `l` at `[i * Self::LANES + l]`.
     lane_windows: Vec<Fixed>,
     /// Reusable transposed digit planes: operand `i`, digit `j` at
     /// `[i * frac + j]`.
-    planes: Vec<DigitPlane>,
+    planes: Vec<DigitPlane<W>>,
     /// Reusable per-filter results of the current lane group (buffered
     /// so counters accumulate in the scalar engine's order).
-    results: Vec<SlicedSopResult>,
+    results: Vec<SlicedSopResult<W>>,
     /// Reusable raw f32 window values of one lane (gathered once
     /// while computing its window max, quantized from contiguous
     /// memory — mirrors the scalar engine's single traversal).
@@ -959,12 +999,19 @@ pub struct SopSlicedEngine {
     scratch: Vec<f32>,
     /// Reusable per-lane quantized bias operands of one filter.
     lane_biases: Vec<Fixed>,
+    /// Reusable per-lane activation scales of one lane group.
+    lane_scale: Vec<f32>,
+    /// Reusable per-lane dequantization factors of one lane group.
+    lane_dequant: Vec<f64>,
 }
 
-impl SopSlicedEngine {
+impl<const W: usize> SopSlicedEngine<W> {
+    /// Lane-group capacity: output pixels one digit step advances.
+    pub const LANES: usize = 64 * W;
+
     /// Engine with `n_bits` operand precision (1 sign + `n_bits - 1`
     /// fraction bits), matching [`SopEngine::new`].
-    pub fn new(n_bits: u32) -> SopSlicedEngine {
+    pub fn new(n_bits: u32) -> SopSlicedEngine<W> {
         assert!((2..=24).contains(&n_bits), "n_bits out of range");
         SopSlicedEngine {
             n_bits,
@@ -982,10 +1029,12 @@ impl SopSlicedEngine {
             raw_window: Vec::new(),
             scratch: Vec::new(),
             lane_biases: Vec::new(),
+            lane_scale: Vec::new(),
+            lane_dequant: Vec::new(),
         }
     }
 
-    /// Build (once) the quantized per-filter 64-lane pipelines for
+    /// Build (once) the quantized per-filter `64·W`-lane pipelines for
     /// `level` — operand-identical to [`SopEngine`]'s compilation.
     fn compile_level(&mut self, level: usize, spec: &FusedConvSpec, weights: &Tensor) {
         if self.levels.len() <= level {
@@ -1015,9 +1064,13 @@ impl SopSlicedEngine {
     }
 }
 
-impl ComputeEngine for SopSlicedEngine {
+impl<const W: usize> ComputeEngine for SopSlicedEngine<W> {
     fn name(&self) -> &'static str {
         "sop-sliced"
+    }
+
+    fn lanes(&self) -> usize {
+        Self::LANES
     }
 
     fn run_level_region(
@@ -1053,27 +1106,23 @@ impl ComputeEngine for SopSlicedEngine {
         let win = k * k * n;
         self.scratch.clear();
         self.scratch.resize(pixels * m, 0.0);
-        self.lane_windows.resize(win * LANES, Fixed::zero(nb - 1));
+        self.lane_windows.resize(win * Self::LANES, Fixed::zero(nb - 1));
         self.planes.resize(win * frac, DigitPlane::ZERO);
         self.results.resize_with(m, SlicedSopResult::empty);
         self.raw_window.resize(win, 0.0);
-        self.lane_biases.resize(LANES, Fixed::zero(nb - 1));
-        let mut lane_scale = [0.0f32; LANES];
-        let mut lane_dequant = [0.0f64; LANES];
+        self.lane_biases.resize(Self::LANES, Fixed::zero(nb - 1));
+        self.lane_scale.resize(Self::LANES, 0.0);
+        self.lane_dequant.resize(Self::LANES, 0.0);
 
         let mut start = 0usize;
         while start < pixels {
-            // Gather the next ≤64 fresh pixels of the conv sub-rect
+            // Gather the next ≤64·W fresh pixels of the conv sub-rect
             // (row-major, the scalar engine's pixel order) into the
             // lane-group buffers, each quantized by its own window max.
-            let lanes_n = LANES.min(pixels - start);
-            let active = if lanes_n == LANES {
-                u64::MAX
-            } else {
-                (1u64 << lanes_n) - 1
-            };
+            let lanes_n = Self::LANES.min(pixels - start);
+            let active = LaneMask::<W>::first_n(lanes_n);
             self.lane_slots_used += lanes_n as u64;
-            self.lane_slots_total += LANES as u64;
+            self.lane_slots_total += Self::LANES as u64;
             for lane in 0..lanes_n {
                 let p = start + lane;
                 let (oy, ox) = (cy0 + p / rw, cx0 + p % rw);
@@ -1087,25 +1136,26 @@ impl ComputeEngine for SopSlicedEngine {
                     nb,
                     &mut self.raw_window,
                     &mut self.lane_windows,
+                    Self::LANES,
                     lane,
                 );
-                lane_scale[lane] = act_scale;
-                lane_dequant[lane] = act_scale as f64 * st.w_scale as f64;
+                self.lane_scale[lane] = act_scale;
+                self.lane_dequant[lane] = act_scale as f64 * st.w_scale as f64;
             }
             for i in 0..win {
                 transpose_lanes(
-                    &self.lane_windows[i * LANES..i * LANES + lanes_n],
+                    &self.lane_windows[i * Self::LANES..i * Self::LANES + lanes_n],
                     frac as u32,
                     &mut self.planes[i * frac..(i + 1) * frac],
                 );
             }
-            // One 64-wide run per filter; all filters share the group's
+            // One group-wide run per filter; all filters share the group's
             // transposed windows, each filter re-steers the per-lane
             // bias operands for the lanes' own scales.
             for (f, pipe) in st.pipes.iter_mut().enumerate() {
                 for lane in 0..lanes_n {
                     self.lane_biases[lane] = Fixed::quantize(
-                        (bias[f] / (lane_scale[lane] * st.w_scale)) as f64 * 0.999,
+                        (bias[f] / (self.lane_scale[lane] * st.w_scale)) as f64 * 0.999,
                         nb,
                     );
                 }
@@ -1119,7 +1169,7 @@ impl ComputeEngine for SopSlicedEngine {
                 let base = (start + lane) * m;
                 for (f, res) in self.results.iter().enumerate() {
                     let r = res.lane(lane);
-                    record_sop(ctr, &mut self.scratch[base + f], &r, lane_dequant[lane]);
+                    record_sop(ctr, &mut self.scratch[base + f], &r, self.lane_dequant[lane]);
                 }
             }
             start += lanes_n;
@@ -1130,7 +1180,8 @@ impl ComputeEngine for SopSlicedEngine {
 
     /// True cross-image lane packing: the region's output pixels of all
     /// images are laid out **image-major** in one flat list and cut
-    /// into lane groups of 64, so image *i*'s ragged tail is backfilled
+    /// into lane groups of `64·W`, so image *i*'s ragged tail is
+    /// backfilled
     /// by image *i+1*'s leading pixels. Lanes never interact — weights
     /// broadcast, biases/scales are per lane, per-window scaling makes
     /// each lane's digits a function of its own window — so per-image
@@ -1187,24 +1238,20 @@ impl ComputeEngine for SopSlicedEngine {
         let win = k * k * n;
         self.scratch.clear();
         self.scratch.resize(pixels * m, 0.0);
-        self.lane_windows.resize(win * LANES, Fixed::zero(nb - 1));
+        self.lane_windows.resize(win * Self::LANES, Fixed::zero(nb - 1));
         self.planes.resize(win * frac, DigitPlane::ZERO);
         self.results.resize_with(m, SlicedSopResult::empty);
         self.raw_window.resize(win, 0.0);
-        self.lane_biases.resize(LANES, Fixed::zero(nb - 1));
-        let mut lane_scale = [0.0f32; LANES];
-        let mut lane_dequant = [0.0f64; LANES];
+        self.lane_biases.resize(Self::LANES, Fixed::zero(nb - 1));
+        self.lane_scale.resize(Self::LANES, 0.0);
+        self.lane_dequant.resize(Self::LANES, 0.0);
 
         let mut start = 0usize;
         while start < pixels {
-            let lanes_n = LANES.min(pixels - start);
-            let active = if lanes_n == LANES {
-                u64::MAX
-            } else {
-                (1u64 << lanes_n) - 1
-            };
+            let lanes_n = Self::LANES.min(pixels - start);
+            let active = LaneMask::<W>::first_n(lanes_n);
             self.lane_slots_used += lanes_n as u64;
-            self.lane_slots_total += LANES as u64;
+            self.lane_slots_total += Self::LANES as u64;
             for lane in 0..lanes_n {
                 let p = start + lane;
                 let (b, q) = (p / ppi, p % ppi);
@@ -1219,14 +1266,15 @@ impl ComputeEngine for SopSlicedEngine {
                     nb,
                     &mut self.raw_window,
                     &mut self.lane_windows,
+                    Self::LANES,
                     lane,
                 );
-                lane_scale[lane] = act_scale;
-                lane_dequant[lane] = act_scale as f64 * st.w_scale as f64;
+                self.lane_scale[lane] = act_scale;
+                self.lane_dequant[lane] = act_scale as f64 * st.w_scale as f64;
             }
             for i in 0..win {
                 transpose_lanes(
-                    &self.lane_windows[i * LANES..i * LANES + lanes_n],
+                    &self.lane_windows[i * Self::LANES..i * Self::LANES + lanes_n],
                     frac as u32,
                     &mut self.planes[i * frac..(i + 1) * frac],
                 );
@@ -1234,7 +1282,7 @@ impl ComputeEngine for SopSlicedEngine {
             for (f, pipe) in st.pipes.iter_mut().enumerate() {
                 for lane in 0..lanes_n {
                     self.lane_biases[lane] = Fixed::quantize(
-                        (bias[f] / (lane_scale[lane] * st.w_scale)) as f64 * 0.999,
+                        (bias[f] / (self.lane_scale[lane] * st.w_scale)) as f64 * 0.999,
                         nb,
                     );
                 }
@@ -1256,7 +1304,7 @@ impl ComputeEngine for SopSlicedEngine {
                 let base = p * m;
                 for (f, res) in self.results.iter().enumerate() {
                     let r = res.lane(lane);
-                    record_sop(ctr, &mut self.scratch[base + f], &r, lane_dequant[lane]);
+                    record_sop(ctr, &mut self.scratch[base + f], &r, self.lane_dequant[lane]);
                 }
             }
             start += lanes_n;
@@ -1450,8 +1498,9 @@ mod tests {
     }
 
     /// The bit-sliced engine is bit-identical to the scalar SOP engine
-    /// on one level: same output bits, same `EndCounters` — including a
-    /// ragged lane tail (49 pixels) and a full group (64 pixels).
+    /// on one level at every plane width: same output bits, same
+    /// `EndCounters` — including a ragged lane tail (49 pixels) and a
+    /// full W=1 group (64 pixels).
     #[test]
     fn sliced_engine_bit_identical_to_scalar() {
         for (dim, n_bits) in [(9usize, 8u32), (10, 8), (9, 12)] {
@@ -1461,16 +1510,19 @@ mod tests {
             let weights = random_tensor(vec![3, 3, 2, 3], &mut rng, 0.3);
             let bias = vec![0.03, -0.07, 0.01];
             let mut scal = SopEngine::new(n_bits);
-            let mut sliced = SopSlicedEngine::new(n_bits);
             let a = scal.run_level(0, &sp, &input, &weights, &bias).unwrap();
-            let b = sliced.run_level(0, &sp, &input, &weights, &bias).unwrap();
-            assert_eq!(a.shape, b.shape);
-            assert_eq!(a.data, b.data, "dim {dim} n_bits {n_bits}");
-            assert_eq!(
-                scal.take_end_counters(),
-                sliced.take_end_counters(),
-                "dim {dim} n_bits {n_bits}"
-            );
+            let ctr = scal.take_end_counters();
+            for width in LaneWidth::ALL {
+                let mut sliced = EngineKind::SopSliced { n_bits, width }.build();
+                let b = sliced.run_level(0, &sp, &input, &weights, &bias).unwrap();
+                assert_eq!(a.shape, b.shape);
+                assert_eq!(a.data, b.data, "dim {dim} n_bits {n_bits} {width}");
+                assert_eq!(
+                    ctr,
+                    sliced.take_end_counters(),
+                    "dim {dim} n_bits {n_bits} {width}"
+                );
+            }
         }
     }
 
@@ -1489,7 +1541,11 @@ mod tests {
             for kind in [
                 EngineKind::F32,
                 EngineKind::Sop { n_bits: 8 },
-                EngineKind::SopSliced { n_bits: 8 },
+                EngineKind::sliced(8),
+                EngineKind::SopSliced {
+                    n_bits: 8,
+                    width: LaneWidth::W4,
+                },
             ] {
                 let mut full_e = kind.build();
                 let full = full_e
@@ -1576,7 +1632,11 @@ mod tests {
         for kind in [
             EngineKind::F32,
             EngineKind::Sop { n_bits: 8 },
-            EngineKind::SopSliced { n_bits: 8 },
+            EngineKind::sliced(8),
+            EngineKind::SopSliced {
+                n_bits: 8,
+                width: LaneWidth::W2,
+            },
         ] {
             let mut solo_out = Vec::new();
             let mut solo_ctr = Vec::new();
@@ -1621,11 +1681,51 @@ mod tests {
                 // Batched work never leaks into the solo counters.
                 assert!(batched.take_end_counters().iter().all(|c| c.sops == 0));
             }
-            if matches!(kind, EngineKind::SopSliced { .. }) {
-                // 3 images × 6×6 fresh conv pixels = 108 lanes over
-                // ⌈108/64⌉ = 2 groups of 64 offered slots.
-                assert_eq!(batched.take_lane_slots(), (108, 128));
+            if let Some(lanes) = kind.lanes() {
+                // 3 images × 6×6 fresh conv pixels = 108 lanes, offered
+                // ⌈108 / lanes⌉ groups of `lanes` slots each: (108, 128)
+                // at W=1 but (108, 128) at W=2 too — same total, one
+                // group — which is exactly the satellite regression:
+                // totals must come from the engine width, not 64.
+                let want_total = (108usize).div_ceil(lanes) * lanes;
+                assert_eq!(
+                    batched.take_lane_slots(),
+                    (108, want_total as u64),
+                    "{} lanes {lanes}",
+                    kind.label()
+                );
             }
+        }
+    }
+
+    /// Lane-occupancy accounting derives from the engine-reported
+    /// width: the same 49-pixel level offers one 64-slot group at W=1
+    /// but one 128-slot group at W=2 — totals of `width.lanes()` per
+    /// group, never a literal 64.
+    #[test]
+    fn lane_occupancy_uses_engine_width() {
+        let mut rng = Rng::new(51);
+        let sp = spec(3, 1, 2, 3, None);
+        let input = random_tensor(vec![9, 9, 2], &mut rng, 1.0).relu();
+        let weights = random_tensor(vec![3, 3, 2, 3], &mut rng, 0.3);
+        let bias = vec![0.03, -0.07, 0.01];
+        for width in LaneWidth::ALL {
+            let kind = EngineKind::SopSliced { n_bits: 8, width };
+            let mut e = kind.build();
+            assert_eq!(e.lanes(), width.lanes());
+            assert_eq!(kind.lanes(), Some(width.lanes()));
+            e.run_level(0, &sp, &input, &weights, &bias).unwrap();
+            // 7×7 = 49 conv pixels → ⌈49 / lanes⌉ groups offered.
+            let want_total = (49usize.div_ceil(width.lanes()) * width.lanes()) as u64;
+            assert_eq!(e.take_lane_slots(), (49, want_total), "{width}");
+        }
+        // Scalar engines report no lane slots and unit width.
+        for kind in [EngineKind::F32, EngineKind::Sop { n_bits: 8 }] {
+            let mut e = kind.build();
+            assert_eq!(e.lanes(), 1);
+            assert_eq!(kind.lanes(), None);
+            e.run_level(0, &sp, &input, &weights, &bias).unwrap();
+            assert_eq!(e.take_lane_slots(), (0, 0), "{}", kind.label());
         }
     }
 

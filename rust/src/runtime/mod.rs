@@ -15,8 +15,8 @@ pub mod tensor;
 
 pub use client::{batched_suffix, HostFn, Program, Runtime, StackedRun};
 pub use engine::{
-    BatchSlot, ComputeEngine, EndCounters, EngineKind, F32Engine, OutRegion, SopEngine,
-    SopSlicedEngine,
+    BatchSlot, ComputeEngine, EndCounters, EngineKind, F32Engine, LaneWidth, OutRegion,
+    SopEngine, SopSlicedEngine,
 };
 pub use manifest::{BlobMeta, DType, GeometryMeta, Manifest, ProgramMeta, TensorMeta};
 pub use tensor::Tensor;

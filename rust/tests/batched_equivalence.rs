@@ -9,21 +9,34 @@
 //!   END counters and reuse attribution checked against fresh solo
 //!   pipelines;
 //! - adversarial ragged tails at the engine level: per-image output
-//!   regions of 1, 63, 64 and 65 pixels, so the 64-wide lane groups
-//!   straddle image boundaries at every masking edge;
+//!   regions of 1, 63/64/65, 127/128/129 and 255/256/257 pixels at
+//!   every plane width W ∈ {1, 2, 4, 8}, so the `64·W`-wide lane
+//!   groups straddle image boundaries at every masking edge of every
+//!   width — including cross-image backfill inside one W=4 group;
 //! - serial vs parallel batched executor parity (`run_batch` vs
 //!   `run_batch_parallel`), including per-image counter equality with
 //!   the corresponding solo schedules.
+//!
+//! `USEFUSE_LANES` (64/128/256/512) overrides the width the
+//! fixed-width tests run at, for the CI non-default-width matrix leg.
 
 use usefuse::coordinator::{FusionExecutor, NativePipeline};
 use usefuse::geometry::FusedConvSpec;
 use usefuse::nets;
-use usefuse::runtime::engine::{BatchSlot, ComputeEngine, EndCounters, EngineKind, OutRegion};
+use usefuse::runtime::engine::{
+    BatchSlot, ComputeEngine, EndCounters, EngineKind, LaneWidth, OutRegion,
+};
 use usefuse::runtime::Tensor;
 use usefuse::util::rng::Rng;
 
 const BATCHES: [usize; 5] = [1, 2, 3, 5, 8];
 const MAX_BATCH: usize = 8;
+
+/// The plane width the fixed-width batched tests run at: W=1 unless CI
+/// overrides it via `USEFUSE_LANES`.
+fn ci_width() -> LaneWidth {
+    LaneWidth::from_env().unwrap_or_default()
+}
 
 /// Random non-negative activation tile (post-ReLU statistics).
 fn random_tile(shape: Vec<usize>, seed: u64) -> Tensor {
@@ -124,14 +137,37 @@ fn zoo_batched_matches_solo_sop() {
 
 #[test]
 fn zoo_batched_matches_solo_sop_sliced() {
-    check_zoo_batched(EngineKind::SopSliced { n_bits: 8 });
+    check_zoo_batched(EngineKind::SopSliced {
+        n_bits: 8,
+        width: ci_width(),
+    });
+}
+
+/// The zoo batched matrix again at the two wider plane widths — the
+/// full acceptance sweep of cross-request packing into 128- and
+/// 256-lane groups (cheaper per group, so the whole matrix stays
+/// CI-sized; the W=8 boundary is covered by the ragged test below).
+#[test]
+fn zoo_batched_matches_solo_sop_sliced_wide() {
+    check_zoo_batched(EngineKind::SopSliced {
+        n_bits: 8,
+        width: LaneWidth::W2,
+    });
+    check_zoo_batched(EngineKind::SopSliced {
+        n_bits: 8,
+        width: LaneWidth::W4,
+    });
 }
 
 /// Adversarial ragged tails at the engine level: per-image regions of
-/// 1, 63, 64 and 65 output pixels, batch 3, all three engines. With
-/// 64-wide groups over the flat image-major pixel order, every one of
-/// these straddles image boundaries somewhere — the exact masking /
-/// backfill edges of cross-image packing.
+/// 1, 63/64/65, 127/128/129 and 255/256/257 output pixels, batch 3,
+/// the scalar engines plus the sliced engine at **all four** widths.
+/// With `64·W`-wide groups over the flat image-major pixel order,
+/// every one of these straddles image boundaries somewhere — the exact
+/// masking / backfill edges of cross-image packing. The 65- and
+/// 129-pixel images make a W=4 (and W=8) group swallow several whole
+/// images plus a partial one, pinning cross-image backfill *inside*
+/// one wide group.
 #[test]
 fn ragged_batched_tails_are_bit_identical() {
     let spec = FusedConvSpec {
@@ -144,7 +180,19 @@ fn ragged_batched_tails_are_bit_identical() {
         m_out: 3,
         ifm: 16,
     };
-    for &(out_h, out_w) in &[(1usize, 1usize), (7, 9), (8, 8), (5, 13)] {
+    let dims: &[(usize, usize)] = &[
+        (1, 1),
+        (7, 9),
+        (8, 8),
+        (5, 13),
+        (1, 127),
+        (8, 16),
+        (3, 43),
+        (5, 51),
+        (16, 16),
+        (1, 257),
+    ];
+    for &(out_h, out_w) in dims {
         let h = (out_h - 1) * spec.s + spec.k;
         let w = (out_w - 1) * spec.s + spec.k;
         let inputs: Vec<Tensor> = (0..3)
@@ -163,9 +211,13 @@ fn ragged_batched_tails_are_bit_identical() {
         for kind in [
             EngineKind::F32,
             EngineKind::Sop { n_bits: 8 },
-            EngineKind::SopSliced { n_bits: 8 },
+            EngineKind::sliced(8),
+            EngineKind::SopSliced { n_bits: 8, width: LaneWidth::W2 },
+            EngineKind::SopSliced { n_bits: 8, width: LaneWidth::W4 },
+            EngineKind::SopSliced { n_bits: 8, width: LaneWidth::W8 },
         ] {
-            let tag = format!("ragged {out_h}×{out_w} ({})", kind.label());
+            let lanes = kind.lanes();
+            let tag = format!("ragged {out_h}×{out_w} ({}, lanes {lanes:?})", kind.label());
             // Solo baselines with a fresh engine per image.
             let mut solo_outs = Vec::new();
             let mut solo_ctrs = Vec::new();
@@ -206,6 +258,17 @@ fn ragged_batched_tails_are_bit_identical() {
                 eng.take_end_counters().iter().all(|c| c.sops == 0),
                 "{tag}: batched work leaked into the solo counters"
             );
+            // Width-derived occupancy: 3 images of out_h×out_w pixels
+            // pack into ⌈pixels / lanes⌉ offered groups.
+            if let Some(lanes) = lanes {
+                let pixels = 3 * out_h * out_w;
+                let want_total = (pixels.div_ceil(lanes) * lanes) as u64;
+                assert_eq!(
+                    eng.take_lane_slots(),
+                    (pixels as u64, want_total),
+                    "{tag}: lane-slot accounting"
+                );
+            }
         }
     }
 }
@@ -218,7 +281,10 @@ fn ragged_batched_tails_are_bit_identical() {
 #[test]
 fn serial_and_parallel_batched_executors_agree() {
     let specs = nets::lenet5().paper_fusion()[0].clone();
-    let kind = EngineKind::SopSliced { n_bits: 8 };
+    let kind = EngineKind::SopSliced {
+        n_bits: 8,
+        width: ci_width(),
+    };
     let build = || {
         let (weights, biases) = nets::random_weights(&specs, 41);
         FusionExecutor::native("lenet", &specs, 1, weights, biases, kind)
@@ -305,7 +371,10 @@ fn degenerate_batches_are_clean() {
         1,
         weights,
         biases,
-        EngineKind::SopSliced { n_bits: 8 },
+        EngineKind::SopSliced {
+            n_bits: 8,
+            width: ci_width(),
+        },
     )
     .expect("plan");
     let (outs, stats, ctrs) = exec.run_batch(&[]).expect("empty batch");
@@ -321,7 +390,10 @@ fn degenerate_batches_are_clean() {
             1,
             weights,
             biases,
-            EngineKind::SopSliced { n_bits: 8 },
+            EngineKind::SopSliced {
+                n_bits: 8,
+                width: ci_width(),
+            },
         )
         .expect("plan");
         e.run(&img).expect("solo").0

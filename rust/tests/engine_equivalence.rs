@@ -1,16 +1,21 @@
-//! **Cross-engine differential harness**: the bit-sliced 64-lane SOP
-//! engine must be *bit-identical* — outputs and per-level
+//! **Cross-engine differential harness**: the bit-sliced `64·W`-lane
+//! SOP engine must be *bit-identical* — outputs and per-level
 //! [`EndCounters`] alike, not approximately equal — to the scalar
-//! digit-serial `SopEngine` it parallelizes. This is the acceptance
-//! gate of the sliced datapath:
+//! digit-serial `SopEngine` it parallelizes, at **every** plane width
+//! W ∈ {1, 2, 4, 8}. This is the acceptance gate of the sliced
+//! datapath:
 //!
 //! - randomized fused tiles over the conv levels of all four zoo
-//!   miniatures at n_bits ∈ {8, 12, 16};
-//! - ragged lane tails of 1, 63, 64 and 65 output pixels (the masking
-//!   boundary cases of the 64-wide grouping);
+//!   miniatures at n_bits ∈ {8, 12, 16}, at widths W ∈ {1, 2, 4};
+//! - ragged lane tails straddling every group boundary of every width
+//!   (1/63/64/65, 127/128/129 and 255/256/257 output pixels);
 //! - whole fused pyramids (serial and parallel movement execution);
 //! - whole networks end-to-end through `NativePipeline` (chained
 //!   pyramids, shortcuts, classifier head).
+//!
+//! The `USEFUSE_LANES` env var (64/128/256/512) overrides the width the
+//! fixed-width tests run at, so CI can re-run the whole harness at a
+//! non-default width without a recompile.
 //!
 //! It is also the acceptance gate of the §3.4 **inter-tile reuse**
 //! path: for random feasible stacks and all three engines, reuse-on
@@ -23,8 +28,8 @@ use usefuse::coordinator::{FusionExecutor, NativePipeline};
 use usefuse::geometry::{FusedConvSpec, PoolSpec, PyramidPlan, StridePolicy};
 use usefuse::nets;
 use usefuse::prop_assert;
-use usefuse::runtime::engine::{ComputeEngine, EndCounters, EngineKind};
-use usefuse::runtime::{SopEngine, SopSlicedEngine, Tensor};
+use usefuse::runtime::engine::{ComputeEngine, EndCounters, EngineKind, LaneWidth};
+use usefuse::runtime::{SopEngine, Tensor};
 use usefuse::util::prop::prop_check;
 use usefuse::util::rng::Rng;
 
@@ -52,24 +57,41 @@ fn random_params(spec: &FusedConvSpec, seed: u64) -> (Tensor, Vec<f32>) {
     (w, b)
 }
 
-/// Run one level through both engines and require bit equality of the
-/// output tensor and the drained `EndCounters`.
-fn assert_level_equivalent(spec: &FusedConvSpec, input: &Tensor, n_bits: u32, tag: &str) {
+/// The plane width the fixed-width differential tests run at: the
+/// default W=1 unless CI overrides it via `USEFUSE_LANES` (the width
+/// axis of the matrix leg).
+fn ci_width() -> LaneWidth {
+    LaneWidth::from_env().unwrap_or_default()
+}
+
+/// Run one level through the scalar engine and the sliced engine at
+/// each of `widths`, requiring bit equality of the output tensor and
+/// the drained `EndCounters` at every width.
+fn assert_level_equivalent_at(
+    spec: &FusedConvSpec,
+    input: &Tensor,
+    n_bits: u32,
+    widths: &[LaneWidth],
+    tag: &str,
+) {
     let (weights, bias) = random_params(spec, n_bits as u64 ^ 0xC0DE);
     let mut scalar = SopEngine::new(n_bits);
-    let mut sliced = SopSlicedEngine::new(n_bits);
     let a = scalar
         .run_level(0, spec, input, &weights, &bias)
         .unwrap_or_else(|e| panic!("{tag}: scalar engine failed: {e}"));
-    let b = sliced
-        .run_level(0, spec, input, &weights, &bias)
-        .unwrap_or_else(|e| panic!("{tag}: sliced engine failed: {e}"));
-    assert_eq!(a.shape, b.shape, "{tag}: shape");
-    assert_eq!(a.data, b.data, "{tag}: outputs not bit-identical");
-    let (ca, cb) = (scalar.take_end_counters(), sliced.take_end_counters());
-    assert_eq!(ca, cb, "{tag}: EndCounters differ");
+    let ca = scalar.take_end_counters();
     assert_eq!(ca.len(), 1, "{tag}: one level, one counter");
     assert!(ca[0].sops > 0, "{tag}: no SOPs executed");
+    for &width in widths {
+        let mut sliced = EngineKind::SopSliced { n_bits, width }.build();
+        let b = sliced
+            .run_level(0, spec, input, &weights, &bias)
+            .unwrap_or_else(|e| panic!("{tag} {width}: sliced engine failed: {e}"));
+        assert_eq!(a.shape, b.shape, "{tag} {width}: shape");
+        assert_eq!(a.data, b.data, "{tag} {width}: outputs not bit-identical");
+        let cb = sliced.take_end_counters();
+        assert_eq!(ca, cb, "{tag} {width}: EndCounters differ");
+    }
 }
 
 /// A tile input sized so the conv output of `spec` has exactly
@@ -80,9 +102,13 @@ fn tile_for(spec: &FusedConvSpec, out_h: usize, out_w: usize, seed: u64) -> Tens
     random_tile(vec![h, w, spec.n_in], seed)
 }
 
-/// Ragged lane tails: pixel counts of 1 (single lane), 63 (one short
-/// group), 64 (exactly one full group) and 65 (full group + 1-lane
-/// tail), each at n ∈ {8, 12, 16}.
+/// Ragged lane tails straddling every group boundary of every width:
+/// pixel counts of 1 (single lane), 63/64/65 (the W=1 boundary),
+/// 127/128/129 (the W=2 boundary) and 255/256/257 (the W=4 boundary),
+/// each run at **all four** widths so each count exercises a full
+/// group on one width and a masked tail on the others. n ∈ {8, 12, 16}
+/// only on the W=1 boundary to keep the matrix CI-sized; the wider
+/// boundaries run at n = 8.
 #[test]
 fn ragged_lane_tails_are_bit_identical() {
     let spec = FusedConvSpec {
@@ -95,13 +121,28 @@ fn ragged_lane_tails_are_bit_identical() {
         m_out: 3,
         ifm: 8,
     };
-    for &(out_h, out_w) in &[(1usize, 1usize), (7, 9), (8, 8), (5, 13)] {
-        for n_bits in [8u32, 12, 16] {
-            let input = tile_for(&spec, out_h, out_w, (out_h * 100 + out_w) as u64);
-            assert_level_equivalent(
+    // (out_h, out_w, pixel count): 1, 63, 64, 65, 127, 128, 129, 255,
+    // 256, 257 output pixels.
+    let dims: &[(usize, usize, &[u32])] = &[
+        (1, 1, &[8, 12, 16]),
+        (7, 9, &[8, 12, 16]),
+        (8, 8, &[8, 12, 16]),
+        (5, 13, &[8, 12, 16]),
+        (1, 127, &[8]),
+        (8, 16, &[8]),
+        (3, 43, &[8]),
+        (5, 51, &[8]),
+        (16, 16, &[8]),
+        (1, 257, &[8]),
+    ];
+    for &(out_h, out_w, n_bits_list) in dims {
+        for &n_bits in n_bits_list {
+            let input = tile_for(&spec, out_h, out_w, (out_h * 1000 + out_w) as u64);
+            assert_level_equivalent_at(
                 &spec,
                 &input,
                 n_bits,
+                &LaneWidth::ALL,
                 &format!("ragged {out_h}×{out_w} n={n_bits}"),
             );
         }
@@ -109,12 +150,14 @@ fn ragged_lane_tails_are_bit_identical() {
 }
 
 /// Randomized fused tiles over every *distinct* conv shape
-/// (K, S, N, M) of all four zoo miniatures, at n_bits ∈ {8, 12, 16}.
-/// Tiles are kept small (a handful of pixels) so the matrix stays
-/// CI-sized in debug mode — the full-map runs below cover the
-/// many-group regime, the ragged test above the masking boundaries.
+/// (K, S, N, M) of all four zoo miniatures, at n_bits ∈ {8, 12, 16}
+/// and widths W ∈ {1, 2, 4}. Tiles are kept small (a handful of
+/// pixels) so the matrix stays CI-sized in debug mode — the full-map
+/// runs below cover the many-group regime, the ragged test above the
+/// masking boundaries (including W=8 groups).
 #[test]
 fn zoo_miniature_levels_are_bit_identical() {
+    let widths = [LaneWidth::W1, LaneWidth::W2, LaneWidth::W4];
     for name in ["lenet5", "alexnet", "vgg16", "resnet18"] {
         let net = nets::tiny(name).expect("tiny preset");
         let mut seen: Vec<(usize, usize, usize, usize)> = Vec::new();
@@ -128,10 +171,11 @@ fn zoo_miniature_levels_are_bit_identical() {
             spec.pool = None; // pooling is engine-independent; keep levels lean
             let input = tile_for(&spec, 2, 3, (li as u64) << 3);
             for n_bits in [8u32, 12, 16] {
-                assert_level_equivalent(
+                assert_level_equivalent_at(
                     &spec,
                     &input,
                     n_bits,
+                    &widths,
                     &format!("{name} conv{li} n={n_bits}"),
                 );
             }
@@ -151,7 +195,10 @@ fn lenet_pyramid_bit_identical_serial_and_parallel() {
             .expect("uniform LeNet plan")
     };
     let scalar = build(EngineKind::Sop { n_bits: 8 });
-    let sliced = build(EngineKind::SopSliced { n_bits: 8 });
+    let sliced = build(EngineKind::SopSliced {
+        n_bits: 8,
+        width: ci_width(),
+    });
 
     let (a, _) = scalar.run(&input).expect("scalar run");
     let (b, _) = sliced.run(&input).expect("sliced run");
@@ -182,8 +229,11 @@ fn zoo_pipelines_are_bit_identical_end_to_end() {
         let net = nets::tiny(name).expect("tiny preset");
         let scalar = NativePipeline::synthetic(&net, EngineKind::Sop { n_bits: 8 }, 0x51)
             .expect("scalar pipeline");
-        let sliced = NativePipeline::synthetic(&net, EngineKind::SopSliced { n_bits: 8 }, 0x51)
-            .expect("sliced pipeline");
+        let kind = EngineKind::SopSliced {
+            n_bits: 8,
+            width: ci_width(),
+        };
+        let sliced = NativePipeline::synthetic(&net, kind, 0x51).expect("sliced pipeline");
         let img = nets::random_input(&net.convs[0], 0x1A);
         let a = scalar.infer(&img).expect("scalar infer");
         let b = sliced.infer(&img).expect("sliced infer");
@@ -255,7 +305,10 @@ fn reuse_equivalence_on_random_stacks() {
         for kind in [
             EngineKind::F32,
             EngineKind::Sop { n_bits: 8 },
-            EngineKind::SopSliced { n_bits: 8 },
+            EngineKind::SopSliced {
+                n_bits: 8,
+                width: ci_width(),
+            },
         ] {
             let build = |reuse: bool| {
                 let (weights, biases) = nets::random_weights(&specs, seed);
@@ -374,7 +427,10 @@ fn sliced_engine_tracks_f32_reference() {
         1,
         weights,
         biases,
-        EngineKind::SopSliced { n_bits: 12 },
+        EngineKind::SopSliced {
+            n_bits: 12,
+            width: ci_width(),
+        },
     )
     .expect("plan");
     let rel = exec.verify(&input).expect("verify");

@@ -444,7 +444,7 @@ fn router_isolates_model_groups() {
 #[test]
 fn native_pool_forms_real_batches_with_exact_results() {
     const REQS: usize = 8;
-    let kind = EngineKind::SopSliced { n_bits: 8 };
+    let kind = EngineKind::sliced(8);
     let (_pipeline, pool) = native_pool(kind, 1, 64);
     let net = nets::lenet5();
     // Fresh reference pipeline, same seed: the single-shot oracle.
