@@ -1,0 +1,412 @@
+//! **Admission control** for the serving edge: the small state machine
+//! between a network front-end and the [`WorkerPool`].
+//!
+//! The pool's in-process submit paths are either infinitely patient
+//! (`classify_async` parks on the backpressure condvar) or fully typed
+//! but stateless (`try_classify`/`classify_deadline`). A network edge
+//! needs slightly more policy than either:
+//!
+//! - **Load shedding**: a bounded wait for queue space, after which the
+//!   request is rejected with enough context to render
+//!   `503 Service Unavailable` + `Retry-After`.
+//! - **Deadlines**: per-request execution deadlines (client-supplied,
+//!   clamped to a configured maximum) so a queued request that nobody is
+//!   waiting for anymore is reaped instead of executed.
+//! - **Draining**: one switch that atomically stops admitting new work
+//!   while everything already admitted runs to completion — the first
+//!   half of a graceful shutdown. `Accepting → Draining` is one-way.
+//!
+//! The controller tracks admitted-but-unanswered requests with an RAII
+//! [`Ticket`], so [`AdmissionController::wait_idle`] can tell a draining
+//! server when the last in-flight response has actually been delivered
+//! (the pool's own queue depth reaches zero earlier, while responses are
+//! still being written to sockets).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::pool::{Response, ServeError, SubmitError, WorkerPool};
+use crate::runtime::Tensor;
+
+/// Admission policy knobs (see [`AdmissionConfig::default`]).
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// How long a submit may wait for queue space before the request is
+    /// shed. Zero means "shed immediately when full".
+    pub max_wait: Duration,
+    /// Deadline applied when the client does not send one (`None`:
+    /// admitted requests without a deadline never expire in the queue).
+    pub default_deadline: Option<Duration>,
+    /// Upper clamp on client-requested deadlines, so a client cannot
+    /// pin queue slots arbitrarily long past its own patience.
+    pub max_deadline: Duration,
+    /// Hint returned with every shed/draining rejection, for the HTTP
+    /// `Retry-After` header.
+    pub retry_after_secs: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_wait: Duration::from_millis(50),
+            default_deadline: None,
+            max_deadline: Duration::from_secs(30),
+            retry_after_secs: 1,
+        }
+    }
+}
+
+/// Why a request was not admitted. Carries everything the HTTP edge
+/// needs to pick a status code and a `Retry-After` value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The controller is draining: no new work, come back later
+    /// (HTTP 503 + `Retry-After`).
+    Draining {
+        /// Suggested client back-off, seconds.
+        retry_after_secs: u64,
+    },
+    /// The bounded queue stayed full for the whole allowed wait
+    /// (HTTP 503 + `Retry-After`; counted in the pool's `shed_total`).
+    Overloaded {
+        /// The pool's configured queue bound.
+        queue_cap: usize,
+        /// How long the submit waited for space.
+        waited: Duration,
+        /// Suggested client back-off, seconds.
+        retry_after_secs: u64,
+    },
+    /// The named model group is not served here (HTTP 404).
+    UnknownGroup {
+        /// The group the client asked for.
+        group: String,
+        /// The groups actually served.
+        known: Vec<String>,
+    },
+    /// The pool behind the controller is already shut down (HTTP 503).
+    ShutDown,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::Draining { .. } => write!(f, "server is draining"),
+            AdmissionError::Overloaded {
+                queue_cap, waited, ..
+            } => write!(
+                f,
+                "overloaded: queue at capacity {queue_cap} after waiting {waited:?}"
+            ),
+            AdmissionError::UnknownGroup { group, known } => {
+                write!(f, "unknown model group '{group}' (serving: {known:?})")
+            }
+            AdmissionError::ShutDown => write!(f, "pool is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// One admitted request: the response receiver plus the RAII in-flight
+/// accounting. Dropping the ticket (with or without calling
+/// [`Ticket::wait`]) releases its in-flight slot.
+pub struct Ticket {
+    rx: Receiver<Result<Response, ServeError>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl Ticket {
+    /// Block until the pool answers: the response, or the typed serving
+    /// error (deadline expired / execution failure).
+    pub fn wait(self) -> Result<Response, ServeError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(ServeError::Execution("pool dropped request".into())))
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The admission state machine. Cheap to share (`Arc`) between every
+/// connection handler of a front-end.
+pub struct AdmissionController {
+    pool: Arc<WorkerPool>,
+    cfg: AdmissionConfig,
+    draining: AtomicBool,
+    inflight: Arc<AtomicUsize>,
+    admitted_total: AtomicU64,
+    drain_rejected: AtomicU64,
+}
+
+impl AdmissionController {
+    /// Controller over `pool` with the given policy.
+    pub fn new(pool: Arc<WorkerPool>, cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController {
+            pool,
+            cfg,
+            draining: AtomicBool::new(false),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            admitted_total: AtomicU64::new(0),
+            drain_rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The pool this controller admits into.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Admit one request: bounded wait for queue space, deadline
+    /// clamped to [`AdmissionConfig::max_deadline`]. Returns the
+    /// [`Ticket`] to wait on, or the typed rejection.
+    pub fn admit(
+        &self,
+        group: &str,
+        image: Tensor,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, AdmissionError> {
+        if self.draining.load(Ordering::Acquire) {
+            self.drain_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmissionError::Draining {
+                retry_after_secs: self.cfg.retry_after_secs,
+            });
+        }
+        let deadline = deadline
+            .or(self.cfg.default_deadline)
+            .map(|d| Instant::now() + d.min(self.cfg.max_deadline));
+        match self
+            .pool
+            .classify_deadline(group, image, self.cfg.max_wait, deadline)
+        {
+            Ok(rx) => {
+                self.inflight.fetch_add(1, Ordering::AcqRel);
+                self.admitted_total.fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket {
+                    rx,
+                    inflight: Arc::clone(&self.inflight),
+                })
+            }
+            Err(SubmitError::Overloaded { queue_cap, waited }) => {
+                Err(AdmissionError::Overloaded {
+                    queue_cap,
+                    waited,
+                    retry_after_secs: self.cfg.retry_after_secs,
+                })
+            }
+            Err(SubmitError::ShutDown) => Err(AdmissionError::ShutDown),
+            Err(SubmitError::UnknownGroup { group, known }) => {
+                Err(AdmissionError::UnknownGroup { group, known })
+            }
+        }
+    }
+
+    /// Flip `Accepting → Draining` (one-way; idempotent). Returns
+    /// whether this call performed the transition. After this, every
+    /// [`AdmissionController::admit`] is rejected with
+    /// [`AdmissionError::Draining`] while already-admitted work runs to
+    /// completion.
+    pub fn begin_drain(&self) -> bool {
+        !self.draining.swap(true, Ordering::AcqRel)
+    }
+
+    /// Whether the controller is draining.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Admitted requests whose [`Ticket`] is still alive (response not
+    /// yet delivered to the client).
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Total requests admitted since startup.
+    pub fn admitted_total(&self) -> u64 {
+        self.admitted_total.load(Ordering::Relaxed)
+    }
+
+    /// Requests rejected because the controller was draining.
+    pub fn drain_rejected(&self) -> u64 {
+        self.drain_rejected.load(Ordering::Relaxed)
+    }
+
+    /// Block until every admitted request's ticket has been released,
+    /// or `timeout` elapses. Returns whether the controller went idle.
+    /// The second half of a graceful drain: `begin_drain()` stops new
+    /// admissions, `wait_idle()` observes the in-flight count hit zero.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.inflight() > 0 {
+            if t0.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::{ModelGroup, PoolConfig, RuntimeFactory};
+    use crate::runtime::{DType, Manifest, ProgramMeta, Runtime, TensorMeta};
+
+    /// Host factory: `echo` one-hot at `data[0]`; sleeps 300 ms when
+    /// `data[1] > 0` (wedge marker).
+    fn echo_factory() -> RuntimeFactory {
+        Arc::new(|| {
+            let mut rt = Runtime::host(Manifest::empty("."));
+            let meta = ProgramMeta {
+                file: std::path::PathBuf::new(),
+                inputs: vec![TensorMeta {
+                    shape: vec![2, 2, 1],
+                    dtype: DType::F32,
+                }],
+                outputs: vec![TensorMeta {
+                    shape: vec![10],
+                    dtype: DType::F32,
+                }],
+                n_runtime_inputs: 1,
+                weights: vec![],
+            };
+            rt.register_host(
+                "echo_infer",
+                meta,
+                Box::new(|ts, _| {
+                    if ts[0].data[1] > 0.0 {
+                        std::thread::sleep(Duration::from_millis(300));
+                    }
+                    let c = (ts[0].data[0] as usize) % 10;
+                    let mut logits = vec![0.0f32; 10];
+                    logits[c] = 1.0;
+                    Tensor::new(vec![10], logits).map(|t| vec![t])
+                }),
+            );
+            Ok(rt)
+        })
+    }
+
+    fn img(class: usize) -> Tensor {
+        let mut t = Tensor::zeros(vec![2, 2, 1]);
+        t.data[0] = class as f32;
+        t
+    }
+
+    fn slow_img() -> Tensor {
+        let mut t = img(0);
+        t.data[1] = 1.0;
+        t
+    }
+
+    fn controller(queue_cap: usize, cfg: AdmissionConfig) -> AdmissionController {
+        let pool = WorkerPool::start(PoolConfig {
+            workers: 1,
+            max_batch: 1,
+            queue_cap,
+            ..PoolConfig::new(
+                vec![ModelGroup {
+                    name: "echo".into(),
+                    program: "echo_infer".into(),
+                }],
+                echo_factory(),
+            )
+        })
+        .expect("pool");
+        AdmissionController::new(Arc::new(pool), cfg)
+    }
+
+    #[test]
+    fn admits_serves_and_tracks_inflight() {
+        let ctrl = controller(16, AdmissionConfig::default());
+        let ticket = ctrl.admit("echo", img(3), None).expect("admit");
+        assert_eq!(ctrl.inflight(), 1);
+        let resp = ticket.wait().expect("resp");
+        assert_eq!(resp.class, 3);
+        assert_eq!(ctrl.inflight(), 0, "ticket drop must release the slot");
+        assert_eq!(ctrl.admitted_total(), 1);
+        assert!(matches!(
+            ctrl.admit("nope", img(0), None).unwrap_err(),
+            AdmissionError::UnknownGroup { .. }
+        ));
+    }
+
+    #[test]
+    fn draining_rejects_new_work_but_finishes_admitted() {
+        let ctrl = controller(16, AdmissionConfig::default());
+        let ticket = ctrl.admit("echo", slow_img(), None).expect("admit");
+        assert!(ctrl.begin_drain(), "first drain call performs transition");
+        assert!(!ctrl.begin_drain(), "second is a no-op");
+        assert!(ctrl.is_draining());
+        let err = ctrl.admit("echo", img(1), None).unwrap_err();
+        assert!(
+            matches!(err, AdmissionError::Draining { retry_after_secs: 1 }),
+            "{err:?}"
+        );
+        assert_eq!(ctrl.drain_rejected(), 1);
+        // Already-admitted work still completes, and wait_idle sees it.
+        assert_eq!(ticket.wait().expect("resp").class, 0);
+        assert!(ctrl.wait_idle(Duration::from_secs(2)));
+    }
+
+    #[test]
+    fn full_queue_maps_to_overloaded_with_retry_hint() {
+        let cfg = AdmissionConfig {
+            max_wait: Duration::from_millis(10),
+            retry_after_secs: 7,
+            ..AdmissionConfig::default()
+        };
+        let ctrl = controller(1, cfg);
+        // Wedge the worker, fill the queue slot behind it.
+        let wedge = ctrl.admit("echo", slow_img(), None).expect("wedge");
+        while ctrl.pool().metrics().queue_depth > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let fill = ctrl.admit("echo", img(1), None).expect("fill");
+        let err = ctrl.admit("echo", img(2), None).unwrap_err();
+        match err {
+            AdmissionError::Overloaded {
+                queue_cap,
+                retry_after_secs,
+                ..
+            } => {
+                assert_eq!(queue_cap, 1);
+                assert_eq!(retry_after_secs, 7);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(ctrl.pool().metrics().shed_total, 1);
+        assert_eq!(wedge.wait().expect("wedge resp").class, 0);
+        assert_eq!(fill.wait().expect("fill resp").class, 1);
+    }
+
+    #[test]
+    fn client_deadlines_are_clamped() {
+        let cfg = AdmissionConfig {
+            max_deadline: Duration::from_millis(100),
+            ..AdmissionConfig::default()
+        };
+        let ctrl = controller(16, cfg);
+        // Wedge the worker for 300 ms; a request asking for a 10 s
+        // deadline is clamped to 100 ms and reaped.
+        let wedge = ctrl.admit("echo", slow_img(), None).expect("wedge");
+        while ctrl.pool().metrics().queue_depth > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let doomed = ctrl
+            .admit("echo", img(4), Some(Duration::from_secs(10)))
+            .expect("doomed");
+        assert!(matches!(
+            doomed.wait().unwrap_err(),
+            ServeError::DeadlineExpired { .. }
+        ));
+        assert_eq!(ctrl.pool().metrics().deadline_expired_total, 1);
+        assert_eq!(wedge.wait().expect("wedge resp").class, 0);
+    }
+}

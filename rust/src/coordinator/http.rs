@@ -1,0 +1,702 @@
+//! **The network edge**: a dependency-free HTTP/1.1 front-end over the
+//! worker pool, built on `std::net::TcpListener` (the environment is
+//! offline-vendored — no hyper, no tokio, and none needed at this
+//! scale).
+//!
+//! Endpoints:
+//!
+//! - `POST /infer/{net}` — classify one image. Body is either raw
+//!   little-endian `f32` bytes (`Content-Type: application/octet-stream`,
+//!   exactly `H·W·C` values) or a JSON array (arbitrarily nested; it is
+//!   flattened in row-major order). Responds with the logits and
+//!   per-request serving stats. `X-Deadline-Ms: 250` bounds how long the
+//!   request may sit in the queue before it is reaped unexecuted (504).
+//! - `GET /metrics` — Prometheus text exposition by default;
+//!   `?format=json` or `Accept: application/json` selects the JSON
+//!   rendering. Both come from [`MetricsSnapshot`]'s hand-rolled
+//!   serializers and are NaN-clean by construction.
+//! - `GET /healthz` — `200 {"status":"ok"}` while accepting,
+//!   `503 {"status":"draining"}` during a drain.
+//!
+//! Admission outcomes map onto status codes: queue full past the bounded
+//! wait → `503` + `Retry-After` (shed), draining → `503` + `Retry-After`,
+//! expired deadline → `504`, unknown model → `404`, malformed payload →
+//! `400`/`413`, execution failure → `500`. A malformed request never
+//! reaches a worker.
+//!
+//! The server is a classic accept/worker split: one acceptor thread
+//! pushes connections into a bounded channel; a small fixed fleet of
+//! handler threads serves them with HTTP/1.1 keep-alive. Shutdown (see
+//! [`HttpServer::shutdown`]) runs the drain sequence: flip the
+//! admission controller to Draining, stop accepting (the acceptor is
+//! woken by a self-connect), finish in-flight requests, then wait for
+//! the last admitted ticket to be released.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+
+use super::admission::{AdmissionController, AdmissionError};
+use super::pool::ServeError;
+use crate::runtime::Tensor;
+use crate::util::json::{self, arr, num, obj, s, Json};
+
+/// Front-end knobs (see [`HttpConfig::default`]).
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Bind address, e.g. `"127.0.0.1:8080"` (`:0` picks a free port).
+    pub addr: String,
+    /// Connection-handler threads (each serves one connection at a
+    /// time; keep-alive reuses it for the next request).
+    pub handler_threads: usize,
+    /// Largest accepted request body, bytes (larger → `413`).
+    pub max_body: usize,
+    /// Socket read timeout; an idle keep-alive connection is closed
+    /// after this long (also bounds how long shutdown waits on one).
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            handler_threads: 4,
+            max_body: 8 << 20,
+            read_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// What the connection handlers serve: the admission controller (which
+/// owns the pool handle) plus the served group's identity and input
+/// geometry for payload validation.
+#[derive(Clone)]
+pub struct ServeContext {
+    /// Admission state machine over the pool.
+    pub admission: Arc<AdmissionController>,
+    /// Router key `POST /infer/{net}` must match.
+    pub group: String,
+    /// Expected image shape (`[H, W, C]`) — payloads are validated
+    /// against its element count before anything touches the pool.
+    pub input_shape: Vec<usize>,
+}
+
+/// A running HTTP front-end. [`HttpServer::shutdown`] runs the graceful
+/// drain; dropping without it aborts connections without draining.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    handlers: Vec<std::thread::JoinHandle<()>>,
+    ctx: ServeContext,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr` and start serving `ctx`. Returns once the
+    /// listener and every handler thread are up.
+    pub fn start(cfg: HttpConfig, ctx: ServeContext) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let threads = cfg.handler_threads.max(1);
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(threads * 2);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&conn_rx);
+            let ctx = ctx.clone();
+            let cfg = cfg.clone();
+            let stop = Arc::clone(&stop);
+            handlers.push(
+                std::thread::Builder::new()
+                    .name(format!("usefuse-http-{i}"))
+                    .spawn(move || handler_loop(rx, ctx, cfg, stop))
+                    .context("spawning http handler")?,
+            );
+        }
+        let acceptor = {
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("usefuse-http-accept".into())
+                .spawn(move || accept_loop(listener, conn_tx, stop))
+                .context("spawning http acceptor")?
+        };
+        Ok(HttpServer {
+            local_addr,
+            stop,
+            acceptor: Some(acceptor),
+            handlers,
+            ctx,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Graceful drain: stop admitting (everything new gets `503` +
+    /// `Retry-After`), stop accepting connections, let in-flight
+    /// requests finish, and wait up to `timeout` for the last admitted
+    /// ticket to be released. Returns whether the drain went idle in
+    /// time. The pool itself is left running — the caller owns its
+    /// lifecycle (and typically dumps final metrics before shutting it
+    /// down).
+    pub fn shutdown(mut self, timeout: Duration) -> bool {
+        // Order matters: flip admission first so a request that races
+        // the listener teardown is refused rather than half-served.
+        self.ctx.admission.begin_drain();
+        self.stop.store(true, Ordering::Release);
+        // Wake the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // Acceptor exit dropped the channel sender: handlers finish
+        // their current connections and exit.
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+        self.ctx.admission.wait_idle(timeout)
+    }
+}
+
+fn accept_loop(listener: TcpListener, conn_tx: SyncSender<TcpStream>, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            return; // wake-up connection (or racing client) discarded
+        }
+        let Ok(conn) = conn else { continue };
+        if conn_tx.send(conn).is_err() {
+            return;
+        }
+    }
+}
+
+fn handler_loop(
+    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
+    ctx: ServeContext,
+    cfg: HttpConfig,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        // Hold the lock only to take the next connection.
+        let conn = match conn_rx.lock().unwrap().recv() {
+            Ok(c) => c,
+            Err(_) => return, // acceptor gone: no further connections
+        };
+        let _ = handle_connection(conn, &ctx, &cfg, &stop);
+    }
+}
+
+/// One parsed request.
+struct HttpRequest {
+    method: String,
+    /// Path without the query string.
+    path: String,
+    /// Query string (no leading `?`), empty when absent.
+    query: String,
+    /// Header map with lower-cased keys.
+    headers: BTreeMap<String, String>,
+    body: Vec<u8>,
+}
+
+impl HttpRequest {
+    fn header(&self, k: &str) -> Option<&str> {
+        self.headers.get(k).map(|v| v.as_str())
+    }
+
+    fn wants_close(&self) -> bool {
+        self.header("connection")
+            .is_some_and(|c| c.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// A response the handler decided on: status + JSON-or-text body.
+struct HttpResponse {
+    status: u16,
+    content_type: &'static str,
+    body: Vec<u8>,
+    retry_after_secs: Option<u64>,
+    /// Force-close the connection (stream state unknown, e.g. an unread
+    /// oversized body).
+    close: bool,
+}
+
+impl HttpResponse {
+    fn json(status: u16, v: &Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: json::write(v).into_bytes(),
+            retry_after_secs: None,
+            close: false,
+        }
+    }
+
+    fn error(status: u16, msg: impl Into<String>) -> HttpResponse {
+        HttpResponse::json(status, &obj(vec![("error", s(msg))]))
+    }
+
+    fn with_retry_after(mut self, secs: u64) -> HttpResponse {
+        self.retry_after_secs = Some(secs);
+        self
+    }
+
+    fn closing(mut self) -> HttpResponse {
+        self.close = true;
+        self
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Response",
+    }
+}
+
+/// Why reading a request off the wire stopped.
+enum ReadOutcome {
+    Request(HttpRequest),
+    /// Peer closed (or went idle past the read timeout) between
+    /// requests — normal keep-alive end-of-life.
+    Closed,
+    /// Protocol violation; respond with this and close.
+    Malformed(HttpResponse),
+}
+
+const MAX_HEADER_BYTES: usize = 16 << 10;
+
+fn read_request(reader: &mut impl BufRead, max_body: usize) -> ReadOutcome {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => return ReadOutcome::Closed,
+        Ok(_) => {}
+        Err(_) => return ReadOutcome::Closed, // timeout or reset mid-idle
+    }
+    let mut parts = line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return ReadOutcome::Malformed(HttpResponse::error(400, "malformed request line"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return ReadOutcome::Malformed(HttpResponse::error(400, "unsupported HTTP version"));
+    }
+    let method = method.to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let mut headers = BTreeMap::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let mut h = String::new();
+        match reader.read_line(&mut h) {
+            Ok(0) => return ReadOutcome::Closed,
+            Ok(n) => header_bytes += n,
+            Err(_) => return ReadOutcome::Closed,
+        }
+        if header_bytes > MAX_HEADER_BYTES {
+            return ReadOutcome::Malformed(
+                HttpResponse::error(431, "request headers too large").closing(),
+            );
+        }
+        let h = h.trim_end_matches(['\r', '\n']);
+        if h.is_empty() {
+            break;
+        }
+        let Some((k, v)) = h.split_once(':') else {
+            return ReadOutcome::Malformed(HttpResponse::error(400, "malformed header line"));
+        };
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    let content_length = match headers.get("content-length") {
+        None => 0usize,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                return ReadOutcome::Malformed(HttpResponse::error(400, "bad Content-Length"))
+            }
+        },
+    };
+    if content_length > max_body {
+        // The body is unread; the stream state is unknown → close after
+        // responding.
+        return ReadOutcome::Malformed(
+            HttpResponse::error(
+                413,
+                format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
+            )
+            .closing(),
+        );
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        if reader.read_exact(&mut body).is_err() {
+            // Truncated body (peer hung up / timed out mid-send).
+            return ReadOutcome::Malformed(
+                HttpResponse::error(400, "truncated body (fewer bytes than Content-Length)")
+                    .closing(),
+            );
+        }
+    }
+    ReadOutcome::Request(HttpRequest {
+        method,
+        path,
+        query,
+        headers,
+        body,
+    })
+}
+
+fn write_response(stream: &mut TcpStream, resp: &HttpResponse, close: bool) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    if let Some(secs) = resp.retry_after_secs {
+        head.push_str(&format!("retry-after: {secs}\r\n"));
+    }
+    head.push_str(if close {
+        "connection: close\r\n\r\n"
+    } else {
+        "connection: keep-alive\r\n\r\n"
+    });
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    ctx: &ServeContext,
+    cfg: &HttpConfig,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(cfg.read_timeout))?;
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        let req = match read_request(&mut reader, cfg.max_body) {
+            ReadOutcome::Closed => return Ok(()),
+            ReadOutcome::Malformed(resp) => {
+                let _ = write_response(&mut stream, &resp, true);
+                return Ok(());
+            }
+            ReadOutcome::Request(req) => req,
+        };
+        // An `Expect: 100-continue` client already sent the body by the
+        // time we read it above (we never reject before reading), so a
+        // late interim response is harmless but confuses strict
+        // clients; curl sends the body after a short grace anyway.
+        let resp = route(&req, ctx);
+        let close = resp.close || req.wants_close() || stop.load(Ordering::Acquire);
+        write_response(&mut stream, &resp, close)?;
+        if close {
+            return Ok(());
+        }
+    }
+}
+
+fn route(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if ctx.admission.is_draining() {
+                HttpResponse::json(503, &obj(vec![("status", s("draining"))]))
+                    .with_retry_after(1)
+            } else {
+                HttpResponse::json(
+                    200,
+                    &obj(vec![("status", s("ok")), ("group", s(ctx.group.clone()))]),
+                )
+            }
+        }
+        ("GET", "/metrics") => {
+            let snap = ctx.admission.pool().metrics();
+            let wants_json = req.query.split('&').any(|kv| kv == "format=json")
+                || req
+                    .header("accept")
+                    .is_some_and(|a| a.contains("application/json"));
+            if wants_json {
+                HttpResponse {
+                    status: 200,
+                    content_type: "application/json",
+                    body: snap.to_json().into_bytes(),
+                    retry_after_secs: None,
+                    close: false,
+                }
+            } else {
+                HttpResponse {
+                    status: 200,
+                    content_type: "text/plain; version=0.0.4",
+                    body: snap.prometheus().into_bytes(),
+                    retry_after_secs: None,
+                    close: false,
+                }
+            }
+        }
+        ("POST", path) if path.starts_with("/infer/") => infer(req, ctx),
+        (_, path) if path == "/healthz" || path == "/metrics" => {
+            HttpResponse::error(405, format!("{} not allowed on {path}", req.method))
+        }
+        (_, path) if path.starts_with("/infer/") => {
+            HttpResponse::error(405, format!("{} not allowed on {path} (use POST)", req.method))
+        }
+        (_, path) => HttpResponse::error(404, format!("no route for {path}")),
+    }
+}
+
+fn infer(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
+    let net = &req.path["/infer/".len()..];
+    if net != ctx.group {
+        return HttpResponse::error(
+            404,
+            format!("model '{net}' not served here (serving: '{}')", ctx.group),
+        );
+    }
+    let want: usize = ctx.input_shape.iter().product();
+    let data = match decode_payload(req, want) {
+        Ok(d) => d,
+        Err(resp) => return resp,
+    };
+    let image = match Tensor::new(ctx.input_shape.clone(), data) {
+        Ok(t) => t,
+        Err(e) => return HttpResponse::error(400, e.to_string()),
+    };
+    let deadline = match req.header("x-deadline-ms") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) => Some(Duration::from_millis(ms)),
+            Err(_) => {
+                return HttpResponse::error(400, "X-Deadline-Ms must be an integer of milliseconds")
+            }
+        },
+    };
+    let ticket = match ctx.admission.admit(&ctx.group, image, deadline) {
+        Ok(t) => t,
+        Err(e) => {
+            let msg = e.to_string();
+            return match e {
+                AdmissionError::Draining { retry_after_secs }
+                | AdmissionError::Overloaded {
+                    retry_after_secs, ..
+                } => HttpResponse::error(503, msg).with_retry_after(retry_after_secs),
+                AdmissionError::UnknownGroup { .. } => HttpResponse::error(404, msg),
+                AdmissionError::ShutDown => HttpResponse::error(503, msg),
+            };
+        }
+    };
+    match ticket.wait() {
+        Ok(r) => HttpResponse::json(
+            200,
+            &obj(vec![
+                ("class", num(r.class as f64)),
+                (
+                    "logits",
+                    arr(r.logits.iter().map(|&v| num(v as f64)).collect()),
+                ),
+                (
+                    "stats",
+                    obj(vec![
+                        ("group", s(r.group)),
+                        ("batch_size", num(r.batch_size as f64)),
+                        ("worker", num(r.worker as f64)),
+                        ("stacked", Json::Bool(r.stacked)),
+                        ("queue_wait_us", num(r.queue_wait.as_secs_f64() * 1e6)),
+                        ("exec_us", num(r.exec.as_secs_f64() * 1e6)),
+                    ]),
+                ),
+            ]),
+        ),
+        Err(e @ ServeError::DeadlineExpired { .. }) => HttpResponse::error(504, e.to_string()),
+        Err(ServeError::Execution(msg)) => HttpResponse::error(500, msg),
+    }
+}
+
+/// Decode the request body into exactly `want` f32s: JSON array
+/// (arbitrarily nested, flattened row-major) when the content type says
+/// JSON, raw little-endian f32 bytes otherwise.
+fn decode_payload(req: &HttpRequest, want: usize) -> Result<Vec<f32>, HttpResponse> {
+    let is_json = req
+        .header("content-type")
+        .is_some_and(|t| t.contains("application/json"));
+    let data = if is_json {
+        let text = std::str::from_utf8(&req.body)
+            .map_err(|_| HttpResponse::error(400, "JSON body is not valid UTF-8"))?;
+        let parsed = json::parse(text)
+            .map_err(|e| HttpResponse::error(400, format!("invalid JSON body: {e}")))?;
+        let mut out = Vec::with_capacity(want);
+        flatten_numbers(&parsed, &mut out)
+            .map_err(|msg| HttpResponse::error(400, msg))?;
+        out
+    } else {
+        if req.body.len() % 4 != 0 {
+            return Err(HttpResponse::error(
+                400,
+                format!(
+                    "raw body must be little-endian f32s: {} bytes is not a multiple of 4",
+                    req.body.len()
+                ),
+            ));
+        }
+        req.body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    if data.len() != want {
+        return Err(HttpResponse::error(
+            400,
+            format!("payload has {} values, model expects {want}", data.len()),
+        ));
+    }
+    Ok(data)
+}
+
+/// Flatten a JSON value into f32s, row-major; anything but numbers and
+/// (nested) arrays is an error.
+fn flatten_numbers(v: &Json, out: &mut Vec<f32>) -> Result<(), String> {
+    match v {
+        Json::Num(n) => {
+            out.push(*n as f32);
+            Ok(())
+        }
+        Json::Arr(a) => {
+            for x in a {
+                flatten_numbers(x, out)?;
+            }
+            Ok(())
+        }
+        other => Err(format!(
+            "JSON payload must be an array of numbers, found {other:?}"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read(raw: &[u8]) -> ReadOutcome {
+        read_request(&mut std::io::Cursor::new(raw.to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_a_full_request() {
+        let raw = b"POST /infer/lenet5?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 4\r\nX-Deadline-Ms: 250\r\n\r\nabcd";
+        let ReadOutcome::Request(req) = read(raw) else {
+            panic!("expected a request");
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/infer/lenet5");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.header("x-deadline-ms"), Some("250"));
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn malformed_requests_get_4xx_not_a_panic() {
+        // Garbage request line.
+        let ReadOutcome::Malformed(r) = read(b"nonsense\r\n\r\n") else {
+            panic!("expected malformed");
+        };
+        assert_eq!(r.status, 400);
+        // Bad version.
+        let ReadOutcome::Malformed(r) = read(b"GET / SPDY/99\r\n\r\n") else {
+            panic!("expected malformed");
+        };
+        assert_eq!(r.status, 400);
+        // Unparseable Content-Length.
+        let ReadOutcome::Malformed(r) =
+            read(b"POST /x HTTP/1.1\r\nContent-Length: wat\r\n\r\n")
+        else {
+            panic!("expected malformed");
+        };
+        assert_eq!(r.status, 400);
+        // Truncated body.
+        let ReadOutcome::Malformed(r) =
+            read(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
+        else {
+            panic!("expected malformed");
+        };
+        assert_eq!(r.status, 400);
+        assert!(r.close, "unknown stream state must close");
+        // Oversized body is rejected before allocation (max_body 1024).
+        let ReadOutcome::Malformed(r) =
+            read(b"POST /x HTTP/1.1\r\nContent-Length: 99999\r\n\r\n")
+        else {
+            panic!("expected malformed");
+        };
+        assert_eq!(r.status, 413);
+        assert!(r.close);
+        // Clean EOF between requests is not an error.
+        assert!(matches!(read(b""), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn payload_decoding_validates_shape_and_type() {
+        let mk = |body: Vec<u8>, json: bool| HttpRequest {
+            method: "POST".into(),
+            path: "/infer/x".into(),
+            query: String::new(),
+            headers: if json {
+                [("content-type".to_string(), "application/json".to_string())]
+                    .into_iter()
+                    .collect()
+            } else {
+                BTreeMap::new()
+            },
+            body,
+        };
+        // Raw f32 LE round-trip.
+        let vals = [1.5f32, -2.25, 0.0, 3.75];
+        let raw: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(decode_payload(&mk(raw, false), 4).unwrap(), vals);
+        // Nested JSON flattens row-major.
+        let j = mk(b"[[1.5, -2.25], [0, 3.75]]".to_vec(), true);
+        assert_eq!(decode_payload(&j, 4).unwrap(), vals);
+        // Wrong element count.
+        let resp = decode_payload(&mk(b"[1, 2]".to_vec(), true), 4).unwrap_err();
+        assert_eq!(resp.status, 400);
+        // Non-numeric JSON.
+        let resp = decode_payload(&mk(b"[\"a\"]".to_vec(), true), 1).unwrap_err();
+        assert_eq!(resp.status, 400);
+        // Raw bytes not a multiple of 4.
+        let resp = decode_payload(&mk(vec![0u8; 6], false), 4).unwrap_err();
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn responses_carry_status_retry_after_and_length() {
+        let resp = HttpResponse::error(503, "overloaded").with_retry_after(3);
+        // Serialize via write_response onto a pipe-ish buffer: use a
+        // localhost socket pair would be heavy; format the head inline
+        // instead by checking the fields the writer uses.
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.retry_after_secs, Some(3));
+        let body = String::from_utf8(resp.body.clone()).unwrap();
+        assert!(json::parse(&body).is_ok(), "{body}");
+    }
+}

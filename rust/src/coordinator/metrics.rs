@@ -54,6 +54,8 @@ pub struct Metrics {
     total_batches: AtomicU64,
     stacked_batches: AtomicU64,
     error_requests: AtomicU64,
+    shed: AtomicU64,
+    deadline_expired: AtomicU64,
     queue_depth: AtomicUsize,
     queue_peak: AtomicUsize,
     workers: Vec<WorkerStats>,
@@ -72,6 +74,8 @@ impl Metrics {
             total_batches: AtomicU64::new(0),
             stacked_batches: AtomicU64::new(0),
             error_requests: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
             queue_depth: AtomicUsize::new(0),
             queue_peak: AtomicUsize::new(0),
             workers: (0..workers).map(|_| WorkerStats::default()).collect(),
@@ -88,6 +92,18 @@ impl Metrics {
     /// Record `n` requests leaving the queue for a worker.
     pub fn on_dequeue(&self, n: usize) {
         self.queue_depth.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Record a request shed at admission (bounded-wait submit timed out
+    /// with the queue still full — it was never enqueued).
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a queued request reaped because its deadline expired
+    /// before any worker drained it (it was never executed).
+    pub fn on_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one drained batch executed by `worker`.
@@ -160,6 +176,8 @@ impl Metrics {
             total_batches: batches,
             stacked_batches: self.stacked_batches.load(Ordering::Relaxed),
             error_requests: errors,
+            shed_total: self.shed.load(Ordering::Relaxed),
+            deadline_expired_total: self.deadline_expired.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_peak: self.queue_peak.load(Ordering::Relaxed),
             p50_us: percentile(&lat, 50.0),
@@ -218,6 +236,16 @@ pub struct MetricsSnapshot {
     pub stacked_batches: u64,
     /// Requests that received an error instead of a response.
     pub error_requests: u64,
+    /// Requests shed at admission: a bounded-wait submit
+    /// ([`try_classify`](super::pool::WorkerPool::try_classify) /
+    /// [`classify_deadline`](super::pool::WorkerPool::classify_deadline))
+    /// timed out with the queue still at capacity, so the request was
+    /// never enqueued (the HTTP edge answers these with 503).
+    pub shed_total: u64,
+    /// Queued requests reaped because their deadline expired before a
+    /// worker drained them — answered with a typed error, never
+    /// executed (the HTTP edge answers these with 504).
+    pub deadline_expired_total: u64,
     /// Requests currently waiting in the shared queue.
     pub queue_depth: usize,
     /// Highest queue depth observed.
@@ -281,6 +309,208 @@ impl MetricsSnapshot {
     pub fn lane_occupancy(&self) -> f64 {
         crate::util::ratio(self.lane_slots_used, self.lane_slots_total)
     }
+
+    /// Render the snapshot as a JSON document (the `GET /metrics`
+    /// `Accept: application/json` body). Always valid JSON: NaN
+    /// percentiles from an empty latency window — and any other
+    /// non-finite value — serialize as `null` via
+    /// [`json::write`](crate::util::json::write), and an absent lane
+    /// width is `null` too.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{arr, num, obj, Json};
+        let hist: Vec<(String, Json)> = self
+            .batch_hist
+            .iter()
+            .map(|(size, count)| (size.to_string(), num(*count as f64)))
+            .collect();
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|w| {
+                obj(vec![
+                    ("requests", num(w.requests as f64)),
+                    ("batches", num(w.batches as f64)),
+                    ("utilization", num(w.utilization)),
+                ])
+            })
+            .collect();
+        let end_levels: Vec<Json> = self
+            .end_levels
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("sops", num(c.sops as f64)),
+                    ("detection_rate", num(c.detection_rate())),
+                    ("undetermined_rate", num(c.undetermined_rate())),
+                    ("executed_digit_fraction", num(c.executed_digit_fraction())),
+                ])
+            })
+            .collect();
+        let mut top: Vec<(&str, Json)> = vec![
+            ("total_requests", num(self.total_requests as f64)),
+            ("total_batches", num(self.total_batches as f64)),
+            ("stacked_batches", num(self.stacked_batches as f64)),
+            ("error_requests", num(self.error_requests as f64)),
+            ("shed_total", num(self.shed_total as f64)),
+            (
+                "deadline_expired_total",
+                num(self.deadline_expired_total as f64),
+            ),
+            ("queue_depth", num(self.queue_depth as f64)),
+            ("queue_peak", num(self.queue_peak as f64)),
+            ("p50_us", num(self.p50_us)),
+            ("p95_us", num(self.p95_us)),
+            ("p99_us", num(self.p99_us)),
+            ("mean_batch", num(self.mean_batch)),
+            (
+                "batch_hist",
+                Json::Obj(hist.into_iter().collect()),
+            ),
+            ("workers", arr(workers)),
+            ("fresh_pixels", num(self.fresh_pixels as f64)),
+            ("reused_pixels", num(self.reused_pixels as f64)),
+            ("reuse_fraction", num(self.reuse_fraction())),
+            ("lane_slots_used", num(self.lane_slots_used as f64)),
+            ("lane_slots_total", num(self.lane_slots_total as f64)),
+            ("lane_occupancy", num(self.lane_occupancy())),
+            (
+                "lane_width",
+                self.lane_width.map_or(Json::Null, |w| num(w as f64)),
+            ),
+            ("uptime_seconds", num(self.uptime.as_secs_f64())),
+        ];
+        if !end_levels.is_empty() {
+            top.push(("end_levels", arr(end_levels)));
+        }
+        crate::util::json::write(&obj(top))
+    }
+
+    /// Render the snapshot in the Prometheus text exposition format
+    /// (the default `GET /metrics` body): `# HELP` / `# TYPE` headers
+    /// followed by samples. NaN percentiles (empty latency window) are
+    /// **omitted** — Prometheus treats an absent sample as "no data",
+    /// which is exactly what an empty window means, while a literal
+    /// `NaN` sample would poison `avg`/`quantile` queries downstream.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+            let _ = writeln!(out, "# HELP usefuse_{name} {help}");
+            let _ = writeln!(out, "# TYPE usefuse_{name} counter");
+            let _ = writeln!(out, "usefuse_{name} {v}");
+        }
+        let mut out = String::new();
+        counter(
+            &mut out,
+            "requests_total",
+            "Requests successfully served since startup.",
+            self.total_requests,
+        );
+        counter(
+            &mut out,
+            "batches_total",
+            "Batches executed since startup (including error batches).",
+            self.total_batches,
+        );
+        counter(
+            &mut out,
+            "stacked_batches_total",
+            "Batches executed through one stacked program call.",
+            self.stacked_batches,
+        );
+        counter(
+            &mut out,
+            "errors_total",
+            "Requests answered with an execution error.",
+            self.error_requests,
+        );
+        counter(
+            &mut out,
+            "shed_total",
+            "Requests shed at admission (queue full past the bounded wait).",
+            self.shed_total,
+        );
+        counter(
+            &mut out,
+            "deadline_expired_total",
+            "Queued requests reaped unexecuted because their deadline expired.",
+            self.deadline_expired_total,
+        );
+        let _ = writeln!(out, "# HELP usefuse_queue_depth Requests waiting in the shared queue.");
+        let _ = writeln!(out, "# TYPE usefuse_queue_depth gauge");
+        let _ = writeln!(out, "usefuse_queue_depth {}", self.queue_depth);
+        let _ = writeln!(out, "# HELP usefuse_queue_peak Highest queue depth observed.");
+        let _ = writeln!(out, "# TYPE usefuse_queue_peak gauge");
+        let _ = writeln!(out, "usefuse_queue_peak {}", self.queue_peak);
+        let _ = writeln!(
+            out,
+            "# HELP usefuse_latency_us Rolling-window end-to-end latency, microseconds."
+        );
+        let _ = writeln!(out, "# TYPE usefuse_latency_us summary");
+        for (q, v) in [("0.5", self.p50_us), ("0.95", self.p95_us), ("0.99", self.p99_us)] {
+            if v.is_finite() {
+                let _ = writeln!(out, "usefuse_latency_us{{quantile=\"{q}\"}} {v}");
+            }
+        }
+        let _ = writeln!(
+            out,
+            "# HELP usefuse_mean_batch Mean requests per executed batch."
+        );
+        let _ = writeln!(out, "# TYPE usefuse_mean_batch gauge");
+        let _ = writeln!(out, "usefuse_mean_batch {}", self.mean_batch);
+        let _ = writeln!(
+            out,
+            "# HELP usefuse_batches_by_size_total Batches drained at each batch size."
+        );
+        let _ = writeln!(out, "# TYPE usefuse_batches_by_size_total counter");
+        for (size, count) in &self.batch_hist {
+            let _ = writeln!(out, "usefuse_batches_by_size_total{{size=\"{size}\"}} {count}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP usefuse_worker_utilization Fraction of wall time each worker spent executing."
+        );
+        let _ = writeln!(out, "# TYPE usefuse_worker_utilization gauge");
+        for (i, w) in self.workers.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "usefuse_worker_utilization{{worker=\"{i}\"}} {}",
+                w.utilization
+            );
+        }
+        counter(
+            &mut out,
+            "reused_pixels_total",
+            "Output pixels served from the inter-tile reuse buffers.",
+            self.reused_pixels,
+        );
+        counter(
+            &mut out,
+            "fresh_pixels_total",
+            "Output pixels computed fresh by the native engines.",
+            self.fresh_pixels,
+        );
+        counter(
+            &mut out,
+            "lane_slots_used_total",
+            "Sliced-engine lane slots that carried an output pixel.",
+            self.lane_slots_used,
+        );
+        counter(
+            &mut out,
+            "lane_slots_offered_total",
+            "Sliced-engine lane slots offered by every group formed.",
+            self.lane_slots_total,
+        );
+        if let Some(w) = self.lane_width {
+            let _ = writeln!(out, "# HELP usefuse_lane_width Digit-plane lanes per engine step.");
+            let _ = writeln!(out, "# TYPE usefuse_lane_width gauge");
+            let _ = writeln!(out, "usefuse_lane_width {w}");
+        }
+        let _ = writeln!(out, "# HELP usefuse_uptime_seconds Time since the pool started.");
+        let _ = writeln!(out, "# TYPE usefuse_uptime_seconds gauge");
+        let _ = writeln!(out, "usefuse_uptime_seconds {}", self.uptime.as_secs_f64());
+        out
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -312,6 +542,13 @@ impl std::fmt::Display for MetricsSnapshot {
             self.queue_depth,
             self.queue_peak
         )?;
+        if self.shed_total > 0 || self.deadline_expired_total > 0 {
+            writeln!(
+                f,
+                "admission: {} shed at the queue, {} deadline-expired unexecuted",
+                self.shed_total, self.deadline_expired_total
+            )?;
+        }
         write!(f, "batch sizes:")?;
         for (size, count) in &self.batch_hist {
             write!(f, " {size}×{count}")?;
@@ -512,6 +749,114 @@ mod tests {
         assert!(text.contains("lane occupancy: 75.0%"), "{text}");
         assert!(text.contains("lane width: 128 digit-plane lanes"), "{text}");
         assert!(text.contains("96 used / 128 offered"), "{text}");
+    }
+
+    /// Admission counters accumulate and render (in Display only once
+    /// non-zero, so quiet pools keep their familiar output).
+    #[test]
+    fn admission_counters_accumulate() {
+        let m = Metrics::new(1, 16);
+        assert!(!format!("{}", m.snapshot()).contains("admission:"));
+        m.on_shed();
+        m.on_shed();
+        m.on_deadline_expired();
+        let s = m.snapshot();
+        assert_eq!(s.shed_total, 2);
+        assert_eq!(s.deadline_expired_total, 1);
+        let text = format!("{s}");
+        assert!(
+            text.contains("admission: 2 shed at the queue, 1 deadline-expired"),
+            "{text}"
+        );
+    }
+
+    /// The JSON rendering parses back, carries every admission counter,
+    /// and — the serving-edge regression — an **empty latency window's
+    /// NaN percentiles become `null`**, never a bare `NaN` token that
+    /// would make the whole `/metrics` body unparseable.
+    #[test]
+    fn json_rendering_is_nan_free_and_parses() {
+        let m = Metrics::new(2, 16);
+        m.on_shed();
+        m.on_deadline_expired();
+        m.on_batch(0, 3, true, Duration::from_millis(1));
+        let s = m.snapshot();
+        assert!(s.p50_us.is_nan(), "precondition: empty window");
+        let text = s.to_json();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        let parsed = crate::util::json::parse(&text).expect("valid JSON");
+        assert_eq!(parsed.get("p50_us"), Some(&crate::util::json::Json::Null));
+        assert_eq!(
+            parsed.get("shed_total").and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        assert_eq!(
+            parsed
+                .get("deadline_expired_total")
+                .and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        assert_eq!(
+            parsed.get("total_requests").and_then(|v| v.as_usize()),
+            Some(3)
+        );
+        assert_eq!(
+            parsed
+                .get("batch_hist")
+                .and_then(|h| h.get("3"))
+                .and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        assert_eq!(
+            parsed.get("workers").and_then(|w| w.as_arr()).map(|w| w.len()),
+            Some(2)
+        );
+        assert_eq!(parsed.get("lane_width"), Some(&crate::util::json::Json::Null));
+        // A recorded latency turns the percentiles into real numbers.
+        m.on_latency(Duration::from_micros(150));
+        let parsed =
+            crate::util::json::parse(&m.snapshot().to_json()).expect("valid JSON");
+        assert_eq!(parsed.get("p50_us").and_then(|v| v.as_f64()), Some(150.0));
+    }
+
+    /// The Prometheus text rendering is well-formed — every sample line
+    /// matches a preceding `# TYPE`, NaN quantiles are omitted rather
+    /// than emitted — and carries the admission counters.
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let m = Metrics::new(1, 16);
+        m.on_shed();
+        m.on_deadline_expired();
+        m.on_deadline_expired();
+        let s = m.snapshot();
+        let text = s.prometheus();
+        assert!(text.contains("usefuse_shed_total 1"), "{text}");
+        assert!(text.contains("usefuse_deadline_expired_total 2"), "{text}");
+        // Empty window: no latency samples at all, and no NaN anywhere.
+        assert!(!text.contains("quantile"), "{text}");
+        assert!(!text.contains("NaN"), "{text}");
+        // Structural check: every non-comment line is `name[{labels}] value`
+        // with a numeric value, and its metric family has a TYPE header.
+        let mut typed = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                typed.insert(rest.split(' ').next().unwrap().to_string());
+                continue;
+            }
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name_labels, value) = line.rsplit_once(' ').expect("sample line");
+            let family = name_labels.split('{').next().unwrap();
+            assert!(typed.contains(family), "untyped family in: {line}");
+            assert!(value.parse::<f64>().unwrap().is_finite(), "{line}");
+        }
+        m.on_latency(Duration::from_micros(150));
+        let text = m.snapshot().prometheus();
+        assert!(
+            text.contains("usefuse_latency_us{quantile=\"0.5\"} 150"),
+            "{text}"
+        );
     }
 
     #[test]

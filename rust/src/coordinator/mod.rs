@@ -3,10 +3,14 @@
 //! native pipeline, and the multi-worker batched inference serving layer
 //! (pool + router + metrics).
 
+/// Admission control: load shedding, deadlines, graceful drain.
+pub mod admission;
 /// END statistics from real activations (paper §4.3).
 pub mod end_stats;
 /// Tile-by-tile fusion-pyramid execution (serial + parallel).
 pub mod executor;
+/// Hand-rolled HTTP/1.1 front-end over the pool (std TcpListener).
+pub mod http;
 /// Serving metrics: percentiles, queue depth, batch histogram.
 pub mod metrics;
 /// Full-network native inference: chained pyramids + classifier head.
@@ -16,15 +20,17 @@ pub mod pool;
 /// Single-program facade over the worker pool.
 pub mod service;
 
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionError, Ticket};
 pub use end_stats::{
     activity_from_counters, layer_end_stats, EndConfig, FilterEndStats, LayerEndStats,
 };
 pub use executor::{ExecStats, FusionExecutor};
+pub use http::{HttpConfig, HttpServer, ServeContext};
 pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
 pub use pipeline::{Inference, NativePipeline, PipelineParams};
 pub use pool::{
     native_factory, pipeline_end_source, pipeline_lane_source, pipeline_reuse_source,
     EndCounterSource, LaneStatSource, ModelGroup, PoolConfig, ReuseStatSource, RuntimeFactory,
-    WorkerPool, MAX_NATIVE_BATCH,
+    ServeError, SubmitError, WorkerPool, MAX_NATIVE_BATCH,
 };
 pub use service::{InferenceService, Response, ServiceBackend, ServiceConfig};

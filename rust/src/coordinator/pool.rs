@@ -237,6 +237,87 @@ pub fn pipeline_lane_source(pipeline: &Arc<NativePipeline>) -> LaneStatSource {
     Arc::new(move || pipeline.lane_totals())
 }
 
+/// Typed submission failure from the bounded-wait submit paths
+/// ([`WorkerPool::try_classify`] / [`WorkerPool::classify_deadline`]).
+///
+/// The variant the serving edge cares about is [`Overloaded`]: the
+/// bounded queue stayed full for the whole allowed wait, so the caller
+/// should shed the request (HTTP 503 + `Retry-After`) instead of
+/// blocking forever — the unbounded [`WorkerPool::classify_async`]
+/// backpressure block is correct for in-process producers but is a
+/// deadlock-in-waiting when the submitter is a network handler.
+///
+/// [`Overloaded`]: SubmitError::Overloaded
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue was still at capacity after waiting `waited`.
+    Overloaded {
+        /// The pool's configured queue bound.
+        queue_cap: usize,
+        /// How long the submitter waited for space before giving up.
+        waited: Duration,
+    },
+    /// The pool is shut down (or shut down while the submitter waited).
+    ShutDown,
+    /// The named model group is not in this pool's router table.
+    UnknownGroup {
+        /// The group the caller asked for.
+        group: String,
+        /// The groups this pool serves.
+        known: Vec<String>,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { queue_cap, waited } => write!(
+                f,
+                "pool overloaded: queue at capacity {queue_cap} after waiting {waited:?}"
+            ),
+            SubmitError::ShutDown => write!(f, "pool is shut down"),
+            SubmitError::UnknownGroup { group, known } => {
+                write!(f, "unknown model group '{group}' (serving: {known:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Typed per-request failure delivered on the response channel. Implements
+/// `std::error::Error`, so `rx.recv()??` still converts into an
+/// `anyhow::Result` at call sites that don't care which variant it was —
+/// while the HTTP edge can match on it (504 for an expired deadline,
+/// 500 for an execution failure).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline expired while it was still queued; it was
+    /// answered by the draining worker **without ever being executed**
+    /// and counted in
+    /// [`deadline_expired_total`](super::metrics::MetricsSnapshot::deadline_expired_total).
+    DeadlineExpired {
+        /// How long the request had been queued when it was reaped.
+        queued_for: Duration,
+    },
+    /// The batch the request rode in failed to execute.
+    Execution(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExpired { queued_for } => write!(
+                f,
+                "deadline expired after {queued_for:?} in queue (request was never executed)"
+            ),
+            ServeError::Execution(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Classification response with serving metadata.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -263,7 +344,17 @@ struct Request {
     group: usize,
     image: Tensor,
     enqueued: Instant,
-    resp: Sender<Result<Response>>,
+    /// Absolute point after which the request must not be executed; a
+    /// draining worker answers it with [`ServeError::DeadlineExpired`]
+    /// instead of putting it in a batch.
+    deadline: Option<Instant>,
+    resp: Sender<Result<Response, ServeError>>,
+}
+
+impl Request {
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
 }
 
 struct QueueState {
@@ -381,37 +472,107 @@ impl WorkerPool {
 
     /// Submit an image to `group`; blocks until the response is ready.
     pub fn classify(&self, group: &str, image: Tensor) -> Result<Response> {
-        self.classify_async(group, image)?
+        Ok(self
+            .classify_async(group, image)?
             .recv()
-            .map_err(|_| anyhow!("pool dropped request"))?
+            .map_err(|_| anyhow!("pool dropped request"))??)
     }
 
     /// Submit asynchronously; returns a receiver for the response.
-    /// Blocks only while the queue is at capacity (backpressure).
-    pub fn classify_async(&self, group: &str, image: Tensor) -> Result<Receiver<Result<Response>>> {
+    /// Blocks **indefinitely** while the queue is at capacity — the
+    /// in-process backpressure contract. Network handlers should use
+    /// [`WorkerPool::try_classify`] / [`WorkerPool::classify_deadline`]
+    /// instead, which shed instead of blocking.
+    pub fn classify_async(
+        &self,
+        group: &str,
+        image: Tensor,
+    ) -> Result<Receiver<Result<Response, ServeError>>> {
+        Ok(self.enqueue(group, image, None, None)?)
+    }
+
+    /// Non-blocking submit: if the queue is at capacity *right now*,
+    /// returns [`SubmitError::Overloaded`] immediately (counted in
+    /// [`shed_total`](super::metrics::MetricsSnapshot::shed_total))
+    /// instead of parking on the backpressure condvar. This is the
+    /// primitive behind the HTTP 503 load-shedding path.
+    pub fn try_classify(
+        &self,
+        group: &str,
+        image: Tensor,
+    ) -> Result<Receiver<Result<Response, ServeError>>, SubmitError> {
+        self.enqueue(group, image, Some(Duration::ZERO), None)
+    }
+
+    /// Bounded-wait submit with an optional execution deadline: waits up
+    /// to `max_wait` for queue space (then sheds with
+    /// [`SubmitError::Overloaded`]); once queued, a request whose
+    /// `deadline` passes before a worker drains it is answered with
+    /// [`ServeError::DeadlineExpired`] and **never executed** (counted
+    /// in
+    /// [`deadline_expired_total`](super::metrics::MetricsSnapshot::deadline_expired_total)).
+    pub fn classify_deadline(
+        &self,
+        group: &str,
+        image: Tensor,
+        max_wait: Duration,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Response, ServeError>>, SubmitError> {
+        self.enqueue(group, image, Some(max_wait), deadline)
+    }
+
+    /// Shared submit path. `max_wait: None` blocks indefinitely for
+    /// queue space (the legacy backpressure contract); `Some(w)` waits
+    /// at most `w` and sheds with a typed [`SubmitError::Overloaded`].
+    fn enqueue(
+        &self,
+        group: &str,
+        image: Tensor,
+        max_wait: Option<Duration>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Response, ServeError>>, SubmitError> {
         let gid = self
             .shared
             .groups
             .iter()
             .position(|g| g.name == group)
-            .ok_or_else(|| {
-                let known: Vec<&str> = self.shared.groups.iter().map(|g| g.name.as_str()).collect();
-                anyhow!("unknown model group '{group}' (serving: {known:?})")
+            .ok_or_else(|| SubmitError::UnknownGroup {
+                group: group.to_string(),
+                known: self.shared.groups.iter().map(|g| g.name.clone()).collect(),
             })?;
         let (tx, rx) = channel();
+        let full = |s: &mut QueueState| !s.closed && s.q.len() >= self.shared.queue_cap;
         let mut st = self.shared.state.lock().unwrap();
-        st = self
-            .shared
-            .not_full
-            .wait_while(st, |s| !s.closed && s.q.len() >= self.shared.queue_cap)
-            .unwrap();
+        match max_wait {
+            None => {
+                st = self.shared.not_full.wait_while(st, full).unwrap();
+            }
+            Some(wait) => {
+                let t0 = Instant::now();
+                let (guard, timeout) = self
+                    .shared
+                    .not_full
+                    .wait_timeout_while(st, wait, full)
+                    .unwrap();
+                st = guard;
+                if timeout.timed_out() && !st.closed && st.q.len() >= self.shared.queue_cap {
+                    drop(st);
+                    self.shared.metrics.on_shed();
+                    return Err(SubmitError::Overloaded {
+                        queue_cap: self.shared.queue_cap,
+                        waited: t0.elapsed(),
+                    });
+                }
+            }
+        }
         if st.closed {
-            bail!("pool is shut down");
+            return Err(SubmitError::ShutDown);
         }
         st.q.push_back(Request {
             group: gid,
             image,
             enqueued: Instant::now(),
+            deadline,
             resp: tx,
         });
         self.shared.metrics.on_enqueue();
@@ -479,33 +640,71 @@ fn worker_loop(idx: usize, shared: Arc<Shared>, factory: RuntimeFactory, ready: 
     drop(ready);
     loop {
         // Drain one same-group batch under the lock; execute outside it.
+        // Requests whose deadline expired while queued are reaped here —
+        // answered with `ServeError::DeadlineExpired`, never executed.
         let batch = {
             let mut st = shared.state.lock().unwrap();
-            st = shared
-                .not_empty
-                .wait_while(st, |s| s.q.is_empty() && !s.closed)
-                .unwrap();
-            if st.q.is_empty() {
-                return; // closed and fully drained
-            }
-            let first = st.q.pop_front().unwrap();
-            let gid = first.group;
-            let mut batch = vec![first];
-            let mut i = 0;
-            while batch.len() < shared.max_batch && i < st.q.len() {
-                if st.q[i].group == gid {
-                    batch.push(st.q.remove(i).unwrap());
-                } else {
-                    i += 1;
+            let batch = loop {
+                st = shared
+                    .not_empty
+                    .wait_while(st, |s| s.q.is_empty() && !s.closed)
+                    .unwrap();
+                if st.q.is_empty() {
+                    return; // closed and fully drained
                 }
-            }
-            shared.metrics.on_dequeue(batch.len());
+                let mut reaped = false;
+                let mut first = None;
+                while let Some(req) = st.q.pop_front() {
+                    if req.expired() {
+                        expire_request(&shared, req);
+                        reaped = true;
+                    } else {
+                        first = Some(req);
+                        break;
+                    }
+                }
+                let Some(first) = first else {
+                    // Everything queued had expired; reaping freed space.
+                    shared.not_full.notify_all();
+                    continue;
+                };
+                let gid = first.group;
+                let mut batch = vec![first];
+                let mut i = 0;
+                while batch.len() < shared.max_batch && i < st.q.len() {
+                    if st.q[i].group == gid {
+                        let req = st.q.remove(i).unwrap();
+                        if req.expired() {
+                            expire_request(&shared, req);
+                            reaped = true;
+                        } else {
+                            batch.push(req);
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                shared.metrics.on_dequeue(batch.len());
+                let _ = reaped;
+                break batch;
+            };
             drop(st);
             shared.not_full.notify_all();
             batch
         };
         execute_batch(idx, &shared, &rt, batch);
     }
+}
+
+/// Answer a queued request whose deadline passed before any worker could
+/// drain it into a batch: it is removed from the queue accounting and
+/// counted, and the submitter receives [`ServeError::DeadlineExpired`]
+/// — the work itself is never executed.
+fn expire_request(shared: &Shared, req: Request) {
+    shared.metrics.on_dequeue(1);
+    shared.metrics.on_deadline_expired();
+    let queued_for = req.enqueued.elapsed();
+    let _ = req.resp.send(Err(ServeError::DeadlineExpired { queued_for }));
 }
 
 fn execute_batch(worker: usize, shared: &Shared, rt: &Runtime, batch: Vec<Request>) {
@@ -561,9 +760,9 @@ fn execute_batch(worker: usize, shared: &Shared, rt: &Runtime, batch: Vec<Reques
         }
         Err(e) => {
             shared.metrics.on_batch_error(worker, bsize, exec);
-            let msg = e.to_string();
+            let msg = format!("{}: {e}", group.program);
             for req in batch {
-                let _ = req.resp.send(Err(anyhow!("{}: {msg}", group.program)));
+                let _ = req.resp.send(Err(ServeError::Execution(msg.clone())));
             }
         }
     }

@@ -31,7 +31,7 @@ use super::pool::{
     artifacts_factory, native_factory, pipeline_end_source, pipeline_lane_source,
     pipeline_reuse_source, ModelGroup, PoolConfig, WorkerPool,
 };
-pub use super::pool::Response;
+pub use super::pool::{Response, ServeError};
 use crate::coordinator::metrics::MetricsSnapshot;
 pub use crate::coordinator::metrics::percentile;
 use crate::nets::Network;
@@ -90,9 +90,11 @@ impl Default for ServiceConfig {
     }
 }
 
-/// Handle to a running inference service.
+/// Handle to a running inference service. The pool is behind an `Arc`
+/// so front-ends (the HTTP edge's connection handlers) can hold cheap
+/// clones of the serving core while the service owns its lifecycle.
 pub struct InferenceService {
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
     group: String,
 }
 
@@ -132,7 +134,10 @@ impl InferenceService {
                     lane_source: None,
                     lane_width: None,
                 })?;
-                Ok(InferenceService { pool, group })
+                Ok(InferenceService {
+                    pool: Arc::new(pool),
+                    group,
+                })
             }
             ServiceBackend::Native { kind, seed } => {
                 let net = crate::nets::by_name(&cfg.program).ok_or_else(|| {
@@ -181,7 +186,10 @@ impl InferenceService {
             lane_source: Some(pipeline_lane_source(&pipeline)),
             lane_width: kind.lanes(),
         })?;
-        Ok(InferenceService { pool, group })
+        Ok(InferenceService {
+            pool: Arc::new(pool),
+            group,
+        })
     }
 
     /// Submit an image; blocks until the response is ready.
@@ -190,8 +198,20 @@ impl InferenceService {
     }
 
     /// Submit asynchronously; returns a receiver for the response.
-    pub fn classify_async(&self, image: Tensor) -> Result<Receiver<Result<Response>>> {
+    pub fn classify_async(&self, image: Tensor) -> Result<Receiver<Result<Response, ServeError>>> {
         self.pool.classify_async(&self.group, image)
+    }
+
+    /// Shared handle to the underlying pool — what a network front-end
+    /// clones into its connection handlers (bounded-wait submits,
+    /// metrics snapshots) while the service keeps ownership semantics.
+    pub fn pool(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.pool)
+    }
+
+    /// Router key this service submits to (the single served group).
+    pub fn group(&self) -> &str {
+        &self.group
     }
 
     /// Serving metrics snapshot (latency percentiles, batch histogram,

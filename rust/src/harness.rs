@@ -150,7 +150,11 @@ impl Bench {
     /// Render every measurement (+ the bench's own scalar `extras`,
     /// e.g. reuse fractions and speedups) as the `BENCH_{group}.json`
     /// document: `{"group", "benches": {name: {median_us, min_us,
-    /// max_us, samples}}, "extra": {key: value}}`.
+    /// max_us, samples}}, "extra": {key: value}}`. Non-finite extras
+    /// (a NaN speedup from a zero-sample run, an infinite ratio) are
+    /// serialized as `null` — the dump must stay valid JSON for the CI
+    /// parser and `usefuse bench --compare` no matter what a bench
+    /// computed.
     pub fn to_json(&self, extras: &[(&str, f64)]) -> String {
         use crate::util::json::{num, obj, s, Json};
         let benches: Vec<(&str, Json)> = self
@@ -270,6 +274,26 @@ mod tests {
                 .and_then(|v| v.as_f64()),
             Some(0.75)
         );
+    }
+
+    /// Regression: a NaN or infinite extra (e.g. a speedup ratio over a
+    /// zero-length window) used to be written verbatim, making the whole
+    /// `BENCH_{group}.json` unparseable and silently breaking the CI
+    /// perf gate. Non-finite extras now serialize as `null`.
+    #[test]
+    fn non_finite_extras_stay_valid_json() {
+        let b = Bench::new("nanextras");
+        let text = b.to_json(&[
+            ("speedup", f64::NAN),
+            ("ratio", f64::INFINITY),
+            ("ok", 2.0),
+        ]);
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        let parsed = crate::util::json::parse(&text).expect("valid JSON");
+        let extra = parsed.get("extra").expect("extra object");
+        assert_eq!(extra.get("speedup"), Some(&crate::util::json::Json::Null));
+        assert_eq!(extra.get("ratio"), Some(&crate::util::json::Json::Null));
+        assert_eq!(extra.get("ok").and_then(|v| v.as_f64()), Some(2.0));
     }
 
     #[test]

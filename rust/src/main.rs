@@ -11,9 +11,16 @@
 //! usefuse bench  --compare            (perf gate vs BENCH_baseline.json)
 //! ```
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
 use anyhow::{anyhow, bail, Result};
 
-use usefuse::coordinator::{layer_end_stats, EndConfig, FusionExecutor, InferenceService, ServiceConfig};
+use usefuse::coordinator::{
+    layer_end_stats, AdmissionConfig, AdmissionController, EndConfig, FusionExecutor, HttpConfig,
+    HttpServer, InferenceService, ServeContext, ServiceConfig,
+};
 use usefuse::geometry::{PyramidPlan, StridePolicy};
 use usefuse::nets;
 use usefuse::report;
@@ -302,6 +309,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "requests", help: "demo requests to push", takes_value: true, default: Some("16") },
         OptSpec { name: "workers", help: "worker threads", takes_value: true, default: Some("2") },
         OptSpec { name: "batch", help: "max dynamic batch", takes_value: true, default: Some("8") },
+        OptSpec { name: "http", help: "serve over HTTP on this address (e.g. 127.0.0.1:8080; native only, Ctrl-C drains)", takes_value: true, default: None },
+        OptSpec { name: "queue-cap", help: "bounded queue capacity (backpressure / shed bound)", takes_value: true, default: Some("256") },
         OptSpec { name: "input-dim", help: "shrink the net to this input size (native only; 0 = full)", takes_value: true, default: Some("0") },
         OptSpec { name: "ch-div", help: "divide channel counts (native only)", takes_value: true, default: Some("1") },
         OptSpec { name: "seed", help: "synthetic weight seed (native only)", takes_value: true, default: Some("42") },
@@ -312,12 +321,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let workers = args.get_usize("workers").map_err(|e| anyhow!(e))?.unwrap();
     let max_batch = args.get_usize("batch").map_err(|e| anyhow!(e))?.unwrap();
     let reuse = parse_reuse(args.get("reuse").unwrap())?;
+    let queue_cap = args.get_usize("queue-cap").map_err(|e| anyhow!(e))?.unwrap();
     let cfg = ServiceConfig {
         workers,
         max_batch,
+        queue_cap: queue_cap.max(1),
         native_reuse: reuse,
         ..Default::default()
     };
+    if args.get("http").is_some() && args.get("native").is_none() {
+        bail!("--http serving requires --native <net> (the artifact backend has no input-shape metadata to validate payloads against)");
+    }
 
     let svc = match args.get("native") {
         Some(name) => {
@@ -356,6 +370,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 if reuse { "on" } else { "off" }
             );
             let svc = InferenceService::start_native(&net, kind, seed, &cfg)?;
+            if let Some(addr) = args.get("http") {
+                // Same shape NativePipeline::infer validates against.
+                let c0 = &net.convs[0];
+                return run_http(svc, addr, vec![c0.ifm, c0.ifm, c0.n_in]);
+            }
             // Seeded demo traffic.
             let mut pending = Vec::with_capacity(requests);
             for i in 0..requests {
@@ -398,11 +417,84 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `usefuse serve --http <addr>`: put the network edge on the already
+/// started native service and run until SIGINT, then execute the
+/// graceful drain sequence — stop admitting (503 + Retry-After), stop
+/// accepting connections, flush the queue, join the workers, and print
+/// the final metrics dump.
+fn run_http(svc: InferenceService, addr: &str, input_shape: Vec<usize>) -> Result<()> {
+    let group = svc.group().to_string();
+    let admission = Arc::new(AdmissionController::new(svc.pool(), AdmissionConfig::default()));
+    let server = HttpServer::start(
+        HttpConfig {
+            addr: addr.to_string(),
+            ..HttpConfig::default()
+        },
+        ServeContext {
+            admission: Arc::clone(&admission),
+            group: group.clone(),
+            input_shape,
+        },
+    )?;
+    println!(
+        "http: listening on {} — POST /infer/{group}, GET /metrics (Prometheus; \
+         ?format=json for JSON), GET /healthz; Ctrl-C drains",
+        server.local_addr()
+    );
+    let sigint = sigint_flag();
+    while !sigint.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("\nhttp: SIGINT — draining (no new admissions, flushing the queue)");
+    let idle = server.shutdown(Duration::from_secs(30));
+    if !idle {
+        eprintln!("http: drain timed out with requests still in flight");
+    }
+    // Final metrics dump, then the service drop joins the workers.
+    println!("{}", svc.metrics());
+    println!(
+        "http: drain complete ({} admitted, {} refused while draining)",
+        admission.admitted_total(),
+        admission.drain_rejected()
+    );
+    Ok(())
+}
+
+/// Process-wide SIGINT latch, installed without any crate: the raw
+/// `signal(2)` C ABI entry point (libc is always linked) flips an
+/// `AtomicBool` the serve loop polls. `signal` is enough here — one
+/// flag, no siginfo, no masking — and keeps the dependency surface at
+/// zero.
+#[cfg(unix)]
+fn sigint_flag() -> &'static AtomicBool {
+    static SIGINT: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_sigint(_sig: i32) {
+        SIGINT.store(true, Ordering::Release);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT_NO: i32 = 2;
+    unsafe {
+        signal(SIGINT_NO, on_sigint as extern "C" fn(i32) as usize);
+    }
+    &SIGINT
+}
+
+/// Non-unix fallback: no handler; the flag never flips and the server
+/// runs until the process is killed.
+#[cfg(not(unix))]
+fn sigint_flag() -> &'static AtomicBool {
+    static SIGINT: AtomicBool = AtomicBool::new(false);
+    &SIGINT
+}
+
 /// `usefuse bench --compare`: the cross-PR perf-trajectory gate. CI
 /// regenerates `rust/BENCH_fused_native.json` and compares it against
-/// the committed `BENCH_baseline.json`; any existing series slower by
-/// more than `--tolerance` percent (or missing) fails with a non-zero
-/// exit.
+/// the committed `BENCH_baseline.json`. Exit codes are distinct so the
+/// gate can't mis-fire: 1 = a series regressed or vanished (a real
+/// perf verdict), 2 = a dump file is missing, 3 = a dump is malformed
+/// (both setup problems, not perf regressions).
 fn cmd_bench(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "compare", help: "run the baseline comparison gate", takes_value: false, default: None },
@@ -419,11 +511,20 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         );
     }
     let tolerance = args.get_f64("tolerance").map_err(|e| anyhow!(e))?.unwrap();
-    report::bench_compare::compare_files(
+    match report::bench_compare::compare_files(
         args.get("baseline").unwrap(),
         args.get("current").unwrap(),
         tolerance,
-    )
+    ) {
+        Ok(()) => Ok(()),
+        // Exit here rather than returning through run(): the generic
+        // error path collapses everything to exit 1, and the whole
+        // point of CompareError is its per-variant exit code.
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(e.exit_code());
+        }
+    }
 }
 
 fn cmd_end(argv: &[String]) -> Result<()> {

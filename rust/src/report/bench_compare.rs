@@ -127,15 +127,118 @@ pub fn compare(baseline: &Json, fresh: &Json, tolerance_pct: f64) -> Result<Comp
     Ok(Comparison { series, bootstrap })
 }
 
+/// Typed failure from the file-level gate driver. The three variants
+/// carry **distinct process exit codes** ([`CompareError::exit_code`])
+/// so CI can tell a real perf regression from a setup problem — the old
+/// driver reported a missing `BENCH_baseline.json` and a malformed one
+/// with the same error and the same exit 1, which let a broken bench
+/// step masquerade as (or mask) a perf failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompareError {
+    /// The gate ran and failed: series regressed past tolerance or
+    /// vanished. Exit code 1 — the only variant that is a perf verdict.
+    GateFailed {
+        /// Names of the regressed/missing series.
+        failures: Vec<String>,
+        /// The tolerance the gate ran with, percent.
+        tolerance_pct: f64,
+    },
+    /// A dump file does not exist. Exit code 2 — the baseline was never
+    /// committed, or the bench step didn't produce its JSON.
+    MissingFile {
+        /// The path that was not found.
+        path: String,
+    },
+    /// A dump exists but is unreadable, unparseable, or structurally
+    /// invalid (no `benches`, bad `median_us`, bad tolerance). Exit
+    /// code 3 — regenerate the dump; this says nothing about perf.
+    Malformed {
+        /// The offending file.
+        path: String,
+        /// What exactly was wrong.
+        reason: String,
+    },
+}
+
+impl CompareError {
+    /// Process exit code for this failure: gate failure 1, missing
+    /// file 2, malformed file 3 (0 is success and never returned here).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            CompareError::GateFailed { .. } => 1,
+            CompareError::MissingFile { .. } => 2,
+            CompareError::Malformed { .. } => 3,
+        }
+    }
+}
+
+impl std::fmt::Display for CompareError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompareError::GateFailed {
+                failures,
+                tolerance_pct,
+            } => write!(
+                f,
+                "perf gate failed (> {tolerance_pct}% regression): {}",
+                failures.join(", ")
+            ),
+            CompareError::MissingFile { path } => write!(
+                f,
+                "bench dump not found: {path} — commit the baseline or run the bench \
+                 step first (this is a setup problem, not a perf regression)"
+            ),
+            CompareError::Malformed { path, reason } => write!(
+                f,
+                "bench dump invalid: {path}: {reason} — regenerate the dump \
+                 (this is a setup problem, not a perf regression)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CompareError {}
+
 /// File-level driver for `usefuse bench --compare`: parse both JSON
-/// files, compare, print one line per series, and error out on any
-/// regression (the CI gate relies on the non-zero exit).
-pub fn compare_files(baseline_path: &str, fresh_path: &str, tolerance_pct: f64) -> Result<()> {
-    let read = |p: &str| -> Result<Json> {
-        let text = std::fs::read_to_string(p).map_err(|e| anyhow!("read {p}: {e}"))?;
-        json::parse(&text).map_err(|e| anyhow!("parse {p}: {e}"))
+/// files, compare, print one line per series, and return a typed
+/// [`CompareError`] on failure (the CI gate relies on its distinct
+/// exit codes: 1 regression, 2 missing dump, 3 malformed dump).
+pub fn compare_files(
+    baseline_path: &str,
+    fresh_path: &str,
+    tolerance_pct: f64,
+) -> Result<(), CompareError> {
+    let read = |p: &str| -> Result<Json, CompareError> {
+        let text = std::fs::read_to_string(p).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                CompareError::MissingFile { path: p.to_string() }
+            } else {
+                CompareError::Malformed {
+                    path: p.to_string(),
+                    reason: format!("read failed: {e}"),
+                }
+            }
+        })?;
+        json::parse(&text).map_err(|e| CompareError::Malformed {
+            path: p.to_string(),
+            reason: e.to_string(),
+        })
     };
-    let cmp = compare(&read(baseline_path)?, &read(fresh_path)?, tolerance_pct)?;
+    let base = read(baseline_path)?;
+    let fresh = read(fresh_path)?;
+    let cmp = compare(&base, &fresh, tolerance_pct).map_err(|e| {
+        // compare() prefixes structural complaints with which dump.
+        let msg = e.to_string();
+        let path = if msg.starts_with("fresh") {
+            fresh_path
+        } else {
+            baseline_path
+        };
+        CompareError::Malformed {
+            path: path.to_string(),
+            reason: msg,
+        }
+    })?;
     if cmp.bootstrap {
         println!("baseline {baseline_path} is a bootstrap snapshot (no gated series yet)");
     }
@@ -150,10 +253,10 @@ pub fn compare_files(baseline_path: &str, fresh_path: &str, tolerance_pct: f64) 
         }
     }
     if !cmp.passed() {
-        bail!(
-            "perf gate failed (> {tolerance_pct}% regression): {}",
-            cmp.failures().join(", ")
-        );
+        return Err(CompareError::GateFailed {
+            failures: cmp.failures().iter().map(|s| s.to_string()).collect(),
+            tolerance_pct,
+        });
     }
     println!("perf gate OK ({} series checked)", cmp.series.len());
     Ok(())
@@ -227,5 +330,78 @@ mod tests {
         )]);
         assert!(compare(&bad_median, &ok, 25.0).is_err());
         assert!(compare(&ok, &ok, -1.0).is_err());
+    }
+
+    /// Scratch file that cleans up after itself so test reruns and
+    /// parallel tests (unique names) don't collide.
+    struct TempDump(std::path::PathBuf);
+
+    impl TempDump {
+        fn write(name: &str, contents: &str) -> Self {
+            let p = std::env::temp_dir().join(format!("usefuse_bc_{}_{name}", std::process::id()));
+            std::fs::write(&p, contents).unwrap();
+            TempDump(p)
+        }
+
+        fn path(&self) -> &str {
+            self.0.to_str().unwrap()
+        }
+    }
+
+    impl Drop for TempDump {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.0);
+        }
+    }
+
+    #[test]
+    fn missing_and_malformed_files_get_distinct_errors_and_exit_codes() {
+        let good = TempDump::write(
+            "good.json",
+            r#"{"group": "g", "benches": {"a": {"median_us": 100.0}}}"#,
+        );
+
+        // Missing baseline: exit 2, message says "not found", not "parse".
+        let gone = format!("{}.does_not_exist", good.path());
+        let err = compare_files(&gone, good.path(), 25.0).unwrap_err();
+        assert_eq!(err.exit_code(), 2, "{err}");
+        assert!(matches!(err, CompareError::MissingFile { ref path } if *path == gone));
+        assert!(err.to_string().contains("not found"), "{err}");
+
+        // Malformed baseline: exit 3, message names the file and the reason.
+        let broken = TempDump::write("broken.json", "{ this is not json");
+        let err = compare_files(broken.path(), good.path(), 25.0).unwrap_err();
+        assert_eq!(err.exit_code(), 3, "{err}");
+        assert!(matches!(err, CompareError::Malformed { ref path, .. } if path == broken.path()));
+        assert!(err.to_string().contains("invalid"), "{err}");
+
+        // Structurally invalid fresh dump is attributed to the fresh path.
+        let headless = TempDump::write("headless.json", r#"{"group": "g"}"#);
+        let err = compare_files(good.path(), headless.path(), 25.0).unwrap_err();
+        assert_eq!(err.exit_code(), 3, "{err}");
+        assert!(
+            matches!(err, CompareError::Malformed { ref path, .. } if path == headless.path()),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn gate_failure_keeps_exit_code_one() {
+        let base = TempDump::write(
+            "gate_base.json",
+            r#"{"benches": {"a": {"median_us": 100.0}}}"#,
+        );
+        let fresh = TempDump::write(
+            "gate_fresh.json",
+            r#"{"benches": {"a": {"median_us": 200.0}}}"#,
+        );
+        let err = compare_files(base.path(), fresh.path(), 25.0).unwrap_err();
+        assert_eq!(err.exit_code(), 1, "{err}");
+        assert!(
+            matches!(err, CompareError::GateFailed { ref failures, .. } if failures == &["a"]),
+            "{err}"
+        );
+        // And the happy path still returns Ok.
+        compare_files(base.path(), base.path(), 25.0).unwrap();
     }
 }

@@ -347,7 +347,10 @@ fn escape_into(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Serialize a JSON value (compact).
+/// Serialize a JSON value (compact). Non-finite numbers (NaN, ±∞ —
+/// e.g. empty-window latency percentiles) are emitted as `null`, since
+/// JSON has no literal for them; everything else round-trips through
+/// [`parse`] unchanged.
 pub fn write(v: &Json) -> String {
     let mut out = String::new();
     write_into(&mut out, v);
@@ -359,7 +362,14 @@ fn write_into(out: &mut String, v: &Json) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 9e15 {
+            // JSON has no NaN/Infinity literals. The metrics path makes
+            // non-finite numbers routine (empty-window percentiles are
+            // NaN by design), and the old behavior wrote them verbatim —
+            // producing documents no parser (ours included) accepts.
+            // Serialize them as `null`: "no value here", round-trippable.
+            if !n.is_finite() {
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 9e15 {
                 let _ = write!(out, "{}", *n as i64);
             } else {
                 let _ = write!(out, "{n}");
@@ -522,6 +532,31 @@ mod tests {
             back.get("benches").unwrap().get("batched").unwrap().get("med_ms").unwrap().as_f64(),
             Some(0.8)
         );
+    }
+
+    /// Regression: NaN and ±∞ used to be written verbatim ("NaN",
+    /// "inf"), which is not JSON — our own parser rejected the
+    /// serializer's output. Non-finite numbers now serialize as `null`
+    /// and the document round-trips.
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(write(&Json::Num(f64::NAN)), "null");
+        assert_eq!(write(&Json::Num(f64::INFINITY)), "null");
+        assert_eq!(write(&Json::Num(f64::NEG_INFINITY)), "null");
+        // Finite values are untouched by the guard.
+        assert_eq!(write(&Json::Num(2.5)), "2.5");
+        assert_eq!(write(&Json::Num(-3.0)), "-3");
+        let doc = obj(vec![
+            ("p50", num(f64::NAN)),
+            ("p95", num(f64::INFINITY)),
+            ("ok", num(1.25)),
+        ]);
+        let text = write(&doc);
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+        let back = parse(&text).expect("serializer output must parse");
+        assert_eq!(back.get("p50"), Some(&Json::Null));
+        assert_eq!(back.get("p95"), Some(&Json::Null));
+        assert_eq!(back.get("ok").unwrap().as_f64(), Some(1.25));
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 use usefuse::coordinator::pipeline::NativePipeline;
 use usefuse::coordinator::pool::{
     native_factory, pipeline_end_source, pipeline_lane_source, pipeline_reuse_source, ModelGroup,
-    PoolConfig, RuntimeFactory, WorkerPool,
+    PoolConfig, RuntimeFactory, ServeError, SubmitError, WorkerPool,
 };
 use usefuse::nets;
 use usefuse::runtime::{DType, EngineKind, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
@@ -131,6 +131,7 @@ fn sixteen_clients_hammer_the_pool() {
             end_source: None,
             reuse_source: None,
             lane_source: None,
+            lane_width: None,
         })
         .expect("pool"),
     );
@@ -180,6 +181,7 @@ fn queued_requests_drain_as_one_stacked_call() {
         end_source: None,
         reuse_source: None,
         lane_source: None,
+        lane_width: None,
     })
     .expect("pool");
 
@@ -250,6 +252,7 @@ fn native_pool(kind: EngineKind, workers: usize, queue_cap: usize) -> (Arc<Nativ
         end_source: Some(pipeline_end_source(&pipeline)),
         reuse_source: Some(pipeline_reuse_source(&pipeline)),
         lane_source: Some(pipeline_lane_source(&pipeline)),
+        lane_width: kind.lanes(),
     })
     .expect("native pool");
     (pipeline, pool)
@@ -358,6 +361,7 @@ fn shutdown_drains_queue_then_rejects_new_requests() {
         end_source: None,
         reuse_source: None,
         lane_source: None,
+        lane_width: None,
     })
     .expect("pool");
 
@@ -407,6 +411,7 @@ fn router_isolates_model_groups() {
             end_source: None,
             reuse_source: None,
             lane_source: None,
+            lane_width: None,
         })
         .expect("pool"),
     );
@@ -501,4 +506,144 @@ fn native_pool_forms_real_batches_with_exact_results() {
         assert_eq!(r.logits, want.logits.data, "tail request {i} lost in shutdown");
     }
     assert!(pool.classify("lenet5", images[0].clone()).is_err());
+}
+
+/// **Satellite regression (ISSUE 8):** with a deliberately wedged worker
+/// and the queue at `queue_cap`, the legacy `classify`/`classify_async`
+/// path parks on the backpressure condvar indefinitely — a deadlock the
+/// moment the submitter is a network handler. The bounded-wait submits
+/// must instead return a typed [`SubmitError::Overloaded`] promptly
+/// (counted in `shed_total`), while everything actually admitted is
+/// still served untouched.
+#[test]
+fn wedged_worker_sheds_bounded_submits_instead_of_hanging() {
+    let pool = WorkerPool::start(PoolConfig {
+        workers: 1,
+        max_batch: 1,
+        queue_cap: 2,
+        latency_window: 256,
+        groups: groups(),
+        factory: toy_factory(),
+        end_source: None,
+        reuse_source: None,
+        lane_source: None,
+        lane_width: None,
+    })
+    .expect("pool");
+
+    // Wedge the single worker on a slow request…
+    let slow_rx = pool.classify_async("toy", slow_img()).expect("slow submit");
+    let t0 = Instant::now();
+    while pool.metrics().queue_depth > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never woke");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // …and fill the queue to its cap behind it.
+    let admitted: Vec<_> = (0..2)
+        .map(|i| pool.classify_async("toy", img(i)).expect("fill"))
+        .collect();
+    assert_eq!(pool.metrics().queue_depth, 2);
+
+    // try_classify: immediate typed rejection, no blocking.
+    let t0 = Instant::now();
+    let err = pool.try_classify("toy", img(5)).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_millis(SLOW_MS / 2),
+        "try_classify blocked on the wedged worker"
+    );
+    match &err {
+        SubmitError::Overloaded { queue_cap, .. } => assert_eq!(*queue_cap, 2),
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    assert!(err.to_string().contains("overloaded"), "{err}");
+
+    // classify_deadline with a short wait: same shed, after ~the wait.
+    let t0 = Instant::now();
+    let err = pool
+        .classify_deadline("toy", img(6), Duration::from_millis(50), None)
+        .unwrap_err();
+    let waited = t0.elapsed();
+    assert!(matches!(err, SubmitError::Overloaded { .. }), "{err:?}");
+    assert!(
+        waited >= Duration::from_millis(45) && waited < Duration::from_millis(SLOW_MS / 2),
+        "bounded wait was not bounded: {waited:?}"
+    );
+    assert_eq!(pool.metrics().shed_total, 2);
+
+    // Unknown groups are a typed error too (no shed counted for them).
+    assert!(matches!(
+        pool.try_classify("nope", img(0)).unwrap_err(),
+        SubmitError::UnknownGroup { .. }
+    ));
+    assert_eq!(pool.metrics().shed_total, 2);
+
+    // Everything admitted before the floods is served, bit-for-bit.
+    let slow = slow_rx.recv().expect("slow recv").expect("slow resp");
+    assert_eq!(slow.class, 0);
+    for (i, rx) in admitted.into_iter().enumerate() {
+        let r = rx.recv().expect("recv").expect("resp");
+        assert_eq!(r.class, i, "admitted request {i} corrupted by the flood");
+    }
+    let snap = pool.metrics();
+    assert_eq!(snap.total_requests, 3);
+    assert_eq!(snap.queue_depth, 0);
+}
+
+/// **Deadline abort:** a queued request whose deadline expires behind a
+/// wedged worker is answered with [`ServeError::DeadlineExpired`] and
+/// never executed — the toy program would have produced logits, so an
+/// `Err` response plus an untouched `total_requests` is proof the work
+/// was reaped, not run. Requests without deadlines behind it still run.
+#[test]
+fn expired_deadline_requests_are_reaped_unexecuted() {
+    let pool = WorkerPool::start(PoolConfig {
+        workers: 1,
+        max_batch: 4,
+        queue_cap: 64,
+        latency_window: 256,
+        groups: groups(),
+        factory: toy_factory(),
+        end_source: None,
+        reuse_source: None,
+        lane_source: None,
+        lane_width: None,
+    })
+    .expect("pool");
+
+    // Wedge the worker (sleeps SLOW_MS), then queue one request whose
+    // deadline expires long before the worker wakes, plus one without.
+    let slow_rx = pool.classify_async("toy", slow_img()).expect("slow submit");
+    let t0 = Instant::now();
+    while pool.metrics().queue_depth > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never woke");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let doomed_rx = pool
+        .classify_deadline(
+            "toy",
+            img(3),
+            Duration::from_millis(100),
+            Some(Instant::now() + Duration::from_millis(100)),
+        )
+        .expect("doomed submit");
+    let healthy_rx = pool.classify_async("toy", img(7)).expect("healthy submit");
+
+    let doomed = doomed_rx.recv().expect("doomed recv").unwrap_err();
+    match doomed {
+        ServeError::DeadlineExpired { queued_for } => {
+            assert!(queued_for >= Duration::from_millis(100), "{queued_for:?}");
+        }
+        other => panic!("expected DeadlineExpired, got {other:?}"),
+    }
+    let healthy = healthy_rx.recv().expect("healthy recv").expect("healthy resp");
+    assert_eq!(healthy.class, 7, "request behind the reaped one corrupted");
+    let slow = slow_rx.recv().expect("slow recv").expect("slow resp");
+    assert_eq!(slow.class, 0);
+
+    let snap = pool.metrics();
+    assert_eq!(snap.deadline_expired_total, 1);
+    // The reaped request is in no other ledger: 2 served, 0 errored.
+    assert_eq!(snap.total_requests, 2);
+    assert_eq!(snap.error_requests, 0);
+    assert_eq!(snap.queue_depth, 0, "reaped request leaked queue depth");
 }
