@@ -11,11 +11,17 @@
 //! reuse-off). A **width series** then sweeps the sliced engine's
 //! digit-plane width over W ∈ {1, 2, 4, 8} (64..512 lanes) on batched
 //! 8-image runs — the lane-pressure regime where wider planes pay —
-//! and prints each width's throughput next to W=1. With `--json` (or
+//! and prints each width's throughput next to W=1. A **tuned-plan
+//! series** then takes the batched path beyond LeNet: tiny ResNet-18
+//! served through the plan the memory-aware tuner selects under a
+//! 96 KB on-chip budget, batched at 1 and 8 images (bit-identity of
+//! the batched sweep vs solo runs is asserted inline; the full matrix
+//! lives in tests/batched_equivalence.rs). With `--json` (or
 //! `USEFUSE_BENCH_JSON=1`) it also writes `BENCH_fused_native.json` —
 //! the machine-readable perf trajectory documented in EXPERIMENTS.md
 //! and gated by `usefuse bench --compare` against BENCH_baseline.json.
-use usefuse::coordinator::FusionExecutor;
+use usefuse::coordinator::{FusionExecutor, NativePipeline, PipelineParams};
+use usefuse::sim::Tuner;
 use usefuse::harness::{black_box, Bench};
 use usefuse::nets;
 use usefuse::runtime::{EndCounters, EngineKind, LaneWidth, Tensor};
@@ -246,6 +252,50 @@ fn main() {
                 );
                 extras.push((format!("width_images_per_sec_w{w}"), ips));
                 extras.push((format!("width_lane_occupancy_w{w}"), stats.lane_occupancy()));
+            }
+        }
+    }
+
+    // Tuned-plan series on a deeper miniature: tiny ResNet-18 through
+    // the plan the memory-aware tuner picks under a 96 KB on-chip
+    // budget (falls back to the canonical plan if nothing fits — the
+    // series still times, the describe line says which ran). The
+    // batched native path is the one the `--budget` serve flag uses,
+    // so this is the trajectory CI's baseline compare pins.
+    {
+        let net = nets::tiny("resnet18").expect("tiny resnet18");
+        let tuner = Tuner::default();
+        let plan = tuner
+            .tune(&net, Some(96.0 * 1024.0))
+            .or_else(|_| tuner.tune(&net, None))
+            .expect("tuned or canonical plan");
+        println!("tuned {} plan: {}", net.name, plan.describe());
+        let pipe = NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, 42))
+            .expect("tuned pipeline");
+        let images: Vec<Tensor> = (0..8)
+            .map(|i| nets::random_input(&net.convs[0], 21 + i as u64))
+            .collect();
+        // Batched-vs-solo bit-identity through the tuned plan, image
+        // for image, before anything is timed.
+        let (batched, _) = pipe.infer_batch(&images).expect("tuned batched infer");
+        let solo = NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, 42))
+            .expect("tuned solo pipeline");
+        for (i, (inf, img)) in batched.iter().zip(&images).enumerate() {
+            let want = solo.infer(img).expect("tuned solo infer");
+            assert_eq!(
+                inf.logits.data, want.logits.data,
+                "image {i}: tuned batched logits drifted from solo"
+            );
+        }
+        for bsz in [1usize, 8] {
+            let batch = &images[..bsz];
+            let m = b.bench(&format!("resnet18_tiny_tuned_b{bsz}"), || {
+                black_box(pipe.infer_batch(batch).expect("tuned batch").0.len())
+            });
+            if let Some(m) = m {
+                let ips = bsz as f64 / m.median.as_secs_f64();
+                println!("  tuned batch {bsz}: {ips:.1} images/sec");
+                extras.push((format!("tuned_images_per_sec_b{bsz}"), ips));
             }
         }
     }

@@ -25,10 +25,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use anyhow::{anyhow, bail, Result};
 
 use super::executor::{ExecStats, FusionExecutor};
-use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
+use crate::geometry::{FusedConvSpec, PyramidPlan};
 use crate::nets::{ClassifierHead, Network};
 use crate::runtime::engine::{conv2d, EndCounters, EngineKind};
 use crate::runtime::Tensor;
+use crate::sim::tuner::{CandidatePlan, StagePlan};
 
 /// Complete parameter set of a full-network pipeline: one `(K, K, N, M)`
 /// filter tensor and `(M,)` bias per conv level, projection-shortcut
@@ -135,47 +136,70 @@ pub struct NativePipeline {
     lane_slots_total: AtomicU64,
 }
 
-/// Pick the output-region size R_Q for a stage: the smallest feasible
-/// movement count with real tiling (α ≥ 2, so assembly and inter-level
-/// masking are exercised without pathological movement counts), falling
-/// back to a single-movement plan when nothing tiles.
-fn choose_r_out(specs: &[FusedConvSpec]) -> Option<usize> {
-    let out_dim = specs.last()?.level_out();
-    let mut best: Option<(usize, usize)> = None; // (alpha, r_out)
-    let mut fallback: Option<usize> = None;
-    for r_out in 1..=out_dim {
-        let Some(plan) = PyramidPlan::build(specs, r_out, StridePolicy::Uniform) else {
-            continue;
-        };
-        let a = plan.alpha();
-        if a >= 2 {
-            if best.is_none_or(|(ba, _)| a < ba) {
-                best = Some((a, r_out));
-            }
-        } else {
-            fallback = Some(r_out);
-        }
-    }
-    best.map(|(_, r)| r).or(fallback)
-}
-
 impl NativePipeline {
-    /// Build a pipeline over `net` with explicit parameters. Validates
-    /// that the stage partition covers the conv stack, that every
-    /// parameter matches its level, and that every stage has a uniform
-    /// pyramid plan (fused, or per-level after the split fallback).
+    /// Build a pipeline over `net` with explicit parameters, on the
+    /// **canonical plan**: the [`Network::pipeline_stages`] partition,
+    /// each stage at its canonical R_Q ([`PyramidPlan::choose_r_out`],
+    /// with the per-level split fallback), one engine everywhere.
     pub fn new(net: &Network, kind: EngineKind, params: PipelineParams) -> Result<NativePipeline> {
+        let stage_plans: Vec<StagePlan> = net
+            .pipeline_stages()
+            .iter()
+            .map(|st| StagePlan {
+                stage: *st,
+                r_out: PyramidPlan::choose_r_out(&net.convs[st.range()]),
+                engine: kind,
+            })
+            .collect();
+        Self::from_stage_plans(net, &stage_plans, params)
+    }
+
+    /// Build a pipeline executing an explicit tuner candidate
+    /// ([`crate::sim::Tuner`]): per-stage partition, R_Q and engine
+    /// from [`CandidatePlan::stages`], with the plan's §3.4 reuse knob
+    /// applied. Tuned plans serve **bit-identical** logits to the
+    /// canonical pipeline — `tests/tuner_equivalence.rs` pins this for
+    /// every plan the enumerator can emit.
+    pub fn with_plan(
+        net: &Network,
+        plan: &CandidatePlan,
+        params: PipelineParams,
+    ) -> Result<NativePipeline> {
+        Ok(Self::from_stage_plans(net, &plan.stages, params)?.with_reuse(plan.reuse))
+    }
+
+    /// Shared constructor: build a pipeline over an explicit stage-plan
+    /// list. Validates that the partition covers the conv stack, that
+    /// every parameter matches its level, and that every stage has a
+    /// uniform pyramid plan (fused at the given R_Q, or per-level after
+    /// the split fallback).
+    fn from_stage_plans(
+        net: &Network,
+        stage_plans: &[StagePlan],
+        params: PipelineParams,
+    ) -> Result<NativePipeline> {
         if net.convs.is_empty() {
             bail!("{}: network has no conv levels", net.name);
         }
-        if let EngineKind::Sop { n_bits } | EngineKind::SopSliced { n_bits, .. } = kind {
-            // The SOP engines assert this range at construction;
-            // catching it here turns a per-request worker panic into a
-            // construction error.
-            if !(2..=24).contains(&n_bits) {
-                bail!("{}: SOP precision n_bits = {n_bits} outside 2..=24", net.name);
+        for sp in stage_plans {
+            if let EngineKind::Sop { n_bits } | EngineKind::SopSliced { n_bits, .. } = sp.engine {
+                // The SOP engines assert this range at construction;
+                // catching it here turns a per-request worker panic
+                // into a construction error.
+                if !(2..=24).contains(&n_bits) {
+                    bail!("{}: SOP precision n_bits = {n_bits} outside 2..=24", net.name);
+                }
             }
         }
+        // The representative engine: widest-lane stage engine, so the
+        // serving pool sizes its lane metrics for the widest stage of a
+        // mixed plan. Uniform plans (incl. everything `new` builds)
+        // report their single engine unchanged.
+        let kind = stage_plans
+            .iter()
+            .map(|sp| sp.engine)
+            .max_by_key(|e| e.lanes().unwrap_or(1))
+            .unwrap_or(EngineKind::F32);
         if params.conv_weights.len() != net.convs.len()
             || params.conv_biases.len() != net.convs.len()
         {
@@ -187,10 +211,10 @@ impl NativePipeline {
                 net.convs.len()
             );
         }
-        let stage_specs = net.pipeline_stages();
         // The partition invariant everything below leans on.
         let mut next = 0;
-        for st in &stage_specs {
+        for sp in stage_plans {
+            let st = &sp.stage;
             if st.first != next || st.len == 0 {
                 bail!("{}: stage partition has a gap at conv {next}", net.name);
             }
@@ -204,19 +228,20 @@ impl NativePipeline {
         let mut b_iter = params.conv_biases.into_iter();
         let mut ds_w = params.ds_weights.into_iter();
         let mut ds_b = params.ds_biases.into_iter();
-        let mut stages = Vec::with_capacity(stage_specs.len());
-        for (si, st) in stage_specs.iter().enumerate() {
+        let mut stages = Vec::with_capacity(stage_plans.len());
+        for (si, sp) in stage_plans.iter().enumerate() {
+            let st = &sp.stage;
             let specs = &net.convs[st.range()];
             let weights: Vec<Tensor> = w_iter.by_ref().take(st.len).collect();
             let biases: Vec<Vec<f32>> = b_iter.by_ref().take(st.len).collect();
-            let execs = if let Some(r_out) = choose_r_out(specs) {
+            let execs = if let Some(r_out) = sp.r_out {
                 vec![FusionExecutor::native(
                     &format!("{}_s{si}", net.name),
                     specs,
                     r_out,
                     weights,
                     biases,
-                    kind,
+                    sp.engine,
                 )?]
             } else {
                 // No fused uniform plan (miniature stages at 1-2 px
@@ -226,16 +251,17 @@ impl NativePipeline {
                 for (li, ((spec, w), b)) in
                     specs.iter().zip(weights).zip(biases).enumerate()
                 {
-                    let r_out = choose_r_out(std::slice::from_ref(spec)).ok_or_else(|| {
-                        anyhow!("{}: no uniform plan even for level {}", net.name, spec.name)
-                    })?;
+                    let r_out = PyramidPlan::choose_r_out(std::slice::from_ref(spec))
+                        .ok_or_else(|| {
+                            anyhow!("{}: no uniform plan even for level {}", net.name, spec.name)
+                        })?;
                     singles.push(FusionExecutor::native(
                         &format!("{}_s{si}l{li}", net.name),
                         std::slice::from_ref(spec),
                         r_out,
                         vec![w],
                         vec![b],
-                        kind,
+                        sp.engine,
                     )?);
                 }
                 singles
@@ -354,7 +380,11 @@ impl NativePipeline {
         &self.net
     }
 
-    /// The engine kind every stage executes with.
+    /// The pipeline's representative engine kind: the engine every
+    /// stage executes with for uniform plans (everything
+    /// [`NativePipeline::new`] builds), or the widest-lane stage engine
+    /// of a mixed tuner plan (what the serving pool sizes lane metrics
+    /// for).
     pub fn kind(&self) -> EngineKind {
         self.kind
     }
@@ -646,6 +676,25 @@ mod tests {
         // Empty batches are a clean no-op.
         let (none, ctrs) = pipe.infer_batch(&[]).expect("empty batch");
         assert!(none.is_empty() && ctrs.is_empty());
+    }
+
+    #[test]
+    fn tuned_plan_pipeline_matches_canonical_logits() {
+        let net = nets::lenet5();
+        let tuner = crate::sim::Tuner::default();
+        // The acceptance-criteria budget point: 64 KB leaves the
+        // canonical scalar plan for a wider one.
+        let plan = tuner.tune(&net, Some(64.0 * 1024.0)).expect("tuned plan");
+        assert!(!plan.canonical, "64 KB should pick a non-canonical plan");
+        let tuned = NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, 21))
+            .expect("tuned pipeline");
+        // Same engine, canonical partition: logits must be bit-equal.
+        let canon = NativePipeline::synthetic(&net, tuned.kind(), 21).expect("canonical");
+        let img = nets::random_input(&net.convs[0], 6);
+        let a = tuned.infer(&img).expect("tuned infer");
+        let b = canon.infer(&img).expect("canonical infer");
+        assert_eq!(a.logits.data, b.logits.data, "tuned plan drifted");
+        assert_eq!(a.class, b.class);
     }
 
     #[test]

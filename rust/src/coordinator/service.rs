@@ -166,9 +166,24 @@ impl InferenceService {
         seed: u64,
         cfg: &ServiceConfig,
     ) -> Result<InferenceService> {
-        let pipeline = Arc::new(
-            NativePipeline::synthetic(net, kind, seed)?.with_reuse(cfg.native_reuse),
-        );
+        let pipeline =
+            NativePipeline::synthetic(net, kind, seed)?.with_reuse(cfg.native_reuse);
+        Self::start_native_pipeline(net, pipeline, cfg)
+    }
+
+    /// Start a native service over an **already-built pipeline** — the
+    /// hook the memory-aware tuner serves through:
+    /// `usefuse serve --native <net> --budget <KB>` builds the tuned
+    /// [`NativePipeline::with_plan`](super::pipeline::NativePipeline::with_plan)
+    /// pipeline and hands it here. The pool's lane metrics follow the
+    /// pipeline's representative engine.
+    pub fn start_native_pipeline(
+        net: &Network,
+        pipeline: NativePipeline,
+        cfg: &ServiceConfig,
+    ) -> Result<InferenceService> {
+        let kind = pipeline.kind();
+        let pipeline = Arc::new(pipeline);
         let group = net.name.to_string();
         let program = format!("{group}_infer");
         let pool = WorkerPool::start(PoolConfig {

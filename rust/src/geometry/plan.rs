@@ -225,6 +225,34 @@ impl PyramidPlan {
         starts
     }
 
+    /// Pick the canonical output-region size R_Q for a fused stack: the
+    /// smallest feasible movement count with real tiling (α ≥ 2, so
+    /// assembly and inter-level masking are exercised without
+    /// pathological movement counts), falling back to a single-movement
+    /// plan when nothing tiles, and `None` when no uniform plan exists
+    /// at any R_Q. This is the heuristic the native pipeline builds its
+    /// default stages with and the baseline the sim tuner's R_Q
+    /// policies ([`crate::sim::tuner::ROutPolicy`]) deviate from.
+    pub fn choose_r_out(specs: &[FusedConvSpec]) -> Option<usize> {
+        let out_dim = specs.last()?.level_out();
+        let mut best: Option<(usize, usize)> = None; // (alpha, r_out)
+        let mut fallback: Option<usize> = None;
+        for r_out in 1..=out_dim {
+            let Some(plan) = PyramidPlan::build(specs, r_out, StridePolicy::Uniform) else {
+                continue;
+            };
+            let a = plan.alpha();
+            if a >= 2 {
+                if best.is_none_or(|(ba, _)| a < ba) {
+                    best = Some((a, r_out));
+                }
+            } else {
+                fallback = Some(r_out);
+            }
+        }
+        best.map(|(_, r)| r).or(fallback)
+    }
+
     /// Fusion depth Q.
     pub fn depth(&self) -> usize {
         self.specs.len()
@@ -628,6 +656,24 @@ mod tests {
             naive.redundancy().fraction(),
             r.fraction()
         );
+    }
+
+    /// The canonical R_Q heuristic: every chosen R_Q yields a feasible
+    /// plan, and the α ≥ 2 preference holds whenever any R_Q tiles.
+    #[test]
+    fn choose_r_out_prefers_small_real_tiling() {
+        let specs = lenet();
+        let r = PyramidPlan::choose_r_out(&specs).expect("lenet has a plan");
+        let p = PyramidPlan::build(&specs, r, StridePolicy::Uniform).expect("chosen R_Q builds");
+        assert!(p.alpha() >= 2, "R_Q {r} gave α {} (no real tiling)", p.alpha());
+        // Minimality among α ≥ 2 choices.
+        for other in 1..=specs.last().unwrap().level_out() {
+            if let Some(q) = PyramidPlan::build(&specs, other, StridePolicy::Uniform) {
+                if q.alpha() >= 2 {
+                    assert!(p.alpha() <= q.alpha(), "R_Q {other} has smaller α");
+                }
+            }
+        }
     }
 
     /// Property: for random feasible fused stacks, the uniform plan covers

@@ -19,13 +19,13 @@ use anyhow::{anyhow, bail, Result};
 
 use usefuse::coordinator::{
     layer_end_stats, AdmissionConfig, AdmissionController, EndConfig, FusionExecutor, HttpConfig,
-    HttpServer, InferenceService, ServeContext, ServiceConfig,
+    HttpServer, InferenceService, NativePipeline, PipelineParams, ServeContext, ServiceConfig,
 };
 use usefuse::geometry::{PyramidPlan, StridePolicy};
 use usefuse::nets;
 use usefuse::report;
 use usefuse::runtime::{EngineKind, LaneWidth, Manifest, Runtime, Tensor};
-use usefuse::sim::{CycleModel, DesignPoint, Pattern, TrafficModel};
+use usefuse::sim::{CycleModel, DesignPoint, Pattern, TrafficModel, Tuner};
 use usefuse::util::cli::{usage, Args, OptSpec};
 
 fn main() {
@@ -67,7 +67,7 @@ fn print_help() {
         "usefuse — USEFUSE fused-layer CNN accelerator reproduction\n\n\
          commands:\n\
          \x20 plan    plan a fusion pyramid (Algorithms 3 + 4)\n\
-         \x20 report  regenerate a paper table/figure (table1..5, fig10..14, zoo, engines, all)\n\
+         \x20 report  regenerate a paper table/figure (table1..5, fig10..14, zoo, engines, tuner, all)\n\
          \x20 verify  run tile-by-tile fusion via PJRT and check vs golden\n\
          \x20 serve   run the batched serving demo (--native <net> needs no artifacts)\n\
          \x20 end     END statistics for a fused group's first conv layer\n\
@@ -161,10 +161,11 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
 
 fn cmd_report(argv: &[String]) -> Result<()> {
     let specs = [
-        OptSpec { name: "what", help: "table1..table5, fig10..fig14, zoo, engines, all", takes_value: true, default: Some("all") },
+        OptSpec { name: "what", help: "table1..table5, fig10..fig14, zoo, engines, tuner, all", takes_value: true, default: Some("all") },
         OptSpec { name: "samples", help: "END samples per filter (figs 12-14)", takes_value: true, default: Some("150") },
         OptSpec { name: "reuse", help: "§3.4 inter-tile reuse for native runs: on or off", takes_value: true, default: Some("on") },
         OptSpec { name: "lanes", help: "sliced-engine digit-plane lanes: 64, 128, 256 or 512", takes_value: true, default: Some("64") },
+        OptSpec { name: "net", help: "network for --what tuner (lenet5/alexnet/vgg16/resnet18)", takes_value: true, default: Some("lenet5") },
     ];
     let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     let what = args.get("what").unwrap().to_string();
@@ -193,6 +194,15 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     if want("zoo") {
         // Artifact-free end-to-end zoo summary (native SOP pipelines).
         println!("{}", report::figures::table_zoo_native(8, 0x200)?.1.render());
+    }
+    if want("tuner") {
+        // Memory-aware fusion auto-tuner budget sweep (the CI
+        // tuner-gate parses this table).
+        let net_name = args.get("net").unwrap();
+        println!(
+            "{}",
+            report::figures::table_tuner(usefuse::DEFAULT_PRECISION, net_name)?.1.render()
+        );
     }
     if want("engines") {
         // Three-way f32 / sop / sop-sliced fused-pyramid throughput at
@@ -311,6 +321,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "batch", help: "max dynamic batch", takes_value: true, default: Some("8") },
         OptSpec { name: "http", help: "serve over HTTP on this address (e.g. 127.0.0.1:8080; native only, Ctrl-C drains)", takes_value: true, default: None },
         OptSpec { name: "queue-cap", help: "bounded queue capacity (backpressure / shed bound)", takes_value: true, default: Some("256") },
+        OptSpec { name: "budget", help: "on-chip memory budget in KB for the fusion auto-tuner (native only; 0 = canonical plan)", takes_value: true, default: Some("0") },
         OptSpec { name: "input-dim", help: "shrink the net to this input size (native only; 0 = full)", takes_value: true, default: Some("0") },
         OptSpec { name: "ch-div", help: "divide channel counts (native only)", takes_value: true, default: Some("1") },
         OptSpec { name: "seed", help: "synthetic weight seed (native only)", takes_value: true, default: Some("42") },
@@ -357,6 +368,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 other => bail!("unknown engine '{other}' (f32, sop or sop-sliced)"),
             };
             let seed = args.get_usize("seed").map_err(|e| anyhow!(e))?.unwrap() as u64;
+            let budget_kb = args.get_f64("budget").map_err(|e| anyhow!(e))?.unwrap();
             println!(
                 "serving {} natively ({} engine{}, {} conv levels, input {}×{}×{}, \
                  §3.4 reuse {}, no artifacts)",
@@ -369,7 +381,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 net.input_ch,
                 if reuse { "on" } else { "off" }
             );
-            let svc = InferenceService::start_native(&net, kind, seed, &cfg)?;
+            let svc = if budget_kb > 0.0 {
+                // Memory-aware auto-tuned plan: the tuner picks the
+                // partition, R_Q, engine and reuse under the budget;
+                // the --engine flag only sets the digit precision.
+                // Served logits are bit-identical to the canonical
+                // plan on the same engine.
+                let n_bits = match kind {
+                    EngineKind::Sop { n_bits } | EngineKind::SopSliced { n_bits, .. } => n_bits,
+                    EngineKind::F32 => usefuse::DEFAULT_PRECISION,
+                };
+                let plan = Tuner::new(n_bits).tune(&net, Some(budget_kb * 1024.0))?;
+                println!("  tuner [{budget_kb} KB]: {}", plan.describe());
+                let pipe =
+                    NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, seed))?;
+                InferenceService::start_native_pipeline(&net, pipe, &cfg)?
+            } else {
+                InferenceService::start_native(&net, kind, seed, &cfg)?
+            };
             if let Some(addr) = args.get("http") {
                 // Same shape NativePipeline::infer validates against.
                 let c0 = &net.convs[0];

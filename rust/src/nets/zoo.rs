@@ -431,6 +431,120 @@ impl Network {
         stages
     }
 
+    /// Alternative full-coverage stage partitions for the memory-aware
+    /// fusion tuner ([`crate::sim::tuner`]). Every partition covers the
+    /// conv stack contiguously and in order; residual blocks stay
+    /// **atomic** (their shortcut wraps a fixed conv range, so every
+    /// partition sees the same residual stages and the same projection
+    /// parameters as [`Network::pipeline_stages`]); non-residual runs
+    /// are regrouped only where adjacent levels chain (output dims and
+    /// channel counts match, like [`Network::fuse_pairs`]), up to three
+    /// levels per group. The canonical partition is always first and
+    /// the finest split (singletons outside residual blocks) always
+    /// present; enumeration is deterministic and capped so the tuner's
+    /// search stays bounded.
+    pub fn candidate_partitions(&self) -> Vec<Vec<StageSpec>> {
+        const MAX_FUSE: usize = 3;
+        const CAP: usize = 12;
+        // Atomic segments: residual blocks as-is, free runs between them.
+        let mut segments: Vec<StageSpec> = Vec::new();
+        let mut i = 0;
+        let mut blocks = self.res_blocks.iter().peekable();
+        while i < self.convs.len() {
+            match blocks.peek() {
+                Some(&&(b, _)) if b == i => {
+                    segments.push(StageSpec { first: i, len: 2, residual: true });
+                    blocks.next();
+                    i += 2;
+                }
+                Some(&&(b, _)) => {
+                    segments.push(StageSpec { first: i, len: b - i, residual: false });
+                    i = b;
+                }
+                None => {
+                    segments.push(StageSpec {
+                        first: i,
+                        len: self.convs.len() - i,
+                        residual: false,
+                    });
+                    i = self.convs.len();
+                }
+            }
+        }
+        let chains = |a: usize| -> bool {
+            self.convs[a].level_out() == self.convs[a + 1].ifm
+                && self.convs[a].m_out == self.convs[a + 1].n_in
+        };
+        // Compositions of one free segment into chainable runs of
+        // 1..=MAX_FUSE levels, longest-first DFS, capped.
+        let compose = |first: usize, len: usize| -> Vec<Vec<StageSpec>> {
+            let mut done: Vec<Vec<StageSpec>> = Vec::new();
+            let mut work: Vec<(usize, Vec<StageSpec>)> = vec![(first, Vec::new())];
+            while let Some((at, cur)) = work.pop() {
+                if done.len() >= CAP {
+                    break;
+                }
+                if at == first + len {
+                    done.push(cur);
+                    continue;
+                }
+                // LIFO stack: pushed shortest-first, so the longest
+                // chainable run is explored first (deepest fusions
+                // surface before the cap truncates).
+                for run in 1..=MAX_FUSE.min(first + len - at) {
+                    if (at..at + run - 1).all(&chains) {
+                        let mut nxt = cur.clone();
+                        nxt.push(StageSpec { first: at, len: run, residual: false });
+                        work.push((at + run, nxt));
+                    }
+                }
+            }
+            done
+        };
+        let per_segment: Vec<Vec<Vec<StageSpec>>> = segments
+            .iter()
+            .map(|seg| {
+                if seg.residual {
+                    vec![vec![*seg]]
+                } else {
+                    compose(seg.first, seg.len)
+                }
+            })
+            .collect();
+        // Cross segments in mixed-radix order until the cap.
+        let mut out: Vec<Vec<StageSpec>> = vec![self.pipeline_stages()];
+        let finest: Vec<StageSpec> = segments
+            .iter()
+            .flat_map(|seg| {
+                if seg.residual {
+                    vec![*seg]
+                } else {
+                    (seg.range())
+                        .map(|c| StageSpec { first: c, len: 1, residual: false })
+                        .collect()
+                }
+            })
+            .collect();
+        if !out.contains(&finest) {
+            out.push(finest);
+        }
+        let total: usize = per_segment.iter().map(|s| s.len()).product();
+        for mut idx in 0..total {
+            if out.len() >= CAP {
+                break;
+            }
+            let mut part = Vec::new();
+            for seg in &per_segment {
+                part.extend(seg[idx % seg.len()].iter().copied());
+                idx /= seg.len();
+            }
+            if !out.contains(&part) {
+                out.push(part);
+            }
+        }
+        out
+    }
+
     /// The 1×1 projection ("downsample") conv of a residual stage whose
     /// identity shortcut cannot type-check (stride ≠ 1 or a channel
     /// change) — standard ResNet shortcut projection. `None` for
@@ -625,6 +739,50 @@ mod tests {
             let blocks: Vec<usize> = net.res_blocks.iter().map(|&(i, _)| i).collect();
             assert_eq!(res, blocks, "{}", net.name);
         }
+    }
+
+    #[test]
+    fn candidate_partitions_cover_and_keep_residual_blocks_atomic() {
+        for net in [lenet5(), alexnet(), vgg16(), resnet18()]
+            .into_iter()
+            .chain(["alexnet", "vgg16", "resnet18"].iter().map(|n| tiny(n).unwrap()))
+        {
+            let parts = net.candidate_partitions();
+            let canonical = net.pipeline_stages();
+            assert_eq!(parts[0], canonical, "{}: canonical not first", net.name);
+            assert!(parts.len() <= 12, "{}: enumeration uncapped", net.name);
+            let res: Vec<StageSpec> = canonical.iter().filter(|s| s.residual).copied().collect();
+            for (pi, part) in parts.iter().enumerate() {
+                // Contiguous exact cover, like pipeline_stages.
+                let mut next = 0;
+                for st in part {
+                    assert_eq!(st.first, next, "{} p{pi}: gap at {st:?}", net.name);
+                    assert!(st.len >= 1 && st.len <= 3);
+                    // Multi-level groups only fuse chainable neighbours.
+                    for a in st.first..st.first + st.len - 1 {
+                        assert_eq!(net.convs[a].level_out(), net.convs[a + 1].ifm);
+                        assert_eq!(net.convs[a].m_out, net.convs[a + 1].n_in);
+                    }
+                    next = st.first + st.len;
+                }
+                assert_eq!(next, net.convs.len(), "{} p{pi}: no cover", net.name);
+                // Residual stages are identical across every partition, so
+                // projection parameters line up for any candidate.
+                let r: Vec<StageSpec> = part.iter().filter(|s| s.residual).copied().collect();
+                assert_eq!(r, res, "{} p{pi}: residual stages drifted", net.name);
+                // Deterministic and duplicate-free.
+                assert!(!parts[..pi].contains(part), "{} p{pi}: duplicate", net.name);
+            }
+            // The finest split is always available to the tuner.
+            assert!(
+                parts.iter().any(|p| p.iter().all(|s| s.residual || s.len == 1)),
+                "{}: no singleton split",
+                net.name
+            );
+        }
+        // LeNet's two chainable convs yield both the fused pair and the split.
+        let parts = lenet5().candidate_partitions();
+        assert!(parts.len() >= 2, "lenet should have ≥ 2 partitions");
     }
 
     #[test]

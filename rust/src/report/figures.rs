@@ -11,6 +11,7 @@ use crate::coordinator::{activity_from_counters, layer_end_stats, EndConfig, Fus
 use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
 use crate::nets::{by_name, random_input, random_weights};
 use crate::runtime::{EndCounters, EngineKind, LaneWidth, Runtime, Tensor};
+use crate::sim::tuner::{best_under, CandidatePlan, Tuner, BUDGET_SWEEP_KB};
 use crate::sim::{
     roofline, CycleModel, DesignPoint, EnergyModel, Pattern, RooflinePoint, TrafficModel,
 };
@@ -619,9 +620,128 @@ pub fn table_zoo_native(n_bits: u32, seed: u64) -> Result<(Vec<ZooNativeRow>, Ta
     Ok((rows, t))
 }
 
+/// One row of the tuner budget sweep ([`table_tuner`]).
+#[derive(Clone, Debug)]
+pub struct TunerRow {
+    /// On-chip budget in KB; `None` = unbudgeted (the canonical
+    /// default `serve --native` runs without `--budget`).
+    pub budget_kb: Option<f64>,
+    /// Winning plan under this budget, if any candidate fits.
+    pub plan: Option<CandidatePlan>,
+    /// Whether the canonical plan itself fits this budget — only these
+    /// rows admit the "tuned ≤ canonical" comparison the CI tuner-gate
+    /// asserts (below it, every feasible plan is a compromise).
+    pub canonical_fits: bool,
+}
+
+/// **Tuner budget sweep** (`usefuse report --what tuner`): the
+/// minimum-modeled-latency plan the memory-aware auto-tuner picks for
+/// `net_name` at each [`BUDGET_SWEEP_KB`] point, plus the unbudgeted
+/// canonical row. The CI `tuner-gate` parses this table and asserts
+/// tuned latency ≤ canonical latency at every budget the canonical plan
+/// fits, and that at least one budget picks a non-canonical plan.
+pub fn table_tuner(n_bits: u32, net_name: &str) -> Result<(Vec<TunerRow>, Table)> {
+    let net = by_name(net_name).ok_or_else(|| anyhow!("{net_name}: not a zoo network"))?;
+    let tuner = Tuner::new(n_bits);
+    let cands = tuner.enumerate(&net);
+    let canon = tuner.canonical(&net)?;
+    let mut rows = Vec::new();
+    for kb in BUDGET_SWEEP_KB {
+        let budget = kb * 1024.0;
+        rows.push(TunerRow {
+            budget_kb: Some(kb),
+            plan: best_under(&cands, budget).cloned(),
+            canonical_fits: canon.fits(budget),
+        });
+    }
+    rows.push(TunerRow {
+        budget_kb: None,
+        plan: Some(canon.clone()),
+        canonical_fits: true,
+    });
+    let mut t = Table::new(format!(
+        "Tuner — {} budget sweep: minimum-modeled-latency plan per on-chip budget \
+         ({} candidates; canonical {} at {:.2} µs, {:.1} KB)",
+        net.name,
+        cands.len(),
+        canon.label,
+        canon.micros,
+        canon.bram_kb(),
+    ))
+    .header(&[
+        "Budget (KB)",
+        "Winner",
+        "Partition",
+        "Engine",
+        "Reuse",
+        "Modeled µs",
+        "On-chip KB",
+        "Canonical",
+        "Canonical fits",
+    ]);
+    for r in &rows {
+        let budget = r.budget_kb.map_or_else(|| "none".into(), |k| format!("{k:.0}"));
+        let fits = if r.canonical_fits { "yes" } else { "no" };
+        match &r.plan {
+            Some(p) => t.row(vec![
+                budget,
+                p.label.clone(),
+                p.partition_label(),
+                p.engine_label(),
+                if p.reuse { "on" } else { "off" }.into(),
+                format!("{:.2}", p.micros),
+                format!("{:.1}", p.bram_kb()),
+                if p.canonical { "yes" } else { "no" }.into(),
+                fits.into(),
+            ]),
+            None => t.row(vec![
+                budget,
+                "(none fits)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                fits.into(),
+            ]),
+        }
+    }
+    Ok((rows, t))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tuner_table_upholds_the_gate_invariants() {
+        let (rows, t) = table_tuner(crate::DEFAULT_PRECISION, "lenet5").expect("tuner table");
+        assert_eq!(rows.len(), BUDGET_SWEEP_KB.len() + 1);
+        let canon_us = rows
+            .last()
+            .and_then(|r| r.plan.as_ref())
+            .expect("canonical row")
+            .micros;
+        let mut non_canonical = false;
+        for r in &rows {
+            let Some(p) = &r.plan else { continue };
+            if r.canonical_fits {
+                assert!(
+                    p.micros <= canon_us + 1e-9,
+                    "budget {:?}: tuned {} µs worse than canonical {canon_us} µs",
+                    r.budget_kb,
+                    p.micros
+                );
+            }
+            if let Some(kb) = r.budget_kb {
+                assert!(p.fits(kb * 1024.0), "winner exceeds its budget");
+            }
+            non_canonical |= !p.canonical;
+        }
+        assert!(non_canonical, "no swept budget picked a non-canonical plan");
+        assert!(t.render().contains("budget sweep"));
+    }
 
     #[test]
     fn fig10_proposed_wins_both_axes() {

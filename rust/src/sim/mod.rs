@@ -14,6 +14,8 @@ pub mod memory;
 pub mod resources;
 /// Roofline-plot points (Fig. 10/11).
 pub mod roofline;
+/// Memory-aware fusion auto-tuner (partitions × R_Q × reuse × engine).
+pub mod tuner;
 
 pub use cycles::CycleModel;
 pub use design::{Arith, DesignPoint, Pattern};
@@ -21,3 +23,4 @@ pub use energy::{EndActivity, EnergyModel};
 pub use memory::{Traffic, TrafficModel};
 pub use resources::{ResourceModel, Resources};
 pub use roofline::RooflinePoint;
+pub use tuner::{CandidatePlan, ROutPolicy, StagePlan, Tuner};

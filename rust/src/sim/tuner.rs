@@ -1,0 +1,791 @@
+//! **Memory-aware fusion auto-tuner** (MAFAT-style; Farley &
+//! Gerstlauer 2021): a bounded search over stage partitions × R_Q × §3.4
+//! reuse × engine per stage that picks the minimum-modeled-latency plan
+//! fitting an on-chip memory budget.
+//!
+//! The search space is deliberately plan-shaped, not engine-shaped:
+//! every candidate is something [`NativePipeline`] can execute
+//! **bit-identically** to the canonical partition (same conv windows at
+//! the same global coordinates, per-window activation scaling — see
+//! DESIGN.md §Tuner), so tuning can never change served logits, only
+//! how much time and memory producing them takes.
+//!
+//! Pricing reuses the crate's existing analytic models rather than
+//! inventing new ones:
+//!
+//! - **latency** — [`CycleModel::level_cost`] (paper Eq. (3) for the
+//!   digit engines, the conventional bit-serial counterpart for f32)
+//!   charged once per *serialized window group*: the engines evaluate
+//!   `ceil(fresh_px · M / lanes)` groups per movement, so §3.4 reuse
+//!   (fewer fresh pixels) and wide lanes ([`LaneWidth`]) both buy
+//!   modeled latency, exactly like they buy measured latency;
+//! - **memory** — the [`ResourceModel`](super::resources::ResourceModel)
+//!   BRAM byte accounting per level (double-buffered input tile +
+//!   filters + the [`PyramidPlan::reuse_buffer_pixels`] stripe when
+//!   reuse is on, + full-precision intermediates for the conventional
+//!   f32 path), plus the engine datapath: `lanes × 2 planes × bytes ×
+//!   max(K²·N)` for the lane-resident window digits. Wide engines are
+//!   fast but memory-hungry; reuse is fast but buys stripe buffers —
+//!   the budget knob arbitrates.
+//!
+//! `tests/tuner_equivalence.rs` pins the contract: every candidate the
+//! enumerator can emit covers the full output, prices under the budget
+//! it claims, and serves bit-identical logits to the canonical plan.
+//!
+//! [`NativePipeline`]: crate::coordinator::NativePipeline
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::cycles::CycleModel;
+use super::design::{Arith, Pattern};
+use crate::geometry::{FusedConvSpec, PyramidPlan, StridePolicy};
+use crate::nets::{Network, StageSpec};
+use crate::runtime::engine::{EngineKind, LaneWidth};
+
+/// Modeled SIMD lanes of the f32 reference engine (8 × f32 = one AVX2
+/// vector): the engines' serialized-group pricing needs *some* width
+/// for f32, and the scalar SOP engine is 1 by construction.
+const F32_MODEL_LANES: u64 = 8;
+
+/// R_Q selection policy, applied stage-uniformly when enumerating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ROutPolicy {
+    /// The pipeline's canonical heuristic
+    /// ([`PyramidPlan::choose_r_out`]): smallest α ≥ 2.
+    Canonical,
+    /// Smallest feasible R_Q: most movements, smallest tiles — the
+    /// low-memory end of the tile-size axis.
+    MinROut,
+    /// Largest feasible R_Q: fewest movements, biggest tiles — the
+    /// low-overhead, high-memory end.
+    MaxROut,
+}
+
+impl ROutPolicy {
+    /// All policies, in enumeration order.
+    pub const ALL: [ROutPolicy; 3] = [ROutPolicy::Canonical, ROutPolicy::MinROut, ROutPolicy::MaxROut];
+
+    /// Short label used in candidate names.
+    pub fn label(self) -> &'static str {
+        match self {
+            ROutPolicy::Canonical => "rq-canon",
+            ROutPolicy::MinROut => "rq-min",
+            ROutPolicy::MaxROut => "rq-max",
+        }
+    }
+
+    /// Resolve R_Q for one fused stage under this policy; `None` when
+    /// no uniform plan exists at any R_Q.
+    pub fn resolve(self, specs: &[FusedConvSpec]) -> Option<usize> {
+        match self {
+            ROutPolicy::Canonical => PyramidPlan::choose_r_out(specs),
+            ROutPolicy::MinROut => {
+                let out = specs.last()?.level_out();
+                (1..=out).find(|&r| PyramidPlan::build(specs, r, StridePolicy::Uniform).is_some())
+            }
+            ROutPolicy::MaxROut => {
+                let out = specs.last()?.level_out();
+                (1..=out)
+                    .rev()
+                    .find(|&r| PyramidPlan::build(specs, r, StridePolicy::Uniform).is_some())
+            }
+        }
+    }
+}
+
+/// One stage of a candidate execution plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StagePlan {
+    /// Conv range + residual flag of the stage.
+    pub stage: StageSpec,
+    /// R_Q of the stage's fused pyramid; `None` = per-level split
+    /// (every conv level runs as its own single-level pyramid at its
+    /// canonical R_Q), mirroring the pipeline's fallback for stages
+    /// with no fused uniform plan.
+    pub r_out: Option<usize>,
+    /// Compute engine of this stage's executors.
+    pub engine: EngineKind,
+}
+
+/// A fully-priced candidate execution plan for one network.
+#[derive(Clone, Debug)]
+pub struct CandidatePlan {
+    /// Deterministic candidate name, e.g. `p00.rq-canon.sl-w1.reuse`.
+    pub label: String,
+    /// Per-stage partition, R_Q and engine.
+    pub stages: Vec<StagePlan>,
+    /// §3.4 inter-tile output-pixel reuse on every stage.
+    pub reuse: bool,
+    /// Modeled engine cycles for one inference.
+    pub cycles: u64,
+    /// Modeled latency at the paper's 100 MHz clock.
+    pub micros: f64,
+    /// On-chip buffer bytes (inputs + filters + reuse stripes +
+    /// conventional intermediates), the `ResourceModel` accounting.
+    pub buffer_bytes: f64,
+    /// Engine datapath bytes (lane-resident window digit planes).
+    pub datapath_bytes: f64,
+    /// Whether this is *the* canonical plan (`pipeline_stages` +
+    /// canonical R_Q + scalar SOP + reuse on) — the no-budget default.
+    pub canonical: bool,
+}
+
+impl CandidatePlan {
+    /// Total modeled on-chip bytes the budget is checked against.
+    pub fn bram_bytes(&self) -> f64 {
+        self.buffer_bytes + self.datapath_bytes
+    }
+
+    /// [`CandidatePlan::bram_bytes`] in KB.
+    pub fn bram_kb(&self) -> f64 {
+        self.bram_bytes() / 1024.0
+    }
+
+    /// Whether the plan fits a memory budget in bytes.
+    pub fn fits(&self, budget_bytes: f64) -> bool {
+        self.bram_bytes() <= budget_bytes
+    }
+
+    /// Stage-length partition signature, residual stages bracketed:
+    /// `"2"` (fused LeNet), `"1+1"`, `"1+[2]+[2]…"`.
+    pub fn partition_label(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| {
+                if s.stage.residual {
+                    format!("[{}]", s.stage.len)
+                } else {
+                    s.stage.len.to_string()
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Engine signature: the uniform engine label, or `mixed`.
+    pub fn engine_label(&self) -> String {
+        let first = self.stages.first().map(|s| s.engine);
+        match first {
+            Some(e) if self.stages.iter().all(|s| s.engine == e) => engine_tag(e),
+            _ => "mixed".into(),
+        }
+    }
+
+    /// One-line human summary for banners and logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} (stages {}, engine {}, reuse {}): {:.2} µs modeled, {:.1} KB on-chip",
+            self.label,
+            self.partition_label(),
+            self.engine_label(),
+            if self.reuse { "on" } else { "off" },
+            self.micros,
+            self.bram_kb(),
+        )
+    }
+}
+
+/// Short engine tag for labels: `f32`, `sop`, `sl-w{W}`.
+fn engine_tag(e: EngineKind) -> String {
+    match e {
+        EngineKind::F32 => "f32".into(),
+        EngineKind::Sop { .. } => "sop".into(),
+        EngineKind::SopSliced { width, .. } => format!("sl-w{}", width.words()),
+    }
+}
+
+/// The default budget sweep (KB) `report --what tuner` and the CI
+/// tuner-gate walk: from tighter-than-canonical to effectively
+/// unconstrained for the miniatures.
+pub const BUDGET_SWEEP_KB: [f64; 6] = [4.0, 8.0, 16.0, 32.0, 64.0, 256.0];
+
+/// The memory-aware fusion auto-tuner. Enumeration is
+/// budget-independent (the same candidate list is filtered by any
+/// budget), deterministic, and bounded by
+/// [`Network::candidate_partitions`]'s cap × 3 R_Q policies × 4 engines
+/// × reuse on/off.
+#[derive(Clone, Copy, Debug)]
+pub struct Tuner {
+    /// Digit precision of the SOP engines (and the digit-path byte
+    /// width); the f32 engine is always priced at 32-bit values.
+    pub n_bits: u32,
+}
+
+impl Default for Tuner {
+    fn default() -> Self {
+        Tuner {
+            n_bits: crate::DEFAULT_PRECISION,
+        }
+    }
+}
+
+impl Tuner {
+    /// Tuner at an explicit SOP precision.
+    pub fn new(n_bits: u32) -> Tuner {
+        assert!((2..=24).contains(&n_bits), "n_bits {n_bits} outside 2..=24");
+        Tuner { n_bits }
+    }
+
+    /// The engine axis of the search: the f32 reference, the scalar SOP
+    /// unit, and the bit-sliced engine at its narrowest and widest
+    /// datapaths (W2/W4 interpolate and only blur the frontier).
+    pub fn engines(&self) -> [EngineKind; 4] {
+        [
+            EngineKind::F32,
+            EngineKind::Sop { n_bits: self.n_bits },
+            EngineKind::SopSliced { n_bits: self.n_bits, width: LaneWidth::W1 },
+            EngineKind::SopSliced { n_bits: self.n_bits, width: LaneWidth::W8 },
+        ]
+    }
+
+    /// Enumerate and price the full candidate space for `net`.
+    /// Infeasible combinations (no uniform plan) are dropped; the
+    /// canonical plan is always present and flagged.
+    pub fn enumerate(&self, net: &Network) -> Vec<CandidatePlan> {
+        let canonical_stages = net.pipeline_stages();
+        let mut out = Vec::new();
+        for (pi, part) in net.candidate_partitions().into_iter().enumerate() {
+            let mut seen: Vec<Vec<Option<usize>>> = Vec::new();
+            for pol in ROutPolicy::ALL {
+                let Some(routs) = self.resolve_partition(net, &part, pol) else {
+                    continue;
+                };
+                if seen.contains(&routs) {
+                    continue; // policies collapsed to the same R_Qs
+                }
+                seen.push(routs.clone());
+                let canonical_shape = pol == ROutPolicy::Canonical && part == canonical_stages;
+                for engine in self.engines() {
+                    for reuse in [true, false] {
+                        let stages: Vec<StagePlan> = part
+                            .iter()
+                            .zip(&routs)
+                            .map(|(st, r)| StagePlan { stage: *st, r_out: *r, engine })
+                            .collect();
+                        let canonical = canonical_shape
+                            && reuse
+                            && matches!(engine, EngineKind::Sop { .. });
+                        if let Some(c) = self.price(
+                            net,
+                            stages,
+                            reuse,
+                            format!(
+                                "p{pi:02}.{}.{}{}",
+                                pol.label(),
+                                engine_tag(engine),
+                                if reuse { ".reuse" } else { ".recompute" }
+                            ),
+                            canonical,
+                        ) {
+                            out.push(c);
+                        }
+                    }
+                }
+                // Per-stage engine assignment: each stage takes the
+                // engine minimizing its own modeled cycles. Usually
+                // collapses to a uniform assignment (already emitted);
+                // kept when it genuinely mixes.
+                let mixed: Option<Vec<StagePlan>> = part
+                    .iter()
+                    .zip(&routs)
+                    .map(|(st, r)| {
+                        let best = self
+                            .engines()
+                            .into_iter()
+                            .filter_map(|e| {
+                                let sp = StagePlan { stage: *st, r_out: *r, engine: e };
+                                self.stage_cycles(net, &sp, true).map(|c| (c, e))
+                            })
+                            .min_by_key(|&(c, _)| c)?;
+                        Some(StagePlan { stage: *st, r_out: *r, engine: best.1 })
+                    })
+                    .collect();
+                if let Some(stages) = mixed {
+                    let first = stages[0].engine;
+                    if stages.iter().any(|s| s.engine != first) {
+                        if let Some(c) = self.price(
+                            net,
+                            stages,
+                            true,
+                            format!("p{pi:02}.{}.mixed.reuse", pol.label()),
+                            false,
+                        ) {
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The canonical plan: `pipeline_stages` + canonical R_Q + scalar
+    /// SOP + reuse — what `serve --native` runs with no `--budget`.
+    pub fn canonical(&self, net: &Network) -> Result<CandidatePlan> {
+        self.enumerate(net)
+            .into_iter()
+            .find(|c| c.canonical)
+            .ok_or_else(|| anyhow!("{}: no canonical uniform plan", net.name))
+    }
+
+    /// Minimum-modeled-latency candidate under `budget_bytes`
+    /// (ties: fewer on-chip bytes, then label). With no budget the
+    /// canonical plan is returned — tuning is strictly opt-in.
+    pub fn tune(&self, net: &Network, budget_bytes: Option<f64>) -> Result<CandidatePlan> {
+        let Some(budget) = budget_bytes else {
+            return self.canonical(net);
+        };
+        let cands = self.enumerate(net);
+        best_under(&cands, budget).cloned().ok_or_else(|| {
+            let min = cands
+                .iter()
+                .map(|c| c.bram_kb())
+                .min_by(f64::total_cmp)
+                .unwrap_or(f64::NAN);
+            anyhow!(
+                "{}: no candidate plan fits {:.1} KB (smallest needs {:.1} KB)",
+                net.name,
+                budget / 1024.0,
+                min
+            )
+        })
+    }
+
+    /// Resolve per-stage R_Qs for one partition under one policy,
+    /// falling back to the per-level split where a fused stage has no
+    /// plan; `None` when even the split is infeasible.
+    fn resolve_partition(
+        &self,
+        net: &Network,
+        part: &[StageSpec],
+        pol: ROutPolicy,
+    ) -> Option<Vec<Option<usize>>> {
+        part.iter()
+            .map(|st| {
+                let specs = &net.convs[st.range()];
+                match pol.resolve(specs) {
+                    Some(r) => Some(Some(r)),
+                    None => specs
+                        .iter()
+                        .all(|s| PyramidPlan::choose_r_out(std::slice::from_ref(s)).is_some())
+                        .then_some(None),
+                }
+            })
+            .collect()
+    }
+
+    /// The uniform pyramids one stage executes: a single fused plan, or
+    /// one single-level plan per conv for the split fallback.
+    fn stage_pyramids(&self, net: &Network, sp: &StagePlan) -> Option<Vec<PyramidPlan>> {
+        let specs = &net.convs[sp.stage.range()];
+        match sp.r_out {
+            Some(r) => Some(vec![PyramidPlan::build(specs, r, StridePolicy::Uniform)?]),
+            None => specs
+                .iter()
+                .map(|s| {
+                    let one = std::slice::from_ref(s);
+                    let r = PyramidPlan::choose_r_out(one)?;
+                    PyramidPlan::build(one, r, StridePolicy::Uniform)
+                })
+                .collect(),
+        }
+    }
+
+    /// Modeled value width of an engine, in bits.
+    fn value_bits(&self, engine: EngineKind) -> u32 {
+        match engine {
+            EngineKind::F32 => 32,
+            _ => self.n_bits,
+        }
+    }
+
+    /// Modeled serialized-group width of an engine.
+    fn model_lanes(engine: EngineKind) -> u64 {
+        match engine {
+            EngineKind::F32 => F32_MODEL_LANES,
+            EngineKind::Sop { .. } => 1,
+            EngineKind::SopSliced { width, .. } => width.lanes() as u64,
+        }
+    }
+
+    /// Modeled engine cycles of one pyramid over its full movement
+    /// schedule: per movement, `ceil(evaluated_px · M / lanes)` window
+    /// groups at [`CycleModel::level_cost`] per level, plus the digit
+    /// drain. §3.4 reuse shrinks the evaluated region to the fresh
+    /// rectangle — exactly the pixels the executor evaluates.
+    fn pyramid_cycles(&self, plan: &PyramidPlan, engine: EngineKind, reuse: bool) -> u64 {
+        let model = CycleModel {
+            n: self.value_bits(engine),
+            ..CycleModel::default()
+        };
+        let arith = match engine {
+            EngineKind::F32 => Arith::Conventional,
+            _ => Arith::Online,
+        };
+        let lanes = Self::model_lanes(engine);
+        let a = plan.alpha();
+        let mut total = 0u64;
+        for iy in 0..a {
+            for ix in 0..a {
+                let mut pass = 0u64;
+                for (j, spec) in plan.specs.iter().enumerate() {
+                    let px = if reuse {
+                        plan.fresh_region(j, iy, ix).pixels()
+                    } else {
+                        let side = plan.out_side(j);
+                        side * side
+                    };
+                    let groups = ((px * spec.m_out) as u64).div_ceil(lanes);
+                    pass += groups * model.level_cost(spec, arith, Pattern::Spatial);
+                }
+                total += pass + model.n as u64;
+            }
+        }
+        total
+    }
+
+    /// On-chip buffer bytes of one pyramid — the `ResourceModel` BRAM
+    /// accounting with the §3.4 stripe gated on the actual reuse knob:
+    /// double-buffered input tile + filters per level, the
+    /// [`PyramidPlan::reuse_buffer_pixels`] stripe when reuse is on,
+    /// and full-precision intermediate tiles for the conventional f32
+    /// path (digits cannot stream early).
+    fn pyramid_buffer_bytes(&self, plan: &PyramidPlan, engine: EngineKind, reuse: bool) -> f64 {
+        let nf = self.value_bits(engine) as f64;
+        let bytes_per = nf / 8.0;
+        let mut bytes = 0.0;
+        for (q, (spec, &h)) in plan.specs.iter().zip(&plan.tiles).enumerate() {
+            bytes += 2.0 * (h * h * spec.n_in) as f64 * bytes_per;
+            bytes += (spec.k * spec.k * spec.n_in * spec.m_out) as f64 * bytes_per;
+            if reuse {
+                bytes += plan.reuse_buffer_pixels(q) as f64 * bytes_per;
+            }
+            if matches!(engine, EngineKind::F32) {
+                let conv_region = ((h - spec.k) / spec.s + 1) as f64;
+                bytes += conv_region * conv_region * spec.m_out as f64 * (2.0 * nf / 8.0);
+            }
+        }
+        bytes
+    }
+
+    /// Engine datapath bytes of one pyramid: every lane holds a
+    /// window's positive/negative digit planes, `2 · bytes · K²·N` per
+    /// lane at the widest level.
+    fn pyramid_datapath_bytes(&self, plan: &PyramidPlan, engine: EngineKind) -> f64 {
+        let bytes_per = self.value_bits(engine) as f64 / 8.0;
+        let widest = plan
+            .specs
+            .iter()
+            .map(|s| s.k * s.k * s.n_in)
+            .max()
+            .unwrap_or(0) as f64;
+        Self::model_lanes(engine) as f64 * 2.0 * bytes_per * widest
+    }
+
+    /// Modeled cycles of one whole stage (its fused pyramid, or the sum
+    /// of its split single-level pyramids).
+    fn stage_cycles(&self, net: &Network, sp: &StagePlan, reuse: bool) -> Option<u64> {
+        let plans = self.stage_pyramids(net, sp)?;
+        Some(
+            plans
+                .iter()
+                .map(|p| self.pyramid_cycles(p, sp.engine, reuse))
+                .sum(),
+        )
+    }
+
+    /// Price a full stage list into a [`CandidatePlan`]; `None` when
+    /// any stage has no uniform plan.
+    fn price(
+        &self,
+        net: &Network,
+        stages: Vec<StagePlan>,
+        reuse: bool,
+        label: String,
+        canonical: bool,
+    ) -> Option<CandidatePlan> {
+        let mut cycles = 0u64;
+        let mut buffer_bytes = 0.0;
+        let mut datapath_bytes = 0.0;
+        for sp in &stages {
+            for plan in self.stage_pyramids(net, sp)? {
+                cycles += self.pyramid_cycles(&plan, sp.engine, reuse);
+                buffer_bytes += self.pyramid_buffer_bytes(&plan, sp.engine, reuse);
+                datapath_bytes += self.pyramid_datapath_bytes(&plan, sp.engine);
+            }
+        }
+        Some(CandidatePlan {
+            label,
+            stages,
+            reuse,
+            cycles,
+            micros: crate::cycles_to_us(cycles),
+            buffer_bytes,
+            datapath_bytes,
+            canonical,
+        })
+    }
+}
+
+/// Minimum-modeled-latency candidate among `cands` fitting
+/// `budget_bytes` (ties: fewer on-chip bytes, then label — fully
+/// deterministic).
+pub fn best_under(cands: &[CandidatePlan], budget_bytes: f64) -> Option<&CandidatePlan> {
+    cands
+        .iter()
+        .filter(|c| c.fits(budget_bytes))
+        .min_by(|a, b| {
+            a.cycles
+                .cmp(&b.cycles)
+                .then(a.bram_bytes().total_cmp(&b.bram_bytes()))
+                .then(a.label.cmp(&b.label))
+        })
+}
+
+/// The per-conv-level **computed-window profile** of a candidate: for
+/// every conv level (global order), the 1-D multiplicity map `global
+/// output coordinate → times evaluated per axis` over the plan's whole
+/// movement schedule, including pad-halo and overhang coordinates the
+/// executor evaluates and then masks.
+///
+/// Movement regions are translates, so the 2-D evaluated multiset is
+/// the product of this 1-D profile with itself; and every per-window
+/// outcome (digits, END decision, value) is a function of the window
+/// contents at that global coordinate alone. Therefore **two
+/// candidates with equal profiles produce exactly equal END counters**
+/// — the plan-space test `tests/tuner_equivalence.rs` exploits. The
+/// profile is also where candidates legitimately differ: reuse off
+/// recomputes interior coordinates, and overhung R_Qs evaluate masked
+/// coordinates a different number of times.
+pub fn computed_profile(
+    tuner: &Tuner,
+    net: &Network,
+    stages: &[StagePlan],
+    reuse: bool,
+) -> Option<Vec<BTreeMap<i64, u64>>> {
+    let mut out = Vec::with_capacity(net.convs.len());
+    for sp in stages {
+        for plan in tuner.stage_pyramids(net, sp)? {
+            for j in 0..plan.depth() {
+                let side = plan.out_side(j) as i64;
+                let vo = plan.out_overlap(j) as i64;
+                let mut prof: BTreeMap<i64, u64> = BTreeMap::new();
+                for i in 0..plan.alpha() {
+                    // Global output coordinates of level j's evaluated
+                    // region for movement i along one axis: the next
+                    // level's input tile, or the assembled output
+                    // region at the top.
+                    let base = if j + 1 < plan.depth() {
+                        plan.starts[j + 1] + (i * plan.strides[j + 1]) as i64
+                    } else {
+                        (i * plan.out_pitch()) as i64
+                    };
+                    let fresh_from = if reuse && i > 0 { base + vo } else { base };
+                    for g in fresh_from..base + side {
+                        *prof.entry(g).or_insert(0) += 1;
+                    }
+                }
+                out.push(prof);
+            }
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sim::resources::ResourceModel;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn lenet_enumeration_has_the_canonical_plan_and_real_tradeoffs() {
+        let t = Tuner::default();
+        let net = crate::nets::lenet5();
+        let cands = t.enumerate(&net);
+        assert!(cands.len() >= 16, "only {} candidates", cands.len());
+        let canon: Vec<_> = cands.iter().filter(|c| c.canonical).collect();
+        assert_eq!(canon.len(), 1, "exactly one canonical candidate");
+        let canon = canon[0];
+        assert_eq!(canon.engine_label(), "sop");
+        assert!(canon.reuse);
+        // Reuse off on the same shape costs cycles and saves stripe bytes.
+        let recompute = cands
+            .iter()
+            .find(|c| c.stages == canon.stages && !c.reuse)
+            .expect("recompute twin");
+        assert!(recompute.cycles > canon.cycles, "reuse must model faster");
+        assert!(recompute.buffer_bytes < canon.buffer_bytes);
+        // Wide lanes model faster and cost datapath bytes.
+        let w8 = cands
+            .iter()
+            .find(|c| c.engine_label() == "sl-w8" && c.reuse && c.stages.len() == canon.stages.len())
+            .expect("W8 twin");
+        assert!(w8.cycles < canon.cycles);
+        assert!(w8.datapath_bytes > canon.datapath_bytes);
+    }
+
+    #[test]
+    fn tuning_lenet_beats_canonical_and_respects_tight_budgets() {
+        let t = Tuner::default();
+        let net = crate::nets::lenet5();
+        let canon = t.canonical(&net).expect("canonical");
+        // No budget: the canonical plan, exactly.
+        let untuned = t.tune(&net, None).expect("untuned");
+        assert_eq!(untuned.label, canon.label);
+        // A mid budget admits the W1 sliced engine: non-canonical and
+        // strictly faster — the acceptance-criteria budget point.
+        let mid = t.tune(&net, Some(64.0 * 1024.0)).expect("64 KB");
+        assert_ne!(mid.label, canon.label, "64 KB should leave canonical");
+        assert!(mid.cycles < canon.cycles);
+        assert!(mid.fits(64.0 * 1024.0));
+        // At any budget the canonical plan fits, the winner is ≤ it.
+        for kb in BUDGET_SWEEP_KB {
+            if let Ok(best) = t.tune(&net, Some(kb * 1024.0)) {
+                if canon.fits(kb * 1024.0) {
+                    assert!(best.cycles <= canon.cycles, "{kb} KB: tuned worse than canonical");
+                }
+            }
+        }
+        // An absurdly tight budget errors with the smallest-need hint.
+        let err = t.tune(&net, Some(64.0)).unwrap_err().to_string();
+        assert!(err.contains("smallest needs"), "{err}");
+    }
+
+    /// The tuner's buffer pricing is the `ResourceModel` BRAM
+    /// accounting, not an independent estimate: for a digit-engine
+    /// reuse-on candidate, the per-stage bytes round to exactly the
+    /// model's BRAM36 blocks (`Arith::Online` gates the same stripe).
+    #[test]
+    fn buffer_pricing_matches_resource_model_blocks() {
+        let t = Tuner::default();
+        let net = crate::nets::lenet5();
+        let canon = t.canonical(&net).expect("canonical");
+        assert_eq!(canon.stages.len(), 1, "fused LeNet is one stage");
+        let sp = &canon.stages[0];
+        let plan = PyramidPlan::build(
+            &net.convs[sp.stage.range()],
+            sp.r_out.expect("fused"),
+            StridePolicy::Uniform,
+        )
+        .expect("plan");
+        let blocks = ResourceModel::default()
+            .resources(&plan, Arith::Online, Pattern::Spatial, t.n_bits)
+            .bram36;
+        assert_eq!((canon.buffer_bytes / 4608.0).ceil(), blocks);
+    }
+
+    #[test]
+    fn reuse_on_profiles_collapse_to_multiplicity_one_spans() {
+        let t = Tuner::default();
+        let net = crate::nets::lenet5();
+        let canon = t.canonical(&net).expect("canonical");
+        let prof = computed_profile(&t, &net, &canon.stages, true).expect("profile");
+        assert_eq!(prof.len(), net.convs.len());
+        for (j, level) in prof.iter().enumerate() {
+            // Reuse-on fresh ranges are contiguous and disjoint along
+            // an axis: every evaluated coordinate exactly once.
+            assert!(level.values().all(|&m| m == 1), "level {j}: {level:?}");
+        }
+        // Recompute profiles strictly dominate on interior coordinates.
+        let re = computed_profile(&t, &net, &canon.stages, false).expect("profile");
+        assert!(re[0].values().any(|&m| m > 1), "no recompute multiplicity");
+    }
+
+    /// Satellite property suite: on random `Network::scaled` variants,
+    /// every enumerated candidate builds valid covering pyramids, the
+    /// priced bytes honour the `reuse_buffer_pixels` stripe accounting,
+    /// and tightening the budget never grows the feasible set.
+    #[test]
+    fn enumerator_is_sound_on_random_miniatures() {
+        let zoo: Vec<Network> = vec![
+            crate::nets::lenet5(),
+            crate::nets::alexnet(),
+            crate::nets::vgg16(),
+            crate::nets::resnet18(),
+        ];
+        let iters = if cfg!(debug_assertions) { 12 } else { 40 };
+        prop_check("tuner enumeration soundness", iters, |g| {
+            let base = g.pick(&zoo).clone();
+            let dim = g.usize(24, 48);
+            let ch_div = *g.pick(&[8usize, 16, 32]);
+            let Some(net) = base.scaled(dim, ch_div) else {
+                return Ok(()); // infeasible miniature — nothing to check
+            };
+            let t = Tuner::default();
+            let cands = t.enumerate(&net);
+            for c in &cands {
+                // Partition invariant + per-stage plan validity.
+                let mut next = 0;
+                for sp in &c.stages {
+                    prop_assert!(sp.stage.first == next, "gap in {}", c.label);
+                    next = sp.stage.first + sp.stage.len;
+                    match sp.r_out {
+                        Some(r) => {
+                            let specs = &net.convs[sp.stage.range()];
+                            let plan = PyramidPlan::build(specs, r, StridePolicy::Uniform);
+                            prop_assert!(plan.is_some(), "{}: unbuildable stage", c.label);
+                            prop_assert!(
+                                plan.unwrap().covers_output(),
+                                "{}: uncovered output",
+                                c.label
+                            );
+                        }
+                        None => {
+                            for s in &net.convs[sp.stage.range()] {
+                                prop_assert!(
+                                    PyramidPlan::choose_r_out(std::slice::from_ref(s)).is_some(),
+                                    "{}: split level unbuildable",
+                                    c.label
+                                );
+                            }
+                        }
+                    }
+                }
+                prop_assert!(next == net.convs.len(), "{}: partial cover", c.label);
+            }
+            // Stripe accounting: the reuse-on / reuse-off twins differ
+            // in buffer bytes by exactly the reuse_buffer_pixels term.
+            for on in cands.iter().filter(|c| c.reuse) {
+                let Some(off) = cands
+                    .iter()
+                    .find(|c| !c.reuse && c.stages == on.stages)
+                else {
+                    continue;
+                };
+                let mut stripe = 0.0;
+                for sp in &on.stages {
+                    let bpp = match sp.engine {
+                        EngineKind::F32 => 4.0,
+                        _ => t.n_bits as f64 / 8.0,
+                    };
+                    for plan in t.stage_pyramids(&net, sp).expect("priced") {
+                        for q in 0..plan.depth() {
+                            stripe += plan.reuse_buffer_pixels(q) as f64 * bpp;
+                        }
+                    }
+                }
+                prop_assert!(
+                    (on.buffer_bytes - off.buffer_bytes - stripe).abs() < 1e-6,
+                    "{}: stripe accounting drifted",
+                    on.label
+                );
+                prop_assert!(on.datapath_bytes == off.datapath_bytes, "{}", on.label);
+            }
+            // Budget monotonicity over a sweep incl. exact candidate sizes.
+            let mut budgets: Vec<f64> = BUDGET_SWEEP_KB.iter().map(|k| k * 1024.0).collect();
+            budgets.extend(cands.iter().map(|c| c.bram_bytes()));
+            budgets.sort_by(f64::total_cmp);
+            let mut prev = 0usize;
+            for b in budgets {
+                let n = cands.iter().filter(|c| c.fits(b)).count();
+                prop_assert!(n >= prev, "feasible set shrank as budget grew");
+                prev = n;
+            }
+            Ok(())
+        });
+    }
+}

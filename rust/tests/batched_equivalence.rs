@@ -15,7 +15,11 @@
 //!   width — including cross-image backfill inside one W=4 group;
 //! - serial vs parallel batched executor parity (`run_batch` vs
 //!   `run_batch_parallel`), including per-image counter equality with
-//!   the corresponding solo schedules.
+//!   the corresponding solo schedules;
+//! - the memory-aware tuner's plan on a deeper miniature (tiny
+//!   ResNet-18 under a 96 KB budget), batched vs solo through
+//!   `NativePipeline::with_plan` — non-canonical partitions and
+//!   cross-request packing compose bit-identically.
 //!
 //! `USEFUSE_LANES` (64/128/256/512) overrides the width the
 //! fixed-width tests run at, for the CI non-default-width matrix leg.
@@ -356,6 +360,60 @@ fn serial_and_parallel_batched_executors_agree() {
     let (sb, _) = b.infer_batch(&imgs).expect("threaded batch");
     for (x, y) in sa.iter().zip(&sb) {
         assert_eq!(x.logits.data, y.logits.data, "threaded batch logits differ");
+    }
+}
+
+/// The tuned-plan twin of the zoo matrix on the deeper miniature the
+/// bench series times: tiny ResNet-18 through the plan the
+/// memory-aware tuner picks under a 96 KB budget (canonical fallback
+/// if nothing fits), `infer_batch` vs fresh solo tuned-plan pipelines
+/// — logits, features, class, and per-image END counters all
+/// bit-identical. This pins that cross-request lane packing and the
+/// tuner's non-canonical partitions compose.
+#[test]
+fn tuned_plan_batched_matches_solo_on_deep_miniature() {
+    use usefuse::coordinator::PipelineParams;
+    use usefuse::sim::Tuner;
+
+    let net = nets::tiny("resnet18").expect("tiny resnet18");
+    let tuner = Tuner::default();
+    let plan = tuner
+        .tune(&net, Some(96.0 * 1024.0))
+        .or_else(|_| tuner.tune(&net, None))
+        .expect("tuned or canonical plan");
+    let images: Vec<Tensor> = (0..MAX_BATCH)
+        .map(|i| nets::random_input(&net.convs[0], 0x1A + i as u64))
+        .collect();
+    let mut solo_infs = Vec::with_capacity(MAX_BATCH);
+    let mut solo_counters: Vec<Vec<EndCounters>> = Vec::with_capacity(MAX_BATCH);
+    for img in &images {
+        let p = NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, 0x51))
+            .expect("solo tuned pipeline");
+        solo_infs.push(p.infer(img).expect("solo infer"));
+        solo_counters.push(p.end_counters());
+    }
+    for &bsz in &BATCHES {
+        let batch = &images[..bsz];
+        let pipe = NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, 0x51))
+            .expect("batched tuned pipeline");
+        let (infs, per_image) = pipe.infer_batch(batch).expect("batched infer");
+        assert_eq!(infs.len(), bsz, "{} b{bsz}: result count", plan.label);
+        for (i, inf) in infs.iter().enumerate() {
+            let tag = format!("{} b{bsz} image {i}", plan.label);
+            assert_eq!(
+                inf.logits.data, solo_infs[i].logits.data,
+                "{tag}: logits not bit-identical"
+            );
+            assert_eq!(
+                inf.features.data, solo_infs[i].features.data,
+                "{tag}: features not bit-identical"
+            );
+            assert_eq!(inf.class, solo_infs[i].class, "{tag}: class differs");
+            assert_eq!(
+                per_image[i], solo_counters[i],
+                "{tag}: per-image END counters differ from a solo run"
+            );
+        }
     }
 }
 

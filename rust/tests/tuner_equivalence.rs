@@ -1,0 +1,249 @@
+//! **Plan-space differential harness** for the memory-aware fusion
+//! auto-tuner: every candidate plan the enumerator can emit — not just
+//! budget winners — must be executable, output-covering, priced
+//! self-consistently, and **bit-identical in logits** to the canonical
+//! partition on the same engine family.
+//!
+//! The engine families matter: the scalar SOP and every sliced width
+//! are bit-identical to each other (`tests/engine_equivalence.rs`), so
+//! any all-digit candidate compares against one canonical scalar-SOP
+//! reference; all-f32 candidates compare against the canonical f32
+//! reference. Cross-family equality does not hold (quantization) and no
+//! enumerated candidate mixes families.
+//!
+//! END counters are compared through the tuner's computed-window
+//! profiles (`sim::tuner::computed_profile`): two plans evaluate the
+//! same window multiset — hence count identically — **iff** their
+//! per-level 1-D multiplicity profiles match. The harness asserts
+//! counter equality exactly when profiles match and checks the match
+//! set is non-vacuous (several distinct LeNet plans share the canonical
+//! profile) and non-trivial (recompute plans differ). The
+//! floating-point `exec_fraction_sum` accumulator is compared to 1e-9
+//! relative — its summation order follows the movement schedule.
+//!
+//! Debug builds sample the shape space (full sweep is release-sized);
+//! `USEFUSE_TUNER_EXHAUSTIVE=1` forces the full sweep anywhere.
+
+use usefuse::coordinator::{InferenceService, NativePipeline, PipelineParams, ServiceConfig};
+use usefuse::nets::{self, Network};
+use usefuse::runtime::{EndCounters, EngineKind};
+use usefuse::sim::tuner::{computed_profile, BUDGET_SWEEP_KB};
+use usefuse::sim::{CandidatePlan, Tuner};
+
+const SEED: u64 = 0x7A9E;
+
+/// Full shape sweep in release builds (and under
+/// `USEFUSE_TUNER_EXHAUSTIVE=1`); sampled in debug builds.
+fn exhaustive() -> bool {
+    std::env::var("USEFUSE_TUNER_EXHAUSTIVE").map_or(!cfg!(debug_assertions), |v| v == "1")
+}
+
+fn is_digit(e: EngineKind) -> bool {
+    !matches!(e, EngineKind::F32)
+}
+
+/// Execution shape of a candidate: partition + per-stage R_Q + reuse.
+/// Engines within the digit family are bit-identical, so one candidate
+/// per shape pins the whole family's behaviour.
+fn shape_key(c: &CandidatePlan) -> (Vec<(usize, usize, bool, Option<usize>)>, bool) {
+    (
+        c.stages
+            .iter()
+            .map(|s| (s.stage.first, s.stage.len, s.stage.residual, s.r_out))
+            .collect(),
+        c.reuse,
+    )
+}
+
+/// Exact equality on every integer counter; the floating-point
+/// exec-fraction accumulator to 1e-9 relative (summation order follows
+/// the movement schedule, everything else is order-free integers).
+fn assert_counters_eq(a: &[EndCounters], b: &[EndCounters], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: counter level count");
+    for (j, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.sops, y.sops, "{label} level {j}: sops");
+        assert_eq!(x.terminated, y.terminated, "{label} level {j}: terminated");
+        assert_eq!(x.positive, y.positive, "{label} level {j}: positive");
+        assert_eq!(x.undetermined, y.undetermined, "{label} level {j}: undetermined");
+        assert_eq!(x.executed_digits, y.executed_digits, "{label} level {j}: executed digits");
+        assert_eq!(x.total_digits, y.total_digits, "{label} level {j}: total digits");
+        let tol = 1e-9 * x.exec_fraction_sum.abs().max(1.0);
+        assert!(
+            (x.exec_fraction_sum - y.exec_fraction_sum).abs() <= tol,
+            "{label} level {j}: exec_fraction_sum {} vs {}",
+            x.exec_fraction_sum,
+            y.exec_fraction_sum
+        );
+    }
+}
+
+/// The full differential: enumerate, statically validate every
+/// candidate, then execute one digit candidate per execution shape
+/// (every `stride`-th shape) and every f32 candidate against the
+/// canonical references. `require_nonvacuous` additionally pins that
+/// the profile-match set contains distinct plans AND genuinely
+/// differing plans.
+fn check_net(net: &Network, stride: usize, require_nonvacuous: bool) {
+    let tuner = Tuner::default();
+    let cands = tuner.enumerate(net);
+    assert!(cands.len() >= 2, "{}: empty search space", net.name);
+    assert_eq!(
+        cands.iter().filter(|c| c.canonical).count(),
+        1,
+        "{}: exactly one canonical candidate",
+        net.name
+    );
+    // Static pricing sanity for EVERY candidate, sampled or not.
+    for c in &cands {
+        assert!(c.cycles > 0, "{}: zero-cycle plan", c.label);
+        assert!(c.bram_bytes() > 0.0, "{}: zero-byte plan", c.label);
+        assert!(c.fits(c.bram_bytes()), "{}: does not fit its own footprint", c.label);
+    }
+    // Every swept-budget winner fits the budget it was tuned under.
+    for kb in BUDGET_SWEEP_KB {
+        if let Ok(w) = tuner.tune(net, Some(kb * 1024.0)) {
+            assert!(w.fits(kb * 1024.0), "{}: {kb} KB winner over budget", w.label);
+        }
+    }
+
+    let canon = cands.iter().find(|c| c.canonical).expect("canonical");
+    let canon_profile =
+        computed_profile(&tuner, net, &canon.stages, canon.reuse).expect("canonical profile");
+    let img = nets::random_input(&net.convs[0], SEED ^ 1);
+    let ref_digit = NativePipeline::synthetic(net, EngineKind::Sop { n_bits: 8 }, SEED)
+        .expect("digit reference pipeline");
+    let ref_f32 =
+        NativePipeline::synthetic(net, EngineKind::F32, SEED).expect("f32 reference pipeline");
+    let want_digit = ref_digit.infer(&img).expect("digit reference infer");
+    let want_f32 = ref_f32.infer(&img).expect("f32 reference infer");
+    let ref_counters = ref_digit.end_counters();
+
+    // Group digit candidates by execution shape; keep f32 ones apart.
+    let mut shape_groups: Vec<(Vec<(usize, usize, bool, Option<usize>)>, bool, Vec<&CandidatePlan>)> =
+        Vec::new();
+    let mut f32_cands: Vec<&CandidatePlan> = Vec::new();
+    for c in &cands {
+        let digit: Vec<bool> = c.stages.iter().map(|s| is_digit(s.engine)).collect();
+        if digit.iter().all(|&d| d) {
+            let (part, reuse) = shape_key(c);
+            match shape_groups.iter_mut().find(|(p, r, _)| *p == part && *r == reuse) {
+                Some((_, _, group)) => group.push(c),
+                None => shape_groups.push((part, reuse, vec![c])),
+            }
+        } else if digit.iter().all(|&d| !d) {
+            f32_cands.push(c);
+        } else {
+            panic!("{}: candidate mixes engine families", c.label);
+        }
+    }
+
+    let mut profile_matches = 0usize;
+    let mut profile_diffs = 0usize;
+    for (i, (_, _, group)) in shape_groups.iter().enumerate() {
+        if i % stride != 0 {
+            continue; // canonical shape is i == 0, always included
+        }
+        // Rotate through the digit engines across shapes so scalar and
+        // both sliced widths all execute somewhere in the sweep.
+        let c = group[i % group.len()];
+        let pipe = NativePipeline::with_plan(net, c, PipelineParams::synthetic(net, SEED))
+            .unwrap_or_else(|e| panic!("{}: pipeline build failed: {e}", c.label));
+        let inf = pipe
+            .infer(&img)
+            .unwrap_or_else(|e| panic!("{}: infer failed: {e}", c.label));
+        assert_eq!(inf.logits.data, want_digit.logits.data, "{}: logits drifted", c.label);
+        assert_eq!(inf.features.data, want_digit.features.data, "{}: features drifted", c.label);
+        assert_eq!(inf.probs, want_digit.probs, "{}: probs drifted", c.label);
+        assert_eq!(inf.class, want_digit.class, "{}: class drifted", c.label);
+        let ctrs = pipe.end_counters();
+        assert_eq!(ctrs.len(), net.convs.len(), "{}: one counter per conv level", c.label);
+        let prof = computed_profile(&tuner, net, &c.stages, c.reuse)
+            .unwrap_or_else(|| panic!("{}: unpriceable profile", c.label));
+        if prof == canon_profile {
+            assert_counters_eq(&ctrs, &ref_counters, &c.label);
+            profile_matches += 1;
+        } else {
+            profile_diffs += 1;
+        }
+    }
+    for c in f32_cands {
+        let pipe = NativePipeline::with_plan(net, c, PipelineParams::synthetic(net, SEED))
+            .unwrap_or_else(|e| panic!("{}: pipeline build failed: {e}", c.label));
+        let inf = pipe
+            .infer(&img)
+            .unwrap_or_else(|e| panic!("{}: infer failed: {e}", c.label));
+        assert_eq!(inf.logits.data, want_f32.logits.data, "{}: f32 logits drifted", c.label);
+        assert_eq!(inf.class, want_f32.class, "{}: f32 class drifted", c.label);
+        assert!(pipe.end_counters().is_empty(), "{}: f32 plan grew END counters", c.label);
+    }
+
+    assert!(profile_matches >= 1, "{}: canonical shape never executed", net.name);
+    if require_nonvacuous {
+        // ≥2 distinct plans share the canonical profile (the counter
+        // equality above actually bit different plan shapes against
+        // each other), and ≥1 plan legitimately differs (recompute
+        // multiplicities), so the iff boundary is exercised both ways.
+        assert!(
+            profile_matches >= 2,
+            "{}: counter-equality check is vacuous ({profile_matches} matching shapes)",
+            net.name
+        );
+        assert!(
+            profile_diffs >= 1,
+            "{}: no plan with a differing computed profile",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn lenet_candidates_are_plan_space_equivalent() {
+    check_net(&nets::lenet5(), 1, true);
+}
+
+#[test]
+fn tiny_alexnet_candidates_are_plan_space_equivalent() {
+    let net = nets::tiny("alexnet").expect("tiny alexnet");
+    check_net(&net, if exhaustive() { 1 } else { 7 }, false);
+}
+
+#[test]
+fn tiny_vgg_candidates_are_plan_space_equivalent() {
+    let net = nets::tiny("vgg16").expect("tiny vgg16");
+    check_net(&net, if exhaustive() { 1 } else { 9 }, false);
+}
+
+#[test]
+fn tiny_resnet_candidates_are_plan_space_equivalent() {
+    let net = nets::tiny("resnet18").expect("tiny resnet18");
+    check_net(&net, if exhaustive() { 1 } else { 7 }, false);
+}
+
+/// The acceptance path end to end: `--budget 64` on LeNet picks a
+/// non-canonical plan, and that plan serves correctly through the
+/// worker-pool service (the HTTP smoke leg in CI drives the same plan
+/// through the network edge).
+#[test]
+fn tuned_lenet_plan_serves_through_the_service() {
+    let net = nets::lenet5();
+    let plan = Tuner::default()
+        .tune(&net, Some(64.0 * 1024.0))
+        .expect("64 KB tuned plan");
+    assert!(!plan.canonical, "64 KB should select a non-canonical plan");
+    let solo = NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, SEED))
+        .expect("solo pipeline");
+    let img = nets::random_input(&net.convs[0], SEED ^ 2);
+    let want = solo.infer(&img).expect("solo infer");
+
+    let pipe = NativePipeline::with_plan(&net, &plan, PipelineParams::synthetic(&net, SEED))
+        .expect("served pipeline");
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        queue_cap: 64,
+        ..Default::default()
+    };
+    let svc = InferenceService::start_native_pipeline(&net, pipe, &cfg).expect("service");
+    let resp = svc.classify(img).expect("classify");
+    assert_eq!(resp.class, want.class, "served class drifted from the solo tuned plan");
+}
