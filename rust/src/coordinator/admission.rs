@@ -87,6 +87,26 @@ pub enum AdmissionError {
     },
     /// The pool behind the controller is already shut down (HTTP 503).
     ShutDown,
+    /// This exact payload repeatedly killed its worker and is refused
+    /// instead of retried (HTTP 422).
+    Quarantined {
+        /// Panicking batches the payload has ridden.
+        kills: u32,
+    },
+    /// The group's circuit breaker is open after consecutive batch
+    /// failures (HTTP 503 + `Retry-After`).
+    BreakerOpen {
+        /// The group whose breaker refused the submit.
+        group: String,
+        /// Suggested client back-off, seconds.
+        retry_after_secs: u64,
+    },
+    /// The pool's worker restart budget is exhausted; it only drains
+    /// already-admitted work (HTTP 503 + `Retry-After`).
+    Degraded {
+        /// Suggested client back-off, seconds.
+        retry_after_secs: u64,
+    },
 }
 
 impl std::fmt::Display for AdmissionError {
@@ -103,6 +123,16 @@ impl std::fmt::Display for AdmissionError {
                 write!(f, "unknown model group '{group}' (serving: {known:?})")
             }
             AdmissionError::ShutDown => write!(f, "pool is shut down"),
+            AdmissionError::Quarantined { kills } => write!(
+                f,
+                "payload quarantined after killing its worker {kills} times"
+            ),
+            AdmissionError::BreakerOpen { group, .. } => {
+                write!(f, "circuit breaker open for model group '{group}'")
+            }
+            AdmissionError::Degraded { .. } => {
+                write!(f, "pool degraded: worker restart budget exhausted")
+            }
         }
     }
 }
@@ -203,6 +233,14 @@ impl AdmissionController {
             Err(SubmitError::UnknownGroup { group, known }) => {
                 Err(AdmissionError::UnknownGroup { group, known })
             }
+            Err(SubmitError::Quarantined { kills }) => Err(AdmissionError::Quarantined { kills }),
+            Err(SubmitError::BreakerOpen { group }) => Err(AdmissionError::BreakerOpen {
+                group,
+                retry_after_secs: self.cfg.retry_after_secs,
+            }),
+            Err(SubmitError::Degraded) => Err(AdmissionError::Degraded {
+                retry_after_secs: self.cfg.retry_after_secs,
+            }),
         }
     }
 
@@ -384,6 +422,66 @@ mod tests {
         assert_eq!(ctrl.pool().metrics().shed_total, 1);
         assert_eq!(wedge.wait().expect("wedge resp").class, 0);
         assert_eq!(fill.wait().expect("fill resp").class, 1);
+    }
+
+    /// Ticket RAII under a worker panic: the caught panic is delivered
+    /// as a typed answer, the ticket drop releases its in-flight slot,
+    /// and a drain that overlaps the panic cannot hang on `wait_idle`.
+    #[test]
+    fn panic_releases_ticket_and_drain_completes() {
+        let factory: RuntimeFactory = Arc::new(|| {
+            let mut rt = Runtime::host(Manifest::empty("."));
+            let meta = ProgramMeta {
+                file: std::path::PathBuf::new(),
+                inputs: vec![TensorMeta {
+                    shape: vec![2, 2, 1],
+                    dtype: DType::F32,
+                }],
+                outputs: vec![TensorMeta {
+                    shape: vec![10],
+                    dtype: DType::F32,
+                }],
+                n_runtime_inputs: 1,
+                weights: vec![],
+            };
+            rt.register_host(
+                "echo_infer",
+                meta,
+                Box::new(|ts, _| {
+                    if ts[0].data[1] > 0.0 {
+                        panic!("poison payload");
+                    }
+                    Tensor::new(vec![10], vec![0.0; 10]).map(|t| vec![t])
+                }),
+            );
+            Ok(rt)
+        });
+        let pool = WorkerPool::start(PoolConfig {
+            workers: 1,
+            max_batch: 1,
+            queue_cap: 16,
+            ..PoolConfig::new(
+                vec![ModelGroup {
+                    name: "echo".into(),
+                    program: "echo_infer".into(),
+                }],
+                factory,
+            )
+        })
+        .expect("pool");
+        let ctrl = AdmissionController::new(Arc::new(pool), AdmissionConfig::default());
+        let ticket = ctrl.admit("echo", slow_img(), None).expect("admit");
+        assert_eq!(ctrl.inflight(), 1);
+        ctrl.begin_drain();
+        match ticket.wait() {
+            Err(ServeError::WorkerPanic(msg)) => assert!(msg.contains("poison payload")),
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+        assert_eq!(ctrl.inflight(), 0, "panic must release the ticket slot");
+        assert!(
+            ctrl.wait_idle(Duration::from_secs(2)),
+            "drain must complete through a panic"
+        );
     }
 
     #[test]

@@ -1,0 +1,341 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string (CLI `--faults` or
+//! the `USEFUSE_FAULTS` environment variable) and threaded as an
+//! `Option<Arc<FaultPlan>>` through the worker loop and the native
+//! pipeline. When no plan is attached the injection points are a single
+//! `Option` check — the production hot path pays nothing measurable.
+//!
+//! Spec grammar (clauses separated by `;`, parameters by `,`):
+//!
+//! ```text
+//! panic@worker=1,batch=3            worker 1 panics on its 3rd batch
+//! stall@worker=0,ms=5000            worker 0 sleeps 5 s on every batch
+//! stall@worker=0,ms=5000,batch=2    ... only on its 2nd batch
+//! flip=nan@stage=2                  stage 2 output gets a NaN written in
+//! ```
+//!
+//! The action token is everything before the first `@` (so `flip=nan`
+//! is a single action). Each clause fires deterministically: `batch=B`
+//! counts per-worker batches starting at 1, and `count=N` caps the
+//! number of firings (default 1 for `panic`/`flip`, unlimited for a
+//! `stall` without `batch=`). Counters are atomic so the plan can be
+//! shared read-only across worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What a fault rule does when it fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Panic inside the batch execution (caught by the supervision layer).
+    Panic,
+    /// Sleep for `ms` milliseconds inside the batch execution, simulating
+    /// a wedged worker.
+    Stall { ms: u64 },
+    /// Overwrite element 0 of the named pipeline stage's output with NaN,
+    /// simulating a poisoned intermediate tensor.
+    FlipNan { stage: usize },
+}
+
+/// One parsed clause of the fault spec.
+#[derive(Debug)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    /// Restrict to one worker slot; `None` matches every worker.
+    pub worker: Option<usize>,
+    /// Fire on this 1-based per-worker batch ordinal; `None` matches every batch.
+    pub batch: Option<u64>,
+    /// Maximum number of firings (0 = unlimited).
+    pub count: u64,
+    fired: AtomicU64,
+}
+
+impl FaultRule {
+    fn matches(&self, worker: usize, batch_no: u64) -> bool {
+        if let Some(w) = self.worker {
+            if w != worker {
+                return false;
+            }
+        }
+        if let Some(b) = self.batch {
+            if b != batch_no {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Claim one firing. Returns false once the count budget is spent.
+    fn try_fire(&self) -> bool {
+        if self.count == 0 {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        let mut seen = self.fired.load(Ordering::Relaxed);
+        loop {
+            if seen >= self.count {
+                return false;
+            }
+            match self.fired.compare_exchange_weak(
+                seen,
+                seen + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(cur) => seen = cur,
+            }
+        }
+    }
+
+    /// How many times this rule has fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::Relaxed)
+    }
+}
+
+/// The action the worker loop must take for the current batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BatchFault {
+    /// Sleep this long before executing (0 = no stall).
+    pub stall_ms: u64,
+    /// Panic after any stall.
+    pub panic: bool,
+}
+
+/// A parsed, shareable fault-injection plan.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string. Empty/whitespace-only specs yield an error so
+    /// callers never silently arm an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            rules.push(Self::parse_clause(clause)?);
+        }
+        if rules.is_empty() {
+            return Err(format!("fault spec '{spec}' contains no clauses"));
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    fn parse_clause(clause: &str) -> Result<FaultRule, String> {
+        let (action, params) = match clause.find('@') {
+            Some(at) => (&clause[..at], &clause[at + 1..]),
+            None => (clause, ""),
+        };
+        let mut worker = None;
+        let mut batch = None;
+        let mut count = None;
+        let mut ms = None;
+        let mut stage = None;
+        for pair in params.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (key, value) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("fault clause '{clause}': parameter '{pair}' is not k=v"))?;
+            let value: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault clause '{clause}': '{pair}' is not an integer"))?;
+            match key.trim() {
+                "worker" => worker = Some(value as usize),
+                "batch" => batch = Some(value),
+                "count" => count = Some(value),
+                "ms" => ms = Some(value),
+                "stage" => stage = Some(value as usize),
+                other => {
+                    return Err(format!(
+                        "fault clause '{clause}': unknown parameter '{other}'"
+                    ))
+                }
+            }
+        }
+        let kind = match action.trim() {
+            "panic" => FaultKind::Panic,
+            "stall" => FaultKind::Stall {
+                ms: ms.ok_or_else(|| format!("fault clause '{clause}': stall requires ms="))?,
+            },
+            "flip=nan" => FaultKind::FlipNan {
+                stage: stage
+                    .ok_or_else(|| format!("fault clause '{clause}': flip=nan requires stage="))?,
+            },
+            other => {
+                return Err(format!(
+                    "fault clause '{clause}': unknown action '{other}' \
+                     (expected panic, stall, or flip=nan)"
+                ))
+            }
+        };
+        if matches!(kind, FaultKind::FlipNan { .. }) && (worker.is_some() || batch.is_some()) {
+            return Err(format!(
+                "fault clause '{clause}': flip=nan takes stage= (and count=) only"
+            ));
+        }
+        // Default firing budget: one-shot for panic/flip; a stall pinned to a
+        // specific batch is also one-shot, an unpinned stall repeats forever.
+        let count = count.unwrap_or(match kind {
+            FaultKind::Stall { .. } if batch.is_none() => 0,
+            _ => 1,
+        });
+        Ok(FaultRule {
+            kind,
+            worker,
+            batch,
+            count,
+            fired: AtomicU64::new(0),
+        })
+    }
+
+    /// Build a plan from `USEFUSE_FAULTS` if set (empty var = no plan).
+    /// Invalid specs abort: silently dropping a requested fault would make
+    /// a chaos run vacuously green.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let spec = std::env::var("USEFUSE_FAULTS").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(plan) => Some(Arc::new(plan)),
+            Err(e) => panic!("USEFUSE_FAULTS: {e}"),
+        }
+    }
+
+    /// Called by the worker loop once per batch (before execution) with the
+    /// worker slot and that worker's 1-based batch ordinal.
+    pub fn on_batch(&self, worker: usize, batch_no: u64) -> BatchFault {
+        let mut out = BatchFault::default();
+        for rule in &self.rules {
+            if !rule.matches(worker, batch_no) {
+                continue;
+            }
+            match rule.kind {
+                FaultKind::Panic => {
+                    if rule.try_fire() {
+                        out.panic = true;
+                    }
+                }
+                FaultKind::Stall { ms } => {
+                    if rule.try_fire() {
+                        out.stall_ms = out.stall_ms.max(ms);
+                    }
+                }
+                FaultKind::FlipNan { .. } => {}
+            }
+        }
+        out
+    }
+
+    /// Called by the native pipeline after computing stage `stage`'s output.
+    /// Returns true if that output should have a NaN written into it.
+    pub fn flip_stage(&self, stage: usize) -> bool {
+        for rule in &self.rules {
+            if let FaultKind::FlipNan { stage: s } = rule.kind {
+                if s == stage && rule.try_fire() {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Iterate rules (for tests / reporting).
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_issue_example() {
+        let plan =
+            FaultPlan::parse("panic@worker=1,batch=3;stall@worker=0,ms=5000;flip=nan@stage=2")
+                .unwrap();
+        assert_eq!(plan.rules().len(), 3);
+        assert_eq!(plan.rules()[0].kind, FaultKind::Panic);
+        assert_eq!(plan.rules()[0].worker, Some(1));
+        assert_eq!(plan.rules()[0].batch, Some(3));
+        assert_eq!(plan.rules()[1].kind, FaultKind::Stall { ms: 5000 });
+        assert_eq!(plan.rules()[1].count, 0, "unpinned stall repeats");
+        assert_eq!(plan.rules()[2].kind, FaultKind::FlipNan { stage: 2 });
+    }
+
+    #[test]
+    fn panic_fires_once_on_matching_batch() {
+        let plan = FaultPlan::parse("panic@worker=1,batch=3").unwrap();
+        assert_eq!(plan.on_batch(0, 3), BatchFault::default());
+        assert_eq!(plan.on_batch(1, 2), BatchFault::default());
+        let hit = plan.on_batch(1, 3);
+        assert!(hit.panic);
+        assert_eq!(hit.stall_ms, 0);
+        // One-shot: a replayed ordinal does not fire again.
+        assert_eq!(plan.on_batch(1, 3), BatchFault::default());
+    }
+
+    #[test]
+    fn unpinned_stall_repeats_and_count_caps() {
+        let plan = FaultPlan::parse("stall@worker=0,ms=50").unwrap();
+        for b in 1..=4 {
+            assert_eq!(plan.on_batch(0, b).stall_ms, 50);
+        }
+        let capped = FaultPlan::parse("stall@worker=0,ms=50,count=2").unwrap();
+        assert_eq!(capped.on_batch(0, 1).stall_ms, 50);
+        assert_eq!(capped.on_batch(0, 2).stall_ms, 50);
+        assert_eq!(capped.on_batch(0, 3).stall_ms, 0);
+    }
+
+    #[test]
+    fn stall_and_panic_compose_on_same_batch() {
+        let plan = FaultPlan::parse("stall@worker=0,ms=10,batch=1;panic@worker=0,batch=1").unwrap();
+        let hit = plan.on_batch(0, 1);
+        assert_eq!(hit.stall_ms, 10);
+        assert!(hit.panic);
+    }
+
+    #[test]
+    fn flip_nan_is_one_shot_per_stage() {
+        let plan = FaultPlan::parse("flip=nan@stage=2").unwrap();
+        assert!(!plan.flip_stage(1));
+        assert!(plan.flip_stage(2));
+        assert!(!plan.flip_stage(2));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "   ",
+            "explode@worker=0",
+            "panic@worker",
+            "stall@worker=0",
+            "flip=nan@worker=1",
+            "panic@worker=x",
+            "panic@worker=0,bogus=1",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn wildcard_worker_matches_all() {
+        let plan = FaultPlan::parse("panic@batch=1,count=2").unwrap();
+        assert!(plan.on_batch(0, 1).panic);
+        assert!(plan.on_batch(5, 1).panic);
+        assert!(!plan.on_batch(6, 1).panic);
+    }
+}

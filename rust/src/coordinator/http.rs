@@ -16,13 +16,25 @@
 //!   rendering. Both come from [`MetricsSnapshot`]'s hand-rolled
 //!   serializers and are NaN-clean by construction.
 //! - `GET /healthz` — `200 {"status":"ok"}` while accepting,
-//!   `503 {"status":"draining"}` during a drain.
+//!   `503 {"status":"draining"}` during a drain, and
+//!   `503 {"status":"degraded"}` once the supervisor's restart budget is
+//!   exhausted and the pool is shedding everything.
 //!
 //! Admission outcomes map onto status codes: queue full past the bounded
 //! wait → `503` + `Retry-After` (shed), draining → `503` + `Retry-After`,
 //! expired deadline → `504`, unknown model → `404`, malformed payload →
-//! `400`/`413`, execution failure → `500`. A malformed request never
-//! reaches a worker.
+//! `400`/`413`, non-finite payload values → `422` with a typed
+//! `{"code":"non_finite_payload"}` body, quarantined repeat-offender
+//! payload → `422 {"code":"quarantined"}`, open circuit breaker or
+//! degraded pool → `503` + `Retry-After`, worker panic → `500`
+//! `{"code":"worker_panic"}` (the request is always answered, never
+//! hung), execution failure → `500`. A malformed request never reaches a
+//! worker.
+//!
+//! Every `/infer` response carries an `X-Request-Id` header; with
+//! `--log text|json` each request also emits one structured stderr line
+//! (id, net, status, outcome, total/queue-wait/exec timings, batch
+//! size) — see [`RequestLog`].
 //!
 //! The server is a classic accept/worker split: one acceptor thread
 //! pushes connections into a bounded channel; a small fixed fleet of
@@ -35,10 +47,10 @@
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
@@ -73,6 +85,96 @@ impl Default for HttpConfig {
     }
 }
 
+/// Structured request-log verbosity (`--log {off,text,json}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LogMode {
+    /// No per-request output (the default).
+    #[default]
+    Off,
+    /// One `key=value` line per request on stderr.
+    Text,
+    /// One JSON object per request on stderr (machine-parseable).
+    Json,
+}
+
+impl LogMode {
+    /// Parse a CLI value.
+    pub fn parse(v: &str) -> Result<LogMode, String> {
+        match v {
+            "off" => Ok(LogMode::Off),
+            "text" => Ok(LogMode::Text),
+            "json" => Ok(LogMode::Json),
+            other => Err(format!("--log must be off, text, or json (got '{other}')")),
+        }
+    }
+}
+
+/// Per-request structured logging: allocates monotonically increasing
+/// request ids (echoed back as `X-Request-Id`) and, when enabled, emits
+/// one line per request to stderr with timing and outcome.
+pub struct RequestLog {
+    mode: LogMode,
+    seq: AtomicU64,
+}
+
+/// Serving-side timings attached to a log line when the request reached
+/// a worker; zeros otherwise.
+#[derive(Default, Clone, Copy)]
+struct LogStats {
+    queue_wait_us: f64,
+    exec_us: f64,
+    batch_size: usize,
+}
+
+impl RequestLog {
+    /// Build a log sink in the given mode.
+    pub fn new(mode: LogMode) -> RequestLog {
+        RequestLog {
+            mode,
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    fn next_id(&self) -> u64 {
+        self.seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn emit(
+        &self,
+        id: u64,
+        net: &str,
+        status: u16,
+        outcome: &str,
+        total: Duration,
+        stats: LogStats,
+    ) {
+        match self.mode {
+            LogMode::Off => {}
+            LogMode::Text => eprintln!(
+                "req id={id} net={net} status={status} outcome={outcome} \
+                 total_us={:.0} queue_wait_us={:.0} exec_us={:.0} batch_size={}",
+                total.as_secs_f64() * 1e6,
+                stats.queue_wait_us,
+                stats.exec_us,
+                stats.batch_size,
+            ),
+            LogMode::Json => {
+                let line = json::write(&obj(vec![
+                    ("id", num(id as f64)),
+                    ("net", s(net)),
+                    ("status", num(status as f64)),
+                    ("outcome", s(outcome)),
+                    ("total_us", num((total.as_secs_f64() * 1e6).round())),
+                    ("queue_wait_us", num(stats.queue_wait_us.round())),
+                    ("exec_us", num(stats.exec_us.round())),
+                    ("batch_size", num(stats.batch_size as f64)),
+                ]));
+                eprintln!("{line}");
+            }
+        }
+    }
+}
+
 /// What the connection handlers serve: the admission controller (which
 /// owns the pool handle) plus the served group's identity and input
 /// geometry for payload validation.
@@ -85,6 +187,8 @@ pub struct ServeContext {
     /// Expected image shape (`[H, W, C]`) — payloads are validated
     /// against its element count before anything touches the pool.
     pub input_shape: Vec<usize>,
+    /// Request-id allocator + structured per-request logging.
+    pub log: Arc<RequestLog>,
 }
 
 /// A running HTTP front-end. [`HttpServer::shutdown`] runs the graceful
@@ -225,6 +329,8 @@ struct HttpResponse {
     content_type: &'static str,
     body: Vec<u8>,
     retry_after_secs: Option<u64>,
+    /// Echoed back as `X-Request-Id` when the request got one assigned.
+    request_id: Option<u64>,
     /// Force-close the connection (stream state unknown, e.g. an unread
     /// oversized body).
     close: bool,
@@ -237,6 +343,7 @@ impl HttpResponse {
             content_type: "application/json",
             body: json::write(v).into_bytes(),
             retry_after_secs: None,
+            request_id: None,
             close: false,
         }
     }
@@ -245,8 +352,19 @@ impl HttpResponse {
         HttpResponse::json(status, &obj(vec![("error", s(msg))]))
     }
 
+    /// An error response with a machine-matchable `code` alongside the
+    /// human-readable message.
+    fn error_code(status: u16, code: &str, msg: impl Into<String>) -> HttpResponse {
+        HttpResponse::json(status, &obj(vec![("error", s(msg)), ("code", s(code))]))
+    }
+
     fn with_retry_after(mut self, secs: u64) -> HttpResponse {
         self.retry_after_secs = Some(secs);
+        self
+    }
+
+    fn with_request_id(mut self, id: u64) -> HttpResponse {
+        self.request_id = Some(id);
         self
     }
 
@@ -264,6 +382,7 @@ fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -378,6 +497,9 @@ fn write_response(stream: &mut TcpStream, resp: &HttpResponse, close: bool) -> s
     if let Some(secs) = resp.retry_after_secs {
         head.push_str(&format!("retry-after: {secs}\r\n"));
     }
+    if let Some(id) = resp.request_id {
+        head.push_str(&format!("x-request-id: {id}\r\n"));
+    }
     head.push_str(if close {
         "connection: close\r\n\r\n"
     } else {
@@ -425,6 +547,20 @@ fn route(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
             if ctx.admission.is_draining() {
                 HttpResponse::json(503, &obj(vec![("status", s("draining"))]))
                     .with_retry_after(1)
+            } else if ctx.admission.pool().is_degraded() {
+                // Restart budget exhausted: the pool sheds everything, so
+                // tell the load balancer to route elsewhere.
+                HttpResponse::json(
+                    503,
+                    &obj(vec![
+                        ("status", s("degraded")),
+                        (
+                            "workers_alive",
+                            num(ctx.admission.pool().workers_alive() as f64),
+                        ),
+                    ]),
+                )
+                .with_retry_after(5)
             } else {
                 HttpResponse::json(
                     200,
@@ -444,6 +580,7 @@ fn route(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
                     content_type: "application/json",
                     body: snap.to_json().into_bytes(),
                     retry_after_secs: None,
+                    request_id: None,
                     close: false,
                 }
             } else {
@@ -452,11 +589,19 @@ fn route(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
                     content_type: "text/plain; version=0.0.4",
                     body: snap.prometheus().into_bytes(),
                     retry_after_secs: None,
+                    request_id: None,
                     close: false,
                 }
             }
         }
-        ("POST", path) if path.starts_with("/infer/") => infer(req, ctx),
+        ("POST", path) if path.starts_with("/infer/") => {
+            let id = ctx.log.next_id();
+            let t0 = Instant::now();
+            let (resp, outcome, stats) = infer(req, ctx);
+            ctx.log
+                .emit(id, &path["/infer/".len()..], resp.status, outcome, t0.elapsed(), stats);
+            resp.with_request_id(id)
+        }
         (_, path) if path == "/healthz" || path == "/metrics" => {
             HttpResponse::error(405, format!("{} not allowed on {path}", req.method))
         }
@@ -467,29 +612,36 @@ fn route(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
     }
 }
 
-fn infer(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
+fn infer(req: &HttpRequest, ctx: &ServeContext) -> (HttpResponse, &'static str, LogStats) {
+    let none = LogStats::default();
     let net = &req.path["/infer/".len()..];
     if net != ctx.group {
-        return HttpResponse::error(
+        let resp = HttpResponse::error(
             404,
             format!("model '{net}' not served here (serving: '{}')", ctx.group),
         );
+        return (resp, "unknown_model", none);
     }
     let want: usize = ctx.input_shape.iter().product();
     let data = match decode_payload(req, want) {
         Ok(d) => d,
-        Err(resp) => return resp,
+        Err(resp) => {
+            let outcome = if resp.status == 422 { "rejected" } else { "bad_request" };
+            return (resp, outcome, none);
+        }
     };
     let image = match Tensor::new(ctx.input_shape.clone(), data) {
         Ok(t) => t,
-        Err(e) => return HttpResponse::error(400, e.to_string()),
+        Err(e) => return (HttpResponse::error(400, e.to_string()), "bad_request", none),
     };
     let deadline = match req.header("x-deadline-ms") {
         None => None,
         Some(v) => match v.parse::<u64>() {
             Ok(ms) => Some(Duration::from_millis(ms)),
             Err(_) => {
-                return HttpResponse::error(400, "X-Deadline-Ms must be an integer of milliseconds")
+                let resp =
+                    HttpResponse::error(400, "X-Deadline-Ms must be an integer of milliseconds");
+                return (resp, "bad_request", none);
             }
         },
     };
@@ -498,39 +650,83 @@ fn infer(req: &HttpRequest, ctx: &ServeContext) -> HttpResponse {
         Err(e) => {
             let msg = e.to_string();
             return match e {
-                AdmissionError::Draining { retry_after_secs }
-                | AdmissionError::Overloaded {
+                AdmissionError::Draining { retry_after_secs } => (
+                    HttpResponse::error(503, msg).with_retry_after(retry_after_secs),
+                    "draining",
+                    none,
+                ),
+                AdmissionError::Overloaded {
                     retry_after_secs, ..
-                } => HttpResponse::error(503, msg).with_retry_after(retry_after_secs),
-                AdmissionError::UnknownGroup { .. } => HttpResponse::error(404, msg),
-                AdmissionError::ShutDown => HttpResponse::error(503, msg),
+                } => (
+                    HttpResponse::error(503, msg).with_retry_after(retry_after_secs),
+                    "shed",
+                    none,
+                ),
+                AdmissionError::UnknownGroup { .. } => {
+                    (HttpResponse::error(404, msg), "unknown_model", none)
+                }
+                AdmissionError::ShutDown => (HttpResponse::error(503, msg), "shutdown", none),
+                AdmissionError::Quarantined { .. } => (
+                    HttpResponse::error_code(422, "quarantined", msg),
+                    "quarantined",
+                    none,
+                ),
+                AdmissionError::BreakerOpen {
+                    retry_after_secs, ..
+                } => (
+                    HttpResponse::error_code(503, "breaker_open", msg)
+                        .with_retry_after(retry_after_secs),
+                    "breaker_open",
+                    none,
+                ),
+                AdmissionError::Degraded { retry_after_secs } => (
+                    HttpResponse::error_code(503, "degraded", msg)
+                        .with_retry_after(retry_after_secs),
+                    "degraded",
+                    none,
+                ),
             };
         }
     };
     match ticket.wait() {
-        Ok(r) => HttpResponse::json(
-            200,
-            &obj(vec![
-                ("class", num(r.class as f64)),
-                (
-                    "logits",
-                    arr(r.logits.iter().map(|&v| num(v as f64)).collect()),
-                ),
-                (
-                    "stats",
-                    obj(vec![
-                        ("group", s(r.group)),
-                        ("batch_size", num(r.batch_size as f64)),
-                        ("worker", num(r.worker as f64)),
-                        ("stacked", Json::Bool(r.stacked)),
-                        ("queue_wait_us", num(r.queue_wait.as_secs_f64() * 1e6)),
-                        ("exec_us", num(r.exec.as_secs_f64() * 1e6)),
-                    ]),
-                ),
-            ]),
+        Ok(r) => {
+            let stats = LogStats {
+                queue_wait_us: r.queue_wait.as_secs_f64() * 1e6,
+                exec_us: r.exec.as_secs_f64() * 1e6,
+                batch_size: r.batch_size,
+            };
+            let resp = HttpResponse::json(
+                200,
+                &obj(vec![
+                    ("class", num(r.class as f64)),
+                    (
+                        "logits",
+                        arr(r.logits.iter().map(|&v| num(v as f64)).collect()),
+                    ),
+                    (
+                        "stats",
+                        obj(vec![
+                            ("group", s(r.group)),
+                            ("batch_size", num(r.batch_size as f64)),
+                            ("worker", num(r.worker as f64)),
+                            ("stacked", Json::Bool(r.stacked)),
+                            ("queue_wait_us", num(stats.queue_wait_us)),
+                            ("exec_us", num(stats.exec_us)),
+                        ]),
+                    ),
+                ]),
+            );
+            (resp, "ok", stats)
+        }
+        Err(e @ ServeError::DeadlineExpired { .. }) => {
+            (HttpResponse::error(504, e.to_string()), "deadline", none)
+        }
+        Err(ServeError::Execution(msg)) => (HttpResponse::error(500, msg), "error", none),
+        Err(ServeError::WorkerPanic(msg)) => (
+            HttpResponse::error_code(500, "worker_panic", msg),
+            "panic",
+            none,
         ),
-        Err(e @ ServeError::DeadlineExpired { .. }) => HttpResponse::error(504, e.to_string()),
-        Err(ServeError::Execution(msg)) => HttpResponse::error(500, msg),
     }
 }
 
@@ -569,6 +765,17 @@ fn decode_payload(req: &HttpRequest, want: usize) -> Result<Vec<f32>, HttpRespon
         return Err(HttpResponse::error(
             400,
             format!("payload has {} values, model expects {want}", data.len()),
+        ));
+    }
+    // Input hygiene: NaN/Inf would propagate through every fused stage
+    // and come back as garbage logits (or trip the pipeline's poison
+    // detector and look like a server fault). Reject at the edge with a
+    // semantic 422 — the request is well-formed, its values are not.
+    if let Some(idx) = data.iter().position(|v| !v.is_finite()) {
+        return Err(HttpResponse::error_code(
+            422,
+            "non_finite_payload",
+            format!("payload value at index {idx} is {}; all values must be finite", data[idx]),
         ));
     }
     Ok(data)
@@ -686,6 +893,49 @@ mod tests {
         // Raw bytes not a multiple of 4.
         let resp = decode_payload(&mk(vec![0u8; 6], false), 4).unwrap_err();
         assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn non_finite_payloads_get_422_with_typed_code() {
+        let mk = |body: Vec<u8>| HttpRequest {
+            method: "POST".into(),
+            path: "/infer/x".into(),
+            query: String::new(),
+            headers: BTreeMap::new(),
+            body,
+        };
+        for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let vals = [1.0f32, poison, 0.0, 3.0];
+            let raw: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let resp = decode_payload(&mk(raw), 4).unwrap_err();
+            assert_eq!(resp.status, 422, "{poison} must be rejected");
+            let body = String::from_utf8(resp.body.clone()).unwrap();
+            let parsed = json::parse(&body).unwrap();
+            assert_eq!(
+                parsed.get("code").and_then(|c| c.as_str()),
+                Some("non_finite_payload"),
+                "{body}"
+            );
+            assert!(body.contains("index 1"), "{body}");
+        }
+        // Finite payloads still pass.
+        let ok: Vec<u8> = [1.0f32, -2.0, 0.0, 3.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        assert!(decode_payload(&mk(ok), 4).is_ok());
+    }
+
+    #[test]
+    fn log_modes_parse_and_ids_are_monotonic() {
+        assert_eq!(LogMode::parse("off").unwrap(), LogMode::Off);
+        assert_eq!(LogMode::parse("text").unwrap(), LogMode::Text);
+        assert_eq!(LogMode::parse("json").unwrap(), LogMode::Json);
+        assert!(LogMode::parse("verbose").is_err());
+        let log = RequestLog::new(LogMode::Off);
+        let a = log.next_id();
+        let b = log.next_id();
+        assert!(b > a && a >= 1);
     }
 
     #[test]

@@ -56,6 +56,13 @@ pub struct Metrics {
     error_requests: AtomicU64,
     shed: AtomicU64,
     deadline_expired: AtomicU64,
+    submitted: AtomicU64,
+    panics_caught: AtomicU64,
+    panicked_requests: AtomicU64,
+    worker_restarts: AtomicU64,
+    quarantined: AtomicU64,
+    breaker_rejected: AtomicU64,
+    refused: AtomicU64,
     queue_depth: AtomicUsize,
     queue_peak: AtomicUsize,
     workers: Vec<WorkerStats>,
@@ -76,6 +83,13 @@ impl Metrics {
             error_requests: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             deadline_expired: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            panics_caught: AtomicU64::new(0),
+            panicked_requests: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            breaker_rejected: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
             queue_depth: AtomicUsize::new(0),
             queue_peak: AtomicUsize::new(0),
             workers: (0..workers).map(|_| WorkerStats::default()).collect(),
@@ -104,6 +118,67 @@ impl Metrics {
     /// before any worker drained it (it was never executed).
     pub fn on_deadline_expired(&self) {
         self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a submission attempt (any submit past group resolution,
+    /// whatever its eventual outcome) — the left-hand side of the
+    /// conservation identity checked by
+    /// [`MetricsSnapshot::unaccounted`].
+    pub fn on_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a submit refused outright (pool shut down or degraded).
+    pub fn on_refused(&self) {
+        self.refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a submit refused because its payload is quarantined.
+    pub fn on_quarantined(&self) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a submit refused by an open circuit breaker.
+    pub fn on_breaker_rejected(&self) {
+        self.breaker_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one worker restart — either an in-thread runtime rebuild
+    /// after a caught panic, or a supervisor respawn of a wedged/dead
+    /// worker.
+    pub fn on_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one drained batch whose execution **panicked** (caught by
+    /// the supervision layer). Like [`Metrics::on_batch_error`] this is
+    /// executed work — it counts toward `total_batches`, the histogram,
+    /// and the worker's busy time — but its requests land in
+    /// `panicked_requests`, and the batch in `panics_caught`.
+    pub fn on_batch_panic(&self, worker: usize, batch_size: usize, busy: Duration) {
+        self.total_batches.fetch_add(1, Ordering::Relaxed);
+        self.panics_caught.fetch_add(1, Ordering::Relaxed);
+        self.panicked_requests
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+        *self
+            .batch_hist
+            .lock()
+            .unwrap()
+            .entry(batch_size)
+            .or_default() += 1;
+        if let Some(w) = self.workers.get(worker) {
+            w.busy_ns
+                .fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+            w.batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record `n` queued requests answered with an error by the
+    /// supervisor's dead-pool drain (degraded, zero live workers). They
+    /// were never executed, so no batch counters move — only the
+    /// panicked-request total, keeping the conservation identity exact.
+    pub fn on_drain_failed(&self, n: usize) {
+        self.panicked_requests.fetch_add(n as u64, Ordering::Relaxed);
     }
 
     /// Record one drained batch executed by `worker`.
@@ -178,6 +253,16 @@ impl Metrics {
             error_requests: errors,
             shed_total: self.shed.load(Ordering::Relaxed),
             deadline_expired_total: self.deadline_expired.load(Ordering::Relaxed),
+            submitted_total: self.submitted.load(Ordering::Relaxed),
+            panics_caught_total: self.panics_caught.load(Ordering::Relaxed),
+            panicked_requests_total: self.panicked_requests.load(Ordering::Relaxed),
+            worker_restarts_total: self.worker_restarts.load(Ordering::Relaxed),
+            quarantined_total: self.quarantined.load(Ordering::Relaxed),
+            breaker_rejected_total: self.breaker_rejected.load(Ordering::Relaxed),
+            refused_total: self.refused.load(Ordering::Relaxed),
+            workers_alive: self.workers.len(),
+            degraded: false,
+            breakers: Vec::new(),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             queue_peak: self.queue_peak.load(Ordering::Relaxed),
             p50_us: percentile(&lat, 50.0),
@@ -209,6 +294,20 @@ impl Metrics {
             uptime,
         }
     }
+}
+
+/// One model group's circuit-breaker state at snapshot time (injected
+/// by [`WorkerPool::metrics`](super::pool::WorkerPool::metrics), like
+/// the END statistics).
+#[derive(Clone, Debug)]
+pub struct BreakerStat {
+    /// Router key of the group.
+    pub group: String,
+    /// Human-readable state: `closed`, `open`, or `half-open`.
+    pub state: &'static str,
+    /// Numeric state for the Prometheus gauge: 0 closed, 1 open,
+    /// 2 half-open.
+    pub code: u8,
 }
 
 /// One worker's counters at snapshot time.
@@ -246,6 +345,36 @@ pub struct MetricsSnapshot {
     /// worker drained them — answered with a typed error, never
     /// executed (the HTTP edge answers these with 504).
     pub deadline_expired_total: u64,
+    /// Submission attempts past group resolution, whatever their
+    /// eventual outcome — the left-hand side of the conservation
+    /// identity ([`MetricsSnapshot::unaccounted`]).
+    pub submitted_total: u64,
+    /// Batches whose execution panicked; the panic was caught and every
+    /// member answered with a typed `WorkerPanic` error.
+    pub panics_caught_total: u64,
+    /// Requests answered with `WorkerPanic` (batch members of caught
+    /// panics, plus any drained by a degraded pool with no live
+    /// workers).
+    pub panicked_requests_total: u64,
+    /// Worker restarts: in-thread runtime rebuilds after a caught panic
+    /// plus supervisor respawns of wedged/dead workers.
+    pub worker_restarts_total: u64,
+    /// Submits refused because the exact payload already killed its
+    /// worker too many times (HTTP 422).
+    pub quarantined_total: u64,
+    /// Submits refused by an open per-group circuit breaker (HTTP 503).
+    pub breaker_rejected_total: u64,
+    /// Submits refused outright: pool shut down or degraded (HTTP 503).
+    pub refused_total: u64,
+    /// Worker threads alive at the supervisor's last poll (injected by
+    /// the pool; defaults to the configured worker count).
+    pub workers_alive: usize,
+    /// Restart budget exhausted — the pool refuses new work and only
+    /// drains (injected by the pool).
+    pub degraded: bool,
+    /// Per-group circuit-breaker states (injected by the pool; empty
+    /// for a bare registry).
+    pub breakers: Vec<BreakerStat>,
     /// Requests currently waiting in the shared queue.
     pub queue_depth: usize,
     /// Highest queue depth observed.
@@ -298,6 +427,24 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Conservation check: every submission attempt must end in exactly
+    /// one terminal bucket. Returns `submitted_total` minus the sum of
+    /// the buckets (served + errored + panicked + shed +
+    /// deadline-expired + quarantined + breaker-rejected + refused);
+    /// non-zero only transiently, while submits are still in flight or
+    /// queued (subtract `queue_depth` for a racing pool).
+    pub fn unaccounted(&self) -> i64 {
+        self.submitted_total as i64
+            - (self.total_requests
+                + self.error_requests
+                + self.panicked_requests_total
+                + self.shed_total
+                + self.deadline_expired_total
+                + self.quarantined_total
+                + self.breaker_rejected_total
+                + self.refused_total) as i64
+    }
+
     /// Fraction of all output pixels served from §3.4 reuse buffers
     /// instead of recomputed (0 when no native inference ran).
     pub fn reuse_fraction(&self) -> f64 {
@@ -346,6 +493,17 @@ impl MetricsSnapshot {
                 ])
             })
             .collect();
+        let breakers: Vec<Json> = self
+            .breakers
+            .iter()
+            .map(|b| {
+                obj(vec![
+                    ("group", Json::Str(b.group.clone())),
+                    ("state", Json::Str(b.state.to_string())),
+                    ("code", num(b.code as f64)),
+                ])
+            })
+            .collect();
         let mut top: Vec<(&str, Json)> = vec![
             ("total_requests", num(self.total_requests as f64)),
             ("total_batches", num(self.total_batches as f64)),
@@ -356,6 +514,25 @@ impl MetricsSnapshot {
                 "deadline_expired_total",
                 num(self.deadline_expired_total as f64),
             ),
+            ("submitted_total", num(self.submitted_total as f64)),
+            ("panics_caught_total", num(self.panics_caught_total as f64)),
+            (
+                "panicked_requests_total",
+                num(self.panicked_requests_total as f64),
+            ),
+            (
+                "worker_restarts_total",
+                num(self.worker_restarts_total as f64),
+            ),
+            ("quarantined_total", num(self.quarantined_total as f64)),
+            (
+                "breaker_rejected_total",
+                num(self.breaker_rejected_total as f64),
+            ),
+            ("refused_total", num(self.refused_total as f64)),
+            ("workers_alive", num(self.workers_alive as f64)),
+            ("degraded", Json::Bool(self.degraded)),
+            ("breakers", arr(breakers)),
             ("queue_depth", num(self.queue_depth as f64)),
             ("queue_peak", num(self.queue_peak as f64)),
             ("p50_us", num(self.p50_us)),
@@ -435,6 +612,74 @@ impl MetricsSnapshot {
             "Queued requests reaped unexecuted because their deadline expired.",
             self.deadline_expired_total,
         );
+        counter(
+            &mut out,
+            "submitted_total",
+            "Submission attempts past group resolution, whatever the outcome.",
+            self.submitted_total,
+        );
+        counter(
+            &mut out,
+            "panics_caught_total",
+            "Batches whose execution panicked (caught, batch answered with typed errors).",
+            self.panics_caught_total,
+        );
+        counter(
+            &mut out,
+            "panicked_requests_total",
+            "Requests answered with a typed WorkerPanic error.",
+            self.panicked_requests_total,
+        );
+        counter(
+            &mut out,
+            "worker_restarts_total",
+            "Worker restarts: in-thread runtime rebuilds plus supervisor respawns.",
+            self.worker_restarts_total,
+        );
+        counter(
+            &mut out,
+            "quarantined_total",
+            "Submits refused because the payload repeatedly killed its worker.",
+            self.quarantined_total,
+        );
+        counter(
+            &mut out,
+            "breaker_rejected_total",
+            "Submits refused by an open per-group circuit breaker.",
+            self.breaker_rejected_total,
+        );
+        counter(
+            &mut out,
+            "refused_total",
+            "Submits refused outright (pool shut down or degraded).",
+            self.refused_total,
+        );
+        let _ = writeln!(
+            out,
+            "# HELP usefuse_workers_alive Worker threads alive at the supervisor's last poll."
+        );
+        let _ = writeln!(out, "# TYPE usefuse_workers_alive gauge");
+        let _ = writeln!(out, "usefuse_workers_alive {}", self.workers_alive);
+        let _ = writeln!(
+            out,
+            "# HELP usefuse_degraded 1 once the restart budget is exhausted and the pool only drains."
+        );
+        let _ = writeln!(out, "# TYPE usefuse_degraded gauge");
+        let _ = writeln!(out, "usefuse_degraded {}", u8::from(self.degraded));
+        if !self.breakers.is_empty() {
+            let _ = writeln!(
+                out,
+                "# HELP usefuse_breaker_state Circuit-breaker state per model group (0 closed, 1 open, 2 half-open)."
+            );
+            let _ = writeln!(out, "# TYPE usefuse_breaker_state gauge");
+            for b in &self.breakers {
+                let _ = writeln!(
+                    out,
+                    "usefuse_breaker_state{{group=\"{}\"}} {}",
+                    b.group, b.code
+                );
+            }
+        }
         let _ = writeln!(out, "# HELP usefuse_queue_depth Requests waiting in the shared queue.");
         let _ = writeln!(out, "# TYPE usefuse_queue_depth gauge");
         let _ = writeln!(out, "usefuse_queue_depth {}", self.queue_depth);
@@ -548,6 +793,27 @@ impl std::fmt::Display for MetricsSnapshot {
                 "admission: {} shed at the queue, {} deadline-expired unexecuted",
                 self.shed_total, self.deadline_expired_total
             )?;
+        }
+        if self.panics_caught_total > 0
+            || self.worker_restarts_total > 0
+            || self.quarantined_total > 0
+            || self.breaker_rejected_total > 0
+            || self.degraded
+        {
+            writeln!(
+                f,
+                "supervision: {} panics caught ({} requests), {} worker restarts, \
+                 {} quarantined, {} breaker-rejected{}",
+                self.panics_caught_total,
+                self.panicked_requests_total,
+                self.worker_restarts_total,
+                self.quarantined_total,
+                self.breaker_rejected_total,
+                if self.degraded { " — DEGRADED" } else { "" }
+            )?;
+        }
+        for b in self.breakers.iter().filter(|b| b.code != 0) {
+            writeln!(f, "breaker[{}]: {}", b.group, b.state)?;
         }
         write!(f, "batch sizes:")?;
         for (size, count) in &self.batch_hist {
@@ -857,6 +1123,69 @@ mod tests {
             text.contains("usefuse_latency_us{quantile=\"0.5\"} 150"),
             "{text}"
         );
+    }
+
+    /// Supervision counters accumulate, satisfy the conservation
+    /// identity, and reach all three renderings.
+    #[test]
+    fn supervision_counters_accumulate_and_conserve() {
+        let m = Metrics::new(1, 16);
+        // 10 submits: 4 served, 2 panicked (one batch), 1 errored,
+        // 1 shed, 1 quarantined, 1 breaker-rejected.
+        for _ in 0..10 {
+            m.on_submitted();
+        }
+        m.on_batch(0, 4, true, Duration::from_millis(1));
+        m.on_batch_panic(0, 2, Duration::from_millis(1));
+        m.on_batch_error(0, 1, Duration::from_millis(1));
+        m.on_shed();
+        m.on_quarantined();
+        m.on_breaker_rejected();
+        m.on_worker_restart();
+        let mut s = m.snapshot();
+        assert_eq!(s.submitted_total, 10);
+        assert_eq!(s.panics_caught_total, 1);
+        assert_eq!(s.panicked_requests_total, 2);
+        assert_eq!(s.worker_restarts_total, 1);
+        assert_eq!(s.quarantined_total, 1);
+        assert_eq!(s.breaker_rejected_total, 1);
+        assert_eq!(s.unaccounted(), 0, "every submit in a terminal bucket");
+        // The panicked batch is executed work.
+        assert_eq!(s.total_batches, 3);
+        assert_eq!(s.batch_hist[&2], 1);
+        let text = format!("{s}");
+        assert!(text.contains("supervision: 1 panics caught (2 requests)"), "{text}");
+        s.breakers.push(BreakerStat {
+            group: "lenet".into(),
+            state: "open",
+            code: 1,
+        });
+        s.degraded = true;
+        let text = format!("{s}");
+        assert!(text.contains("DEGRADED"), "{text}");
+        assert!(text.contains("breaker[lenet]: open"), "{text}");
+        let json = crate::util::json::parse(&s.to_json()).expect("valid JSON");
+        assert_eq!(
+            json.get("worker_restarts_total").and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        assert_eq!(json.get("degraded").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(
+            json.get("breakers")
+                .and_then(|b| b.at(0))
+                .and_then(|b| b.get("state"))
+                .and_then(|v| v.as_str()),
+            Some("open")
+        );
+        let prom = s.prometheus();
+        assert!(prom.contains("usefuse_panics_caught_total 1"), "{prom}");
+        assert!(prom.contains("usefuse_worker_restarts_total 1"), "{prom}");
+        assert!(prom.contains("usefuse_quarantined_total 1"), "{prom}");
+        assert!(
+            prom.contains("usefuse_breaker_state{group=\"lenet\"} 1"),
+            "{prom}"
+        );
+        assert!(prom.contains("usefuse_degraded 1"), "{prom}");
     }
 
     #[test]

@@ -9,6 +9,8 @@ pub mod admission;
 pub mod end_stats;
 /// Tile-by-tile fusion-pyramid execution (serial + parallel).
 pub mod executor;
+/// Deterministic fault injection for chaos testing the serving stack.
+pub mod faults;
 /// Hand-rolled HTTP/1.1 front-end over the pool (std TcpListener).
 pub mod http;
 /// Serving metrics: percentiles, queue depth, batch histogram.
@@ -25,12 +27,13 @@ pub use end_stats::{
     activity_from_counters, layer_end_stats, EndConfig, FilterEndStats, LayerEndStats,
 };
 pub use executor::{ExecStats, FusionExecutor};
-pub use http::{HttpConfig, HttpServer, ServeContext};
-pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
+pub use faults::{BatchFault, FaultKind, FaultPlan, FaultRule};
+pub use http::{HttpConfig, HttpServer, LogMode, RequestLog, ServeContext};
+pub use metrics::{BreakerStat, Metrics, MetricsSnapshot, WorkerSnapshot};
 pub use pipeline::{Inference, NativePipeline, PipelineParams};
 pub use pool::{
     native_factory, pipeline_end_source, pipeline_lane_source, pipeline_reuse_source,
     EndCounterSource, LaneStatSource, ModelGroup, PoolConfig, ReuseStatSource, RuntimeFactory,
-    ServeError, SubmitError, WorkerPool, MAX_NATIVE_BATCH,
+    ServeError, SubmitError, SupervisorConfig, WorkerPool, MAX_NATIVE_BATCH,
 };
 pub use service::{InferenceService, Response, ServiceBackend, ServiceConfig};

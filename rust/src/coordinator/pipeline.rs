@@ -21,10 +21,12 @@
 //! [`Network::pipeline_stages`]: crate::nets::Network::pipeline_stages
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::executor::{ExecStats, FusionExecutor};
+use super::faults::FaultPlan;
 use crate::geometry::{FusedConvSpec, PyramidPlan};
 use crate::nets::{ClassifierHead, Network};
 use crate::runtime::engine::{conv2d, EndCounters, EngineKind};
@@ -134,6 +136,10 @@ pub struct NativePipeline {
     /// Lane slots offered by every sliced group formed (the engine's
     /// lane width `64·W` per group).
     lane_slots_total: AtomicU64,
+    /// Optional fault-injection plan (chaos testing): drives `flip=nan`
+    /// stage poisoning and arms the per-stage poison scan. `None` in
+    /// production — the per-stage hot path pays one `Option` check.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl NativePipeline {
@@ -323,6 +329,7 @@ impl NativePipeline {
             reused_pixels: AtomicU64::new(0),
             lane_slots_used: AtomicU64::new(0),
             lane_slots_total: AtomicU64::new(0),
+            faults: None,
         })
     }
 
@@ -337,6 +344,16 @@ impl NativePipeline {
     /// to the serial path). `1` (the default) stays serial.
     pub fn with_threads(mut self, threads: usize) -> NativePipeline {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Attach a fault-injection plan (chaos testing). `flip=nan@stage=S`
+    /// rules write a NaN into stage `S`'s output, and every stage output
+    /// is scanned for non-finite values afterwards so the poison is
+    /// detected at the stage that produced it — a typed error, never
+    /// garbage logits. `None` detaches (the default).
+    pub fn with_faults(mut self, plan: Option<Arc<FaultPlan>>) -> NativePipeline {
+        self.faults = plan;
         self
     }
 
@@ -423,7 +440,7 @@ impl NativePipeline {
             );
         }
         let mut x = image.clone();
-        for stage in &self.stages {
+        for (si, stage) in self.stages.iter().enumerate() {
             let saved = if stage.shortcut.is_some() {
                 Some(x.clone())
             } else {
@@ -452,6 +469,7 @@ impl NativePipeline {
                 // DESIGN.md §Native pipeline).
                 x = x.add(&skip)?.relu();
             }
+            self.poison_check(si, std::slice::from_mut(&mut x))?;
         }
         self.finish(x)
     }
@@ -483,7 +501,7 @@ impl NativePipeline {
             return Ok((Vec::new(), per_image));
         }
         let mut xs: Vec<Tensor> = images.to_vec();
-        for stage in &self.stages {
+        for (si, stage) in self.stages.iter().enumerate() {
             let saved = if stage.shortcut.is_some() {
                 Some(xs.clone())
             } else {
@@ -517,6 +535,7 @@ impl NativePipeline {
                     *x = x.add(&skip)?.relu();
                 }
             }
+            self.poison_check(si, &mut xs)?;
         }
         let results = xs
             .into_iter()
@@ -525,9 +544,48 @@ impl NativePipeline {
         Ok((results, per_image))
     }
 
+    /// Fault-injection hook + poison detector, run once per pipeline
+    /// stage on every image flowing through it. With no plan attached
+    /// this is a single `Option` check. With a plan: `flip=nan` rules
+    /// for this stage write a NaN into the first image's first element,
+    /// then every image's activation is scanned so a poisoned
+    /// intermediate is reported at the stage that produced it instead
+    /// of surfacing as garbage logits three stages later.
+    fn poison_check(&self, stage: usize, xs: &mut [Tensor]) -> Result<()> {
+        let Some(plan) = &self.faults else {
+            return Ok(());
+        };
+        if plan.flip_stage(stage) {
+            if let Some(first) = xs.iter_mut().next() {
+                if let Some(v) = first.data.first_mut() {
+                    *v = f32::NAN;
+                }
+            }
+        }
+        for (img, x) in xs.iter().enumerate() {
+            if let Some(idx) = x.data.iter().position(|v| !v.is_finite()) {
+                bail!(
+                    "{}: poisoned activation: stage {stage} output (image {img}) \
+                     has a non-finite value at element {idx}",
+                    self.net.name
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Classifier head + softmax + argmax over a final feature map.
     fn finish(&self, x: Tensor) -> Result<Inference> {
         let logits = self.head.forward(&x)?;
+        // Always-on hygiene (classes ≪ activations, so this is cheap):
+        // non-finite logits never leave the pipeline as a "successful"
+        // inference.
+        if let Some(idx) = logits.data.iter().position(|v| !v.is_finite()) {
+            bail!(
+                "{}: non-finite logit at class {idx} — upstream numeric poisoning",
+                self.net.name
+            );
+        }
         let probs = logits.softmax().data;
         let class = logits
             .data
@@ -676,6 +734,33 @@ mod tests {
         // Empty batches are a clean no-op.
         let (none, ctrs) = pipe.infer_batch(&[]).expect("empty batch");
         assert!(none.is_empty() && ctrs.is_empty());
+    }
+
+    #[test]
+    fn flip_nan_fault_is_detected_at_its_stage_then_clears() {
+        let net = nets::lenet5();
+        let plan = Arc::new(FaultPlan::parse("flip=nan@stage=1").unwrap());
+        let pipe = NativePipeline::synthetic(&net, EngineKind::F32, 77)
+            .expect("pipeline")
+            .with_faults(Some(Arc::clone(&plan)));
+        let img = nets::random_input(&net.convs[0], 5);
+        // First inference trips the one-shot rule: typed poison error
+        // naming the faulted stage, not garbage logits.
+        let err = pipe.infer(&img).expect_err("poisoned run must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("poisoned activation") && msg.contains("stage 1"), "{msg}");
+        // The rule is spent: the same pipeline now serves logits
+        // bit-identical to a pipeline that never had a plan attached.
+        let clean = NativePipeline::synthetic(&net, EngineKind::F32, 77).expect("clean");
+        let recovered = pipe.infer(&img).expect("post-fault infer");
+        assert_eq!(recovered.logits.data, clean.infer(&img).expect("clean infer").logits.data);
+        // Batched path hits the same detector.
+        let plan2 = Arc::new(FaultPlan::parse("flip=nan@stage=0").unwrap());
+        let batched = NativePipeline::synthetic(&net, EngineKind::F32, 77)
+            .expect("pipeline")
+            .with_faults(Some(plan2));
+        let err = batched.infer_batch(&[img.clone(), img.clone()]).expect_err("batch poisoned");
+        assert!(err.to_string().contains("stage 0"), "{err}");
     }
 
     #[test]

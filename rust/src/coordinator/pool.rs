@@ -17,14 +17,17 @@
 //! utilization are collected in [`metrics`](super::metrics) and exposed
 //! via [`WorkerPool::metrics`].
 
-use std::collections::VecDeque;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::faults::{BatchFault, FaultPlan};
+use super::metrics::{BreakerStat, Metrics, MetricsSnapshot};
 use super::pipeline::NativePipeline;
 use crate::runtime::engine::EndCounters;
 use crate::runtime::{DType, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
@@ -62,6 +65,60 @@ pub struct ModelGroup {
     pub program: String,
 }
 
+/// Supervision / self-healing policy for a pool (see
+/// [`SupervisorConfig::default`] for the production defaults). One extra
+/// [`PoolConfig`] field so every existing construction site keeps
+/// working via `..PoolConfig::new(..)` or `supervisor:
+/// SupervisorConfig::default()`.
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// A worker busy on one batch for longer than this is declared
+    /// wedged: it is superseded (its eventual answers still reach their
+    /// clients) and a replacement is spawned in its slot.
+    pub wedge_timeout: Duration,
+    /// Total supervisor-driven respawns allowed over the pool's
+    /// lifetime. Exhausting it flips the pool to *degraded*: new submits
+    /// are refused with [`SubmitError::Degraded`] (HTTP 503) while any
+    /// surviving workers drain what is already queued. In-thread runtime
+    /// rebuilds after a caught panic do **not** consume this budget —
+    /// crash-looping payloads are bounded by quarantine and the breaker
+    /// instead.
+    pub restart_budget: u32,
+    /// First respawn backoff for a slot; doubles per respawn of that
+    /// slot up to [`backoff_max`](SupervisorConfig::backoff_max).
+    pub backoff_base: Duration,
+    /// Backoff ceiling per slot.
+    pub backoff_max: Duration,
+    /// Consecutive batch failures (panic or execution error) that open a
+    /// model group's circuit breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker refuses submits before letting one
+    /// half-open probe request through.
+    pub breaker_cooldown: Duration,
+    /// Times a payload fingerprint may ride a panicking batch before
+    /// submits of that payload are refused with
+    /// [`SubmitError::Quarantined`] (HTTP 422).
+    pub quarantine_threshold: u32,
+    /// Optional deterministic fault-injection plan (chaos testing); the
+    /// hot path pays one `Option` check when `None`.
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            wedge_timeout: Duration::from_secs(10),
+            restart_budget: 8,
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_millis(500),
+            quarantine_threshold: 2,
+            faults: None,
+        }
+    }
+}
+
 /// Pool configuration (see [`PoolConfig::new`] for defaults).
 #[derive(Clone)]
 pub struct PoolConfig {
@@ -93,6 +150,9 @@ pub struct PoolConfig {
     /// [`MAX_NATIVE_BATCH`], which caps *images* per stacked batch —
     /// this is *output pixels* per digit step inside one engine run.
     pub lane_width: Option<usize>,
+    /// Self-healing policy: wedge detection, restart budget, circuit
+    /// breaker, quarantine, and optional fault injection.
+    pub supervisor: SupervisorConfig,
 }
 
 impl PoolConfig {
@@ -110,6 +170,7 @@ impl PoolConfig {
             reuse_source: None,
             lane_source: None,
             lane_width: None,
+            supervisor: SupervisorConfig::default(),
         }
     }
 }
@@ -266,6 +327,24 @@ pub enum SubmitError {
         /// The groups this pool serves.
         known: Vec<String>,
     },
+    /// This exact payload has killed its worker
+    /// [`quarantine_threshold`](SupervisorConfig::quarantine_threshold)
+    /// times and is refused outright (HTTP 422) instead of being retried
+    /// forever.
+    Quarantined {
+        /// Panicking batches this payload has ridden so far.
+        kills: u32,
+    },
+    /// The group's circuit breaker is open (or a half-open probe is
+    /// already in flight): recent batches failed consecutively and the
+    /// pool is backing off (HTTP 503).
+    BreakerOpen {
+        /// The group whose breaker refused the submit.
+        group: String,
+    },
+    /// The supervisor's restart budget is exhausted: the pool only
+    /// drains what is already queued and refuses new work (HTTP 503).
+    Degraded,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -278,6 +357,16 @@ impl std::fmt::Display for SubmitError {
             SubmitError::ShutDown => write!(f, "pool is shut down"),
             SubmitError::UnknownGroup { group, known } => {
                 write!(f, "unknown model group '{group}' (serving: {known:?})")
+            }
+            SubmitError::Quarantined { kills } => write!(
+                f,
+                "payload quarantined after killing its worker {kills} times"
+            ),
+            SubmitError::BreakerOpen { group } => {
+                write!(f, "circuit breaker open for model group '{group}'")
+            }
+            SubmitError::Degraded => {
+                write!(f, "pool degraded: worker restart budget exhausted")
             }
         }
     }
@@ -302,6 +391,11 @@ pub enum ServeError {
     },
     /// The batch the request rode in failed to execute.
     Execution(String),
+    /// The batch the request rode in **panicked**; the panic was caught,
+    /// the worker rebuilt its runtime, and every batch member got this
+    /// typed answer instead of a hung channel (counted in
+    /// [`panicked_requests_total`](super::metrics::MetricsSnapshot::panicked_requests_total)).
+    WorkerPanic(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -312,6 +406,7 @@ impl std::fmt::Display for ServeError {
                 "deadline expired after {queued_for:?} in queue (request was never executed)"
             ),
             ServeError::Execution(msg) => f.write_str(msg),
+            ServeError::WorkerPanic(msg) => f.write_str(msg),
         }
     }
 }
@@ -362,6 +457,119 @@ struct QueueState {
     closed: bool,
 }
 
+/// Per-worker-slot supervision state. A *slot* outlives any single
+/// thread occupying it: a wedged thread is superseded by bumping
+/// `epoch` (the zombie answers its in-flight batch, then exits on the
+/// epoch check) and a replacement thread takes over the slot.
+struct WorkerSlot {
+    /// Monotonic ms timestamp ([`Shared::now_ms`]) stamped when the
+    /// occupant starts a batch, cleared to 0 when it finishes — the
+    /// heartbeat the supervisor compares against the wedge timeout.
+    busy_since_ms: AtomicU64,
+    /// Supersession counter; a worker whose spawn epoch no longer
+    /// matches exits instead of taking more work.
+    epoch: AtomicU64,
+    /// 1-based batch ordinal for this slot (shared across respawns so
+    /// `--faults 'panic@worker=0,batch=2'` stays deterministic).
+    batches: AtomicU64,
+}
+
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Per-model-group circuit breaker: closed → open after
+/// [`SupervisorConfig::breaker_threshold`] consecutive batch failures →
+/// half-open (one probe admitted per cooldown) → closed again on any
+/// batch success.
+struct Breaker {
+    state: AtomicU8,
+    fails: AtomicU32,
+    /// When the breaker last opened (or last released a probe), in
+    /// [`Shared::now_ms`] time.
+    since_ms: AtomicU64,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker {
+            state: AtomicU8::new(BREAKER_CLOSED),
+            fails: AtomicU32::new(0),
+            since_ms: AtomicU64::new(0),
+        }
+    }
+
+    /// May this submit proceed? An open breaker past its cooldown admits
+    /// exactly one CAS-winning probe (transitioning to half-open); a
+    /// half-open breaker whose probe never reported (e.g. reaped by a
+    /// deadline) releases another probe per cooldown.
+    fn admit(&self, now_ms: u64, cooldown_ms: u64) -> bool {
+        match self.state.load(Ordering::Acquire) {
+            BREAKER_OPEN => {
+                let since = self.since_ms.load(Ordering::Acquire);
+                now_ms.saturating_sub(since) >= cooldown_ms
+                    && self
+                        .state
+                        .compare_exchange(
+                            BREAKER_OPEN,
+                            BREAKER_HALF_OPEN,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    && {
+                        self.since_ms.store(now_ms, Ordering::Release);
+                        true
+                    }
+            }
+            BREAKER_HALF_OPEN => {
+                let since = self.since_ms.load(Ordering::Acquire);
+                now_ms.saturating_sub(since) >= cooldown_ms
+                    && self
+                        .since_ms
+                        .compare_exchange(since, now_ms, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+            }
+            _ => true,
+        }
+    }
+
+    /// Any successful batch closes the breaker and clears the
+    /// consecutive-failure streak.
+    fn on_success(&self) {
+        self.fails.store(0, Ordering::Release);
+        self.state.store(BREAKER_CLOSED, Ordering::Release);
+    }
+
+    /// A failed batch extends the streak; at `threshold` (or on any
+    /// failed half-open probe) the breaker opens.
+    fn on_failure(&self, now_ms: u64, threshold: u32) {
+        if self.state.load(Ordering::Acquire) == BREAKER_HALF_OPEN {
+            self.fails.store(0, Ordering::Release);
+            self.since_ms.store(now_ms, Ordering::Release);
+            self.state.store(BREAKER_OPEN, Ordering::Release);
+            return;
+        }
+        let streak = self.fails.fetch_add(1, Ordering::AcqRel) + 1;
+        if streak >= threshold && self.state.load(Ordering::Acquire) == BREAKER_CLOSED {
+            self.since_ms.store(now_ms, Ordering::Release);
+            self.state.store(BREAKER_OPEN, Ordering::Release);
+        }
+    }
+
+    fn state_code(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    fn state_name(&self) -> &'static str {
+        match self.state_code() {
+            BREAKER_OPEN => "open",
+            BREAKER_HALF_OPEN => "half-open",
+            _ => "closed",
+        }
+    }
+}
+
 struct Shared {
     state: Mutex<QueueState>,
     not_empty: Condvar,
@@ -374,6 +582,26 @@ struct Shared {
     reuse_source: Option<ReuseStatSource>,
     lane_source: Option<LaneStatSource>,
     lane_width: Option<usize>,
+    sup: SupervisorConfig,
+    /// One slot per configured worker.
+    slots: Vec<WorkerSlot>,
+    /// One breaker per model group (same indexing as `groups`).
+    breakers: Vec<Breaker>,
+    /// Payload fingerprint → number of panicking batches it rode.
+    quarantine: Mutex<HashMap<u64, u32>>,
+    /// Entry count of `quarantine`; lets the submit hot path skip both
+    /// the hash and the lock while nothing has ever panicked.
+    suspects: AtomicUsize,
+    /// Restart budget exhausted: refuse new submits, drain what's left.
+    degraded: AtomicBool,
+    /// Live worker threads as last observed by the supervisor.
+    workers_alive: AtomicUsize,
+    /// Base for [`Shared::now_ms`] heartbeat timestamps.
+    t0: Instant,
+    /// Supervisor parking lot: flag flips true at close; the condvar
+    /// doubles as the poll-interval timer.
+    sup_gate: Mutex<bool>,
+    sup_cvar: Condvar,
 }
 
 impl Shared {
@@ -381,21 +609,60 @@ impl Shared {
         self.state.lock().unwrap().closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
+        *self.sup_gate.lock().unwrap() = true;
+        self.sup_cvar.notify_all();
     }
+
+    /// Monotonic milliseconds since pool start, never 0 (0 means "idle"
+    /// in the heartbeat slot).
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64 + 1
+    }
+
+    /// Stamp a heartbeat for slot `idx`, but only while the caller is
+    /// still the slot's current occupant — a superseded zombie must not
+    /// overwrite its replacement's heartbeat.
+    fn heartbeat(&self, idx: usize, my_epoch: u64, value: u64) {
+        let slot = &self.slots[idx];
+        if slot.epoch.load(Ordering::Acquire) == my_epoch {
+            slot.busy_since_ms.store(value, Ordering::Release);
+        }
+    }
+}
+
+/// FNV-1a over a request's group and exact f32 payload bits — the
+/// quarantine identity for "the same request again".
+fn fingerprint(gid: usize, image: &Tensor) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut step = |b: u64| {
+        h ^= b;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    step(gid as u64);
+    step(image.data.len() as u64);
+    for v in &image.data {
+        step(v.to_bits() as u64);
+    }
+    h
 }
 
 /// Handle to a running worker pool. [`WorkerPool::shutdown`] (or a
 /// drop) stops intake, drains the queue, and joins the workers.
+///
+/// The worker `JoinHandle`s live with the **supervisor thread**, which
+/// polls heartbeats for wedges, respawns dead/wedged workers under the
+/// [`SupervisorConfig`] budget, and joins the whole fleet at shutdown.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl WorkerPool {
     /// Spawn the workers (each builds its runtime via `cfg.factory`
     /// inside its own thread) and return once **all** of them are ready
     /// to serve. If any worker fails to initialize, every worker is shut
-    /// down and the first error is returned.
+    /// down and the first error is returned. A supervisor thread is
+    /// spawned last and owns the worker handles from then on.
     pub fn start(cfg: PoolConfig) -> Result<WorkerPool> {
         if cfg.workers == 0 {
             bail!("pool needs at least one worker");
@@ -421,6 +688,22 @@ impl WorkerPool {
             reuse_source: cfg.reuse_source.clone(),
             lane_source: cfg.lane_source.clone(),
             lane_width: cfg.lane_width,
+            sup: cfg.supervisor.clone(),
+            slots: (0..cfg.workers)
+                .map(|_| WorkerSlot {
+                    busy_since_ms: AtomicU64::new(0),
+                    epoch: AtomicU64::new(0),
+                    batches: AtomicU64::new(0),
+                })
+                .collect(),
+            breakers: cfg.groups.iter().map(|_| Breaker::new()).collect(),
+            quarantine: Mutex::new(HashMap::new()),
+            suspects: AtomicUsize::new(0),
+            degraded: AtomicBool::new(false),
+            workers_alive: AtomicUsize::new(cfg.workers),
+            t0: Instant::now(),
+            sup_gate: Mutex::new(false),
+            sup_cvar: Condvar::new(),
         });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -431,7 +714,7 @@ impl WorkerPool {
             let tx = ready_tx.clone();
             match std::thread::Builder::new()
                 .name(format!("usefuse-worker-{i}"))
-                .spawn(move || worker_loop(i, sh, factory, tx))
+                .spawn(move || worker_loop(i, sh, factory, Some(tx), 0))
             {
                 Ok(h) => handles.push(h),
                 Err(e) => {
@@ -464,9 +747,24 @@ impl WorkerPool {
             }
             return Err(e);
         }
+        let sup_shared = Arc::clone(&shared);
+        let sup_factory = Arc::clone(&cfg.factory);
+        let supervisor = match std::thread::Builder::new()
+            .name("usefuse-supervisor".into())
+            .spawn(move || supervisor_loop(sup_shared, sup_factory, handles))
+        {
+            Ok(h) => h,
+            Err(e) => {
+                // The failed spawn dropped the closure and with it the
+                // worker handles; `closed` makes the detached workers
+                // drain and exit on their own.
+                shared.close();
+                return Err(anyhow!("spawning supervisor: {e}"));
+            }
+        };
         Ok(WorkerPool {
             shared,
-            workers: Mutex::new(handles),
+            supervisor: Mutex::new(Some(supervisor)),
         })
     }
 
@@ -540,6 +838,41 @@ impl WorkerPool {
                 group: group.to_string(),
                 known: self.shared.groups.iter().map(|g| g.name.clone()).collect(),
             })?;
+        // Everything past group resolution is a *submission attempt* for
+        // the conservation identity: submitted == served + errored +
+        // panicked + shed + deadline_expired + quarantined +
+        // breaker_rejected + refused.
+        self.shared.metrics.on_submitted();
+        if self.shared.degraded.load(Ordering::Acquire) {
+            self.shared.metrics.on_refused();
+            return Err(SubmitError::Degraded);
+        }
+        // Quarantine: free while nothing has ever panicked (`suspects`
+        // stays 0 and neither the hash nor the lock is touched).
+        if self.shared.suspects.load(Ordering::Acquire) > 0 {
+            let fp = fingerprint(gid, &image);
+            let kills = self
+                .shared
+                .quarantine
+                .lock()
+                .unwrap()
+                .get(&fp)
+                .copied()
+                .unwrap_or(0);
+            if kills >= self.shared.sup.quarantine_threshold {
+                self.shared.metrics.on_quarantined();
+                return Err(SubmitError::Quarantined { kills });
+            }
+        }
+        if !self.shared.breakers[gid].admit(
+            self.shared.now_ms(),
+            self.shared.sup.breaker_cooldown.as_millis() as u64,
+        ) {
+            self.shared.metrics.on_breaker_rejected();
+            return Err(SubmitError::BreakerOpen {
+                group: group.to_string(),
+            });
+        }
         let (tx, rx) = channel();
         let full = |s: &mut QueueState| !s.closed && s.q.len() >= self.shared.queue_cap;
         let mut st = self.shared.state.lock().unwrap();
@@ -566,7 +899,16 @@ impl WorkerPool {
             }
         }
         if st.closed {
+            self.shared.metrics.on_refused();
             return Err(SubmitError::ShutDown);
+        }
+        if self.shared.degraded.load(Ordering::Acquire) {
+            // Degradation can land while this submitter waited for queue
+            // space; re-check so nothing is queued into a pool that will
+            // never drain it.
+            drop(st);
+            self.shared.metrics.on_refused();
+            return Err(SubmitError::Degraded);
         }
         st.q.push_back(Request {
             group: gid,
@@ -596,12 +938,37 @@ impl WorkerPool {
             (snap.lane_slots_used, snap.lane_slots_total) = src();
         }
         snap.lane_width = self.shared.lane_width;
+        snap.workers_alive = self.shared.workers_alive.load(Ordering::Acquire);
+        snap.degraded = self.shared.degraded.load(Ordering::Acquire);
+        snap.breakers = self
+            .shared
+            .groups
+            .iter()
+            .zip(&self.shared.breakers)
+            .map(|(g, b)| BreakerStat {
+                group: g.name.clone(),
+                state: b.state_name(),
+                code: b.state_code(),
+            })
+            .collect();
         snap
     }
 
     /// Router keys this pool serves, in configuration order.
     pub fn groups(&self) -> Vec<String> {
         self.shared.groups.iter().map(|g| g.name.clone()).collect()
+    }
+
+    /// True once the supervisor's restart budget is exhausted: the pool
+    /// refuses new submits (503 at the edge, `/healthz` degraded) and
+    /// only drains what is already queued.
+    pub fn is_degraded(&self) -> bool {
+        self.shared.degraded.load(Ordering::Acquire)
+    }
+
+    /// Worker threads alive as of the supervisor's last poll.
+    pub fn workers_alive(&self) -> usize {
+        self.shared.workers_alive.load(Ordering::Acquire)
     }
 
     /// Stop accepting requests, finish the queued ones, and join the
@@ -611,10 +978,14 @@ impl WorkerPool {
     /// performs the same sequence.
     pub fn shutdown(&self) {
         // Closing wakes the workers (they drain the queue, answer every
-        // in-flight request, then exit) and every blocked submitter.
+        // in-flight request, then exit), every blocked submitter, and
+        // the supervisor — which joins the worker fleet before exiting
+        // itself. Superseded zombie workers are detached: each has
+        // already been replaced, answers only its own in-flight batch,
+        // and exits on its epoch check without anyone waiting on it.
         self.shared.close();
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
-        for h in handles {
+        let handle = self.supervisor.lock().unwrap().take();
+        if let Some(h) = handle {
             let _ = h.join();
         }
     }
@@ -626,19 +997,39 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(idx: usize, shared: Arc<Shared>, factory: RuntimeFactory, ready: Sender<Result<()>>) {
-    let rt = match factory() {
+fn worker_loop(
+    idx: usize,
+    shared: Arc<Shared>,
+    factory: RuntimeFactory,
+    ready: Option<Sender<Result<()>>>,
+    my_epoch: u64,
+) {
+    let mut rt = match factory() {
         Ok(rt) => {
-            let _ = ready.send(Ok(()));
+            if let Some(tx) = &ready {
+                let _ = tx.send(Ok(()));
+            }
             rt
         }
         Err(e) => {
-            let _ = ready.send(Err(e));
+            match &ready {
+                Some(tx) => {
+                    let _ = tx.send(Err(e));
+                }
+                // A respawned worker has no startup handshake: dying here
+                // is how the supervisor learns the respawn failed (the
+                // thread finishes, the next poll retries under backoff).
+                None => eprintln!("usefuse-worker-{idx}: respawn factory failed: {e}"),
+            }
             return;
         }
     };
     drop(ready);
     loop {
+        // Superseded? The slot already has a replacement; exit quietly.
+        if shared.slots[idx].epoch.load(Ordering::Acquire) != my_epoch {
+            return;
+        }
         // Drain one same-group batch under the lock; execute outside it.
         // Requests whose deadline expired while queued are reaped here —
         // answered with `ServeError::DeadlineExpired`, never executed.
@@ -647,8 +1038,15 @@ fn worker_loop(idx: usize, shared: Arc<Shared>, factory: RuntimeFactory, ready: 
             let batch = loop {
                 st = shared
                     .not_empty
-                    .wait_while(st, |s| s.q.is_empty() && !s.closed)
+                    .wait_while(st, |s| {
+                        s.q.is_empty()
+                            && !s.closed
+                            && shared.slots[idx].epoch.load(Ordering::Relaxed) == my_epoch
+                    })
                     .unwrap();
+                if shared.slots[idx].epoch.load(Ordering::Acquire) != my_epoch {
+                    return; // superseded while parked
+                }
                 if st.q.is_empty() {
                     return; // closed and fully drained
                 }
@@ -692,7 +1090,147 @@ fn worker_loop(idx: usize, shared: Arc<Shared>, factory: RuntimeFactory, ready: 
             shared.not_full.notify_all();
             batch
         };
-        execute_batch(idx, &shared, &rt, batch);
+        let ordinal = shared.slots[idx].batches.fetch_add(1, Ordering::Relaxed) + 1;
+        let fault = match &shared.sup.faults {
+            Some(plan) => plan.on_batch(idx, ordinal),
+            None => BatchFault::default(),
+        };
+        // Heartbeat: busy from here until the batch is answered. The
+        // supervisor reads this to detect a wedge.
+        shared.heartbeat(idx, my_epoch, shared.now_ms());
+        let panicked = execute_batch(idx, &shared, &rt, batch, fault);
+        shared.heartbeat(idx, my_epoch, 0);
+        if panicked {
+            // A panic mid-execution may have left engine scratch state
+            // inconsistent; rebuild the runtime in-thread before taking
+            // more work. Counted as a restart, but *not* against the
+            // supervisor budget (quarantine + breaker bound crash loops).
+            shared.metrics.on_worker_restart();
+            match factory() {
+                Ok(fresh) => rt = fresh,
+                Err(e) => {
+                    // Thread death; the supervisor respawns this slot.
+                    eprintln!("usefuse-worker-{idx}: runtime rebuild failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Supervisor: owns the worker `JoinHandle`s, polls heartbeats at a
+/// fraction of the wedge timeout, supersedes + respawns wedged or dead
+/// workers under the restart budget (exponential per-slot backoff), and
+/// degrades the pool once the budget is spent. Joins the fleet at close.
+fn supervisor_loop(
+    shared: Arc<Shared>,
+    factory: RuntimeFactory,
+    mut handles: Vec<std::thread::JoinHandle<()>>,
+) {
+    let n = handles.len();
+    let wedge_ms = (shared.sup.wedge_timeout.as_millis() as u64).max(1);
+    let poll = Duration::from_millis((wedge_ms / 8).clamp(5, 250));
+    let mut restarts_used: u32 = 0;
+    let mut slot_attempts = vec![0u32; n];
+    let mut slot_next_ok = vec![Instant::now(); n];
+    loop {
+        {
+            let gate = shared.sup_gate.lock().unwrap();
+            if !*gate {
+                let _ = shared.sup_cvar.wait_timeout(gate, poll).unwrap();
+            }
+        }
+        if shared.state.lock().unwrap().closed {
+            for h in handles {
+                let _ = h.join();
+            }
+            shared.workers_alive.store(0, Ordering::Release);
+            return;
+        }
+        let now = Instant::now();
+        let now_ms = shared.now_ms();
+        for i in 0..n {
+            let dead = handles[i].is_finished();
+            let busy = shared.slots[i].busy_since_ms.load(Ordering::Acquire);
+            let wedged = busy != 0 && now_ms.saturating_sub(busy) > wedge_ms;
+            if !(dead || wedged) || now < slot_next_ok[i] {
+                continue;
+            }
+            if restarts_used >= shared.sup.restart_budget {
+                if !shared.degraded.swap(true, Ordering::AcqRel) {
+                    eprintln!(
+                        "usefuse-supervisor: restart budget ({}) exhausted — pool degraded",
+                        shared.sup.restart_budget
+                    );
+                    // Wake blocked submitters so they observe degradation.
+                    shared.not_full.notify_all();
+                }
+                continue;
+            }
+            // Supersede the slot: the old occupant (if merely wedged)
+            // answers its in-flight batch, then exits on the epoch check.
+            let epoch = shared.slots[i].epoch.fetch_add(1, Ordering::AcqRel) + 1;
+            shared.slots[i].busy_since_ms.store(0, Ordering::Release);
+            shared.not_empty.notify_all();
+            restarts_used += 1;
+            shared.metrics.on_worker_restart();
+            slot_attempts[i] += 1;
+            let backoff = shared
+                .sup
+                .backoff_base
+                .saturating_mul(1u32 << (slot_attempts[i] - 1).min(16))
+                .min(shared.sup.backoff_max);
+            slot_next_ok[i] = now + backoff;
+            eprintln!(
+                "usefuse-supervisor: worker {i} {} — respawning (restart {restarts_used}/{}, next backoff {backoff:?})",
+                if dead { "died" } else { "wedged" },
+                shared.sup.restart_budget
+            );
+            let sh = Arc::clone(&shared);
+            let fac = Arc::clone(&factory);
+            match std::thread::Builder::new()
+                .name(format!("usefuse-worker-{i}"))
+                .spawn(move || worker_loop(i, sh, fac, None, epoch))
+            {
+                Ok(h) => {
+                    let old = std::mem::replace(&mut handles[i], h);
+                    if dead {
+                        let _ = old.join();
+                    }
+                    // A wedged (not dead) old occupant is detached: it
+                    // still owes its in-flight clients their answers and
+                    // exits on its own once the batch completes.
+                }
+                Err(e) => {
+                    eprintln!("usefuse-supervisor: respawning worker {i}: {e}");
+                }
+            }
+        }
+        let alive = handles.iter().filter(|h| !h.is_finished()).count();
+        shared.workers_alive.store(alive, Ordering::Release);
+        if alive == 0 && shared.degraded.load(Ordering::Acquire) {
+            drain_dead_pool(&shared);
+        }
+    }
+}
+
+/// A degraded pool with zero live workers can never drain its queue:
+/// answer everything queued with a typed error so no client hangs.
+fn drain_dead_pool(shared: &Shared) {
+    let drained: Vec<Request> = {
+        let mut st = shared.state.lock().unwrap();
+        st.q.drain(..).collect()
+    };
+    if drained.is_empty() {
+        return;
+    }
+    shared.not_full.notify_all();
+    for req in drained {
+        shared.metrics.on_dequeue(1);
+        shared.metrics.on_drain_failed(1);
+        let _ = req.resp.send(Err(ServeError::WorkerPanic(
+            "pool degraded: restart budget exhausted with no live workers".into(),
+        )));
     }
 }
 
@@ -707,7 +1245,16 @@ fn expire_request(shared: &Shared, req: Request) {
     let _ = req.resp.send(Err(ServeError::DeadlineExpired { queued_for }));
 }
 
-fn execute_batch(worker: usize, shared: &Shared, rt: &Runtime, batch: Vec<Request>) {
+/// Execute one drained batch and answer every member. Returns `true` if
+/// the execution **panicked** (caught): the caller rebuilds its runtime
+/// before taking more work.
+fn execute_batch(
+    worker: usize,
+    shared: &Shared,
+    rt: &Runtime,
+    batch: Vec<Request>,
+    fault: BatchFault,
+) -> bool {
     let gid = batch[0].group;
     let group = &shared.groups[gid];
     let bsize = batch.len();
@@ -715,22 +1262,23 @@ fn execute_batch(worker: usize, shared: &Shared, rt: &Runtime, batch: Vec<Reques
     let images: Vec<&Tensor> = batch.iter().map(|r| &r.image).collect();
     // A panicking program (host closure or binding bug) must fail the
     // batch, not kill the worker thread — a dead worker would strand
-    // every queued and future request with no supervision to notice.
+    // every queued and future request. Injected faults run *inside* the
+    // guard: a fault stall holds the heartbeat busy (wedge detection),
+    // a fault panic exercises the real containment path.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if fault.stall_ms > 0 {
+            std::thread::sleep(Duration::from_millis(fault.stall_ms));
+        }
+        if fault.panic {
+            panic!("injected fault: panic (worker {worker})");
+        }
         rt.execute_stacked(&group.program, &images, &[])
-    }))
-    .unwrap_or_else(|payload| {
-        let msg = payload
-            .downcast_ref::<&str>()
-            .map(|s| s.to_string())
-            .or_else(|| payload.downcast_ref::<String>().cloned())
-            .unwrap_or_else(|| "non-string panic payload".to_string());
-        Err(anyhow!("batch execution panicked: {msg}"))
-    });
+    }));
     let exec = t_deq.elapsed();
     match result {
-        Ok(run) => {
+        Ok(Ok(run)) => {
             shared.metrics.on_batch(worker, bsize, run.stacked, exec);
+            shared.breakers[gid].on_success();
             for (req, outs) in batch.into_iter().zip(run.outputs) {
                 let logits = outs
                     .into_iter()
@@ -757,13 +1305,47 @@ fn execute_batch(worker: usize, shared: &Shared, rt: &Runtime, batch: Vec<Reques
                 };
                 let _ = req.resp.send(Ok(resp));
             }
+            false
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             shared.metrics.on_batch_error(worker, bsize, exec);
+            shared.breakers[gid].on_failure(shared.now_ms(), shared.sup.breaker_threshold);
             let msg = format!("{}: {e}", group.program);
             for req in batch {
                 let _ = req.resp.send(Err(ServeError::Execution(msg.clone())));
             }
+            false
+        }
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            shared.metrics.on_batch_panic(worker, bsize, exec);
+            shared.breakers[gid].on_failure(shared.now_ms(), shared.sup.breaker_threshold);
+            // Every payload in a panicking batch picks up one count of
+            // suspicion; at the quarantine threshold its resubmits are
+            // refused at admission with 422 instead of being retried into
+            // another kill. (Batch co-riders share the blame — chaos
+            // tests isolate with max_batch=1 when they need precision.)
+            {
+                let mut q = shared.quarantine.lock().unwrap();
+                for req in &batch {
+                    match q.entry(fingerprint(req.group, &req.image)) {
+                        Entry::Occupied(mut o) => *o.get_mut() += 1,
+                        Entry::Vacant(v) => {
+                            v.insert(1);
+                            shared.suspects.fetch_add(1, Ordering::AcqRel);
+                        }
+                    }
+                }
+            }
+            let msg = format!("{}: batch execution panicked: {msg}", group.program);
+            for req in batch {
+                let _ = req.resp.send(Err(ServeError::WorkerPanic(msg.clone())));
+            }
+            true
         }
     }
 }
@@ -876,5 +1458,171 @@ mod tests {
             ..base
         })
         .is_err());
+    }
+
+    /// Like [`echo_factory`], but the host closure panics whenever
+    /// `data[1] > 0.5` — a deterministic poison payload.
+    fn panicky_factory() -> RuntimeFactory {
+        Arc::new(|| {
+            let mut rt = Runtime::host(Manifest::empty("."));
+            let meta = ProgramMeta {
+                file: std::path::PathBuf::new(),
+                inputs: vec![TensorMeta {
+                    shape: vec![2, 2, 1],
+                    dtype: DType::F32,
+                }],
+                outputs: vec![TensorMeta {
+                    shape: vec![10],
+                    dtype: DType::F32,
+                }],
+                n_runtime_inputs: 1,
+                weights: vec![],
+            };
+            rt.register_host(
+                "echo_infer",
+                meta,
+                Box::new(|ts, _| {
+                    if ts[0].data[1] > 0.5 {
+                        panic!("poison payload");
+                    }
+                    let c = (ts[0].data[0] as usize) % 10;
+                    let mut logits = vec![0.0f32; 10];
+                    logits[c] = 1.0;
+                    Tensor::new(vec![10], logits).map(|t| vec![t])
+                }),
+            );
+            Ok(rt)
+        })
+    }
+
+    fn poison_img(class: usize) -> Tensor {
+        let mut t = img(class);
+        t.data[1] = 1.0;
+        t
+    }
+
+    #[test]
+    fn panic_is_contained_typed_and_survivable() {
+        let cfg = PoolConfig {
+            workers: 1,
+            max_batch: 1,
+            ..PoolConfig::new(
+                vec![ModelGroup {
+                    name: "echo".into(),
+                    program: "echo_infer".into(),
+                }],
+                panicky_factory(),
+            )
+        };
+        let pool = WorkerPool::start(cfg).expect("pool");
+        let rx = pool.classify_async("echo", poison_img(3)).expect("submit");
+        match rx.recv().expect("answered, not hung") {
+            Err(ServeError::WorkerPanic(msg)) => assert!(msg.contains("poison payload")),
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+        // The worker rebuilt its runtime and keeps serving clean payloads.
+        let r = pool.classify("echo", img(7)).expect("post-panic classify");
+        assert_eq!(r.class, 7);
+        let snap = pool.metrics();
+        assert_eq!(snap.panics_caught_total, 1);
+        assert_eq!(snap.panicked_requests_total, 1);
+        assert!(snap.worker_restarts_total >= 1, "in-thread rebuild counted");
+        assert_eq!(snap.total_requests, 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn repeat_offender_payload_is_quarantined() {
+        let cfg = PoolConfig {
+            workers: 1,
+            max_batch: 1,
+            ..PoolConfig::new(
+                vec![ModelGroup {
+                    name: "echo".into(),
+                    program: "echo_infer".into(),
+                }],
+                panicky_factory(),
+            )
+        };
+        let pool = WorkerPool::start(cfg).expect("pool");
+        for _ in 0..2 {
+            let rx = pool.classify_async("echo", poison_img(1)).expect("submit");
+            assert!(matches!(
+                rx.recv().expect("answered"),
+                Err(ServeError::WorkerPanic(_))
+            ));
+        }
+        // Third submit of the same payload: refused at admission.
+        match pool.try_classify("echo", poison_img(1)) {
+            Err(SubmitError::Quarantined { kills }) => assert_eq!(kills, 2),
+            other => panic!("expected Quarantined, got {other:?}"),
+        }
+        // A *different* payload is still admitted (and panics afresh).
+        let rx = pool.classify_async("echo", poison_img(2)).expect("submit");
+        assert!(matches!(
+            rx.recv().expect("answered"),
+            Err(ServeError::WorkerPanic(_))
+        ));
+        let snap = pool.metrics();
+        assert_eq!(snap.quarantined_total, 1);
+        assert_eq!(snap.panics_caught_total, 3);
+        // Conservation: 4 submits = 3 panicked + 1 quarantined.
+        assert_eq!(snap.submitted_total, 4);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn breaker_opens_half_opens_and_closes() {
+        let b = Breaker::new();
+        assert_eq!(b.state_name(), "closed");
+        // Threshold 3, cooldown 100 ms (in now_ms time).
+        for t in 0..3 {
+            assert!(b.admit(t, 100));
+            b.on_failure(t, 3);
+        }
+        assert_eq!(b.state_name(), "open");
+        assert!(!b.admit(50, 100), "open inside cooldown refuses");
+        // Past cooldown: exactly one probe wins.
+        assert!(b.admit(150, 100));
+        assert_eq!(b.state_name(), "half-open");
+        assert!(!b.admit(151, 100), "second probe refused mid-cooldown");
+        // Failed probe re-opens; successful probe closes.
+        b.on_failure(160, 3);
+        assert_eq!(b.state_name(), "open");
+        assert!(b.admit(300, 100));
+        b.on_success();
+        assert_eq!(b.state_name(), "closed");
+        assert!(b.admit(301, 100));
+    }
+
+    #[test]
+    fn fault_plan_panic_is_counted_and_survived() {
+        let plan = Arc::new(FaultPlan::parse("panic@worker=0,batch=1").unwrap());
+        let cfg = PoolConfig {
+            workers: 1,
+            max_batch: 1,
+            supervisor: SupervisorConfig {
+                faults: Some(plan),
+                ..SupervisorConfig::default()
+            },
+            ..PoolConfig::new(
+                vec![ModelGroup {
+                    name: "echo".into(),
+                    program: "echo_infer".into(),
+                }],
+                echo_factory(),
+            )
+        };
+        let pool = WorkerPool::start(cfg).expect("pool");
+        let rx = pool.classify_async("echo", img(4)).expect("submit");
+        match rx.recv().expect("answered") {
+            Err(ServeError::WorkerPanic(msg)) => assert!(msg.contains("injected fault")),
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+        // One-shot fault: batch 2 serves normally.
+        let r = pool.classify("echo", img(4)).expect("recovered");
+        assert_eq!(r.class, 4);
+        assert_eq!(pool.metrics().panics_caught_total, 1);
+        pool.shutdown();
     }
 }

@@ -29,7 +29,7 @@ use anyhow::{anyhow, Result};
 use super::pipeline::NativePipeline;
 use super::pool::{
     artifacts_factory, native_factory, pipeline_end_source, pipeline_lane_source,
-    pipeline_reuse_source, ModelGroup, PoolConfig, WorkerPool,
+    pipeline_reuse_source, ModelGroup, PoolConfig, SupervisorConfig, WorkerPool,
 };
 pub use super::pool::{Response, ServeError};
 use crate::coordinator::metrics::MetricsSnapshot;
@@ -74,6 +74,9 @@ pub struct ServiceConfig {
     /// default; ignored by the artifact backend). Output is
     /// bit-identical either way — off exists for differentials.
     pub native_reuse: bool,
+    /// Supervision layer knobs: wedge timeout, restart budget, circuit
+    /// breaker, quarantine, and the optional fault-injection plan.
+    pub supervisor: SupervisorConfig,
 }
 
 impl Default for ServiceConfig {
@@ -86,6 +89,7 @@ impl Default for ServiceConfig {
             workers: 2,
             backend: ServiceBackend::Artifacts,
             native_reuse: true,
+            supervisor: SupervisorConfig::default(),
         }
     }
 }
@@ -133,6 +137,7 @@ impl InferenceService {
                     reuse_source: None,
                     lane_source: None,
                     lane_width: None,
+                    supervisor: cfg.supervisor.clone(),
                 })?;
                 Ok(InferenceService {
                     pool: Arc::new(pool),
@@ -183,7 +188,9 @@ impl InferenceService {
         cfg: &ServiceConfig,
     ) -> Result<InferenceService> {
         let kind = pipeline.kind();
-        let pipeline = Arc::new(pipeline);
+        // Thread the chaos plan into the pipeline so `flip=nan` stage
+        // faults (and the poison scan that catches them) are armed.
+        let pipeline = Arc::new(pipeline.with_faults(cfg.supervisor.faults.clone()));
         let group = net.name.to_string();
         let program = format!("{group}_infer");
         let pool = WorkerPool::start(PoolConfig {
@@ -200,6 +207,7 @@ impl InferenceService {
             reuse_source: Some(pipeline_reuse_source(&pipeline)),
             lane_source: Some(pipeline_lane_source(&pipeline)),
             lane_width: kind.lanes(),
+            supervisor: cfg.supervisor.clone(),
         })?;
         Ok(InferenceService {
             pool: Arc::new(pool),

@@ -18,8 +18,9 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use usefuse::coordinator::{
-    layer_end_stats, AdmissionConfig, AdmissionController, EndConfig, FusionExecutor, HttpConfig,
-    HttpServer, InferenceService, NativePipeline, PipelineParams, ServeContext, ServiceConfig,
+    layer_end_stats, AdmissionConfig, AdmissionController, EndConfig, FaultPlan, FusionExecutor,
+    HttpConfig, HttpServer, InferenceService, LogMode, NativePipeline, PipelineParams, RequestLog,
+    ServeContext, ServiceConfig, SupervisorConfig,
 };
 use usefuse::geometry::{PyramidPlan, StridePolicy};
 use usefuse::nets;
@@ -325,6 +326,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         OptSpec { name: "input-dim", help: "shrink the net to this input size (native only; 0 = full)", takes_value: true, default: Some("0") },
         OptSpec { name: "ch-div", help: "divide channel counts (native only)", takes_value: true, default: Some("1") },
         OptSpec { name: "seed", help: "synthetic weight seed (native only)", takes_value: true, default: Some("42") },
+        OptSpec { name: "faults", help: "deterministic fault-injection spec, e.g. 'panic@worker=1,batch=3;stall@worker=0,ms=5000' (falls back to USEFUSE_FAULTS)", takes_value: true, default: None },
+        OptSpec { name: "wedge-timeout", help: "ms a worker may sit on one batch before the supervisor replaces it", takes_value: true, default: Some("10000") },
+        OptSpec { name: "log", help: "per-request structured logging: off, text or json (stderr)", takes_value: true, default: Some("off") },
     ];
     let args = Args::parse(argv, &specs)
         .map_err(|e| anyhow!("{e}\n{}", usage("serve", "run the serving demo", &specs)))?;
@@ -333,11 +337,27 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let max_batch = args.get_usize("batch").map_err(|e| anyhow!(e))?.unwrap();
     let reuse = parse_reuse(args.get("reuse").unwrap())?;
     let queue_cap = args.get_usize("queue-cap").map_err(|e| anyhow!(e))?.unwrap();
+    let log_mode = LogMode::parse(args.get("log").unwrap()).map_err(|e| anyhow!(e))?;
+    let wedge_ms = args.get_usize("wedge-timeout").map_err(|e| anyhow!(e))?.unwrap();
+    // CLI spec wins; the USEFUSE_FAULTS environment variable is the
+    // fallback so chaos CI can arm faults without touching the command.
+    let faults = match args.get("faults") {
+        Some(spec) => Some(Arc::new(FaultPlan::parse(spec).map_err(|e| anyhow!(e))?)),
+        None => FaultPlan::from_env(),
+    };
+    if let Some(plan) = &faults {
+        println!("chaos: fault plan armed with {} rule(s)", plan.rules().len());
+    }
     let cfg = ServiceConfig {
         workers,
         max_batch,
         queue_cap: queue_cap.max(1),
         native_reuse: reuse,
+        supervisor: SupervisorConfig {
+            wedge_timeout: Duration::from_millis(wedge_ms.max(1) as u64),
+            faults,
+            ..SupervisorConfig::default()
+        },
         ..Default::default()
     };
     if args.get("http").is_some() && args.get("native").is_none() {
@@ -402,7 +422,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             if let Some(addr) = args.get("http") {
                 // Same shape NativePipeline::infer validates against.
                 let c0 = &net.convs[0];
-                return run_http(svc, addr, vec![c0.ifm, c0.ifm, c0.n_in]);
+                return run_http(svc, addr, vec![c0.ifm, c0.ifm, c0.n_in], log_mode);
             }
             // Seeded demo traffic.
             let mut pending = Vec::with_capacity(requests);
@@ -451,7 +471,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 /// graceful drain sequence — stop admitting (503 + Retry-After), stop
 /// accepting connections, flush the queue, join the workers, and print
 /// the final metrics dump.
-fn run_http(svc: InferenceService, addr: &str, input_shape: Vec<usize>) -> Result<()> {
+fn run_http(
+    svc: InferenceService,
+    addr: &str,
+    input_shape: Vec<usize>,
+    log_mode: LogMode,
+) -> Result<()> {
     let group = svc.group().to_string();
     let admission = Arc::new(AdmissionController::new(svc.pool(), AdmissionConfig::default()));
     let server = HttpServer::start(
@@ -463,6 +488,7 @@ fn run_http(svc: InferenceService, addr: &str, input_shape: Vec<usize>) -> Resul
             admission: Arc::clone(&admission),
             group: group.clone(),
             input_shape,
+            log: Arc::new(RequestLog::new(log_mode)),
         },
     )?;
     println!(

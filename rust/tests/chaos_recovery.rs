@@ -1,0 +1,458 @@
+//! Chaos suite for the supervised self-healing worker pool (ISSUE 10):
+//! deterministic fault injection ([`FaultPlan`]) driven through real
+//! pools, proving the recovery story end to end:
+//!
+//! - an injected worker panic is contained: the victim request gets a
+//!   typed [`ServeError::WorkerPanic`] (never a hang), the pool keeps
+//!   serving, and post-recovery logits are **bit-identical** to an
+//!   unfaulted run;
+//! - an injected stall wedges a worker past `wedge_timeout`: the
+//!   supervisor supersedes it, a replacement serves new traffic while
+//!   the zombie finishes its in-flight batch, and the pool returns to
+//!   full worker strength;
+//! - consecutive failures open the per-group circuit breaker, which
+//!   half-opens after the cooldown, probes, and closes on success —
+//!   on schedule;
+//! - a pool whose restart budget is exhausted with no live workers
+//!   degrades: queued work is error-drained (no client hangs) and new
+//!   submits get [`SubmitError::Degraded`];
+//! - graceful shutdown completes during active recovery: every
+//!   submitted request receives a terminal response;
+//! - the metrics conservation identity
+//!   (`submitted == answered-by-some-bucket`) holds across randomized
+//!   chaos schedules ([`MetricsSnapshot::unaccounted`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::bail;
+
+use usefuse::coordinator::pipeline::NativePipeline;
+use usefuse::coordinator::pool::{
+    native_factory, ModelGroup, PoolConfig, RuntimeFactory, ServeError, SubmitError,
+    SupervisorConfig, WorkerPool,
+};
+use usefuse::coordinator::FaultPlan;
+use usefuse::nets;
+use usefuse::runtime::{DType, EngineKind, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
+
+// ---------------------------------------------------------------- helpers
+
+/// Host factory: one-hot echo at `data[0]`, panicking on the poison
+/// marker `data[1] > 0.5`. The panic happens inside program execution —
+/// exactly where a binding bug or poisoned payload would strike.
+fn panicky_factory() -> RuntimeFactory {
+    Arc::new(|| {
+        let mut rt = Runtime::host(Manifest::empty("."));
+        rt.register_host(
+            "chaos_infer",
+            ProgramMeta {
+                file: std::path::PathBuf::new(),
+                inputs: vec![TensorMeta {
+                    shape: vec![2, 2, 1],
+                    dtype: DType::F32,
+                }],
+                outputs: vec![TensorMeta {
+                    shape: vec![10],
+                    dtype: DType::F32,
+                }],
+                n_runtime_inputs: 1,
+                weights: vec![],
+            },
+            Box::new(|ts, _| {
+                if ts[0].data[1] > 0.5 {
+                    panic!("poison payload");
+                }
+                let c = (ts[0].data[0] as usize) % 10;
+                let mut logits = vec![0.0f32; 10];
+                logits[c] = 1.0;
+                Tensor::new(vec![10], logits).map(|t| vec![t])
+            }),
+        );
+        Ok(rt)
+    })
+}
+
+fn img(class: usize) -> Tensor {
+    let mut t = Tensor::zeros(vec![2, 2, 1]);
+    t.data[0] = class as f32;
+    t
+}
+
+fn poison(class: usize) -> Tensor {
+    let mut t = img(class);
+    t.data[1] = 1.0;
+    t
+}
+
+fn chaos_group() -> Vec<ModelGroup> {
+    vec![ModelGroup {
+        name: "chaos".into(),
+        program: "chaos_infer".into(),
+    }]
+}
+
+/// One-worker, one-request-batches chaos pool with the given
+/// supervision policy.
+fn chaos_pool(workers: usize, sup: SupervisorConfig) -> WorkerPool {
+    WorkerPool::start(PoolConfig {
+        workers,
+        max_batch: 1,
+        queue_cap: 64,
+        supervisor: sup,
+        ..PoolConfig::new(chaos_group(), panicky_factory())
+    })
+    .expect("chaos pool")
+}
+
+/// Poll `pred` up to `timeout`, sleeping 2 ms between probes.
+fn wait_for(timeout: Duration, what: &str, mut pred: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < timeout, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+// ------------------------------------------------------------------ tests
+
+/// An injected `panic@worker=0,batch=1` fault against the **native
+/// LeNet-5 pipeline**: the faulted request is answered with a typed
+/// `WorkerPanic`, and the recovered pool's logits for the same image are
+/// bit-identical to a pipeline that was never faulted.
+#[test]
+fn injected_panic_is_contained_and_recovery_is_bit_identical() {
+    let net = nets::lenet5();
+    let pipeline =
+        Arc::new(NativePipeline::synthetic(&net, EngineKind::F32, 0xC0DE).expect("pipeline"));
+    let plan = Arc::new(FaultPlan::parse("panic@worker=0,batch=1").expect("plan"));
+    let pool = WorkerPool::start(PoolConfig {
+        workers: 1,
+        max_batch: 1,
+        supervisor: SupervisorConfig {
+            faults: Some(Arc::clone(&plan)),
+            ..SupervisorConfig::default()
+        },
+        ..PoolConfig::new(
+            vec![ModelGroup {
+                name: "lenet5".into(),
+                program: "lenet5_infer".into(),
+            }],
+            native_factory(&pipeline),
+        )
+    })
+    .expect("native chaos pool");
+    let image = nets::random_input(&net.convs[0], 0xBEEF);
+
+    // Batch 1 trips the injected panic: typed error, not a hang.
+    let err = pool.classify("lenet5", image.clone()).expect_err("faulted batch must fail");
+    let msg = err.to_string();
+    assert!(msg.contains("injected fault"), "{msg}");
+
+    // Batch 2 is served by the recovered worker — bit-identical to an
+    // unfaulted single-shot inference on a fresh same-seed pipeline.
+    let clean = NativePipeline::synthetic(&net, EngineKind::F32, 0xC0DE).expect("clean");
+    let want = clean.infer(&image).expect("clean infer");
+    let got = pool.classify("lenet5", image.clone()).expect("post-recovery classify");
+    assert_eq!(got.logits, want.logits.data, "post-recovery logits drifted");
+    assert_eq!(got.class, want.class);
+
+    let snap = pool.metrics();
+    assert_eq!(snap.panics_caught_total, 1);
+    assert_eq!(snap.panicked_requests_total, 1);
+    assert!(snap.worker_restarts_total >= 1, "panic must count a restart");
+    assert_eq!(snap.total_requests, 1, "only the clean batch executed");
+    assert_eq!(plan.rules()[0].fired(), 1, "the fault fired exactly once");
+    assert_eq!(snap.unaccounted(), 0);
+    pool.shutdown();
+}
+
+/// An injected stall wedges the only worker past `wedge_timeout`: the
+/// supervisor replaces it well before the stall ends (new traffic is
+/// served promptly by the replacement), the zombie still answers its
+/// in-flight request, and the pool reports full worker strength.
+#[test]
+fn wedged_worker_is_superseded_within_the_timeout() {
+    const STALL_MS: u64 = 2500;
+    let plan = Arc::new(FaultPlan::parse("stall@worker=0,ms=2500,batch=1").expect("plan"));
+    let pool = chaos_pool(
+        1,
+        SupervisorConfig {
+            wedge_timeout: Duration::from_millis(150),
+            backoff_base: Duration::from_millis(10),
+            faults: Some(plan),
+            ..SupervisorConfig::default()
+        },
+    );
+
+    // The wedge victim: its batch stalls STALL_MS inside execution.
+    let stalled_rx = pool.classify_async("chaos", img(1)).expect("stalled submit");
+
+    // The supervisor must supersede the wedged worker and restore full
+    // strength long before the stall ends.
+    let t0 = Instant::now();
+    wait_for(Duration::from_millis(STALL_MS - 500), "supersession", || {
+        pool.metrics().worker_restarts_total >= 1 && pool.workers_alive() == 1
+    });
+    let detected = t0.elapsed();
+
+    // New traffic is served promptly by the replacement while the
+    // zombie is still sleeping.
+    let r = pool.classify("chaos", img(7)).expect("replacement classify");
+    assert_eq!(r.class, 7);
+    assert!(
+        t0.elapsed() < Duration::from_millis(STALL_MS - 200),
+        "replacement answered only after the stall ended ({detected:?} to detect)"
+    );
+
+    // The zombie finishes its batch and its client still gets the
+    // correct answer — supersession never orphans in-flight work.
+    let stalled = stalled_rx
+        .recv_timeout(Duration::from_millis(2 * STALL_MS))
+        .expect("stalled client hung")
+        .expect("stalled request errored");
+    assert_eq!(stalled.class, 1);
+
+    let snap = pool.metrics();
+    assert!(snap.worker_restarts_total >= 1);
+    assert_eq!(snap.total_requests, 2);
+    assert!(!snap.degraded);
+    assert_eq!(snap.unaccounted(), 0);
+    pool.shutdown();
+}
+
+/// The per-group circuit breaker, driven through a real pool on
+/// schedule: two consecutive panics open it (threshold 2), submits are
+/// refused while open, after the cooldown a half-open probe is admitted,
+/// and its success closes the breaker for normal traffic.
+#[test]
+fn breaker_opens_refuses_probes_and_closes_through_the_pool() {
+    let pool = chaos_pool(
+        1,
+        SupervisorConfig {
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(500),
+            quarantine_threshold: 10, // keep quarantine out of this test
+            ..SupervisorConfig::default()
+        },
+    );
+
+    // Two distinct poison payloads: two consecutive batch panics.
+    for c in [1usize, 2] {
+        let err = pool.classify("chaos", poison(c)).expect_err("poison must fail");
+        assert!(err.to_string().contains("panicked"), "{err}");
+    }
+
+    // Open: immediate refusal with the typed error (cooldown is 500 ms,
+    // so this lands well inside the open window).
+    match pool.try_classify("chaos", img(3)) {
+        Err(SubmitError::BreakerOpen { group }) => assert_eq!(group, "chaos"),
+        other => panic!("expected BreakerOpen, got {other:?}"),
+    }
+    let snap = pool.metrics();
+    assert!(snap.breaker_rejected_total >= 1);
+    assert_eq!(snap.breakers.len(), 1);
+    assert_eq!(snap.breakers[0].state, "open");
+
+    // After the cooldown the breaker half-opens and admits one probe;
+    // its success closes the breaker.
+    std::thread::sleep(Duration::from_millis(600));
+    let probe = pool.classify("chaos", img(4)).expect("half-open probe");
+    assert_eq!(probe.class, 4);
+    wait_for(Duration::from_secs(2), "breaker to close", || {
+        pool.metrics().breakers[0].state == "closed"
+    });
+
+    // Closed: normal traffic flows again.
+    let r = pool.classify("chaos", img(5)).expect("post-close classify");
+    assert_eq!(r.class, 5);
+    assert_eq!(pool.metrics().unaccounted(), 0);
+    pool.shutdown();
+}
+
+/// Restart-budget exhaustion with zero live workers: the pool degrades,
+/// queued work is error-drained with a typed answer (no client hangs),
+/// and new submits are refused with [`SubmitError::Degraded`].
+#[test]
+fn exhausted_budget_degrades_and_error_drains_the_dead_pool() {
+    // Factory that builds exactly one runtime, then fails forever: the
+    // post-panic in-thread rebuild fails → the worker thread dies → the
+    // supervisor (budget 0) cannot respawn → degraded with 0 alive.
+    let builds = Arc::new(AtomicUsize::new(0));
+    let factory: RuntimeFactory = {
+        let builds = Arc::clone(&builds);
+        let inner = panicky_factory();
+        Arc::new(move || {
+            if builds.fetch_add(1, Ordering::SeqCst) >= 1 {
+                bail!("runtime rebuild refused (chaos)");
+            }
+            inner()
+        })
+    };
+    let pool = WorkerPool::start(PoolConfig {
+        workers: 1,
+        max_batch: 1,
+        supervisor: SupervisorConfig {
+            restart_budget: 0,
+            wedge_timeout: Duration::from_millis(200),
+            ..SupervisorConfig::default()
+        },
+        ..PoolConfig::new(chaos_group(), factory)
+    })
+    .expect("pool");
+
+    // Kill the only worker: panic → contained answer → rebuild fails →
+    // thread death.
+    let err = pool.classify("chaos", poison(0)).expect_err("poison must fail");
+    assert!(matches!(err.downcast_ref::<ServeError>(), Some(ServeError::WorkerPanic(_))),
+        "expected WorkerPanic, got {err}");
+
+    wait_for(Duration::from_secs(5), "degradation", || pool.is_degraded());
+    wait_for(Duration::from_secs(5), "worker death", || pool.workers_alive() == 0);
+
+    // Anything already queued (or queued now, racing the degraded
+    // check) is error-drained — answered, never hung.
+    let stranded = pool.classify("chaos", img(1));
+    match stranded {
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(
+                msg.contains("degraded"),
+                "stranded request got an untyped error: {msg}"
+            );
+        }
+        Ok(r) => panic!("dead pool served a request: class {}", r.class),
+    }
+
+    // New bounded-wait submits observe the degraded state up front.
+    wait_for(Duration::from_secs(5), "degraded refusal", || {
+        matches!(pool.try_classify("chaos", img(2)), Err(SubmitError::Degraded))
+    });
+
+    let snap = pool.metrics();
+    assert!(snap.degraded);
+    assert_eq!(snap.workers_alive, 0);
+    assert_eq!(snap.unaccounted(), 0, "degradation leaked a request: {snap:?}");
+    pool.shutdown();
+}
+
+/// Graceful shutdown during an active panic storm: every submitted
+/// request — clean or poisonous, executed or queued — receives a
+/// terminal response. Shutdown never strands a client.
+#[test]
+fn shutdown_during_recovery_answers_every_request() {
+    let pool = chaos_pool(
+        2,
+        SupervisorConfig {
+            quarantine_threshold: 10,
+            ..SupervisorConfig::default()
+        },
+    );
+
+    // Interleave poison (distinct fingerprints) and clean requests.
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        let image = if i % 3 == 0 { poison(i) } else { img(i % 10) };
+        rxs.push((i, pool.classify_async("chaos", image).expect("submit")));
+    }
+    // Close mid-storm: workers drain the queue before exiting.
+    pool.shutdown();
+
+    let mut served = 0u64;
+    let mut panicked = 0u64;
+    for (i, rx) in rxs {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(Ok(r)) => {
+                assert_eq!(r.class, i % 10, "request {i} corrupted");
+                served += 1;
+            }
+            Ok(Err(ServeError::WorkerPanic(msg))) => {
+                assert!(i % 3 == 0, "clean request {i} blamed for a panic: {msg}");
+                panicked += 1;
+            }
+            Ok(Err(e)) => panic!("request {i}: unexpected error {e}"),
+            Err(_) => panic!("request {i} was stranded by shutdown"),
+        }
+    }
+    assert_eq!(served + panicked, 12, "a request vanished");
+    assert_eq!(panicked, 4, "every poison answered with WorkerPanic");
+    let snap = pool.metrics();
+    assert_eq!(snap.total_requests, served);
+    assert_eq!(snap.panicked_requests_total, panicked);
+    assert_eq!(snap.unaccounted(), 0);
+}
+
+/// Conservation property (ISSUE 10 satellite): across randomized chaos
+/// schedules — poison payloads, repeats into quarantine, instant
+/// deadlines, queue floods — every submitted request lands in exactly
+/// one terminal bucket: `unaccounted() == 0` once the dust settles.
+#[test]
+fn failure_counters_are_conserved_across_random_chaos_schedules() {
+    for seed in [3u64, 17, 1009] {
+        let pool = chaos_pool(
+            2,
+            SupervisorConfig {
+                breaker_threshold: 50, // keep the breaker out: quarantine +
+                // deadline + shed buckets are the target here
+                ..SupervisorConfig::default()
+            },
+        );
+        // Deterministic LCG schedule.
+        let mut x = seed;
+        let mut step = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (x >> 33) as usize
+        };
+        let mut rxs = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..60 {
+            match step() % 5 {
+                // Clean request.
+                0 | 1 => rxs.push(pool.classify_async("chaos", img(i % 10)).expect("submit")),
+                // Poison from a small pool of fingerprints: repeats climb
+                // into quarantine (threshold 2).
+                2 => match pool.try_classify("chaos", poison(step() % 3)) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(SubmitError::Quarantined { .. }) => {}
+                    Err(SubmitError::Overloaded { .. }) => shed += 1,
+                    Err(e) => panic!("schedule {seed}: {e}"),
+                },
+                // Already-expired deadline: reaped, never executed.
+                3 => match pool.classify_deadline(
+                    "chaos",
+                    img(i % 10),
+                    Duration::from_millis(50),
+                    Some(Instant::now()),
+                ) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(SubmitError::Overloaded { .. }) => shed += 1,
+                    Err(e) => panic!("schedule {seed}: {e}"),
+                },
+                // Non-blocking burst; sheds when the queue is full.
+                _ => match pool.try_classify("chaos", img(i % 10)) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(SubmitError::Overloaded { .. }) => shed += 1,
+                    Err(e) => panic!("schedule {seed}: {e}"),
+                },
+            }
+        }
+        // Every admitted request must resolve to a terminal answer.
+        for rx in rxs {
+            let _ = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("request stranded mid-chaos");
+        }
+        let snap = pool.metrics();
+        assert_eq!(
+            snap.unaccounted(),
+            0,
+            "schedule {seed} leaked requests: {snap:?}"
+        );
+        assert_eq!(snap.shed_total, shed, "schedule {seed} shed ledger drifted");
+        assert_eq!(snap.queue_depth, 0, "schedule {seed}");
+        pool.shutdown();
+        // Still conserved after the drain.
+        assert_eq!(pool.metrics().unaccounted(), 0, "schedule {seed} post-drain");
+    }
+}

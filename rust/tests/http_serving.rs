@@ -24,10 +24,11 @@ use std::time::{Duration, Instant};
 use usefuse::coordinator::pipeline::NativePipeline;
 use usefuse::coordinator::pool::{
     native_factory, pipeline_end_source, pipeline_lane_source, pipeline_reuse_source, ModelGroup,
-    PoolConfig, RuntimeFactory, WorkerPool,
+    PoolConfig, RuntimeFactory, SupervisorConfig, WorkerPool,
 };
 use usefuse::coordinator::{
-    AdmissionConfig, AdmissionController, HttpConfig, HttpServer, ServeContext,
+    AdmissionConfig, AdmissionController, HttpConfig, HttpServer, LogMode, RequestLog,
+    ServeContext,
 };
 use usefuse::nets;
 use usefuse::runtime::{DType, EngineKind, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
@@ -185,6 +186,7 @@ fn toy_server(
         reuse_source: None,
         lane_source: None,
         lane_width: None,
+        supervisor: SupervisorConfig::default(),
     })
     .expect("pool");
     let ctrl = Arc::new(AdmissionController::new(Arc::new(pool), admission));
@@ -197,6 +199,7 @@ fn toy_server(
             admission: Arc::clone(&ctrl),
             group: "toy".into(),
             input_shape: vec![4, 4, 1],
+            log: Arc::new(RequestLog::new(LogMode::Off)),
         },
     )
     .expect("server");
@@ -244,6 +247,7 @@ fn http_responses_are_bit_identical_to_direct_inference() {
         reuse_source: Some(pipeline_reuse_source(&pipeline)),
         lane_source: Some(pipeline_lane_source(&pipeline)),
         lane_width: kind.lanes(),
+        supervisor: SupervisorConfig::default(),
     })
     .expect("native pool");
     let ctrl = Arc::new(AdmissionController::new(
@@ -257,6 +261,7 @@ fn http_responses_are_bit_identical_to_direct_inference() {
             admission: Arc::clone(&ctrl),
             group: "lenet5".into(),
             input_shape: vec![c0.ifm, c0.ifm, c0.n_in],
+            log: Arc::new(RequestLog::new(LogMode::Off)),
         },
     )
     .expect("server");
@@ -549,6 +554,64 @@ fn malformed_requests_get_4xx_and_the_server_survives() {
     let resp = http(addr, "POST", "/infer/toy", &[], &le_body(&img(4)));
     assert_eq!(resp.status, 200);
     assert_eq!(resp.json().get("class").and_then(|c| c.as_usize()), Some(4));
+    assert!(server.shutdown(Duration::from_secs(10)));
+}
+
+/// Input hygiene at the edge (ISSUE 10 satellite): a payload carrying
+/// NaN or ±Inf is a **semantic** error — well-formed HTTP, poisonous
+/// values — and is rejected with `422` + a typed
+/// `{"code":"non_finite_payload"}` body before admission (it must never
+/// reach a worker). Wrong element counts remain plain `400`s, and every
+/// `/infer` response carries an `X-Request-Id`.
+#[test]
+fn non_finite_payloads_are_rejected_422_before_admission() {
+    let (server, ctrl) = toy_server(1, 4, 16, AdmissionConfig::default());
+    let addr = server.local_addr();
+
+    for (i, poison) in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY].iter().enumerate() {
+        // Raw little-endian path.
+        let mut bad = img(3);
+        bad.data[5] = *poison;
+        let resp = http(addr, "POST", "/infer/toy", &[], &le_body(&bad));
+        assert_eq!(resp.status, 422, "raw poison {i}");
+        let doc = resp.json();
+        assert_eq!(
+            doc.get("code").and_then(|c| c.as_str()),
+            Some("non_finite_payload"),
+            "raw poison {i}"
+        );
+        assert!(
+            doc.get("error").and_then(|e| e.as_str()).unwrap().contains("index 5"),
+            "raw poison {i}: error must name the offending index"
+        );
+        assert!(resp.header("x-request-id").is_some(), "raw poison {i}");
+    }
+    // JSON path: the parser accepts Infinity-producing literals like
+    // 1e999 — the finiteness gate must still catch the decoded value.
+    let resp = http(
+        addr,
+        "POST",
+        "/infer/toy",
+        &[("content-type", "application/json".into())],
+        br#"[0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,1e999]"#,
+    );
+    assert_eq!(resp.status, 422, "JSON overflow-to-Inf payload");
+
+    // Nothing poisonous was admitted or executed.
+    let snap = ctrl.pool().metrics();
+    assert_eq!(snap.total_requests, 0);
+    assert_eq!(snap.submitted_total, 0, "422s must happen before admission");
+
+    // A finite payload still serves, and carries a request id distinct
+    // from the previous one.
+    let a = http(addr, "POST", "/infer/toy", &[], &le_body(&img(2)));
+    let b = http(addr, "POST", "/infer/toy", &[], &le_body(&img(6)));
+    assert_eq!((a.status, b.status), (200, 200));
+    assert_eq!(a.json().get("class").and_then(|c| c.as_usize()), Some(2));
+    assert_eq!(b.json().get("class").and_then(|c| c.as_usize()), Some(6));
+    let ida: u64 = a.header("x-request-id").expect("id a").parse().expect("numeric id");
+    let idb: u64 = b.header("x-request-id").expect("id b").parse().expect("numeric id");
+    assert_ne!(ida, idb, "request ids must be distinct");
     assert!(server.shutdown(Duration::from_secs(10)));
 }
 

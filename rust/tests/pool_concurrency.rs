@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 use usefuse::coordinator::pipeline::NativePipeline;
 use usefuse::coordinator::pool::{
     native_factory, pipeline_end_source, pipeline_lane_source, pipeline_reuse_source, ModelGroup,
-    PoolConfig, RuntimeFactory, ServeError, SubmitError, WorkerPool,
+    PoolConfig, RuntimeFactory, ServeError, SubmitError, SupervisorConfig, WorkerPool,
 };
 use usefuse::nets;
 use usefuse::runtime::{DType, EngineKind, Manifest, ProgramMeta, Runtime, Tensor, TensorMeta};
@@ -132,6 +132,7 @@ fn sixteen_clients_hammer_the_pool() {
             reuse_source: None,
             lane_source: None,
             lane_width: None,
+            supervisor: SupervisorConfig::default(),
         })
         .expect("pool"),
     );
@@ -182,6 +183,7 @@ fn queued_requests_drain_as_one_stacked_call() {
         reuse_source: None,
         lane_source: None,
         lane_width: None,
+        supervisor: SupervisorConfig::default(),
     })
     .expect("pool");
 
@@ -253,6 +255,7 @@ fn native_pool(kind: EngineKind, workers: usize, queue_cap: usize) -> (Arc<Nativ
         reuse_source: Some(pipeline_reuse_source(&pipeline)),
         lane_source: Some(pipeline_lane_source(&pipeline)),
         lane_width: kind.lanes(),
+        supervisor: SupervisorConfig::default(),
     })
     .expect("native pool");
     (pipeline, pool)
@@ -362,6 +365,7 @@ fn shutdown_drains_queue_then_rejects_new_requests() {
         reuse_source: None,
         lane_source: None,
         lane_width: None,
+        supervisor: SupervisorConfig::default(),
     })
     .expect("pool");
 
@@ -412,6 +416,7 @@ fn router_isolates_model_groups() {
             reuse_source: None,
             lane_source: None,
             lane_width: None,
+            supervisor: SupervisorConfig::default(),
         })
         .expect("pool"),
     );
@@ -528,6 +533,7 @@ fn wedged_worker_sheds_bounded_submits_instead_of_hanging() {
         reuse_source: None,
         lane_source: None,
         lane_width: None,
+        supervisor: SupervisorConfig::default(),
     })
     .expect("pool");
 
@@ -607,6 +613,7 @@ fn expired_deadline_requests_are_reaped_unexecuted() {
         reuse_source: None,
         lane_source: None,
         lane_width: None,
+        supervisor: SupervisorConfig::default(),
     })
     .expect("pool");
 
